@@ -1,0 +1,191 @@
+//! Biosignal peak detection on NM-Caesar — the paper's motivating
+//! area-critical use case ("min/max search algorithms for peak detection
+//! [12]" in AI-based biomedical kernels, §I).
+//!
+//! A synthetic ECG-like 16-bit trace is searched for R-peaks: NM-Caesar
+//! computes the global maximum with a packed `MAX` reduction tree streamed
+//! by the DMA, the host derives a threshold from it and then only scans the
+//! handful of supra-threshold candidates. Compared against the classic
+//! CPU-only linear scan.
+//!
+//! Run with: `cargo run --release --example peak_detection`
+
+use nmc::asm::Asm;
+use nmc::bus::{periph, BANK_SIZE, CAESAR_BASE, PERIPH_BASE};
+use nmc::caesar::compiler::CaesarProgram;
+use nmc::isa::reg::*;
+use nmc::isa::Sew;
+use nmc::soc::Soc;
+
+/// Synthetic ECG-ish trace: baseline noise + periodic sharp peaks.
+fn waveform(n: usize) -> Vec<i16> {
+    let mut rng = nmc::kernels::golden::Rng(0xec60);
+    (0..n)
+        .map(|i| {
+            let noise = (rng.next_u32() % 200) as i16 - 100;
+            let phase = i % 500;
+            if (240..260).contains(&phase) {
+                // R-peak ramp.
+                let d = (250i32 - phase as i32).abs();
+                (8000 - 600 * d) as i16 + noise
+            } else {
+                noise
+            }
+        })
+        .collect()
+}
+
+fn cpu_only(signal: &[i16]) -> (u64, Vec<usize>) {
+    let mut soc = Soc::heeperator();
+    let bytes: Vec<u8> = signal.iter().flat_map(|v| v.to_le_bytes()).collect();
+    soc.load_data(BANK_SIZE, &bytes);
+    // max scan + second pass collecting indexes above 3/4 max.
+    let mut a = Asm::new(0);
+    a.li(A0, BANK_SIZE as i32)
+        .li(A1, (BANK_SIZE + bytes.len() as u32) as i32)
+        .li(A2, -32768)
+        .label("scan")
+        .lh(T0, 0, A0)
+        .bge(A2, T0, "skip")
+        .mv(A2, T0)
+        .label("skip")
+        .addi(A0, A0, 2)
+        .bne(A0, A1, "scan")
+        // threshold = max - max/4
+        .srai(T1, A2, 2)
+        .sub(A2, A2, T1)
+        .li(A0, BANK_SIZE as i32)
+        .li(A3, (2 * BANK_SIZE) as i32) // candidate list
+        .label("scan2")
+        .lh(T0, 0, A0)
+        .blt(T0, A2, "no")
+        .sw(A0, 0, A3)
+        .addi(A3, A3, 4)
+        .label("no")
+        .addi(A0, A0, 2)
+        .bne(A0, A1, "scan2")
+        .ebreak();
+    soc.load_firmware(&a.assemble().unwrap(), 0);
+    soc.reset_stats();
+    let (_h, cycles) = soc.run(10_000_000);
+    let count = (soc.cpu.regs[A3 as usize] - 2 * BANK_SIZE) / 4;
+    let idx = (0..count)
+        .map(|i| {
+            let addr = u32::from_le_bytes(
+                soc.dump(2 * BANK_SIZE + 4 * i, 4).try_into().unwrap(),
+            );
+            ((addr - BANK_SIZE) / 2) as usize
+        })
+        .collect();
+    (cycles, idx)
+}
+
+fn with_caesar(signal: &[i16]) -> (u64, Vec<usize>) {
+    let mut soc = Soc::heeperator();
+    let bytes: Vec<u8> = signal.iter().flat_map(|v| v.to_le_bytes()).collect();
+    // Halves staged in opposite banks for cross-bank MAX folding.
+    let words = bytes.len() as u32 / 4;
+    soc.caesar.load(0, &bytes[..bytes.len() / 2]);
+    soc.caesar.load(16 * 1024, &bytes[bytes.len() / 2..]);
+    // The same data also sits in system RAM for the candidate scan (the
+    // signal is memory-mapped either way; Caesar *is* a RAM bank).
+    soc.load_data(BANK_SIZE, &bytes);
+
+    // MAX reduction: fold halves, then fold within bank 0 (3-cycle ops).
+    let mut p = CaesarProgram::new();
+    p.csrw(Sew::E16);
+    let half = words / 2;
+    for i in 0..half {
+        p.max(2048 + i, i, 4096 + i);
+    }
+    let mut len = half;
+    let base = 2048;
+    while len > 1 {
+        let h = len / 2;
+        for i in 0..h {
+            p.max(base + i, base + i, base + h + i);
+        }
+        if len % 2 == 1 {
+            p.max(base, base, base + len - 1);
+        }
+        len = h;
+    }
+    let stream = p.to_stream(CAESAR_BASE);
+    soc.load_data(3 * BANK_SIZE, &stream);
+
+    let mut a = Asm::new(0);
+    a.li(T0, (PERIPH_BASE + periph::CAESAR_IMC) as i32)
+        .li(T1, 1)
+        .sw(T1, 0, T0)
+        .li(T0, (PERIPH_BASE + periph::DMA_SRC) as i32)
+        .li(T1, (3 * BANK_SIZE) as i32)
+        .sw(T1, 0, T0)
+        .li(T0, (PERIPH_BASE + periph::DMA_LEN) as i32)
+        .li(T1, p.stream_len() as i32)
+        .sw(T1, 0, T0)
+        .li(T0, (PERIPH_BASE + periph::DMA_CTL) as i32)
+        .li(T1, 0b11)
+        .sw(T1, 0, T0)
+        .wfi()
+        .li(T0, (PERIPH_BASE + periph::DMA_STATUS) as i32)
+        .lw(T1, 0, T0)
+        .li(T0, (PERIPH_BASE + periph::CAESAR_IMC) as i32)
+        .sw(ZERO, 0, T0)
+        // Read the folded word; elementwise max of its two 16-bit lanes.
+        .li(T0, (CAESAR_BASE + 2048 * 4) as i32)
+        .lh(A2, 0, T0)
+        .lh(T1, 2, T0)
+        .bge(A2, T1, "m")
+        .mv(A2, T1)
+        .label("m")
+        .srai(T1, A2, 2)
+        .sub(A2, A2, T1) // threshold
+        .li(A0, BANK_SIZE as i32)
+        .li(A1, (BANK_SIZE + bytes.len() as u32) as i32)
+        .li(A3, (2 * BANK_SIZE) as i32)
+        .label("scan2")
+        .lh(T0, 0, A0)
+        .blt(T0, A2, "no")
+        .sw(A0, 0, A3)
+        .addi(A3, A3, 4)
+        .label("no")
+        .addi(A0, A0, 2)
+        .bne(A0, A1, "scan2")
+        .ebreak();
+    soc.load_firmware(&a.assemble().unwrap(), 0);
+    soc.reset_stats();
+    let (_h, cycles) = soc.run(10_000_000);
+    let count = (soc.cpu.regs[A3 as usize] - 2 * BANK_SIZE) / 4;
+    let idx = (0..count)
+        .map(|i| {
+            let addr = u32::from_le_bytes(
+                soc.dump(2 * BANK_SIZE + 4 * i, 4).try_into().unwrap(),
+            );
+            ((addr - BANK_SIZE) / 2) as usize
+        })
+        .collect();
+    (cycles, idx)
+}
+
+fn main() {
+    let n = 8192; // 16 KiB of 16-bit samples
+    let sig = waveform(n);
+    let (c_cpu, idx_cpu) = cpu_only(&sig);
+    let (c_czr, idx_czr) = with_caesar(&sig);
+    assert_eq!(idx_cpu, idx_czr, "both paths find the same peaks");
+    // Group adjacent candidates into peaks.
+    let mut peaks = 0;
+    let mut last = usize::MAX - 10;
+    for &i in &idx_cpu {
+        if i > last + 5 {
+            peaks += 1;
+        } else if last == usize::MAX - 10 {
+            peaks += 1;
+        }
+        last = i;
+    }
+    println!("signal: {n} samples, {} supra-threshold candidates, ~{peaks} peaks", idx_cpu.len());
+    println!("CPU-only scan:        {c_cpu} cycles");
+    println!("NM-Caesar reduction:  {c_czr} cycles  ({:.1}x faster)", c_cpu as f64 / c_czr as f64);
+    assert!(c_czr < c_cpu);
+}

@@ -1,0 +1,67 @@
+//! Quickstart: the smallest end-to-end NM-Carus program.
+//!
+//! Builds a HEEPerator system, writes two vectors into the NM-Carus macro
+//! (which the host sees as a plain 32 KiB SRAM bank), uploads a three-
+//! instruction xvnmc kernel into the 512 B eMEM, runs it, and reads the
+//! result back over the bus — the paper's "drop-in compute memory" flow.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use nmc::asm::Asm;
+use nmc::isa::reg::*;
+use nmc::isa::Sew;
+use nmc::soc::Soc;
+
+fn main() {
+    let mut soc = Soc::heeperator();
+
+    // 1. The host populates its "memory": two int32 vectors of 64 elements.
+    //    (Logical vector registers are vl·4 bytes; v0 and v1 here.)
+    let vl = 64u32;
+    for j in 0..vl {
+        soc.carus.vrf.set_elem(0, j, vl, Sew::E32, 3 * j);
+        soc.carus.vrf.set_elem(1, j, vl, Sew::E32, 1000 + j);
+    }
+
+    // 2. The xvnmc kernel: v2 = v0 + v1. Three instructions + ebreak.
+    let mut k = Asm::new(0);
+    k.li(A0, vl as i32)
+        .vsetvli(T0, A0, Sew::E32)
+        .vadd_vv(2, 0, 1)
+        .ebreak();
+    soc.carus.load_kernel(&k.assemble().unwrap().words);
+
+    // 3. Host firmware: configuration mode → start → wfi → ack.
+    use nmc::bus::{periph, CARUS_BASE, PERIPH_BASE};
+    let mut fw = Asm::new(0);
+    fw.li(T0, (PERIPH_BASE + periph::CARUS_MODE) as i32)
+        .li(T1, 1)
+        .sw(T1, 0, T0)
+        .li(A0, (CARUS_BASE + nmc::carus::CTL_OFFSET) as i32)
+        .li(T1, nmc::carus::CTL_START as i32)
+        .sw(T1, 0, A0)
+        .wfi()
+        .sw(ZERO, 0, A0)
+        .sw(ZERO, 0, T0)
+        .ebreak();
+    soc.load_firmware(&fw.assemble().unwrap(), 0);
+    soc.reset_stats();
+    let (halt, cycles) = soc.run(100_000);
+
+    // 4. Results, straight out of the memory bank.
+    println!("halt = {halt:?} after {cycles} cycles");
+    let mut ok = true;
+    for j in 0..vl {
+        let got = soc.carus.vrf.elem_unsigned(2, j, vl, Sew::E32);
+        ok &= got == 1000 + 4 * j;
+    }
+    println!("v2 = v0 + v1: {}", if ok { "correct" } else { "WRONG" });
+    let e = soc.energy();
+    println!(
+        "energy: {:.1} pJ total ({:.1} pJ/element), avg power {:.2} mW @ 250 MHz",
+        e.total(),
+        e.total() / vl as f64,
+        e.avg_power_mw(soc.cycle)
+    );
+    assert!(ok);
+}

@@ -1,0 +1,144 @@
+"""AOT compile path: lower every kernel/model to HLO text artifacts.
+
+Usage (from ``python/``):  python -m compile.aot --out ../artifacts
+
+HLO **text** (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every artifact's interface is int32 (values within the kernel's SEW range);
+casts happen inside the graph — the Rust PJRT wrapper marshals i32 literals
+only. Each lowered function returns a 1-tuple (``return_tuple=True``), so
+the Rust side unwraps with ``to_tuple1``.
+
+A ``manifest.json`` records name → {shapes, sew, kind} for the Rust-side
+golden-runtime tests.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import elementwise as ew
+from .kernels import matmul as mmk
+
+SEWS = {"e8": (jnp.int8, 1), "e16": (jnp.int16, 2), "e32": (jnp.int32, 4)}
+
+
+def to_hlo_text(fn, example_args):
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def build_artifacts():
+    """Yield (name, fn, example_args, manifest_entry)."""
+    arts = []
+
+    # --- matmul / GEMM: paper CPU/Carus shapes (footnotes b, c) -----------
+    for sew, (dt, sb) in SEWS.items():
+        p = {1: 1024, 2: 512, 4: 256}[sb]
+
+        def mm(a, b, dt=dt):
+            c = mmk.matmul(a.astype(dt), b.astype(dt), out_dtype=dt)
+            return (c.astype(jnp.int32),)
+
+        arts.append((f"matmul_{sew}", mm, (i32((8, 8)), i32((8, p))),
+                     {"kind": "matmul", "sew": sew, "p": p}))
+
+        def gm(a, b, c, dt=dt):
+            r = mmk.gemm(a.astype(dt), b.astype(dt), c.astype(dt), out_dtype=dt)
+            return (r.astype(jnp.int32),)
+
+        arts.append((f"gemm_{sew}", gm, (i32((8, 8)), i32((8, p)), i32((8, p))),
+                     {"kind": "gemm", "sew": sew, "p": p}))
+
+    # --- conv2d: 8×n image, f=3 (footnote d, CPU/Carus) --------------------
+    for sew, (dt, sb) in SEWS.items():
+        n = {1: 1024, 2: 512, 4: 256}[sb]
+
+        def cv(img, filt, dt=dt):
+            r = ew.conv2d(img.astype(dt), filt.astype(dt), f=3)
+            return (r.astype(jnp.int32),)
+
+        arts.append((f"conv2d_{sew}", cv, (i32((8, n)), i32((3, 3))),
+                     {"kind": "conv2d", "sew": sew, "n": n, "f": 3}))
+
+    # --- element-wise: 10 KiB inputs (footnote a) ---------------------------
+    for sew, (dt, sb) in SEWS.items():
+        n = 5120 // sb
+        for kind, fn in [("xor", ew.xor), ("add", ew.add), ("mul", ew.mul)]:
+
+            def f(a, b, fn=fn, dt=dt):
+                return (fn(a.astype(dt), b.astype(dt)).astype(jnp.int32),)
+
+            arts.append((f"{kind}_{sew}", f, (i32((n,)), i32((n,))),
+                         {"kind": kind, "sew": sew, "n": n}))
+
+    # --- activations: 16 KiB input (footnote e) ----------------------------
+    for sew, (dt, sb) in SEWS.items():
+        n = 16384 // sb
+        for kind, fn in [("relu", ew.relu), ("leaky_relu", ew.leaky_relu)]:
+
+            def f(a, fn=fn, dt=dt):
+                return (fn(a.astype(dt)).astype(jnp.int32),)
+
+            arts.append((f"{kind}_{sew}", f, (i32((n,)),),
+                         {"kind": kind, "sew": sew, "n": n}))
+
+    # --- maxpool: 16×n image (footnote g) -----------------------------------
+    for sew, (dt, sb) in SEWS.items():
+        n = 16384 // 16 // sb
+
+        def f(img, dt=dt):
+            return (ew.maxpool2x2(img.astype(dt)).astype(jnp.int32),)
+
+        arts.append((f"maxpool_{sew}", f, (i32((16, n)),),
+                     {"kind": "maxpool", "sew": sew, "n": n}))
+
+    # --- the end-to-end model ------------------------------------------------
+    def ad(x, *ws):
+        return (model.autoencoder_fwd(x, *ws),)
+
+    arts.append(("ad_autoencoder", ad, model.example_args(),
+                 {"kind": "ad", "layers": model.LAYERS}))
+    return arts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {}
+    for name, fn, ex, meta in build_artifacts():
+        if args.only and args.only not in name:
+            continue
+        text = to_hlo_text(fn, ex)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta["args"] = [list(a.shape) for a in ex]
+        manifest[name] = meta
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {len(manifest)} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Layer-1 Pallas kernels: element-wise / activation / pooling ops.
+
+Each kernel mirrors one NM-Caesar micro-op stream or NM-Carus vector
+instruction: data streams through in lane tiles (the HBM↔VMEM analogue of
+the word-interleaved VRF banks), one vector op per tile. `interpret=True`
+(CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+TILE = 256
+
+
+def _ew_call(body, *args):
+    """Run an element-wise kernel body over a 1-D array in lane tiles."""
+    n = args[0].shape[0]
+    pad = (-n) % TILE
+    padded = [jnp.pad(a, (0, pad)) for a in args]
+    np_ = n + pad
+
+    def kernel(*refs):
+        ins = [r[...] for r in refs[:-1]]
+        refs[-1][...] = body(*ins)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(np_ // TILE,),
+        in_specs=[pl.BlockSpec((TILE,), lambda j: (j,)) for _ in args],
+        out_specs=pl.BlockSpec((TILE,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), args[0].dtype),
+        interpret=True,
+    )(*padded)
+    return out[:n]
+
+
+@jax.jit
+def xor(a, b):
+    return _ew_call(lambda x, y: x ^ y, a, b)
+
+
+@jax.jit
+def add(a, b):
+    return _ew_call(lambda x, y: x + y, a, b)
+
+
+@jax.jit
+def mul(a, b):
+    return _ew_call(lambda x, y: x * y, a, b)
+
+
+@jax.jit
+def relu(a):
+    return _ew_call(lambda x: jnp.maximum(x, 0), a)
+
+
+@jax.jit
+def leaky_relu(a):
+    return _ew_call(lambda x: jnp.where(x >= 0, x, x >> ref.LEAKY_SHIFT), a)
+
+
+def _conv_kernel(img_ref, filt_ref, o_ref, *, f):
+    # The Carus schedule: Σ over (dy, dx) of slide(img_row, dx) · w[dy,dx],
+    # expressed as shifted-slice MACs with int32 accumulation.
+    img = img_ref[...].astype(jnp.int32)
+    filt = filt_ref[...].astype(jnp.int32)
+    orows = img.shape[0] - f + 1
+    ocols = img.shape[1] - f + 1
+    acc = jnp.zeros((orows, ocols), jnp.int32)
+    for dy in range(f):
+        for dx in range(f):
+            acc = acc + img[dy : dy + orows, dx : dx + ocols] * filt[dy, dx]
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("f",))
+def conv2d(img, filt, f):
+    """Valid 2D convolution A[rows,n] ⊛ F[f,f] (single block: the paper's
+    images are 8×n and fit VMEM whole)."""
+    rows, n = img.shape
+    out = pl.pallas_call(
+        functools.partial(_conv_kernel, f=f),
+        out_shape=jax.ShapeDtypeStruct((rows - f + 1, n - f + 1), img.dtype),
+        interpret=True,
+    )(img, filt)
+    return out
+
+
+def _pool_kernel(img_ref, o_ref):
+    img = img_ref[...]
+    v = jnp.maximum(img[0::2, :], img[1::2, :])
+    o_ref[...] = jnp.maximum(v[:, 0::2], v[:, 1::2])
+
+
+@jax.jit
+def maxpool2x2(img):
+    r, c = img.shape
+    return pl.pallas_call(
+        _pool_kernel,
+        out_shape=jax.ShapeDtypeStruct((r // 2, c // 2), img.dtype),
+        interpret=True,
+    )(img)

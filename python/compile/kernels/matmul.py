@@ -1,0 +1,106 @@
+"""Layer-1 Pallas kernel: lane-tiled integer matmul (the NMC hot-spot).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): NM-Carus tiles the
+B-matrix row vectors across word-interleaved VRF banks and drives one
+serial MAC ALU per bank; on a TPU the same insight maps to tiling the
+output columns across VMEM blocks and feeding the MXU with an
+int8→int32 contraction. The `BlockSpec` below expresses exactly that
+schedule: the A tile is resident (analogous to the splatted scalar
+operands of `vmacc.vx`), B/C stream through in `TILE`-column blocks
+(analogous to one VRF bank's word stream).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; correctness is validated on CPU and the TPU efficiency is
+estimated analytically (DESIGN.md §8).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Lane-tile width: multiple of the TPU lane count (128) and of the NM-Carus
+# logical-register granularity.
+TILE = 128
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    # int32 accumulate (MXU-friendly), truncate to the output dtype — the
+    # mod-2^sew semantics shared with the hardware datapath.
+    a = a_ref[...].astype(jnp.int32)
+    b = b_ref[...].astype(jnp.int32)
+    acc = jnp.dot(a, b, preferred_element_type=jnp.int32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype",))
+def matmul(a, b, out_dtype=None):
+    """C[m,p] = (A[m,k] @ B[k,p]) mod 2^sew, Pallas lane-tiled.
+
+    Shapes: m, k arbitrary small (A stays resident); p padded to TILE.
+    """
+    out_dtype = out_dtype or a.dtype
+    m, k = a.shape
+    k2, p = b.shape
+    assert k == k2
+    pad = (-p) % TILE
+    if pad:
+        b = jnp.pad(b, ((0, 0), (0, pad)))
+    pp = p + pad
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=(pp // TILE,),
+        in_specs=[
+            pl.BlockSpec((m, k), lambda j: (0, 0)),
+            pl.BlockSpec((k, TILE), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((m, TILE), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, pp), out_dtype),
+        interpret=True,
+    )(a, b)
+    return out[:, :p]
+
+
+def _gemm_kernel(a_ref, b_ref, c_ref, o_ref, *, alpha, beta):
+    a = a_ref[...].astype(jnp.int32)
+    b = b_ref[...].astype(jnp.int32)
+    c = c_ref[...].astype(jnp.int32)
+    acc = alpha * jnp.dot(a, b, preferred_element_type=jnp.int32) + beta * c
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "beta", "out_dtype"))
+def gemm(a, b, c, alpha=2, beta=3, out_dtype=None):
+    """alpha*(A@B) + beta*C mod 2^sew, same tiling as `matmul`."""
+    out_dtype = out_dtype or a.dtype
+    m, k = a.shape
+    _, p = b.shape
+    pad = (-p) % TILE
+    if pad:
+        b = jnp.pad(b, ((0, 0), (0, pad)))
+        c = jnp.pad(c, ((0, 0), (0, pad)))
+    pp = p + pad
+    out = pl.pallas_call(
+        functools.partial(_gemm_kernel, alpha=alpha, beta=beta),
+        grid=(pp // TILE,),
+        in_specs=[
+            pl.BlockSpec((m, k), lambda j: (0, 0)),
+            pl.BlockSpec((k, TILE), lambda j: (0, j)),
+            pl.BlockSpec((m, TILE), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((m, TILE), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, pp), out_dtype),
+        interpret=True,
+    )(a, b, c)
+    return out[:, :p]
+
+
+def matvec(w, x, out_dtype=None):
+    """w[out,in] @ x[in] — the Anomaly-Detection layer primitive, expressed
+    through the same lane-tiled kernel (x as a 1-column B with the roles
+    swapped: out dimension tiled across lanes)."""
+    out_dtype = out_dtype or w.dtype
+    # (1, in) @ (in, out) keeps the big dimension on the lane axis.
+    y = matmul(x[None, :], w.T, out_dtype=out_dtype)
+    return y[0]

@@ -1,0 +1,85 @@
+"""Pure-jnp golden references for every benchmark kernel.
+
+These are the correctness oracles for the Pallas kernels (pytest compares
+bit-exactly) and the source of the AOT artifacts' semantics. They implement
+exactly the simulator's arithmetic convention (see
+``rust/src/kernels/golden.rs``): elements are 2's-complement integers of the
+kernel SEW; accumulating kernels accumulate **mod 2^sew** — i.e. int32
+accumulation truncated to the element dtype, which is equivalent to
+wrap-at-each-step.
+"""
+
+import jax.numpy as jnp
+
+# Leaky-ReLU negative-slope shift (slope 1/8), matching
+# rust/src/kernels/golden.rs::LEAKY_SHIFT.
+LEAKY_SHIFT = 3
+# GEMM constants (rust golden::GEMM_ALPHA/BETA).
+GEMM_ALPHA = 2
+GEMM_BETA = 3
+
+
+def xor(a, b):
+    return a ^ b
+
+
+def add(a, b):
+    return a + b  # wrapping in integer dtypes
+
+
+def mul(a, b):
+    return a * b
+
+
+def matmul(a, b, out_dtype):
+    """A[8,8] x B[8,p], accumulate mod 2^sew (int32 accumulate + truncate)."""
+    acc = jnp.matmul(a.astype(jnp.int32), b.astype(jnp.int32))
+    return acc.astype(out_dtype)
+
+
+def gemm(a, b, c, out_dtype):
+    """alpha*(A@B) + beta*C mod 2^sew."""
+    ab = jnp.matmul(a.astype(jnp.int32), b.astype(jnp.int32))
+    acc = GEMM_ALPHA * ab + GEMM_BETA * c.astype(jnp.int32)
+    return acc.astype(out_dtype)
+
+
+def conv2d(img, filt, out_dtype):
+    """Valid 2D convolution (cross-correlation, like the paper's kernels)."""
+    rows, n = img.shape
+    f = filt.shape[0]
+    orows, ocols = rows - f + 1, n - f + 1
+    acc = jnp.zeros((orows, ocols), jnp.int32)
+    for dy in range(f):
+        for dx in range(f):
+            acc = acc + (
+                img[dy : dy + orows, dx : dx + ocols].astype(jnp.int32)
+                * filt[dy, dx].astype(jnp.int32)
+            )
+    return acc.astype(out_dtype)
+
+
+def relu(a):
+    return jnp.maximum(a, 0)
+
+
+def leaky_relu(a):
+    return jnp.where(a >= 0, a, a >> LEAKY_SHIFT)
+
+
+def maxpool2x2(img):
+    """2x2 max pooling, stride 2."""
+    v = jnp.maximum(img[0::2, :], img[1::2, :])
+    return jnp.maximum(v[:, 0::2], v[:, 1::2])
+
+
+def ad_layer(w, x, apply_relu):
+    """One Anomaly-Detection layer: relu(wrap8(w @ x)) with int8 weights.
+
+    Bit-exact with rust/src/apps/anomaly.rs::golden_forward.
+    """
+    acc = jnp.matmul(w.astype(jnp.int32), x.astype(jnp.int32))
+    y = acc.astype(jnp.int8)
+    if apply_relu:
+        y = jnp.maximum(y, 0)
+    return y

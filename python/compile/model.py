@@ -1,0 +1,64 @@
+"""Layer-2 JAX model: the Anomaly-Detection autoencoder.
+
+The MLPerf-Tiny AD topology (640-128-128-128-128-8-128-128-128-128-640)
+with int8 weights and the mod-256 accumulate semantics shared with the
+simulator (`rust/src/apps/anomaly.rs::golden_forward`): each layer computes
+`relu(wrap8(w @ x))`, last layer without ReLU.
+
+The forward pass calls the Layer-1 Pallas matvec kernel, so the AOT-lowered
+HLO exercises the full three-layer stack. The module interface uses int32
+arrays (values in int8 range) because the PJRT interchange on the Rust side
+marshals i32 literals; casts happen inside the graph.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul as mmk
+
+# (in, out, relu) — keep in sync with rust/src/apps/anomaly.rs::network().
+LAYERS = [
+    (640, 128, True),
+    (128, 128, True),
+    (128, 128, True),
+    (128, 128, True),
+    (128, 8, True),
+    (8, 128, True),
+    (128, 128, True),
+    (128, 128, True),
+    (128, 128, True),
+    (128, 640, False),
+]
+
+
+def autoencoder_fwd(x_i32, *weights_i32):
+    """Forward pass. `x_i32`: (640,) int32 in [-128,127]; weights: one
+    (out, in) int32 array per layer. Returns (640,) int32."""
+    x = x_i32.astype(jnp.int8)
+    assert len(weights_i32) == len(LAYERS)
+    for (ins, outs, relu), w in zip(LAYERS, weights_i32):
+        assert w.shape == (outs, ins), (w.shape, (outs, ins))
+        y = mmk.matvec(w.astype(jnp.int8), x, out_dtype=jnp.int8)
+        if relu:
+            y = jnp.maximum(y, 0)
+        x = y
+    return x.astype(jnp.int32)
+
+
+def autoencoder_ref(x_i32, *weights_i32):
+    """Pure-jnp reference (no Pallas), for pytest cross-checking."""
+    x = x_i32.astype(jnp.int8)
+    for (ins, outs, relu), w in zip(LAYERS, weights_i32):
+        acc = jnp.matmul(w.astype(jnp.int32), x.astype(jnp.int32))
+        y = acc.astype(jnp.int8)
+        if relu:
+            y = jnp.maximum(y, 0)
+        x = y
+    return x.astype(jnp.int32)
+
+
+def example_args():
+    """ShapeDtypeStructs for AOT lowering."""
+    x = jax.ShapeDtypeStruct((640,), jnp.int32)
+    ws = [jax.ShapeDtypeStruct((o, i), jnp.int32) for (i, o, _) in LAYERS]
+    return (x, *ws)

@@ -1,0 +1,130 @@
+"""Pallas kernels vs pure-jnp references: bit-exact over shape/dtype sweeps.
+
+Hypothesis drives the shapes/dtypes/values; assertions are exact equality
+(integer kernels). This is the CORE correctness signal for Layer 1.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import elementwise as ew
+from compile.kernels import matmul as mmk
+from compile.kernels import ref
+
+DTYPES = [np.int8, np.int16, np.int32]
+
+
+def arr(draw, shape, dtype):
+    info = np.iinfo(dtype)
+    data = draw(
+        st.lists(
+            st.integers(int(info.min), int(info.max)),
+            min_size=int(np.prod(shape)),
+            max_size=int(np.prod(shape)),
+        )
+    )
+    return np.array(data, dtype=dtype).reshape(shape)
+
+
+@st.composite
+def ew_case(draw):
+    dtype = draw(st.sampled_from(DTYPES))
+    n = draw(st.integers(1, 600))
+    return arr(draw, (n,), dtype), arr(draw, (n,), dtype)
+
+
+@settings(max_examples=20, deadline=None)
+@given(ew_case())
+def test_elementwise_ops(case):
+    a, b = case
+    np.testing.assert_array_equal(np.asarray(ew.xor(a, b)), np.asarray(ref.xor(a, b)))
+    np.testing.assert_array_equal(np.asarray(ew.add(a, b)), np.asarray(ref.add(a, b)))
+    np.testing.assert_array_equal(np.asarray(ew.mul(a, b)), np.asarray(ref.mul(a, b)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(ew_case())
+def test_activations(case):
+    a, _ = case
+    np.testing.assert_array_equal(np.asarray(ew.relu(a)), np.asarray(ref.relu(a)))
+    np.testing.assert_array_equal(
+        np.asarray(ew.leaky_relu(a)), np.asarray(ref.leaky_relu(a))
+    )
+
+
+@st.composite
+def mm_case(draw):
+    dtype = draw(st.sampled_from(DTYPES))
+    m = draw(st.integers(1, 8))
+    k = draw(st.integers(1, 8))
+    p = draw(st.sampled_from([1, 7, 64, 128, 130, 256]))
+    return arr(draw, (m, k), dtype), arr(draw, (k, p), dtype)
+
+
+@settings(max_examples=15, deadline=None)
+@given(mm_case())
+def test_matmul(case):
+    a, b = case
+    got = np.asarray(mmk.matmul(a, b, out_dtype=a.dtype))
+    want = np.asarray(ref.matmul(a, b, a.dtype))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(mm_case())
+def test_gemm(case):
+    a, b = case
+    rng = np.random.default_rng(0)
+    c = rng.integers(-100, 100, size=(a.shape[0], b.shape[1])).astype(a.dtype)
+    got = np.asarray(mmk.gemm(a, b, c, out_dtype=a.dtype))
+    want = np.asarray(ref.gemm(a, b, c, a.dtype))
+    np.testing.assert_array_equal(got, want)
+
+
+@st.composite
+def conv_case(draw):
+    dtype = draw(st.sampled_from(DTYPES))
+    f = draw(st.sampled_from([2, 3, 4]))
+    rows = draw(st.integers(f, 8))
+    n = draw(st.integers(f, 40))
+    return arr(draw, (rows, n), dtype), arr(draw, (f, f), dtype), f
+
+
+@settings(max_examples=12, deadline=None)
+@given(conv_case())
+def test_conv2d(case):
+    img, filt, f = case
+    got = np.asarray(ew.conv2d(img, filt, f=f))
+    want = np.asarray(ref.conv2d(img, filt, img.dtype))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.sampled_from(DTYPES), st.integers(1, 8), st.integers(1, 32), st.integers(0, 2**32 - 1))
+def test_maxpool(dtype, hr, hc, seed):
+    rng = np.random.default_rng(seed)
+    info = np.iinfo(dtype)
+    img = rng.integers(info.min, int(info.max) + 1, size=(2 * hr, 2 * hc)).astype(dtype)
+    got = np.asarray(ew.maxpool2x2(img))
+    want = np.asarray(ref.maxpool2x2(img))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_matvec_is_matmul_transposed():
+    rng = np.random.default_rng(7)
+    w = rng.integers(-128, 128, size=(128, 640)).astype(np.int8)
+    x = rng.integers(-128, 128, size=(640,)).astype(np.int8)
+    got = np.asarray(mmk.matvec(w, x))
+    want = (w.astype(np.int32) @ x.astype(np.int32)).astype(np.int8)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_wrap_semantics_match_rust(dtype):
+    # 8-bit: 127*2 wraps to -2 etc. Mirrors rust golden::wrap tests.
+    a = np.array([np.iinfo(dtype).max], dtype=dtype)
+    b = np.array([2], dtype=dtype)
+    got = np.asarray(ew.mul(a, b))
+    assert got[0] == np.multiply(a, b, dtype=dtype)[0]

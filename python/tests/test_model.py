@@ -1,0 +1,63 @@
+"""Layer-2 model tests: the AD autoencoder through the Pallas kernels vs the
+pure-jnp reference + numpy mod-256 semantics."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import model
+
+
+def random_model(seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-128, 128, size=(640,)).astype(np.int32)
+    ws = [
+        rng.integers(-128, 128, size=(o, i)).astype(np.int32)
+        for (i, o, _) in model.LAYERS
+    ]
+    return x, ws
+
+
+def numpy_forward(x, ws):
+    a = x.astype(np.int8)
+    for (i, o, relu), w in zip(model.LAYERS, ws):
+        acc = w.astype(np.int32) @ a.astype(np.int32)
+        y = acc.astype(np.int8)
+        if relu:
+            y = np.maximum(y, 0)
+        a = y
+    return a.astype(np.int32)
+
+
+def test_pallas_fwd_matches_numpy():
+    x, ws = random_model(1)
+    got = np.asarray(model.autoencoder_fwd(jnp.asarray(x), *map(jnp.asarray, ws)))
+    want = numpy_forward(x, ws)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_pallas_fwd_matches_jnp_ref():
+    x, ws = random_model(2)
+    got = np.asarray(model.autoencoder_fwd(jnp.asarray(x), *map(jnp.asarray, ws)))
+    ref = np.asarray(model.autoencoder_ref(jnp.asarray(x), *map(jnp.asarray, ws)))
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_shapes():
+    x, ws = random_model(3)
+    y = np.asarray(model.autoencoder_fwd(jnp.asarray(x), *map(jnp.asarray, ws)))
+    assert y.shape == (640,)
+    assert y.dtype == np.int32
+    # int8 range preserved through the i32 interface.
+    assert y.min() >= -128 and y.max() <= 127
+
+
+def test_relu_layers_nonnegative():
+    # Probe an intermediate: run a single relu layer manually.
+    rng = np.random.default_rng(4)
+    w = rng.integers(-128, 128, size=(128, 640)).astype(np.int32)
+    x = rng.integers(-128, 128, size=(640,)).astype(np.int32)
+    from compile.kernels import matmul as mmk
+
+    y = np.asarray(mmk.matvec(w.astype(np.int8), x.astype(np.int8), out_dtype=np.int8))
+    y = np.maximum(y, 0)
+    assert (y >= 0).all()

@@ -1,0 +1,25 @@
+//! NM-Caesar model hot path: micro-op decode/execute rate.
+use nmc::benchlib::{bench, sink, throughput};
+use nmc::caesar::isa::{encode, MicroOp, Op};
+use nmc::caesar::Caesar;
+use nmc::isa::Sew;
+
+fn main() {
+    let ops = 100_000u64;
+    for (name, op) in [("caesar_xor_stream", Op::Xor), ("caesar_mac_stream", Op::Mac)] {
+        let m = bench(name, || {
+            let mut c = Caesar::new();
+            c.sew = Sew::E8;
+            let w = encode(&MicroOp { op, src1: 5, src2: 4200 });
+            for i in 0..ops {
+                while !c.ready() {
+                    c.step();
+                }
+                c.issue((2048 + (i & 1023)) as u32, w);
+                c.step();
+            }
+            sink(c.stats.instrs);
+        });
+        throughput(&m, ops as f64, "micro-ops");
+    }
+}

@@ -1,0 +1,32 @@
+//! NM-Carus VPU hot path: vmacc element throughput of the functional model.
+use nmc::benchlib::{bench, sink, throughput};
+use nmc::carus::vpu::{Operand, VecCmd, Vpu};
+use nmc::carus::vrf::Vrf;
+use nmc::isa::xvnmc::VOp;
+use nmc::isa::Sew;
+
+fn main() {
+    for (name, sew, vl) in [
+        ("vpu_vmacc_e8_vl1024", Sew::E8, 1024u32),
+        ("vpu_vmacc_e32_vl256", Sew::E32, 256),
+    ] {
+        let reps = 200u64;
+        let m = bench(name, || {
+            let mut vrf = Vrf::new(4);
+            let mut vpu = Vpu::new(4);
+            vpu.set_vtype(vl, sew);
+            for _ in 0..reps {
+                while !vpu.can_accept() {
+                    vpu.step(&mut vrf);
+                }
+                vpu.issue(VecCmd::Op { op: VOp::Macc, vd: 8, vs2: 1, src: Operand::X(3) }, &mut vrf);
+                vpu.step(&mut vrf);
+            }
+            while vpu.busy() {
+                vpu.step(&mut vrf);
+            }
+            sink(vpu.stats.instrs);
+        });
+        throughput(&m, (reps * vl as u64) as f64, "elements");
+    }
+}

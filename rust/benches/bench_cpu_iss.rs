@@ -1,0 +1,50 @@
+//! Simulator hot path: the RV32 ISS + SoC step loop.
+//! Reports simulated cycles per second of host wall time.
+use nmc::asm::Asm;
+use nmc::benchlib::{bench, sink, throughput};
+use nmc::bus::BANK_SIZE;
+use nmc::isa::reg::*;
+use nmc::soc::Soc;
+
+fn main() {
+    // A tight arithmetic loop: the pure-ISS rate.
+    let iters = 50_000u64;
+    let m = bench("cpu_iss_arith_loop", || {
+        let mut soc = Soc::heeperator();
+        let mut a = Asm::new(0);
+        a.li(A0, iters as i32)
+            .label("l")
+            .addi(A1, A1, 3)
+            .xor(A2, A2, A1)
+            .slli(A3, A2, 1)
+            .addi(A0, A0, -1)
+            .bne(A0, ZERO, "l")
+            .ebreak();
+        soc.load_firmware(&a.assemble().unwrap(), 0);
+        let (h, c) = soc.run(10_000_000);
+        sink((h, c));
+    });
+    throughput(&m, (iters * 7) as f64, "sim-cycles");
+
+    // Memory-heavy loop: bus dispatch + bank accounting.
+    let n = 4096u64;
+    let m = bench("cpu_iss_memcpy", || {
+        let mut soc = Soc::heeperator();
+        soc.load_data(BANK_SIZE, &vec![0xa5u8; (n * 4) as usize]);
+        let mut a = Asm::new(0);
+        a.li(A0, BANK_SIZE as i32)
+            .li(A1, (2 * BANK_SIZE) as i32)
+            .li(A2, n as i32)
+            .label("l")
+            .lw(T0, 0, A0)
+            .sw(T0, 0, A1)
+            .addi(A0, A0, 4)
+            .addi(A1, A1, 4)
+            .addi(A2, A2, -1)
+            .bne(A2, ZERO, "l")
+            .ebreak();
+        soc.load_firmware(&a.assemble().unwrap(), 0);
+        sink(soc.run(10_000_000));
+    });
+    throughput(&m, (n * 8) as f64, "sim-cycles");
+}

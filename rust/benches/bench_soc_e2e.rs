@@ -1,0 +1,28 @@
+//! End-to-end driver benchmarks: the Anomaly-Detection app and the
+//! saturated matmul, as wall-time + simulated-cycle rate.
+use nmc::apps::anomaly;
+use nmc::benchlib::{bench, sink, throughput};
+use nmc::isa::Sew;
+use nmc::kernels::{run, Kernel, Target};
+
+fn main() {
+    let m0 = anomaly::model(2);
+    let cycles = anomaly::run_carus(&m0).cycles;
+    let m = bench("e2e_ad_carus", || {
+        sink(anomaly::run_carus(&m0).cycles);
+    });
+    throughput(&m, cycles as f64, "sim-cycles");
+
+    let cycles = anomaly::run_cpu(&m0).cycles;
+    let m = bench("e2e_ad_cpu", || {
+        sink(anomaly::run_cpu(&m0).cycles);
+    });
+    throughput(&m, cycles as f64, "sim-cycles");
+
+    let r = run(Target::Carus, Kernel::Matmul { p: 1024 }, Sew::E8, 1);
+    let c = r.cycles;
+    let m = bench("e2e_matmul_carus_e8", || {
+        sink(run(Target::Carus, Kernel::Matmul { p: 1024 }, Sew::E8, 1).cycles);
+    });
+    throughput(&m, c as f64, "sim-cycles");
+}

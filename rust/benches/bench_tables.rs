@@ -1,0 +1,23 @@
+//! Table-regeneration benchmarks: wall time to reproduce each paper
+//! table/figure (the deliverable-(d) harness itself).
+use nmc::benchlib::{bench, sink};
+use nmc::harness;
+
+fn main() {
+    let m = bench("table5_full_grid", || {
+        sink(harness::run_table5(false).len());
+    });
+    println!("table5 full grid: {:.2} s", m.median_ns / 1e9);
+    let m = bench("table6_anomaly_detection", || {
+        sink(harness::table6().text.len());
+    });
+    println!("table6: {:.2} s", m.median_ns / 1e9);
+    let m = bench("fig12_sweep_quick", || {
+        sink(harness::fig12(true).text.len());
+    });
+    println!("fig12 quick: {:.2} s", m.median_ns / 1e9);
+    let m = bench("static_tables", || {
+        sink((harness::table4().text.len(), harness::table7().text.len(), harness::table8().text.len()));
+    });
+    println!("static tables: {:.2} ms", m.median_ns / 1e6);
+}

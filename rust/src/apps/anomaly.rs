@@ -1,0 +1,562 @@
+//! Anomaly-Detection TinyML application (Table VI, §V-B2).
+//!
+//! The MLPerf-Tiny AD model [43]: a fully-connected autoencoder of ten
+//! matrix-vector layers (640-128-128-128-128-8-128-128-128-128-640) with
+//! ReLU activations, int8-quantized. The paper deploys it on a minimal
+//! system with a single 32 KiB L1 bank (replaced by the NMC device in the
+//! NMC rows) and weights streamed from embedded flash; we reproduce that
+//! topology with synthetic int8 weights/inputs (the learned values do not
+//! affect cycles or energy) and **mod-256 accumulate semantics** shared by
+//! every target and by the JAX golden model (`python/compile/model.py`):
+//! `out = relu(wrap8(Σ w·x))` — bit-exact across CPU/Caesar/Carus/XLA.
+//!
+//! Per-target mapping:
+//! - **CPU (CV32E40P + Xcv)**: `cv.sdotsp.b` packed MACs, weights read
+//!   directly from flash, ≈2 cycles/MAC — lands on the paper's 561 k cycles.
+//! - **NM-Caesar + CV32E20**: per layer, per k-tile: weight tile DMA'd into
+//!   the macro (memory mode), `x` splat words prepared by the host, then
+//!   the host issues `MAC_*` micro-op streams online (the
+//!   `*(BASE+DEST)=op` pattern — an E20 without hardware multiply can
+//!   still issue one op every ~3 cycles because consecutive op words
+//!   differ by the constant `0x2001`). Multi-tile layers accumulate
+//!   partial sums with an extra `ADD` per output chunk.
+//! - **NM-Carus + CV32E20**: one generic 20-instruction matvec kernel
+//!   (vmacc.vx over column vectors + emvx operand fetch, indirect register
+//!   addressing) reused for every layer and tile; weights DMA'd
+//!   column-major from flash, activations bounced through SRAM.
+//! - **Multi-core rows**: ideal linear scaling, exactly as the paper
+//!   assumes: cycles/N; energy re-evaluated with the time-proportional
+//!   (always-on) component divided by N. Instruction-memory energy is
+//!   excluded from every Table VI figure (paper footnote).
+
+use crate::asm::Asm;
+use crate::bus::{periph, BANK_SIZE, CAESAR_BASE, CARUS_BASE, PERIPH_BASE, ROM_BASE};
+use crate::caesar::isa::{encode as cenc, MicroOp, Op};
+use crate::carus::{ARG_OFFSET, CTL_OFFSET, CTL_START};
+use crate::cpu::CpuConfig;
+use crate::energy::{self, Activity, Breakdown};
+use crate::isa::reg::*;
+use crate::isa::xvnmc::{pack_indexes, VOp, VSrc};
+use crate::isa::Sew;
+use crate::kernels::golden::Rng;
+use crate::soc::{Halt, Soc};
+
+/// Layer shapes: (in, out, relu).
+pub fn network() -> Vec<(u32, u32, bool)> {
+    vec![
+        (640, 128, true),
+        (128, 128, true),
+        (128, 128, true),
+        (128, 128, true),
+        (128, 8, true),
+        (8, 128, true),
+        (128, 128, true),
+        (128, 128, true),
+        (128, 128, true),
+        (128, 640, false),
+    ]
+}
+
+/// Total MAC count (≈264 k).
+pub fn total_macs() -> u64 {
+    network().iter().map(|&(i, o, _)| i as u64 * o as u64).sum()
+}
+
+/// Synthetic int8 model: weights per layer (row-major `w[out][in]`) + input.
+pub struct Model {
+    pub weights: Vec<Vec<i8>>,
+    pub input: Vec<i8>,
+}
+
+pub fn model(seed: u64) -> Model {
+    let mut rng = Rng(seed ^ 0x5eed_ad00);
+    let weights = network()
+        .iter()
+        .map(|&(i, o, _)| (0..i * o).map(|_| rng.next_u32() as i8).collect())
+        .collect();
+    let input = (0..640).map(|_| rng.next_u32() as i8).collect();
+    Model { weights, input }
+}
+
+/// Golden forward pass (shared semantics; see module docs).
+pub fn golden_forward(m: &Model) -> Vec<i8> {
+    let mut x: Vec<i8> = m.input.clone();
+    for (l, &(ins, outs, relu)) in network().iter().enumerate() {
+        let w = &m.weights[l];
+        let mut y = vec![0i8; outs as usize];
+        for j in 0..outs as usize {
+            let mut acc: i32 = 0;
+            for k in 0..ins as usize {
+                acc = acc.wrapping_add(w[j * ins as usize + k] as i32 * x[k] as i32);
+            }
+            let v = acc as i8; // wrap8
+            y[j] = if relu && v < 0 { 0 } else { v };
+        }
+        x = y;
+    }
+    x
+}
+
+/// Result of one Table VI configuration.
+#[derive(Debug, Clone)]
+pub struct AdResult {
+    pub name: &'static str,
+    pub cycles: u64,
+    /// Energy with instruction-memory contribution excluded (Table VI), µJ.
+    pub energy_uj: f64,
+    /// Full breakdown (instruction fetches included), for reference.
+    pub energy_full: Breakdown,
+    /// Activity record (multicore scaling, Fig.-13-style analysis).
+    pub activity: Activity,
+    pub output: Vec<i8>,
+}
+
+/// Energy with the instruction-memory share removed (Table VI footnote).
+fn energy_excl_imem(act: &Activity) -> f64 {
+    let mut a = act.clone();
+    a.cpu_fetches = 0;
+    energy::energy(&a).total() / 1.0e6 // pJ → µJ
+}
+
+fn finish(name: &'static str, soc: &Soc, output: Vec<i8>) -> AdResult {
+    let act = soc.activity();
+    AdResult {
+        name,
+        cycles: soc.cycle,
+        energy_uj: energy_excl_imem(&act),
+        energy_full: soc.energy(),
+        activity: act,
+        output,
+    }
+}
+
+/// Ideal-linear-scaling multi-core projection from the single-core run
+/// (the paper's own Table VI methodology).
+pub fn scale_multicore(single: &AdResult, cores: u64) -> AdResult {
+    let mut act = single.activity.clone();
+    act.cpu_fetches = 0; // Table VI excludes instruction memory
+    let e = energy::energy(&act);
+    // Work energy (CPU switching, data memory, interconnect) is invariant;
+    // time-proportional energy (always-on "other") shrinks by N.
+    let scaled = e.cpu + e.memory + e.nmc_logic + e.interconnect + e.other / cores as f64;
+    AdResult {
+        name: match cores {
+            2 => "CV32E40P (2 cores)",
+            4 => "CV32E40P (4 cores)",
+            _ => "CV32E40P (N cores)",
+        },
+        cycles: single.cycles / cores,
+        energy_uj: scaled / 1.0e6,
+        energy_full: single.energy_full,
+        activity: single.activity.clone(),
+        output: single.output.clone(),
+    }
+}
+
+// --------------------------------------------------------------------------
+// CPU baseline (CV32E40P + Xcv), weights streamed from flash.
+// --------------------------------------------------------------------------
+
+/// Activation ping-pong buffers in SRAM bank 1.
+const X_BUF: u32 = BANK_SIZE;
+const Y_BUF: u32 = BANK_SIZE + 0x1000;
+
+pub fn run_cpu(m: &Model) -> AdResult {
+    let mut soc = Soc::new(CpuConfig::CV32E40P_XCV, 4);
+    // Weights in flash, row-major, layer after layer (word aligned).
+    let mut rom = Vec::new();
+    let mut w_offsets = Vec::new();
+    for w in &m.weights {
+        w_offsets.push(rom.len() as u32);
+        rom.extend(w.iter().map(|&v| v as u8));
+        while rom.len() % 4 != 0 {
+            rom.push(0);
+        }
+    }
+    soc.set_rom(rom);
+    soc.load_data(X_BUF, &m.input.iter().map(|&v| v as u8).collect::<Vec<_>>());
+
+    let mut a = Asm::new(0);
+    let mut xb = X_BUF;
+    let mut yb = Y_BUF;
+    for (l, &(ins, outs, relu)) in network().iter().enumerate() {
+        let lab = |s: &str| format!("l{l}_{s}");
+        a.li(S0, (ROM_BASE + w_offsets[l]) as i32) // w row pointer
+            .li(S1, xb as i32) // x base
+            .li(S2, yb as i32) // y pointer
+            .li(S3, outs as i32) // j counter
+            .label(&lab("jloop"))
+            .mv(T0, S0) // w walker
+            .mv(T1, S1) // x walker
+            .li(T2, 0) // acc
+            .li(T3, (ins / 4) as i32) // k-word counter
+            .label(&lab("kloop"))
+            .lw(T4, 0, T0)
+            .lw(T5, 0, T1)
+            .cv_sdotsp_b(T2, T4, T5)
+            .addi(T0, T0, 4)
+            .addi(T1, T1, 4)
+            .addi(T3, T3, -1)
+            .bne(T3, ZERO, &lab("kloop"))
+            // wrap to int8 then ReLU.
+            .slli(T2, T2, 24)
+            .srai(T2, T2, 24);
+        if relu {
+            a.cv_max(T2, T2, ZERO);
+        }
+        a.sb(T2, 0, S2)
+            .addi(S2, S2, 1)
+            .addi(S0, S0, ins as i32) // next weight row
+            .addi(S3, S3, -1)
+            .bne(S3, ZERO, &lab("jloop"));
+        std::mem::swap(&mut xb, &mut yb);
+    }
+    a.ebreak();
+    let prog = a.assemble().expect("AD cpu firmware");
+    soc.load_firmware(&prog, 0);
+    soc.reset_stats();
+    let (halt, _) = soc.run(50_000_000);
+    assert_eq!(halt, Halt::Done);
+    let out = soc.dump(xb, 640).iter().map(|&b| b as i8).collect();
+    finish("CV32E40P (1 core)", &soc, out)
+}
+
+// --------------------------------------------------------------------------
+// NM-Caesar + CV32E20
+// --------------------------------------------------------------------------
+
+/// Caesar-internal layout (word offsets): x/out packed + splats in bank 0,
+/// weight tile + constants in bank 1.
+mod cl {
+    pub const X: u32 = 0; // ≤160 words (640 B)
+    pub const OUT: u32 = 256; // ≤160 words
+    pub const SPLAT: u32 = 512; // ≤ ktile words
+    pub const W: u32 = 4096; // weight tile, ≤ 3072 words (12 KiB)
+    pub const ZERO: u32 = 7900; // zero splat (bank 1)
+    pub const TMP: u32 = 7901; // partial-sum scratch (bank 1)
+    pub const W_WORDS: u32 = 3072;
+}
+
+pub fn run_caesar(m: &Model) -> AdResult {
+    let mut soc = Soc::new(CpuConfig::CV32E20, 4);
+    // Flash layout: per layer, per k-tile, column-chunk-major words:
+    // word(c, k) = w[4c..4c+4][k]; chunk-major, k inner.
+    let mut rom = Vec::new();
+    let mut tiles_per_layer: Vec<Vec<(u32, u32, u32)>> = Vec::new(); // (rom_off, k0, ktile)
+    for &(ins, outs, _) in network().iter() {
+        let l = tiles_per_layer.len();
+        let w = &m.weights[l];
+        let chunks = outs.div_ceil(4);
+        let max_ktile = (cl::W_WORDS / chunks).min(ins).max(3);
+        let mut tiles = Vec::new();
+        let mut k0 = 0;
+        while k0 < ins {
+            let ktile = max_ktile.min(ins - k0);
+            assert!(ktile >= 3, "MAC stream needs INIT + ≥1 MAC + STORE");
+            tiles.push((rom.len() as u32, k0, ktile));
+            for c in 0..chunks {
+                for k in k0..k0 + ktile {
+                    for e in 0..4 {
+                        let j = 4 * c + e;
+                        rom.push(if j < outs { w[(j * ins + k) as usize] as u8 } else { 0 });
+                    }
+                }
+            }
+            k0 += ktile;
+        }
+        tiles_per_layer.push(tiles);
+    }
+    soc.set_rom(rom);
+    soc.caesar.sew = Sew::E8;
+    soc.caesar.load(cl::X * 4, &m.input.iter().map(|&v| v as u8).collect::<Vec<_>>());
+    soc.caesar.splat_word(cl::ZERO, 0);
+
+    let mut a = Asm::new(0);
+    let imc_reg = (PERIPH_BASE + periph::CAESAR_IMC) as i32;
+    let mut x_w = cl::X;
+    let mut out_w = cl::OUT;
+    for (l, &(ins, outs, relu)) in network().iter().enumerate() {
+        let chunks = outs.div_ceil(4);
+        let _ = ins;
+        for (t, &(rom_off, k0, ktile)) in tiles_per_layer[l].iter().enumerate() {
+            let lab = |s: &str| format!("l{l}t{t}_{s}");
+            let first_tile = t == 0;
+            // Phase A (memory mode): DMA weight tile flash → Caesar.
+            a.li(T0, imc_reg).sw(ZERO, 0, T0);
+            dma_copy(&mut a, ROM_BASE + rom_off, CAESAR_BASE + cl::W * 4, chunks * ktile * 4);
+            // Phase B: build splat words for x[k0..k0+ktile].
+            a.li(T0, (CAESAR_BASE + x_w * 4 + k0) as i32) // x bytes
+                .li(T1, (CAESAR_BASE + cl::SPLAT * 4) as i32)
+                .li(T2, ktile as i32)
+                .label(&lab("splat"))
+                .lbu(A0, 0, T0)
+                .slli(A1, A0, 8)
+                .or(A0, A0, A1)
+                .slli(A1, A0, 16)
+                .or(A0, A0, A1)
+                .sw(A0, 0, T1)
+                .addi(T0, T0, 1)
+                .addi(T1, T1, 4)
+                .addi(T2, T2, -1)
+                .bne(T2, ZERO, &lab("splat"));
+            // Phase C (computing mode): issue one MAC stream per out chunk.
+            a.li(T0, imc_reg).li(T1, 1).sw(T1, 0, T0);
+            let init_op =
+                cenc(&MicroOp { op: Op::MacInit, src1: cl::W as u16, src2: cl::SPLAT as u16 });
+            let mac_op = cenc(&MicroOp { op: Op::Mac, src1: cl::W as u16, src2: cl::SPLAT as u16 });
+            let store_op = cenc(&MicroOp {
+                op: Op::MacStore,
+                src1: (cl::W + ktile - 1) as u16,
+                src2: (cl::SPLAT + ktile - 1) as u16,
+            });
+            let add_op =
+                cenc(&MicroOp { op: Op::Add, src1: out_w as u16, src2: cl::TMP as u16 });
+            // Registers: S0 chunk ctr, S1 out-dest ptr, A0 TMP addr,
+            // A1 = 0x2001 (both sources advance one word per k), A2 dummy
+            // dest, A3/A4/A5 rolling INIT/MAC/STORE op words, T2 rolling
+            // ADD op, T0/T1 inner loop.
+            a.li(S0, chunks as i32)
+                .li(S1, (CAESAR_BASE + out_w * 4) as i32)
+                .li(A0, (CAESAR_BASE + cl::TMP * 4) as i32)
+                .li(A1, 0x2001)
+                .li(A2, (CAESAR_BASE + 0x1000) as i32) // dummy dest (no writeback ops)
+                .li(A3, init_op as i32)
+                .li(A4, mac_op as i32)
+                .li(A5, store_op as i32)
+                .li(T2, add_op as i32)
+                .label(&lab("chunk"))
+                .sw(A3, 0, A2) // MAC_INIT (k = k0)
+                .add(T0, A4, A1) // first MAC (k = k0+1)
+                .li(T1, (ktile - 2) as i32)
+                .label(&lab("mac"))
+                .sw(T0, 0, A2)
+                .add(T0, T0, A1)
+                .addi(T1, T1, -1)
+                .bne(T1, ZERO, &lab("mac"));
+            if first_tile {
+                a.sw(A5, 0, S1); // MAC_STORE → out chunk
+            } else {
+                a.sw(A5, 0, A0) // MAC_STORE → TMP
+                    .sw(T2, 0, S1) // ADD out, out, TMP
+                    .addi(T2, T2, 1); // next out word as src1
+            }
+            a.addi(A3, A3, ktile as i32) // W base advances by ktile words
+                .addi(A4, A4, ktile as i32)
+                .addi(A5, A5, ktile as i32)
+                .addi(S1, S1, 4)
+                .addi(S0, S0, -1)
+                .bne(S0, ZERO, &lab("chunk"));
+        }
+        // ReLU pass (still in computing mode): in-place MAX vs zero splat.
+        if relu {
+            let max_op =
+                cenc(&MicroOp { op: Op::Max, src1: out_w as u16, src2: cl::ZERO as u16 });
+            let words = outs.div_ceil(4);
+            a.li(T0, max_op as i32)
+                .li(T1, (CAESAR_BASE + out_w * 4) as i32)
+                .li(T2, words as i32)
+                .label(&format!("l{l}_relu"))
+                .sw(T0, 0, T1)
+                .addi(T0, T0, 1)
+                .addi(T1, T1, 4)
+                .addi(T2, T2, -1)
+                .bne(T2, ZERO, &format!("l{l}_relu"));
+        }
+        a.li(T0, imc_reg).sw(ZERO, 0, T0);
+        std::mem::swap(&mut x_w, &mut out_w);
+    }
+    a.ebreak();
+    let prog = a.assemble().expect("AD caesar firmware");
+    soc.load_firmware(&prog, 0);
+    soc.reset_stats();
+    let (halt, _) = soc.run(50_000_000);
+    assert_eq!(halt, Halt::Done);
+    let out = soc.dump(CAESAR_BASE + x_w * 4, 640).iter().map(|&b| b as i8).collect();
+    finish("NM-Caesar + CV32E20", &soc, out)
+}
+
+/// Emit a DMA copy sequence (copy mode) + wfi + ack.
+fn dma_copy(a: &mut Asm, src: u32, dst: u32, len: u32) {
+    debug_assert!(src % 4 == 0 && dst % 4 == 0, "DMA endpoints must be word aligned");
+    a.li(T0, (PERIPH_BASE + periph::DMA_SRC) as i32)
+        .li(T1, src as i32)
+        .sw(T1, 0, T0)
+        .li(T0, (PERIPH_BASE + periph::DMA_DST) as i32)
+        .li(T1, dst as i32)
+        .sw(T1, 0, T0)
+        .li(T0, (PERIPH_BASE + periph::DMA_LEN) as i32)
+        .li(T1, len.div_ceil(4) as i32 * 4)
+        .sw(T1, 0, T0)
+        .li(T0, (PERIPH_BASE + periph::DMA_CTL) as i32)
+        .li(T1, 1)
+        .sw(T1, 0, T0)
+        .wfi()
+        .li(T0, (PERIPH_BASE + periph::DMA_STATUS) as i32)
+        .lw(T1, 0, T0);
+}
+
+// --------------------------------------------------------------------------
+// NM-Carus + CV32E20
+// --------------------------------------------------------------------------
+
+pub fn run_carus(m: &Model) -> AdResult {
+    let mut soc = Soc::new(CpuConfig::CV32E20, 4);
+    // Flash: per layer, column-major (col k = w[:,k], `out` bytes each).
+    let mut rom = Vec::new();
+    let mut col_offsets = Vec::new();
+    for (l, &(ins, outs, _)) in network().iter().enumerate() {
+        col_offsets.push(rom.len() as u32);
+        let w = &m.weights[l];
+        for k in 0..ins {
+            for j in 0..outs {
+                rom.push(w[(j * ins + k) as usize] as u8);
+            }
+        }
+    }
+    soc.set_rom(rom);
+    let kernel = matvec_kernel();
+    let kbytes: Vec<u8> = kernel.words.iter().flat_map(|w| w.to_le_bytes()).collect();
+    const KSTAGE: u32 = 2 * BANK_SIZE; // kernel staging in SRAM bank 2
+    soc.load_data(KSTAGE, &kbytes);
+    soc.load_data(X_BUF, &m.input.iter().map(|&v| v as u8).collect::<Vec<_>>());
+
+    let mut a = Asm::new(0);
+    let mode_reg = (PERIPH_BASE + periph::CARUS_MODE) as i32;
+    // Upload the kernel once.
+    a.li(T0, mode_reg).li(T1, 1).sw(T1, 0, T0);
+    dma_copy(&mut a, KSTAGE, CARUS_BASE, kbytes.len() as u32);
+    a.li(T0, mode_reg).sw(ZERO, 0, T0);
+
+    for (l, &(ins, outs, relu)) in network().iter().enumerate() {
+        let vl = outs;
+        // ktile ≤ vl (x tile lives in logical reg 1), VRF capacity bound,
+        // and word-aligned so DMA endpoints stay aligned.
+        let cap = (crate::carus::vrf::CAPACITY / vl).saturating_sub(4);
+        let max_ktile = (vl.min(cap).min(ins) / 4).max(1) * 4;
+        let mut k0 = 0;
+        let mut t = 0;
+        while k0 < ins {
+            let ktile = max_ktile.min(ins - k0);
+            // x tile → VRF reg 1 (byte offset vl).
+            dma_copy(&mut a, X_BUF + k0, CARUS_BASE + vl, ktile);
+            // w tile (cols k0..) → VRF regs 4.. (byte offset 4·vl).
+            dma_copy(&mut a, ROM_BASE + col_offsets[l] + k0 * outs, CARUS_BASE + 4 * vl, ktile * outs);
+            let last = k0 + ktile >= ins;
+            a.li(T0, mode_reg).li(T1, 1).sw(T1, 0, T0); // config mode
+            for (i, val) in [vl, ktile, (t == 0) as u32, (relu && last) as u32].iter().enumerate() {
+                a.li(T0, (CARUS_BASE + ARG_OFFSET + 4 * i as u32) as i32)
+                    .li(T1, *val as i32)
+                    .sw(T1, 0, T0);
+            }
+            a.li(A0, (CARUS_BASE + CTL_OFFSET) as i32)
+                .li(T1, CTL_START as i32)
+                .sw(T1, 0, A0)
+                .wfi()
+                .lw(A1, 0, A0)
+                .sw(ZERO, 0, A0)
+                .li(T0, mode_reg)
+                .sw(ZERO, 0, T0); // memory mode
+            k0 += ktile;
+            t += 1;
+        }
+        // Result (acc = VRF bytes 0..outs) → SRAM x buffer for next layer.
+        dma_copy(&mut a, CARUS_BASE, X_BUF, outs);
+    }
+    a.ebreak();
+    let prog = a.assemble().expect("AD carus firmware");
+    soc.load_firmware(&prog, 0);
+    soc.reset_stats();
+    let (halt, _) = soc.run(50_000_000);
+    assert_eq!(halt, Halt::Done);
+    let out = soc.dump(X_BUF, 640).iter().map(|&b| b as i8).collect();
+    finish("NM-Carus + CV32E20", &soc, out)
+}
+
+/// The reusable Carus matvec kernel: `acc(v0) += Σ_k x[k]·w_col(v4+k)`,
+/// optional clear and fused ReLU. 20 instructions — the paper's code-size
+/// story in action.
+fn matvec_kernel() -> crate::asm::Program {
+    let mut a = Asm::new(0);
+    a.li(T0, ARG_OFFSET as i32)
+        .lw(A0, 0, T0) // vl
+        .lw(S0, 4, T0) // ktile
+        .lw(A3, 8, T0) // clear?
+        .lw(A4, 12, T0) // relu?
+        .vsetvli(T0, A0, Sew::E8)
+        .beq(A3, ZERO, "noclear")
+        .vmv_vx(0, ZERO) // acc = 0
+        .label("noclear")
+        .li(A5, 0) // k
+        .li(S1, pack_indexes(0, 4, 0) as i32) // {vd=0, vs2=4+k}
+        .label("kloop")
+        .emvx(A2, 1, A5) // x[k]
+        .v_opr(VOp::Macc, S1, VSrc::X(A2))
+        .addi(A5, A5, 1)
+        .addi(S1, S1, 0x100)
+        .bne(A5, S0, "kloop")
+        .beq(A4, ZERO, "done")
+        .vmax_vx(0, 0, ZERO) // fused ReLU
+        .label("done")
+        .ebreak();
+    a.assemble().expect("matvec kernel")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_forward_deterministic() {
+        let m = model(1);
+        let y1 = golden_forward(&m);
+        let y2 = golden_forward(&m);
+        assert_eq!(y1, y2);
+        assert_eq!(y1.len(), 640);
+        assert_eq!(total_macs(), 264_192);
+    }
+
+    #[test]
+    fn cpu_matches_golden_and_paper_cycles() {
+        let m = model(2);
+        let res = run_cpu(&m);
+        assert_eq!(res.output, golden_forward(&m), "CPU output mismatch");
+        // Paper: 561e3 cycles on the CV32E40P with RV32IMCXcv.
+        assert!(
+            (430_000..720_000).contains(&res.cycles),
+            "cycles = {} (paper 561e3)",
+            res.cycles
+        );
+    }
+
+    #[test]
+    fn carus_matches_golden() {
+        let m = model(2);
+        let res = run_carus(&m);
+        assert_eq!(res.output, golden_forward(&m), "Carus output mismatch");
+        // Paper: 3.55× faster than single core ⇒ ≈158e3 cycles.
+        assert!(res.cycles < 320_000, "cycles = {}", res.cycles);
+    }
+
+    #[test]
+    fn caesar_matches_golden() {
+        let m = model(2);
+        let res = run_caesar(&m);
+        assert_eq!(res.output, golden_forward(&m), "Caesar output mismatch");
+        // Paper: 1.29× faster than single core ⇒ ≈435e3 cycles.
+        assert!(res.cycles < 750_000, "cycles = {}", res.cycles);
+    }
+
+    #[test]
+    fn multicore_scaling_monotonic() {
+        let m = model(3);
+        let single = run_cpu(&m);
+        let dual = scale_multicore(&single, 2);
+        let quad = scale_multicore(&single, 4);
+        assert_eq!(dual.cycles, single.cycles / 2);
+        assert_eq!(quad.cycles, single.cycles / 4);
+        assert!(dual.energy_uj < single.energy_uj);
+        assert!(quad.energy_uj < dual.energy_uj);
+        // Energy gain is sub-linear (the paper's 1.37× / 1.67×).
+        assert!(single.energy_uj / quad.energy_uj < 4.0);
+    }
+}

@@ -1,0 +1,7 @@
+//! End-to-end applications (§V-B2).
+//!
+//! [`anomaly`] deploys the MLPerf-Tiny *Anomaly Detection* autoencoder on
+//! the HEEPerator testbench in the five Table VI configurations: 1/2/4-core
+//! CV32E40P (RV32IMCXcv) clusters, and CV32E20 + NM-Caesar / NM-Carus.
+
+pub mod anomaly;

@@ -1,0 +1,213 @@
+//! Analytical post-layout area model (65 nm low-power CMOS), calibrated to
+//! Table IV, Fig. 7 (post-synthesis breakdown), and Table VI.
+//!
+//! SRAM macro area follows the classic periphery+array affine model
+//! `A(c) = A0 + k·c` fitted to the paper's 32 KiB reference macro
+//! (200·10³ µm²) with a sub-linear small-capacity penalty that makes
+//! NM-Carus's 4 × 8 KiB data memory larger than NM-Caesar's 2 × 16 KiB one
+//! (visible in Fig. 7) despite identical capacity.
+//!
+//! Logic-block areas come from the paper (Fig. 7 proportions, Table IV
+//! totals, Table VI system areas) and public data for the OpenHW cores.
+//! All figures in µm².
+
+/// SRAM macro area (single-port, foundry compiler) for a capacity in KiB.
+///
+/// Fit: periphery/overhead term grows as capacity shrinks relative to the
+/// array — matching the paper's observation of "sublinear scaling of the
+/// footprint of an SRAM with its reduction in size".
+pub fn sram_area_um2(kib: f64) -> f64 {
+    // 32 KiB → 200e3, 16 KiB → ~110e3, 8 KiB → ~65e3, 4 KiB → ~42e3.
+    const PERIPHERY: f64 = 19.0e3;
+    const PER_KIB: f64 = 5.656e3;
+    PERIPHERY + PER_KIB * kib
+}
+
+/// 512 B latch/RF macro (NM-Carus eMEM).
+pub const EMEM_AREA: f64 = 8.0e3;
+
+/// NM-Caesar logic (controller + SIMD ALU + CSR), post-layout.
+pub const CAESAR_LOGIC_AREA: f64 = 30.0e3;
+
+/// NM-Carus eCPU (CV32E40X, RV32EC config) incl. XIF.
+pub const CARUS_ECPU_AREA: f64 = 45.0e3;
+
+/// NM-Carus VPU logic per lane (ALU + slice of permutation network).
+pub const CARUS_VPU_LANE_AREA: f64 = 18.0e3;
+
+/// NM-Carus shared VPU control (decode, commit, loop unit, CSR unit) +
+/// top-level bus multiplexing.
+pub const CARUS_VPU_SHARED_AREA: f64 = 20.0e3;
+
+/// CV32E40P core (RV32IMC, no FPU), post-layout.
+pub const CV32E40P_AREA: f64 = 110.0e3;
+
+/// CV32E40P DSP extension increment (Xcv datapath).
+pub const XCV_AREA: f64 = 15.0e3;
+
+/// CV32E20 ("micro-riscy", RV32E) core.
+pub const CV32E20_AREA: f64 = 30.0e3;
+
+/// Always-there MCU glue counted in the Table VI "system" areas:
+/// bus/crossbar + DMA + peripheral subsystem.
+pub const SYSTEM_GLUE_AREA: f64 = 40.0e3;
+
+/// Area report for one NMC macro in the style of Fig. 7.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MacroArea {
+    pub name: &'static str,
+    /// (component label, µm²) pairs, logic and memory.
+    pub parts: Vec<(&'static str, f64)>,
+}
+
+impl MacroArea {
+    pub fn total(&self) -> f64 {
+        self.parts.iter().map(|p| p.1).sum()
+    }
+    /// Overhead vs. the 32 KiB reference SRAM (Table IV row 1).
+    pub fn overhead_vs_sram32k(&self) -> f64 {
+        self.total() / sram_area_um2(32.0) - 1.0
+    }
+    /// Memory fraction (bitcell-macro area / total).
+    pub fn memory_fraction(&self) -> f64 {
+        let mem: f64 = self
+            .parts
+            .iter()
+            .filter(|(n, _)| n.contains("SRAM") || n.contains("eMEM"))
+            .map(|p| p.1)
+            .sum();
+        mem / self.total()
+    }
+}
+
+/// Reference 32 KiB SRAM (Table IV column 1).
+pub fn sram32k() -> MacroArea {
+    MacroArea { name: "SRAM 32 KiB", parts: vec![("SRAM array", sram_area_um2(32.0))] }
+}
+
+/// NM-Caesar, 32 KiB configuration (2 × 16 KiB banks).
+pub fn caesar() -> MacroArea {
+    MacroArea {
+        name: "NM-Caesar",
+        parts: vec![
+            ("SRAM 16 KiB ×2", 2.0 * sram_area_um2(16.0)),
+            ("controller+ALU logic", CAESAR_LOGIC_AREA),
+        ],
+    }
+}
+
+/// NM-Carus, 32 KiB configuration with `lanes` VRF banks of equal size.
+pub fn carus(lanes: u32) -> MacroArea {
+    let bank_kib = 32.0 / lanes as f64;
+    MacroArea {
+        name: "NM-Carus",
+        parts: vec![
+            ("SRAM VRF banks", lanes as f64 * sram_area_um2(bank_kib)),
+            ("eMEM 512 B", EMEM_AREA),
+            ("eCPU (CV32E40X)", CARUS_ECPU_AREA),
+            ("VPU lanes", lanes as f64 * CARUS_VPU_LANE_AREA),
+            ("VPU shared + mux", CARUS_VPU_SHARED_AREA),
+        ],
+    }
+}
+
+/// Table VI system areas.
+pub fn system_cpu_cluster(cores: u32) -> f64 {
+    // The paper assumes ideal linear area scaling for multi-core CPUs and a
+    // single 32 KiB L1 data bank.
+    cores as f64 * (CV32E40P_AREA + XCV_AREA) + sram_area_um2(32.0) + SYSTEM_GLUE_AREA
+}
+
+/// Table VI NMC system: CV32E20 + one NMC macro replacing the L1 bank.
+pub fn system_nmc(nmc: &MacroArea) -> f64 {
+    CV32E20_AREA + nmc.total() + SYSTEM_GLUE_AREA
+}
+
+/// Timing characteristics (Table IV) — modeled, not simulated: the NMC
+/// macros were constrained to the reference SRAM's clock and I/O delays.
+#[derive(Debug, Clone, Copy)]
+pub struct TimingSpec {
+    pub fmax_mhz: f64,
+    pub input_delay_ns: f64,
+    pub output_delay_ns: f64,
+}
+
+pub fn timing_sram32k() -> TimingSpec {
+    TimingSpec { fmax_mhz: 330.0, input_delay_ns: 0.69, output_delay_ns: 2.28 }
+}
+pub fn timing_caesar() -> TimingSpec {
+    // +2 % input delay (mode mux on the write path), unchanged output.
+    TimingSpec { fmax_mhz: 330.0, input_delay_ns: 0.70, output_delay_ns: 2.28 }
+}
+pub fn timing_carus() -> TimingSpec {
+    // +2 % input, +9 % output (VRF-bank/controller bus mux on the read path).
+    TimingSpec { fmax_mhz: 330.0, input_delay_ns: 0.70, output_delay_ns: 2.48 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_area_totals() {
+        // SRAM 200e3; Caesar 256e3 (+28 %); Carus 419e3 (+110 %), ±6 %.
+        let sram = sram32k().total();
+        assert!((sram - 200.0e3).abs() / 200.0e3 < 0.01, "sram = {sram}");
+        let c = caesar();
+        assert!(
+            (c.total() - 256.0e3).abs() / 256.0e3 < 0.06,
+            "caesar = {:.1}e3 ({:+.0} %)",
+            c.total() / 1e3,
+            c.overhead_vs_sram32k() * 100.0
+        );
+        let k = carus(4);
+        assert!(
+            (k.total() - 419.0e3).abs() / 419.0e3 < 0.06,
+            "carus = {:.1}e3 ({:+.0} %)",
+            k.total() / 1e3,
+            k.overhead_vs_sram32k() * 100.0
+        );
+    }
+
+    #[test]
+    fn carus_meets_memory_to_logic_target() {
+        // §IV-B: NM-Carus meets "the target 50 % memory to logic ratio".
+        let frac = carus(4).memory_fraction();
+        assert!((0.48..0.70).contains(&frac), "memory fraction = {frac:.2}");
+    }
+
+    #[test]
+    fn sublinear_sram_scaling_visible() {
+        // Fig. 7: Carus's 4×8 KiB banks out-area Caesar's 2×16 KiB.
+        assert!(4.0 * sram_area_um2(8.0) > 2.0 * sram_area_um2(16.0));
+        // And 2×16 KiB > 1×32 KiB.
+        assert!(2.0 * sram_area_um2(16.0) > sram_area_um2(32.0));
+    }
+
+    #[test]
+    fn table6_system_areas() {
+        // Single-core CV32E40P system ≈ 350e3 µm².
+        let single = system_cpu_cluster(1);
+        assert!((single - 350.0e3).abs() / 350.0e3 < 0.06, "single-core = {single}");
+        // NM-Caesar + CV32E20 ≈ 0.90× single-core.
+        let caesar_sys = system_nmc(&caesar());
+        let ratio = caesar_sys / single;
+        assert!((0.84..0.97).contains(&ratio), "caesar system ratio = {ratio:.2}");
+        // NM-Carus + CV32E20 ≈ 1.36× single-core, and < dual-core (1.43×).
+        let carus_sys = system_nmc(&carus(4));
+        let ratio = carus_sys / single;
+        assert!((1.25..1.43).contains(&ratio), "carus system ratio = {ratio:.2}");
+        assert!(carus_sys < system_cpu_cluster(2));
+    }
+
+    #[test]
+    fn timing_overheads_match_table4() {
+        let s = timing_sram32k();
+        let c = timing_caesar();
+        let k = timing_carus();
+        assert_eq!(s.fmax_mhz, c.fmax_mhz);
+        assert_eq!(s.fmax_mhz, k.fmax_mhz);
+        assert!((c.input_delay_ns / s.input_delay_ns - 1.015).abs() < 0.02);
+        assert!((k.output_delay_ns / s.output_delay_ns - 1.09).abs() < 0.02);
+    }
+}

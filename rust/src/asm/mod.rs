@@ -1,0 +1,591 @@
+//! Two-pass assembler DSL for RV32IM + Xcv + xvnmc programs.
+//!
+//! All firmware in the simulation — host CPU kernels (Table V baselines),
+//! the NM-Carus eCPU kernels (xvnmc programs loaded into the eMEM), and the
+//! Anomaly-Detection application — is written against this builder, which
+//! plays the role of GCC 11 `-O3` + the paper's extended GNU assembler.
+//!
+//! The builder is label-based and two-pass: branch/jump targets may be
+//! referenced before they are defined; [`Asm::assemble`] resolves them and
+//! emits the final machine-code words.
+//!
+//! ```no_run
+//! # // no_run: rustdoc test binaries bypass the cargo rpath config that
+//! # // locates the xla_extension-bundled libstdc++ in this environment.
+//! use nmc::asm::Asm;
+//! use nmc::isa::reg::*;
+//! let mut a = Asm::new(0x1000);
+//! a.li(A0, 10).label("loop").addi(A0, A0, -1).bne(A0, ZERO, "loop").ret();
+//! let prog = a.assemble().unwrap();
+//! assert_eq!(prog.base, 0x1000);
+//! assert!(prog.words.len() >= 4);
+//! ```
+
+use crate::isa::rv32::{encode, AluOp, BranchOp, CsrOp, Instr, LoadOp, MulOp, StoreOp};
+use crate::isa::xcv::{XcvInstr, XcvOp};
+use crate::isa::xvnmc::{VInstr, VOp, VSrc};
+use crate::isa::{reg, Reg, Sew};
+use std::collections::HashMap;
+
+/// An assembled program: machine words plus its load address.
+#[derive(Debug, Clone)]
+pub struct Program {
+    /// Load/base address of the first word.
+    pub base: u32,
+    /// 32-bit little-endian machine words.
+    pub words: Vec<u32>,
+    /// Label → byte address, for entry points and debugging.
+    pub symbols: HashMap<String, u32>,
+}
+
+impl Program {
+    /// Size in bytes.
+    pub fn size(&self) -> u32 {
+        (self.words.len() * 4) as u32
+    }
+    /// Address of a label.
+    pub fn addr_of(&self, label: &str) -> Option<u32> {
+        self.symbols.get(label).copied()
+    }
+    /// Raw bytes, little-endian (for loading into simulated memories).
+    pub fn bytes(&self) -> Vec<u8> {
+        self.words.iter().flat_map(|w| w.to_le_bytes()).collect()
+    }
+}
+
+/// Assembly errors surfaced by [`Asm::assemble`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AsmError {
+    UndefinedLabel(String),
+    DuplicateLabel(String),
+    BranchOutOfRange { label: String, offset: i64 },
+}
+
+impl std::fmt::Display for AsmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AsmError::UndefinedLabel(l) => write!(f, "undefined label `{l}`"),
+            AsmError::DuplicateLabel(l) => write!(f, "duplicate label `{l}`"),
+            AsmError::BranchOutOfRange { label, offset } => {
+                write!(f, "branch to `{label}` out of range ({offset} bytes)")
+            }
+        }
+    }
+}
+impl std::error::Error for AsmError {}
+
+enum Item {
+    Fixed(Instr),
+    Branch { op: BranchOp, rs1: Reg, rs2: Reg, target: String },
+    Jal { rd: Reg, target: String },
+    /// `la rd, label` — expands to auipc+addi (2 words, reserved up front).
+    La { rd: Reg, target: String },
+    Word(u32),
+}
+
+impl Item {
+    fn words(&self) -> usize {
+        match self {
+            Item::La { .. } => 2,
+            _ => 1,
+        }
+    }
+}
+
+/// The assembler builder. Every mnemonic method appends one instruction
+/// and returns `&mut Self` for chaining.
+pub struct Asm {
+    base: u32,
+    items: Vec<Item>,
+    labels: HashMap<String, usize>, // label -> item index
+}
+
+impl Asm {
+    /// Create an assembler for code loaded at `base`.
+    pub fn new(base: u32) -> Self {
+        Asm { base, items: Vec::new(), labels: HashMap::new() }
+    }
+
+    /// Define a label at the current position.
+    pub fn label(&mut self, name: &str) -> &mut Self {
+        if self.labels.insert(name.to_string(), self.items.len()).is_some() {
+            // Surface at assemble() time to keep the builder API infallible.
+            self.items.push(Item::Word(u32::MAX)); // poison
+            self.labels.insert(format!("__dup__{name}"), usize::MAX);
+        }
+        self
+    }
+
+    /// Append a raw pre-encoded word (escape hatch / data in code).
+    pub fn word(&mut self, w: u32) -> &mut Self {
+        self.items.push(Item::Word(w));
+        self
+    }
+
+    /// Append an already-built [`Instr`].
+    pub fn instr(&mut self, i: Instr) -> &mut Self {
+        self.items.push(Item::Fixed(i));
+        self
+    }
+
+    // ---- RV32I ----------------------------------------------------------
+
+    pub fn lui(&mut self, rd: Reg, imm20: i32) -> &mut Self {
+        self.instr(Instr::Lui { rd, imm: imm20 << 12 })
+    }
+    pub fn auipc(&mut self, rd: Reg, imm20: i32) -> &mut Self {
+        self.instr(Instr::Auipc { rd, imm: imm20 << 12 })
+    }
+    pub fn jal(&mut self, rd: Reg, target: &str) -> &mut Self {
+        self.items.push(Item::Jal { rd, target: target.to_string() });
+        self
+    }
+    pub fn j(&mut self, target: &str) -> &mut Self {
+        self.jal(reg::ZERO, target)
+    }
+    pub fn jalr(&mut self, rd: Reg, rs1: Reg, off: i32) -> &mut Self {
+        self.instr(Instr::Jalr { rd, rs1, off })
+    }
+    pub fn ret(&mut self) -> &mut Self {
+        self.jalr(reg::ZERO, reg::RA, 0)
+    }
+
+    fn branch(&mut self, op: BranchOp, rs1: Reg, rs2: Reg, target: &str) -> &mut Self {
+        self.items.push(Item::Branch { op, rs1, rs2, target: target.to_string() });
+        self
+    }
+    pub fn beq(&mut self, rs1: Reg, rs2: Reg, t: &str) -> &mut Self {
+        self.branch(BranchOp::Beq, rs1, rs2, t)
+    }
+    pub fn bne(&mut self, rs1: Reg, rs2: Reg, t: &str) -> &mut Self {
+        self.branch(BranchOp::Bne, rs1, rs2, t)
+    }
+    pub fn blt(&mut self, rs1: Reg, rs2: Reg, t: &str) -> &mut Self {
+        self.branch(BranchOp::Blt, rs1, rs2, t)
+    }
+    pub fn bge(&mut self, rs1: Reg, rs2: Reg, t: &str) -> &mut Self {
+        self.branch(BranchOp::Bge, rs1, rs2, t)
+    }
+    pub fn bltu(&mut self, rs1: Reg, rs2: Reg, t: &str) -> &mut Self {
+        self.branch(BranchOp::Bltu, rs1, rs2, t)
+    }
+    pub fn bgeu(&mut self, rs1: Reg, rs2: Reg, t: &str) -> &mut Self {
+        self.branch(BranchOp::Bgeu, rs1, rs2, t)
+    }
+
+    pub fn lb(&mut self, rd: Reg, off: i32, rs1: Reg) -> &mut Self {
+        self.instr(Instr::Load { op: LoadOp::Lb, rd, rs1, off })
+    }
+    pub fn lbu(&mut self, rd: Reg, off: i32, rs1: Reg) -> &mut Self {
+        self.instr(Instr::Load { op: LoadOp::Lbu, rd, rs1, off })
+    }
+    pub fn lh(&mut self, rd: Reg, off: i32, rs1: Reg) -> &mut Self {
+        self.instr(Instr::Load { op: LoadOp::Lh, rd, rs1, off })
+    }
+    pub fn lhu(&mut self, rd: Reg, off: i32, rs1: Reg) -> &mut Self {
+        self.instr(Instr::Load { op: LoadOp::Lhu, rd, rs1, off })
+    }
+    pub fn lw(&mut self, rd: Reg, off: i32, rs1: Reg) -> &mut Self {
+        self.instr(Instr::Load { op: LoadOp::Lw, rd, rs1, off })
+    }
+    pub fn sb(&mut self, rs2: Reg, off: i32, rs1: Reg) -> &mut Self {
+        self.instr(Instr::Store { op: StoreOp::Sb, rs2, rs1, off })
+    }
+    pub fn sh(&mut self, rs2: Reg, off: i32, rs1: Reg) -> &mut Self {
+        self.instr(Instr::Store { op: StoreOp::Sh, rs2, rs1, off })
+    }
+    pub fn sw(&mut self, rs2: Reg, off: i32, rs1: Reg) -> &mut Self {
+        self.instr(Instr::Store { op: StoreOp::Sw, rs2, rs1, off })
+    }
+
+    #[track_caller]
+    fn chk12(imm: i32) -> i32 {
+        assert!((-2048..=2047).contains(&imm), "12-bit immediate out of range: {imm}");
+        imm
+    }
+    #[track_caller]
+    pub fn addi(&mut self, rd: Reg, rs1: Reg, imm: i32) -> &mut Self {
+        self.instr(Instr::AluImm { op: AluOp::Add, rd, rs1, imm: Self::chk12(imm) })
+    }
+    #[track_caller]
+    pub fn andi(&mut self, rd: Reg, rs1: Reg, imm: i32) -> &mut Self {
+        self.instr(Instr::AluImm { op: AluOp::And, rd, rs1, imm: Self::chk12(imm) })
+    }
+    #[track_caller]
+    pub fn ori(&mut self, rd: Reg, rs1: Reg, imm: i32) -> &mut Self {
+        self.instr(Instr::AluImm { op: AluOp::Or, rd, rs1, imm: Self::chk12(imm) })
+    }
+    #[track_caller]
+    pub fn xori(&mut self, rd: Reg, rs1: Reg, imm: i32) -> &mut Self {
+        self.instr(Instr::AluImm { op: AluOp::Xor, rd, rs1, imm: Self::chk12(imm) })
+    }
+    #[track_caller]
+    pub fn slti(&mut self, rd: Reg, rs1: Reg, imm: i32) -> &mut Self {
+        self.instr(Instr::AluImm { op: AluOp::Slt, rd, rs1, imm: Self::chk12(imm) })
+    }
+    #[track_caller]
+    pub fn sltiu(&mut self, rd: Reg, rs1: Reg, imm: i32) -> &mut Self {
+        self.instr(Instr::AluImm { op: AluOp::Sltu, rd, rs1, imm: Self::chk12(imm) })
+    }
+    pub fn slli(&mut self, rd: Reg, rs1: Reg, sh: i32) -> &mut Self {
+        self.instr(Instr::AluImm { op: AluOp::Sll, rd, rs1, imm: sh })
+    }
+    pub fn srli(&mut self, rd: Reg, rs1: Reg, sh: i32) -> &mut Self {
+        self.instr(Instr::AluImm { op: AluOp::Srl, rd, rs1, imm: sh })
+    }
+    pub fn srai(&mut self, rd: Reg, rs1: Reg, sh: i32) -> &mut Self {
+        self.instr(Instr::AluImm { op: AluOp::Sra, rd, rs1, imm: sh })
+    }
+
+    pub fn add(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.instr(Instr::Alu { op: AluOp::Add, rd, rs1, rs2 })
+    }
+    pub fn sub(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.instr(Instr::Alu { op: AluOp::Sub, rd, rs1, rs2 })
+    }
+    pub fn and(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.instr(Instr::Alu { op: AluOp::And, rd, rs1, rs2 })
+    }
+    pub fn or(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.instr(Instr::Alu { op: AluOp::Or, rd, rs1, rs2 })
+    }
+    pub fn xor(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.instr(Instr::Alu { op: AluOp::Xor, rd, rs1, rs2 })
+    }
+    pub fn sll(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.instr(Instr::Alu { op: AluOp::Sll, rd, rs1, rs2 })
+    }
+    pub fn srl(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.instr(Instr::Alu { op: AluOp::Srl, rd, rs1, rs2 })
+    }
+    pub fn sra(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.instr(Instr::Alu { op: AluOp::Sra, rd, rs1, rs2 })
+    }
+    pub fn slt(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.instr(Instr::Alu { op: AluOp::Slt, rd, rs1, rs2 })
+    }
+    pub fn sltu(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.instr(Instr::Alu { op: AluOp::Sltu, rd, rs1, rs2 })
+    }
+
+    // ---- RV32M ----------------------------------------------------------
+
+    pub fn mul(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.instr(Instr::MulDiv { op: MulOp::Mul, rd, rs1, rs2 })
+    }
+    pub fn mulh(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.instr(Instr::MulDiv { op: MulOp::Mulh, rd, rs1, rs2 })
+    }
+    pub fn div(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.instr(Instr::MulDiv { op: MulOp::Div, rd, rs1, rs2 })
+    }
+    pub fn rem(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.instr(Instr::MulDiv { op: MulOp::Rem, rd, rs1, rs2 })
+    }
+
+    // ---- System ---------------------------------------------------------
+
+    pub fn csrrw(&mut self, rd: Reg, csr: u16, rs1: Reg) -> &mut Self {
+        self.instr(Instr::Csr { op: CsrOp::Csrrw, rd, rs1, csr })
+    }
+    pub fn csrrs(&mut self, rd: Reg, csr: u16, rs1: Reg) -> &mut Self {
+        self.instr(Instr::Csr { op: CsrOp::Csrrs, rd, rs1, csr })
+    }
+    pub fn ecall(&mut self) -> &mut Self {
+        self.instr(Instr::Ecall)
+    }
+    pub fn ebreak(&mut self) -> &mut Self {
+        self.instr(Instr::Ebreak)
+    }
+    pub fn wfi(&mut self) -> &mut Self {
+        self.instr(Instr::Wfi)
+    }
+    pub fn nop(&mut self) -> &mut Self {
+        self.addi(reg::ZERO, reg::ZERO, 0)
+    }
+
+    // ---- Pseudo-instructions --------------------------------------------
+
+    /// `li rd, imm` — 1 or 2 instructions depending on the immediate.
+    pub fn li(&mut self, rd: Reg, imm: i32) -> &mut Self {
+        if (-2048..=2047).contains(&imm) {
+            return self.addi(rd, reg::ZERO, imm);
+        }
+        let hi = (imm.wrapping_add(0x800)) >> 12;
+        let lo = imm.wrapping_sub(hi << 12);
+        self.lui(rd, hi);
+        if lo != 0 {
+            self.addi(rd, rd, lo);
+        }
+        self
+    }
+    /// `mv rd, rs`.
+    pub fn mv(&mut self, rd: Reg, rs: Reg) -> &mut Self {
+        self.addi(rd, rs, 0)
+    }
+    /// `la rd, label` — position-independent auipc+addi pair.
+    pub fn la(&mut self, rd: Reg, target: &str) -> &mut Self {
+        self.items.push(Item::La { rd, target: target.to_string() });
+        self
+    }
+
+    // ---- Xcv (CV32E40P DSP subset) ---------------------------------------
+
+    fn xcv(&mut self, op: XcvOp, sew: Sew, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.instr(Instr::Xcv(XcvInstr { op, sew, rd, rs1, rs2 }))
+    }
+    /// `cv.sdotsp.b rd, rs1, rs2` — rd += Σ 4 int8 products.
+    pub fn cv_sdotsp_b(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.xcv(XcvOp::SdotSp, Sew::E8, rd, rs1, rs2)
+    }
+    /// `cv.sdotsp.h rd, rs1, rs2` — rd += Σ 2 int16 products.
+    pub fn cv_sdotsp_h(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.xcv(XcvOp::SdotSp, Sew::E16, rd, rs1, rs2)
+    }
+    /// `cv.max.b` — packed int8 max (ReLU against zero).
+    pub fn cv_max_b(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.xcv(XcvOp::Max, Sew::E8, rd, rs1, rs2)
+    }
+    pub fn cv_max_h(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.xcv(XcvOp::Max, Sew::E16, rd, rs1, rs2)
+    }
+    pub fn cv_max(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.xcv(XcvOp::Max, Sew::E32, rd, rs1, rs2)
+    }
+    pub fn cv_min(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.xcv(XcvOp::Min, Sew::E32, rd, rs1, rs2)
+    }
+    pub fn cv_add_b(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.xcv(XcvOp::Add, Sew::E8, rd, rs1, rs2)
+    }
+    pub fn cv_sra_b(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.xcv(XcvOp::Sra, Sew::E8, rd, rs1, rs2)
+    }
+
+    // ---- xvnmc (NM-Carus vector extension) --------------------------------
+
+    /// Generic direct-addressed vector op.
+    pub fn v_op(&mut self, op: VOp, vd: u8, vs2: u8, src: VSrc) -> &mut Self {
+        self.instr(Instr::Xvnmc(VInstr::Op { op, vd, vs2, src, indirect: false, idx_gpr: 0 }))
+    }
+    /// Generic indirect-addressed (`[r]`) vector op: register indexes come
+    /// from `idx_gpr` at runtime (see [`crate::isa::xvnmc::pack_indexes`]).
+    pub fn v_opr(&mut self, op: VOp, idx_gpr: Reg, src: VSrc) -> &mut Self {
+        self.instr(Instr::Xvnmc(VInstr::Op { op, vd: 0, vs2: 0, src, indirect: true, idx_gpr }))
+    }
+    pub fn vadd_vv(&mut self, vd: u8, vs2: u8, vs1: u8) -> &mut Self {
+        self.v_op(VOp::Add, vd, vs2, VSrc::V(vs1))
+    }
+    pub fn vadd_vx(&mut self, vd: u8, vs2: u8, rs1: Reg) -> &mut Self {
+        self.v_op(VOp::Add, vd, vs2, VSrc::X(rs1))
+    }
+    pub fn vmacc_vx(&mut self, vd: u8, vs2: u8, rs1: Reg) -> &mut Self {
+        self.v_op(VOp::Macc, vd, vs2, VSrc::X(rs1))
+    }
+    pub fn vmaccr_vx(&mut self, idx_gpr: Reg, rs1: Reg) -> &mut Self {
+        self.v_opr(VOp::Macc, idx_gpr, VSrc::X(rs1))
+    }
+    pub fn vmul_vv(&mut self, vd: u8, vs2: u8, vs1: u8) -> &mut Self {
+        self.v_op(VOp::Mul, vd, vs2, VSrc::V(vs1))
+    }
+    pub fn vxor_vv(&mut self, vd: u8, vs2: u8, vs1: u8) -> &mut Self {
+        self.v_op(VOp::Xor, vd, vs2, VSrc::V(vs1))
+    }
+    pub fn vmax_vx(&mut self, vd: u8, vs2: u8, rs1: Reg) -> &mut Self {
+        self.v_op(VOp::Max, vd, vs2, VSrc::X(rs1))
+    }
+    pub fn vmin_vv(&mut self, vd: u8, vs2: u8, vs1: u8) -> &mut Self {
+        self.v_op(VOp::Min, vd, vs2, VSrc::V(vs1))
+    }
+    pub fn vmax_vv(&mut self, vd: u8, vs2: u8, vs1: u8) -> &mut Self {
+        self.v_op(VOp::Max, vd, vs2, VSrc::V(vs1))
+    }
+    pub fn vsra_vx(&mut self, vd: u8, vs2: u8, rs1: Reg) -> &mut Self {
+        self.v_op(VOp::Sra, vd, vs2, VSrc::X(rs1))
+    }
+    pub fn vmv_vv(&mut self, vd: u8, vs1: u8) -> &mut Self {
+        self.v_op(VOp::Mv, vd, 0, VSrc::V(vs1))
+    }
+    pub fn vmv_vx(&mut self, vd: u8, rs1: Reg) -> &mut Self {
+        self.v_op(VOp::Mv, vd, 0, VSrc::X(rs1))
+    }
+    pub fn vslidedown_vx(&mut self, vd: u8, vs2: u8, rs1: Reg) -> &mut Self {
+        self.v_op(VOp::SlideDown, vd, vs2, VSrc::X(rs1))
+    }
+    /// `xvnmc.emvv vd[x[idx]], x[rs1]`.
+    pub fn emvv(&mut self, vd: u8, idx: Reg, rs1: Reg) -> &mut Self {
+        self.instr(Instr::Xvnmc(VInstr::Emvv { vd, idx, rs1 }))
+    }
+    /// `xvnmc.emvx rd, vs2[x[idx]]`.
+    pub fn emvx(&mut self, rd: Reg, vs2: u8, idx: Reg) -> &mut Self {
+        self.instr(Instr::Xvnmc(VInstr::Emvx { rd, vs2, idx }))
+    }
+    /// `xvnmc.vsetvli rd, rs1, e{8,16,32}`.
+    pub fn vsetvli(&mut self, rd: Reg, rs1: Reg, sew: Sew) -> &mut Self {
+        self.instr(Instr::Xvnmc(VInstr::VsetVli { rd, rs1, vtype: (sew.code() << 3) as u16 }))
+    }
+
+    // ---- Assembly --------------------------------------------------------
+
+    /// Resolve labels and emit machine code.
+    pub fn assemble(&self) -> Result<Program, AsmError> {
+        // Pass 1: item index -> byte offset.
+        let mut offsets = Vec::with_capacity(self.items.len());
+        let mut pos = 0u32;
+        for it in &self.items {
+            offsets.push(pos);
+            pos += (it.words() * 4) as u32;
+        }
+        for (l, _) in self.labels.iter() {
+            if let Some(stripped) = l.strip_prefix("__dup__") {
+                return Err(AsmError::DuplicateLabel(stripped.to_string()));
+            }
+        }
+        let addr_of = |label: &str| -> Result<u32, AsmError> {
+            let idx = *self
+                .labels
+                .get(label)
+                .ok_or_else(|| AsmError::UndefinedLabel(label.to_string()))?;
+            Ok(self.base + offsets.get(idx).copied().unwrap_or(pos))
+        };
+        // Pass 2: encode.
+        let mut words = Vec::with_capacity(self.items.len());
+        for (i, it) in self.items.iter().enumerate() {
+            let pc = self.base + offsets[i];
+            match it {
+                Item::Fixed(instr) => words.push(encode(instr)),
+                Item::Word(w) => words.push(*w),
+                Item::Branch { op, rs1, rs2, target } => {
+                    let off = addr_of(target)? as i64 - pc as i64;
+                    if off < -4096 || off > 4094 {
+                        return Err(AsmError::BranchOutOfRange { label: target.clone(), offset: off });
+                    }
+                    words.push(encode(&Instr::Branch {
+                        op: *op,
+                        rs1: *rs1,
+                        rs2: *rs2,
+                        off: off as i32,
+                    }));
+                }
+                Item::Jal { rd, target } => {
+                    let off = addr_of(target)? as i64 - pc as i64;
+                    if off < -(1 << 20) || off >= (1 << 20) {
+                        return Err(AsmError::BranchOutOfRange { label: target.clone(), offset: off });
+                    }
+                    words.push(encode(&Instr::Jal { rd: *rd, off: off as i32 }));
+                }
+                Item::La { rd, target } => {
+                    let abs = addr_of(target)? as i64;
+                    let rel = abs - pc as i64;
+                    let hi = ((rel + 0x800) >> 12) as i32;
+                    let lo = (rel - ((hi as i64) << 12)) as i32;
+                    words.push(encode(&Instr::Auipc { rd: *rd, imm: hi << 12 }));
+                    words.push(encode(&Instr::AluImm { op: AluOp::Add, rd: *rd, rs1: *rd, imm: lo }));
+                }
+            }
+        }
+        let symbols = self
+            .labels
+            .iter()
+            .filter(|(l, _)| !l.starts_with("__dup__"))
+            .map(|(l, &idx)| {
+                let off = offsets.get(idx).copied().unwrap_or(pos);
+                (l.clone(), self.base + off)
+            })
+            .collect();
+        Ok(Program { base: self.base, words, symbols })
+    }
+
+    /// Number of instructions (words) emitted so far (La counts as 2).
+    pub fn len_words(&self) -> usize {
+        self.items.iter().map(|i| i.words()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::reg::*;
+    use crate::isa::rv32::decode;
+
+    #[test]
+    fn forward_and_backward_branches() {
+        let mut a = Asm::new(0x100);
+        a.li(A0, 3)
+            .label("loop")
+            .addi(A0, A0, -1)
+            .bne(A0, ZERO, "loop")
+            .beq(ZERO, ZERO, "end")
+            .nop()
+            .label("end")
+            .ret();
+        let p = a.assemble().unwrap();
+        assert_eq!(p.base, 0x100);
+        // bne at word 2 → offset -4
+        match decode(p.words[2]).unwrap() {
+            Instr::Branch { off, .. } => assert_eq!(off, -4),
+            other => panic!("{other:?}"),
+        }
+        // beq at word 3 → skips nop → offset +8
+        match decode(p.words[3]).unwrap() {
+            Instr::Branch { off, .. } => assert_eq!(off, 8),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(p.addr_of("end"), Some(0x100 + 5 * 4));
+    }
+
+    #[test]
+    fn li_expansion() {
+        let mut a = Asm::new(0);
+        a.li(T0, 5);
+        assert_eq!(a.len_words(), 1);
+        a.li(T0, 0x12345678);
+        assert_eq!(a.len_words(), 3);
+        a.li(T1, -1);
+        assert_eq!(a.len_words(), 4);
+        let p = a.assemble().unwrap();
+        // Verify the constants materialize by symbolic execution of lui/addi.
+        let mut regs = [0i64; 32];
+        for w in &p.words {
+            match decode(*w).unwrap() {
+                Instr::Lui { rd, imm } => regs[rd as usize] = imm as i64,
+                Instr::AluImm { rd, rs1, imm, .. } => {
+                    regs[rd as usize] = (regs[rs1 as usize] as i32).wrapping_add(imm) as i64
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(regs[T1 as usize] as i32, -1);
+        assert_eq!(regs[T0 as usize] as i32, 0x12345678);
+    }
+
+    #[test]
+    fn errors_detected() {
+        let mut a = Asm::new(0);
+        a.j("nowhere");
+        assert_eq!(a.assemble().unwrap_err(), AsmError::UndefinedLabel("nowhere".into()));
+
+        let mut a = Asm::new(0);
+        a.label("x").nop().label("x");
+        assert!(matches!(a.assemble().unwrap_err(), AsmError::DuplicateLabel(_)));
+    }
+
+    #[test]
+    fn la_is_pc_relative() {
+        let mut a = Asm::new(0x2000);
+        a.la(A0, "data").ret().label("data").word(0xdeadbeef);
+        let p = a.assemble().unwrap();
+        assert_eq!(p.words.len(), 4);
+        assert_eq!(p.addr_of("data"), Some(0x2000 + 12));
+    }
+
+    #[test]
+    fn xvnmc_methods_encode() {
+        let mut a = Asm::new(0);
+        a.vsetvli(T0, A0, Sew::E8).vmacc_vx(2, 1, A1).emvx(A2, 0, A3);
+        let p = a.assemble().unwrap();
+        for w in &p.words {
+            assert_eq!(w & 0x7f, 0x5b, "{w:#010x} not custom-2");
+        }
+    }
+}

@@ -1,0 +1,63 @@
+//! Minimal benchmarking harness (criterion is not in the offline vendor
+//! set). Adaptive iteration count, median-of-runs reporting, and a
+//! machine-readable summary line per benchmark:
+//!
+//! ```text
+//! BENCH <name> median_ns=<t> runs=<n> [throughput=<v> <unit>]
+//! ```
+//!
+//! Used by the `rust/benches/*.rs` binaries (harness = false), which
+//! measure the *simulator's* performance — the Layer-3 hot path of this
+//! project (see EXPERIMENTS.md §Perf).
+
+use std::time::Instant;
+
+/// Measurement of one benchmark.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub median_ns: f64,
+    pub runs: usize,
+}
+
+/// Run `f` repeatedly and report the median wall time.
+///
+/// `f` receives nothing and should perform one complete unit of work;
+/// return values should be black-boxed by the caller via [`sink`].
+pub fn bench(name: &str, mut f: impl FnMut()) -> Measurement {
+    // Warm-up.
+    for _ in 0..2 {
+        f();
+    }
+    // Calibrate: aim for ≥ 300 ms total or ≥ 30 runs, whichever first.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64();
+    let runs = ((0.3 / once.max(1e-9)) as usize).clamp(5, 30);
+    let mut samples = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median_ns = samples[samples.len() / 2];
+    println!("BENCH {name} median_ns={median_ns:.0} runs={runs}");
+    Measurement { name: name.to_string(), median_ns, runs }
+}
+
+/// Report a throughput figure derived from a measurement.
+pub fn throughput(m: &Measurement, units: f64, unit_name: &str) {
+    let per_sec = units / (m.median_ns / 1e9);
+    println!(
+        "BENCH {} throughput={:.2}M {unit_name}/s",
+        m.name,
+        per_sec / 1e6
+    );
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn sink<T>(v: T) -> T {
+    std::hint::black_box(v)
+}

@@ -1,0 +1,178 @@
+//! The NM-Caesar domain-specific compiler (§III-A1, §V-A2).
+//!
+//! The paper: "an in-house domain-specific compiler can be used to assemble
+//! predefined sequences of NM-Caesar instructions that implement specific
+//! kernels. These are compiled and embedded into the host system and sent
+//! to NM-Caesar by the host CPU or DMA controller during execution."
+//!
+//! [`CaesarProgram`] is that compiler's output representation: an ordered
+//! list of `(destination word, instruction word)` pairs. It can be
+//! serialized into the in-memory stream format consumed by the DMA's
+//! [`crate::dma::DmaMode::CaesarStream`] mode (absolute destination address
+//! followed by the instruction word), or issued directly by the host CPU
+//! (the online `*(BASE + DEST << 2) = …` pattern).
+
+use super::isa::{self, MicroOp, Op};
+use crate::isa::Sew;
+
+/// One stream entry: destination word offset + encoded instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Entry {
+    pub dest_word: u32,
+    pub data: u32,
+}
+
+/// A compiled NM-Caesar kernel.
+#[derive(Debug, Clone, Default)]
+pub struct CaesarProgram {
+    pub entries: Vec<Entry>,
+}
+
+impl CaesarProgram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of micro-ops.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    fn push(&mut self, dest_word: u32, m: MicroOp) -> &mut Self {
+        self.entries.push(Entry { dest_word, data: isa::encode(&m) });
+        self
+    }
+
+    /// Generic three-operand op on word offsets.
+    pub fn op(&mut self, op: Op, dest: u32, src1: u32, src2: u32) -> &mut Self {
+        self.push(dest, MicroOp { op, src1: src1 as u16, src2: src2 as u16 })
+    }
+
+    /// Configure the element width.
+    pub fn csrw(&mut self, sew: Sew) -> &mut Self {
+        self.push(0, MicroOp { op: Op::Csrw, src1: sew.code() as u16, src2: 0 })
+    }
+
+    pub fn and(&mut self, d: u32, a: u32, b: u32) -> &mut Self {
+        self.op(Op::And, d, a, b)
+    }
+    pub fn or(&mut self, d: u32, a: u32, b: u32) -> &mut Self {
+        self.op(Op::Or, d, a, b)
+    }
+    pub fn xor(&mut self, d: u32, a: u32, b: u32) -> &mut Self {
+        self.op(Op::Xor, d, a, b)
+    }
+    pub fn add(&mut self, d: u32, a: u32, b: u32) -> &mut Self {
+        self.op(Op::Add, d, a, b)
+    }
+    pub fn sub(&mut self, d: u32, a: u32, b: u32) -> &mut Self {
+        self.op(Op::Sub, d, a, b)
+    }
+    pub fn mul(&mut self, d: u32, a: u32, b: u32) -> &mut Self {
+        self.op(Op::Mul, d, a, b)
+    }
+    pub fn min(&mut self, d: u32, a: u32, b: u32) -> &mut Self {
+        self.op(Op::Min, d, a, b)
+    }
+    pub fn max(&mut self, d: u32, a: u32, b: u32) -> &mut Self {
+        self.op(Op::Max, d, a, b)
+    }
+    pub fn sll(&mut self, d: u32, a: u32, b: u32) -> &mut Self {
+        self.op(Op::Sll, d, a, b)
+    }
+    pub fn slr(&mut self, d: u32, a: u32, b: u32) -> &mut Self {
+        self.op(Op::Slr, d, a, b)
+    }
+    pub fn sra(&mut self, d: u32, a: u32, b: u32) -> &mut Self {
+        self.op(Op::Sra, d, a, b)
+    }
+    /// MAC family (dest ignored for non-store ops).
+    pub fn mac_init(&mut self, a: u32, b: u32) -> &mut Self {
+        self.op(Op::MacInit, 0, a, b)
+    }
+    pub fn mac(&mut self, a: u32, b: u32) -> &mut Self {
+        self.op(Op::Mac, 0, a, b)
+    }
+    pub fn mac_store(&mut self, d: u32, a: u32, b: u32) -> &mut Self {
+        self.op(Op::MacStore, d, a, b)
+    }
+    /// Dot-product family.
+    pub fn dot_init(&mut self, a: u32, b: u32) -> &mut Self {
+        self.op(Op::DotInit, 0, a, b)
+    }
+    pub fn dot(&mut self, a: u32, b: u32) -> &mut Self {
+        self.op(Op::Dot, 0, a, b)
+    }
+    pub fn dot_store(&mut self, d: u32, a: u32, b: u32) -> &mut Self {
+        self.op(Op::DotStore, d, a, b)
+    }
+
+    /// Serialize to the DMA stream format: little-endian
+    /// `(absolute destination address, instruction word)` pairs, ready to be
+    /// placed in a system SRAM bank and streamed with
+    /// [`crate::dma::DmaMode::CaesarStream`].
+    pub fn to_stream(&self, caesar_base: u32) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.entries.len() * 8);
+        for e in &self.entries {
+            out.extend_from_slice(&(caesar_base + e.dest_word * 4).to_le_bytes());
+            out.extend_from_slice(&e.data.to_le_bytes());
+        }
+        out
+    }
+
+    /// Stream size in bytes (what the DMA_LEN register receives).
+    pub fn stream_len(&self) -> u32 {
+        (self.entries.len() * 8) as u32
+    }
+
+    /// Code-size metric for comparisons: bytes of host memory occupied.
+    pub fn code_bytes(&self) -> u32 {
+        self.stream_len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::caesar::Caesar;
+
+    #[test]
+    fn stream_roundtrip_executes() {
+        let mut p = CaesarProgram::new();
+        p.csrw(Sew::E32).add(100, 0, 4096).xor(101, 0, 4096);
+        assert_eq!(p.len(), 3);
+        let stream = p.to_stream(0x3_0000);
+        assert_eq!(stream.len(), 24);
+
+        // Decode the stream as the DMA would and feed a Caesar model.
+        let mut c = Caesar::new();
+        c.poke_word(0, 6);
+        c.poke_word(4096, 3);
+        for pair in stream.chunks(8) {
+            let addr = u32::from_le_bytes(pair[0..4].try_into().unwrap());
+            let data = u32::from_le_bytes(pair[4..8].try_into().unwrap());
+            assert!(addr >= 0x3_0000);
+            while !c.ready() {
+                c.step();
+            }
+            c.issue((addr - 0x3_0000) / 4, data);
+            c.step();
+        }
+        while !c.ready() {
+            c.step();
+        }
+        assert_eq!(c.peek_word(100), 9);
+        assert_eq!(c.peek_word(101), 5);
+    }
+
+    #[test]
+    fn builder_chains() {
+        let mut p = CaesarProgram::new();
+        p.dot_init(0, 4096).dot(1, 4097).dot_store(200, 2, 4098);
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.entries[2].dest_word, 200);
+    }
+}

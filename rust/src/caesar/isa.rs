@@ -1,0 +1,189 @@
+//! NM-Caesar micro-instruction set (Table I).
+//!
+//! NM-Caesar instructions are not RISC-V: in *computing* mode, every bus
+//! **write** transaction is interpreted as one micro-op. The 32-bit write
+//! *data* word carries the opcode and the two source operands; the write
+//! *address* carries the destination operand, exactly as in normal memory
+//! accesses (§III-A1):
+//!
+//! ```text
+//!   data[31:26] = opcode
+//!   data[25:13] = src2 word offset   (13 bits → 32 KiB addressable)
+//!   data[12:0]  = src1 word offset
+//!   addr        = dest (ordinary bus address; word offset within the macro)
+//! ```
+//!
+//! The paper's example encodes an addition as
+//! `*(BASE + DEST << 2) = ADD << 26 | SRC2 << 13 | SRC1;` — [`encode`] and
+//! [`decode`] implement exactly this layout. The element bitwidth is *not*
+//! per-instruction: it is statically configured in a CSR by [`Op::Csrw`]
+//! ("to avoid repeated instruction encodings").
+
+use crate::isa::{bits, Sew};
+
+/// NM-Caesar opcodes (Table I). All data ops are packed-SIMD element-wise
+/// except the word-wise dot-product family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Op {
+    And = 0,
+    Or = 1,
+    Xor = 2,
+    Add = 3,
+    Sub = 4,
+    Mul = 5,
+    /// Multiply-add initialization: `acc ← src1 ⊙ src2` (clears first).
+    MacInit = 6,
+    /// Multiply-add: `acc += src1 ⊙ src2` element-wise.
+    Mac = 7,
+    /// Multiply-add + writeback of the packed accumulator.
+    MacStore = 8,
+    /// Word-wise dot-product init: `dacc ← Σ src1[i]·src2[i]`.
+    DotInit = 9,
+    /// `dacc += Σ src1[i]·src2[i]`.
+    Dot = 10,
+    /// Dot + writeback of the 32-bit scalar accumulator.
+    DotStore = 11,
+    /// Logic shift left (per-element amounts from src2).
+    Sll = 12,
+    /// Logic shift right.
+    Slr = 13,
+    Min = 14,
+    Max = 15,
+    /// Set operand bitwidth in the CSR; src1[1:0] = SEW code.
+    Csrw = 16,
+    /// Arithmetic shift right. Not in Table I's listing, but the paper's
+    /// measured leaky-ReLU throughput (one shift + one max per word at
+    /// every width, footnote f: "negative slope coefficient implemented as
+    /// right shift") requires a sign-preserving shift; we expose it as an
+    /// additional opcode of the same shifter datapath.
+    Sra = 17,
+}
+
+impl Op {
+    /// All opcodes (iteration helper).
+    pub const ALL: [Op; 18] = [
+        Op::And,
+        Op::Or,
+        Op::Xor,
+        Op::Add,
+        Op::Sub,
+        Op::Mul,
+        Op::MacInit,
+        Op::Mac,
+        Op::MacStore,
+        Op::DotInit,
+        Op::Dot,
+        Op::DotStore,
+        Op::Sll,
+        Op::Slr,
+        Op::Min,
+        Op::Max,
+        Op::Csrw,
+        Op::Sra,
+    ];
+
+    pub fn from_code(c: u32) -> Option<Op> {
+        Op::ALL.get(c as usize).copied()
+    }
+
+    /// Does this op write a result word to the destination address?
+    pub fn writes_dest(self) -> bool {
+        !matches!(self, Op::MacInit | Op::Mac | Op::DotInit | Op::Dot | Op::Csrw)
+    }
+
+    /// Does this op use the multiplier datapath (energy class)?
+    pub fn is_mul_class(self) -> bool {
+        matches!(self, Op::Mul | Op::MacInit | Op::Mac | Op::MacStore | Op::DotInit | Op::Dot | Op::DotStore)
+    }
+
+    /// Does this op use the partitioned adder (energy class)?
+    pub fn is_add_class(self) -> bool {
+        matches!(self, Op::Add | Op::Sub | Op::Min | Op::Max)
+    }
+
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            Op::And => "AND",
+            Op::Or => "OR",
+            Op::Xor => "XOR",
+            Op::Add => "ADD",
+            Op::Sub => "SUB",
+            Op::Mul => "MUL",
+            Op::MacInit => "MAC_INIT",
+            Op::Mac => "MAC",
+            Op::MacStore => "MAC_STORE",
+            Op::DotInit => "DOT_INIT",
+            Op::Dot => "DOT",
+            Op::DotStore => "DOT_STORE",
+            Op::Sll => "SLL",
+            Op::Slr => "SLR",
+            Op::Min => "MIN",
+            Op::Max => "MAX",
+            Op::Csrw => "CSRW",
+            Op::Sra => "SRA",
+        }
+    }
+}
+
+/// A decoded micro-op: opcode + word offsets of the two sources. The
+/// destination comes from the bus address and is carried separately.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MicroOp {
+    pub op: Op,
+    /// Source word offsets (word index within the 32 KiB macro).
+    pub src1: u16,
+    pub src2: u16,
+}
+
+/// Encode the data word of a micro-op.
+pub fn encode(m: &MicroOp) -> u32 {
+    debug_assert!(m.src1 < 8192 && m.src2 < 8192, "13-bit word offsets");
+    ((m.op as u32) << 26) | ((m.src2 as u32) << 13) | (m.src1 as u32)
+}
+
+/// Decode a data word written in computing mode.
+pub fn decode(w: u32) -> Option<MicroOp> {
+    let op = Op::from_code(bits(w, 31, 26))?;
+    Some(MicroOp { op, src2: bits(w, 25, 13) as u16, src1: bits(w, 12, 0) as u16 })
+}
+
+/// Encode the CSRW micro-op configuring the element width.
+pub fn encode_csrw(sew: Sew) -> u32 {
+    encode(&MicroOp { op: Op::Csrw, src1: sew.code() as u16, src2: 0 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_opcodes() {
+        for op in Op::ALL {
+            let m = MicroOp { op, src1: 0x1abc & 0x1fff, src2: 0x0123 };
+            assert_eq!(decode(encode(&m)), Some(m), "{}", op.mnemonic());
+        }
+    }
+
+    #[test]
+    fn paper_example_layout() {
+        // *(BASE + DEST<<2) = ADD << 26 | SRC2 << 13 | SRC1
+        let m = MicroOp { op: Op::Add, src1: 7, src2: 9 };
+        assert_eq!(encode(&m), (3 << 26) | (9 << 13) | 7);
+    }
+
+    #[test]
+    fn writeback_classification() {
+        assert!(Op::Add.writes_dest());
+        assert!(Op::DotStore.writes_dest());
+        assert!(Op::MacStore.writes_dest());
+        assert!(!Op::Dot.writes_dest());
+        assert!(!Op::MacInit.writes_dest());
+        assert!(!Op::Csrw.writes_dest());
+    }
+
+    #[test]
+    fn invalid_opcode_rejected() {
+        assert_eq!(decode(0xffff_ffff), None); // opcode 63
+        assert_eq!(decode(18 << 26), None);
+    }
+}

@@ -1,0 +1,402 @@
+//! NM-Caesar: the area-efficient, host-microcontrolled NMC macro (§III-A).
+//!
+//! Microarchitecture model (Fig. 2 / Fig. 3): two single-port 16 KiB SRAM
+//! banks, a multi-cycle 32-bit packed-SIMD integer ALU, and a controller
+//! that decodes bus writes into micro-ops through a 2-stage pipeline
+//! (decode → fetch → execute → writeback, overlapped so a new instruction
+//! is accepted **every 2 cycles**; 3 cycles when both source operands live
+//! in the same bank and must be fetched sequentially).
+//!
+//! Functionally the macro is a drop-in 32 KiB SRAM: in *memory* mode
+//! ([`Caesar::imc`] = false) reads and writes behave exactly like the
+//! reference bank. In *computing* mode, writes become instructions and the
+//! data is processed in place.
+
+pub mod compiler;
+pub mod isa;
+
+use crate::isa::Sew;
+use crate::mem::{Bank, MacroKind};
+use crate::simd::{elem, swar};
+use isa::{MicroOp, Op};
+
+/// Address space of the macro (32 KiB).
+pub const CAPACITY: u32 = 32 * 1024;
+/// Words per internal bank (16 KiB each, low/high split).
+const BANK_WORDS: u32 = CAPACITY / 4 / 2;
+
+/// Activity counters for the energy model.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CaesarStats {
+    /// Cycles with at least one instruction in the pipeline.
+    pub busy_cycles: u64,
+    /// Element-operations by datapath class.
+    pub alu_light_elems: u64,
+    pub alu_add_elems: u64,
+    pub alu_mul_elems: u64,
+    /// Instructions executed.
+    pub instrs: u64,
+    /// Instructions that paid the same-bank sequential-fetch penalty.
+    pub same_bank_conflicts: u64,
+}
+
+/// The NM-Caesar macro model.
+#[derive(Debug, Clone)]
+pub struct Caesar {
+    /// Two 16 KiB single-port banks: bank 0 = words 0..4095, bank 1 = rest.
+    pub banks: [Bank; 2],
+    /// `imc` pin: computing mode when true (driven by the host's
+    /// configuration register, §III).
+    pub imc: bool,
+    /// Element width CSR (set by the CSRW micro-op).
+    pub sew: Sew,
+    /// Packed element-wise MAC accumulator.
+    acc_mac: u32,
+    /// Word-wise dot-product accumulator (32-bit).
+    acc_dot: i32,
+    /// Cycle (local time) until which the pipeline is busy.
+    busy_until: u64,
+    /// Local cycle counter (advanced by [`Caesar::step`]).
+    now: u64,
+    pub stats: CaesarStats,
+}
+
+impl Default for Caesar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Caesar {
+    pub fn new() -> Self {
+        Caesar {
+            banks: [Bank::new(MacroKind::Sram16k), Bank::new(MacroKind::Sram16k)],
+            imc: false,
+            sew: Sew::E32,
+            acc_mac: 0,
+            acc_dot: 0,
+            busy_until: 0,
+            now: 0,
+            stats: CaesarStats::default(),
+        }
+    }
+
+    /// Advance one cycle of local time.
+    pub fn step(&mut self) {
+        self.now += 1;
+        if self.now <= self.busy_until {
+            self.stats.busy_cycles += 1;
+        }
+    }
+
+    /// Is the controller ready to accept a new instruction this cycle?
+    /// (Backpressures the bus/DMA when the pipeline is full.)
+    pub fn ready(&self) -> bool {
+        self.now >= self.busy_until
+    }
+
+    #[inline]
+    fn bank_of(word: u32) -> usize {
+        (word >= BANK_WORDS) as usize
+    }
+
+    /// Raw word read at a word offset (counts a bank access).
+    fn read_word(&mut self, word: u32) -> u32 {
+        let b = Self::bank_of(word);
+        self.banks[b].read((word % BANK_WORDS) * 4, 4)
+    }
+
+    fn write_word(&mut self, word: u32, val: u32) {
+        let b = Self::bank_of(word);
+        self.banks[b].write((word % BANK_WORDS) * 4, 4, val);
+    }
+
+    /// Memory-mode (or computing-mode read) access: behaves like SRAM.
+    pub fn mem_read(&mut self, off: u32, size: u32) -> u32 {
+        let b = Self::bank_of(off / 4);
+        self.banks[b].read(off % (BANK_WORDS * 4), size)
+    }
+
+    /// Memory-mode write.
+    pub fn mem_write(&mut self, off: u32, size: u32, val: u32) {
+        let b = Self::bank_of(off / 4);
+        self.banks[b].write(off % (BANK_WORDS * 4), size, val);
+    }
+
+    /// Non-counting accessors for test/driver setup and verification.
+    pub fn peek_word(&self, word: u32) -> u32 {
+        let b = Self::bank_of(word);
+        self.banks[b].peek((word % BANK_WORDS) * 4, 4)
+    }
+    pub fn poke_word(&mut self, word: u32, val: u32) {
+        let b = Self::bank_of(word);
+        self.banks[b].poke((word % BANK_WORDS) * 4, 4, val);
+    }
+    /// Bulk load (driver populating inputs; not counted).
+    pub fn load(&mut self, byte_off: u32, bytes: &[u8]) {
+        // Split across the bank boundary if needed.
+        let boundary = BANK_WORDS * 4;
+        if byte_off < boundary && byte_off + bytes.len() as u32 > boundary {
+            let split = (boundary - byte_off) as usize;
+            self.banks[0].load(byte_off, &bytes[..split]);
+            self.banks[1].load(0, &bytes[split..]);
+        } else {
+            let b = Self::bank_of(byte_off / 4);
+            self.banks[b].load(byte_off % boundary, bytes);
+        }
+    }
+
+    /// A bus write arriving in computing mode: decode and execute one
+    /// micro-op. `dest_word` is the word offset carried by the bus address.
+    ///
+    /// The caller must have checked [`Caesar::ready`]; the pipeline then
+    /// occupies 2 cycles (3 on a same-bank source conflict, §III-A2).
+    pub fn issue(&mut self, dest_word: u32, data: u32) {
+        debug_assert!(self.ready(), "issued while pipeline busy");
+        let Some(m) = isa::decode(data) else {
+            // Undefined opcodes are ignored by the controller (writes in
+            // computing mode with reserved opcodes are dropped).
+            return;
+        };
+        let cycles = self.exec(dest_word, &m);
+        self.stats.instrs += 1;
+        self.busy_until = self.now + cycles as u64;
+    }
+
+    /// Execute a micro-op functionally; returns its pipeline occupancy.
+    fn exec(&mut self, dest_word: u32, m: &MicroOp) -> u32 {
+        if m.op == Op::Csrw {
+            self.sew = Sew::from_code(m.src1 as u32).unwrap_or(Sew::E32);
+            return 2;
+        }
+        let same_bank = Self::bank_of(m.src1 as u32) == Self::bank_of(m.src2 as u32);
+        let a = self.read_word(m.src1 as u32);
+        let b = self.read_word(m.src2 as u32);
+        let sew = self.sew;
+        let lanes = sew.lanes() as u64;
+        let result = match m.op {
+            Op::And => {
+                self.stats.alu_light_elems += lanes;
+                Some(a & b)
+            }
+            Op::Or => {
+                self.stats.alu_light_elems += lanes;
+                Some(a | b)
+            }
+            Op::Xor => {
+                self.stats.alu_light_elems += lanes;
+                Some(a ^ b)
+            }
+            Op::Add => {
+                self.stats.alu_add_elems += lanes;
+                Some(swar::add(a, b, sew))
+            }
+            Op::Sub => {
+                self.stats.alu_add_elems += lanes;
+                Some(swar::sub(a, b, sew))
+            }
+            Op::Mul => {
+                self.stats.alu_mul_elems += lanes;
+                Some(swar::mul(a, b, sew))
+            }
+            Op::MacInit => {
+                self.stats.alu_mul_elems += lanes;
+                self.acc_mac = swar::mul(a, b, sew);
+                None
+            }
+            Op::Mac => {
+                self.stats.alu_mul_elems += lanes;
+                self.acc_mac = swar::mac(self.acc_mac, a, b, sew);
+                None
+            }
+            Op::MacStore => {
+                self.stats.alu_mul_elems += lanes;
+                self.acc_mac = swar::mac(self.acc_mac, a, b, sew);
+                Some(self.acc_mac)
+            }
+            Op::DotInit => {
+                self.stats.alu_mul_elems += lanes;
+                self.acc_dot = swar::dotp_signed(a, b, sew);
+                None
+            }
+            Op::Dot => {
+                self.stats.alu_mul_elems += lanes;
+                self.acc_dot = self.acc_dot.wrapping_add(swar::dotp_signed(a, b, sew));
+                None
+            }
+            Op::DotStore => {
+                self.stats.alu_mul_elems += lanes;
+                self.acc_dot = self.acc_dot.wrapping_add(swar::dotp_signed(a, b, sew));
+                Some(self.acc_dot as u32)
+            }
+            Op::Sll => {
+                self.stats.alu_light_elems += lanes;
+                Some(swar::sll(a, b, sew))
+            }
+            Op::Slr => {
+                self.stats.alu_light_elems += lanes;
+                Some(swar::srl(a, b, sew))
+            }
+            Op::Sra => {
+                self.stats.alu_light_elems += lanes;
+                Some(swar::sra(a, b, sew))
+            }
+            Op::Min => {
+                self.stats.alu_add_elems += lanes;
+                Some(swar::min_signed(a, b, sew))
+            }
+            Op::Max => {
+                self.stats.alu_add_elems += lanes;
+                Some(swar::max_signed(a, b, sew))
+            }
+            Op::Csrw => unreachable!(),
+        };
+        if let Some(v) = result {
+            self.write_word(dest_word, v);
+        }
+        if same_bank {
+            self.stats.same_bank_conflicts += 1;
+            3
+        } else {
+            2
+        }
+    }
+
+    /// Splat helper: fill a word region with an element value (driver-side
+    /// constant setup, e.g. a zero vector for ReLU). Not cycle-counted.
+    pub fn splat_word(&mut self, word: u32, value: u32) {
+        let w = elem::splat(value, self.sew);
+        self.poke_word(word, w);
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = CaesarStats::default();
+        self.banks[0].reset_stats();
+        self.banks[1].reset_stats();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive Caesar like the DMA does: wait for ready, issue, step.
+    fn run_ops(c: &mut Caesar, ops: &[(u32, u32)]) -> u64 {
+        let start = c.now;
+        for &(dest, data) in ops {
+            while !c.ready() {
+                c.step();
+            }
+            c.issue(dest, data);
+            c.step();
+        }
+        while !c.ready() {
+            c.step();
+        }
+        c.now - start
+    }
+
+    #[test]
+    fn add_xor_roundtrip() {
+        let mut c = Caesar::new();
+        c.poke_word(0, 10);
+        c.poke_word(4096, 32); // bank 1
+        let add = isa::encode(&isa::MicroOp { op: Op::Add, src1: 0, src2: 4096 });
+        run_ops(&mut c, &[(100, add)]);
+        assert_eq!(c.peek_word(100), 42);
+        let xor = isa::encode(&isa::MicroOp { op: Op::Xor, src1: 0, src2: 4096 });
+        run_ops(&mut c, &[(101, xor)]);
+        assert_eq!(c.peek_word(101), 10 ^ 32);
+    }
+
+    #[test]
+    fn two_cycles_per_instr_cross_bank() {
+        let mut c = Caesar::new();
+        let add = isa::encode(&isa::MicroOp { op: Op::Add, src1: 0, src2: 4096 });
+        let ops: Vec<_> = (0..32).map(|i| (200 + i, add)).collect();
+        let cycles = run_ops(&mut c, &ops);
+        assert_eq!(cycles, 64, "expected 2 cycles/instr");
+        assert_eq!(c.stats.same_bank_conflicts, 0);
+    }
+
+    #[test]
+    fn three_cycles_same_bank() {
+        let mut c = Caesar::new();
+        let add = isa::encode(&isa::MicroOp { op: Op::Add, src1: 0, src2: 1 }); // both bank 0
+        let ops: Vec<_> = (0..16).map(|i| (200 + i, add)).collect();
+        let cycles = run_ops(&mut c, &ops);
+        assert_eq!(cycles, 48, "expected 3 cycles/instr on same-bank sources");
+        assert_eq!(c.stats.same_bank_conflicts, 16);
+    }
+
+    #[test]
+    fn dot_product_family() {
+        let mut c = Caesar::new();
+        // 8-bit mode: words hold 4 elements each.
+        let csrw = isa::encode_csrw(Sew::E8);
+        c.poke_word(0, u32::from_le_bytes([1, 2, 3, 4]));
+        c.poke_word(1, u32::from_le_bytes([5, 6, 7, 8]));
+        c.poke_word(4096, u32::from_le_bytes([1, 1, 1, 1]));
+        c.poke_word(4097, u32::from_le_bytes([2, 2, 2, 2]));
+        let init = isa::encode(&isa::MicroOp { op: Op::DotInit, src1: 0, src2: 4096 });
+        let store = isa::encode(&isa::MicroOp { op: Op::DotStore, src1: 1, src2: 4097 });
+        run_ops(&mut c, &[(500, csrw), (500, init), (500, store)]);
+        // (1+2+3+4) + 2*(5+6+7+8) = 10 + 52 = 62
+        assert_eq!(c.peek_word(500) as i32, 62);
+        assert_eq!(c.sew, Sew::E8);
+    }
+
+    #[test]
+    fn mac_family_packed() {
+        let mut c = Caesar::new();
+        run_ops(&mut c, &[(0, isa::encode_csrw(Sew::E16))]);
+        c.poke_word(0, 0x0003_0002); // elements [2, 3]
+        c.poke_word(4096, 0x0005_0004); // elements [4, 5]
+        let init = isa::encode(&isa::MicroOp { op: Op::MacInit, src1: 0, src2: 4096 });
+        let store = isa::encode(&isa::MicroOp { op: Op::MacStore, src1: 0, src2: 4096 });
+        run_ops(&mut c, &[(300, init), (300, store)]);
+        // per element: 2*4*2 = 16 ; 3*5*2 = 30
+        assert_eq!(c.peek_word(300), 0x001e_0010);
+    }
+
+    #[test]
+    fn memory_mode_is_transparent() {
+        let mut c = Caesar::new();
+        c.mem_write(0x100, 4, 0xcafe_f00d);
+        assert_eq!(c.mem_read(0x100, 4), 0xcafe_f00d);
+        c.mem_write(0x102, 1, 0xaa);
+        assert_eq!(c.mem_read(0x100, 4), 0xcaaa_f00d);
+        // Crossing into bank 1.
+        c.mem_write(16 * 1024 + 8, 4, 77);
+        assert_eq!(c.mem_read(16 * 1024 + 8, 4), 77);
+        assert_eq!(c.banks[1].stats.writes, 1);
+    }
+
+    #[test]
+    fn load_across_bank_boundary() {
+        let mut c = Caesar::new();
+        let bytes: Vec<u8> = (0..16).collect();
+        c.load(16 * 1024 - 8, &bytes);
+        assert_eq!(c.mem_read(16 * 1024 - 8, 4), 0x0302_0100);
+        assert_eq!(c.mem_read(16 * 1024 + 4, 4), 0x0f0e_0d0c);
+    }
+
+    #[test]
+    fn relu_via_max_against_zero_splat() {
+        let mut c = Caesar::new();
+        run_ops(&mut c, &[(0, isa::encode_csrw(Sew::E8))]);
+        c.splat_word(4096, 0); // zero vector in bank 1
+        c.poke_word(0, u32::from_le_bytes([0x80, 5, 0xff, 0x7f])); // [-128, 5, -1, 127]
+        let max = isa::encode(&isa::MicroOp { op: Op::Max, src1: 0, src2: 4096 });
+        run_ops(&mut c, &[(100, max)]);
+        assert_eq!(c.peek_word(100).to_le_bytes(), [0, 5, 0, 0x7f]);
+    }
+
+    #[test]
+    fn undefined_opcode_ignored() {
+        let mut c = Caesar::new();
+        c.issue(0, 63 << 26);
+        assert_eq!(c.stats.instrs, 0);
+        assert!(c.ready());
+    }
+}

@@ -1,0 +1,614 @@
+//! NM-Carus: the autonomous, RISC-V-programmable NMC macro (§III-B).
+//!
+//! A minimal SoC inside a memory macro (Fig. 4): the **eCPU** (CV32E40X in
+//! RV32EC configuration) fetches a kernel from the 512 B **eMEM**, executes
+//! the scalar parts itself and offloads `xvnmc` vector instructions to the
+//! **VPU** through the CORE-V-XIF. The **VRF** (the host-visible 32 KiB
+//! memory) is the only data source of the VPU; the eCPU reaches it solely
+//! through `emvv`/`emvx` element moves — there are no vector loads/stores.
+//!
+//! Host protocol (§III-B2):
+//! - *memory mode* (`config_mode == false`): bus accesses read/write the
+//!   VRF exactly like an SRAM — including **during** kernel execution
+//!   (double buffering), with a 1-cycle penalty when the VPU holds the
+//!   banks.
+//! - *configuration mode*: bus accesses reach the controller: the eMEM
+//!   (kernel upload, argument passing) and the control/status register
+//!   ([`CTL_OFFSET`]) that starts the kernel and reports busy/done. The
+//!   done bit is also routed to the interrupt pin ([`Carus::irq`]) so the
+//!   host can WFI during computation.
+//!
+//! The kernel signals completion with `ebreak`.
+
+pub mod vpu;
+pub mod vrf;
+
+use crate::cpu::{CpuConfig, CpuCore, MemIf};
+use crate::isa::rv32::{decode, Instr};
+use crate::isa::xvnmc::{unpack_indexes, VInstr, VSrc};
+use crate::isa::Sew;
+use crate::mem::{Bank, MacroKind};
+use vpu::{Operand, VecCmd, Vpu, EMV_COST};
+use vrf::Vrf;
+
+/// eMEM size: 512 B register-file macro (§IV-B).
+pub const EMEM_BYTES: u32 = 512;
+/// Control/status register offset within the configuration space.
+pub const CTL_OFFSET: u32 = 0x7ff0;
+/// Argument scratch registers (kernel ABI): 4 words at the top of eMEM.
+/// The host writes them in configuration mode; kernels read them with `lw`.
+pub const ARG_OFFSET: u32 = EMEM_BYTES - 16;
+
+/// Control-register bits.
+pub const CTL_START: u32 = 1 << 0;
+pub const STATUS_BUSY: u32 = 1 << 0;
+pub const STATUS_DONE: u32 = 1 << 1;
+
+/// Controller-side activity counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CarusStats {
+    pub ecpu_active_cycles: u64,
+    pub ecpu_sleep_cycles: u64,
+    pub emem_accesses: u64,
+    /// Cycles the eCPU stalled waiting for a VPU slot / hazard.
+    pub ecpu_vpu_stall_cycles: u64,
+    /// Host accesses served in memory mode while the VPU was busy.
+    pub host_conflicts: u64,
+}
+
+/// The NM-Carus macro model.
+#[derive(Debug, Clone)]
+pub struct Carus {
+    pub vrf: Vrf,
+    pub emem: Bank,
+    pub ecpu: CpuCore,
+    pub vpu: Vpu,
+    pub stats: CarusStats,
+    /// Host-driven mode pin: configuration mode when true.
+    pub config_mode: bool,
+    /// Kernel running (eCPU executing).
+    running: bool,
+    /// eCPU hit `ebreak`; completion is signalled once the VPU drains.
+    ecpu_halted: bool,
+    /// Kernel completed — eCPU halted *and* vector pipeline drained
+    /// (sticky until acknowledged or next start).
+    done: bool,
+    /// Remaining stall cycles of the current scalar instruction.
+    ecpu_stall: u32,
+    /// Vector instruction waiting for a VPU slot or pipeline drain.
+    pending: Option<VInstr>,
+    /// Pre-decoded eMEM (invalidated on configuration writes).
+    decoded: Vec<Option<Instr>>,
+}
+
+impl Carus {
+    /// Create an NM-Carus instance with the given lane count (paper
+    /// implementation: 4 lanes).
+    pub fn new(lanes: u32) -> Self {
+        Carus {
+            vrf: Vrf::new(lanes),
+            emem: Bank::new(MacroKind::RegFile512),
+            ecpu: CpuCore::new(CpuConfig::ECPU, 0),
+            vpu: Vpu::new(lanes),
+            stats: CarusStats::default(),
+            config_mode: false,
+            running: false,
+            ecpu_halted: false,
+            done: false,
+            ecpu_stall: 0,
+            pending: None,
+            decoded: vec![None; (EMEM_BYTES / 4) as usize],
+        }
+    }
+
+    /// Interrupt pin: high while a completed kernel is unacknowledged.
+    pub fn irq(&self) -> bool {
+        self.done
+    }
+
+    /// Kernel in flight?
+    pub fn busy(&self) -> bool {
+        self.running || self.vpu.busy()
+    }
+
+    // ---- Host (bus slave) interface --------------------------------------
+
+    /// Bus read. Memory mode → VRF; config mode → eMEM / status register.
+    /// Returns (value, extra_wait_cycles).
+    pub fn bus_read(&mut self, off: u32, size: u32) -> (u32, u32) {
+        if self.config_mode {
+            if off == CTL_OFFSET {
+                let mut s = 0;
+                if self.busy() {
+                    s |= STATUS_BUSY;
+                }
+                if self.done {
+                    s |= STATUS_DONE;
+                }
+                return (s, 0);
+            }
+            self.stats.emem_accesses += 1;
+            return (self.emem.read(off % EMEM_BYTES, size), 0);
+        }
+        let penalty = if self.vpu.busy() {
+            self.stats.host_conflicts += 1;
+            1
+        } else {
+            0
+        };
+        (self.vrf.mem_read(off, size), penalty)
+    }
+
+    /// Bus write. Returns extra wait cycles.
+    pub fn bus_write(&mut self, off: u32, size: u32, val: u32) -> u32 {
+        if self.config_mode {
+            if off == CTL_OFFSET {
+                if val & CTL_START != 0 {
+                    self.start();
+                } else {
+                    // Acknowledge/clear done.
+                    self.done = false;
+                }
+                return 0;
+            }
+            self.stats.emem_accesses += 1;
+            self.emem.write(off % EMEM_BYTES, size, val);
+            self.decoded[((off % EMEM_BYTES) / 4) as usize] = None;
+            return 0;
+        }
+        let penalty = if self.vpu.busy() {
+            self.stats.host_conflicts += 1;
+            1
+        } else {
+            0
+        };
+        self.vrf.mem_write(off, size, val);
+        penalty
+    }
+
+    /// Start kernel execution (host wrote the start bit).
+    pub fn start(&mut self) {
+        self.running = true;
+        self.ecpu_halted = false;
+        self.done = false;
+        self.ecpu = CpuCore::new(CpuConfig::ECPU, 0);
+        // ABI: sp → top of eMEM (below the argument words).
+        self.ecpu.regs[crate::isa::reg::SP as usize] = ARG_OFFSET;
+        self.ecpu_stall = 0;
+        self.pending = None;
+    }
+
+    /// Host-side helper: upload a kernel program into the eMEM
+    /// (configuration-mode writes, typically DMA'd; accounting is done by
+    /// the caller when it models the transfer).
+    pub fn load_kernel(&mut self, words: &[u32]) {
+        assert!(
+            (words.len() as u32) * 4 <= ARG_OFFSET,
+            "kernel does not fit the 512 B eMEM ({} words)",
+            words.len()
+        );
+        for (i, w) in words.iter().enumerate() {
+            self.emem.poke(4 * i as u32, 4, *w);
+            self.decoded[i] = None;
+        }
+    }
+
+    /// Host-side helper: set an argument word (ABI: eMEM top).
+    pub fn set_arg(&mut self, idx: u32, val: u32) {
+        assert!(idx < 4);
+        self.emem.poke(ARG_OFFSET + 4 * idx, 4, val);
+    }
+
+    // ---- Internal execution ----------------------------------------------
+
+    /// Promote eCPU-halt to `done` once the vector pipeline is drained.
+    fn maybe_complete(&mut self) {
+        if !self.running && self.ecpu_halted && self.vpu.empty() {
+            self.ecpu_halted = false;
+            self.done = true;
+        }
+    }
+
+    /// Advance one cycle of the internal controller + VPU.
+    #[inline]
+    pub fn step(&mut self) {
+        // Fast idle path: nothing running, nothing in flight (the common
+        // state for Table V CPU/Caesar workloads — see EXPERIMENTS.md §Perf).
+        if !self.running && !self.ecpu_halted && !self.vpu.busy() {
+            self.vpu.stats.idle_cycles += 1;
+            self.stats.ecpu_sleep_cycles += 1;
+            return;
+        }
+        self.vpu.step(&mut self.vrf);
+        if !self.running {
+            // "Once the kernel terminates, a dedicated status bit is set":
+            // termination = eCPU halted AND vector pipeline drained, so the
+            // host can never observe a half-written result.
+            self.maybe_complete();
+            self.stats.ecpu_sleep_cycles += 1;
+            return;
+        }
+        self.stats.ecpu_active_cycles += 1;
+        self.step_ecpu();
+        self.maybe_complete();
+    }
+
+    fn step_ecpu(&mut self) {
+
+        // Retry a stalled vector instruction first.
+        if let Some(v) = self.pending {
+            if self.try_dispatch(&v) {
+                self.pending = None;
+            } else {
+                self.stats.ecpu_vpu_stall_cycles += 1;
+            }
+            return;
+        }
+        if self.ecpu_stall > 0 {
+            self.ecpu_stall -= 1;
+            return;
+        }
+
+        // Fetch + decode from eMEM (pre-decoded cache).
+        let pc = self.ecpu.pc % EMEM_BYTES;
+        let idx = (pc / 4) as usize;
+        let instr = match self.decoded[idx] {
+            Some(i) => i,
+            None => {
+                let w = self.emem.peek(pc, 4);
+                match decode(w) {
+                    Ok(i) => {
+                        self.decoded[idx] = Some(i);
+                        i
+                    }
+                    Err(_) => {
+                        // Illegal instruction in a kernel is a firmware bug:
+                        // halt and flag completion so the host does not hang.
+                        self.running = false;
+                        self.ecpu_halted = true;
+                        return;
+                    }
+                }
+            }
+        };
+        self.stats.emem_accesses += 1;
+
+        let mut mem = EmemPort { emem: &mut self.emem, accesses: &mut self.stats.emem_accesses };
+        match self.ecpu.exec(&instr, &mut mem) {
+            Ok(eff) => {
+                if let Some(v) = eff.vector {
+                    if !self.try_dispatch(&v) {
+                        self.pending = Some(v);
+                    }
+                    return;
+                }
+                if eff.halted {
+                    self.running = false;
+                    self.ecpu_halted = true;
+                    return;
+                }
+                self.ecpu_stall = eff.cycles.saturating_sub(1);
+            }
+            Err(_) => {
+                self.running = false;
+                self.ecpu_halted = true;
+            }
+        }
+    }
+
+    /// Try to dispatch a vector instruction this cycle. Returns false if it
+    /// must stall (scoreboard full, or drain required).
+    fn try_dispatch(&mut self, v: &VInstr) -> bool {
+        match *v {
+            VInstr::VsetVli { rd, rs1, vtype } => {
+                if !self.vpu.empty() {
+                    return false;
+                }
+                let avl = self.ecpu.regs[(rs1 & 15) as usize];
+                let sew = Sew::from_code((vtype as u32 >> 3) & 0x7).unwrap_or(Sew::E32);
+                let vl = self.vpu.set_vtype(avl, sew);
+                self.write_gpr(rd, vl);
+                true
+            }
+            VInstr::VsetIVli { rd, avl, vtype } => {
+                if !self.vpu.empty() {
+                    return false;
+                }
+                let sew = Sew::from_code((vtype as u32 >> 3) & 0x7).unwrap_or(Sew::E32);
+                let vl = self.vpu.set_vtype(avl as u32, sew);
+                self.write_gpr(rd, vl);
+                true
+            }
+            VInstr::VsetVl { rd, rs1, rs2 } => {
+                if !self.vpu.empty() {
+                    return false;
+                }
+                let avl = self.ecpu.regs[(rs1 & 15) as usize];
+                let vtype = self.ecpu.regs[(rs2 & 15) as usize];
+                let sew = Sew::from_code((vtype >> 3) & 0x7).unwrap_or(Sew::E32);
+                let vl = self.vpu.set_vtype(avl, sew);
+                self.write_gpr(rd, vl);
+                true
+            }
+            VInstr::Emvx { rd, vs2, idx } => {
+                // The only hazard-causing instruction (§III-B1): waits while
+                // an in-flight vector instruction writes the register it
+                // reads (precise scoreboard; unrelated registers proceed).
+                if self.vpu.writes_reg_in_flight(vs2) {
+                    return false;
+                }
+                let j = self.ecpu.regs[(idx & 15) as usize];
+                let val = self.vpu.read_elem(&self.vrf, vs2, j);
+                self.vpu.stats.vrf_reads += 1;
+                self.write_gpr(rd, val);
+                self.ecpu_stall = EMV_COST - 1;
+                true
+            }
+            VInstr::Emvv { vd, idx, rs1 } => {
+                if !self.vpu.can_accept() {
+                    return false;
+                }
+                let j = self.ecpu.regs[(idx & 15) as usize];
+                let value = self.ecpu.regs[(rs1 & 15) as usize];
+                self.vpu.issue(VecCmd::InsertElem { vd, idx: j, value }, &mut self.vrf);
+                true
+            }
+            VInstr::Op { op, vd, vs2, src, indirect, idx_gpr } => {
+                if !self.vpu.can_accept() {
+                    return false;
+                }
+                // Indirect register addressing: resolve logical register
+                // indexes from the GPR at dispatch time (§III-B1).
+                let (vd, vs2, vs1) = if indirect {
+                    let packed = self.ecpu.regs[(idx_gpr & 15) as usize];
+                    let (d, s2, s1) = unpack_indexes(packed);
+                    (d, s2, s1)
+                } else {
+                    let s1 = match src {
+                        VSrc::V(v1) => v1,
+                        _ => 0,
+                    };
+                    (vd, vs2, s1)
+                };
+                let operand = match src {
+                    VSrc::V(_) => Operand::V(vs1),
+                    VSrc::X(rs1) => Operand::X(self.ecpu.regs[(rs1 & 15) as usize]),
+                    VSrc::I(i) => Operand::I(i as i32),
+                };
+                self.vpu.issue(VecCmd::Op { op, vd, vs2, src: operand }, &mut self.vrf);
+                true
+            }
+        }
+    }
+
+    #[inline]
+    fn write_gpr(&mut self, rd: u8, val: u32) {
+        let r = (rd & 15) as usize;
+        if r != 0 {
+            self.ecpu.regs[r] = val;
+        }
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = CarusStats::default();
+        self.vpu.stats = Default::default();
+        self.vrf.reset_stats();
+        self.emem.reset_stats();
+    }
+}
+
+/// eCPU load/store port into the private eMEM (addresses wrap mod 512 B —
+/// the controller bus decodes only the eMEM in the kernel's data space).
+struct EmemPort<'a> {
+    emem: &'a mut Bank,
+    accesses: &'a mut u64,
+}
+
+impl MemIf for EmemPort<'_> {
+    fn read(&mut self, addr: u32, size: u32) -> u32 {
+        *self.accesses += 1;
+        self.emem.peek(addr % EMEM_BYTES, size)
+    }
+    fn write(&mut self, addr: u32, size: u32, val: u32) {
+        *self.accesses += 1;
+        self.emem.poke(addr % EMEM_BYTES, size, val);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::Asm;
+    use crate::isa::reg::*;
+
+    /// Run the macro until the kernel completes; returns cycles.
+    fn run(c: &mut Carus, max: u64) -> u64 {
+        let mut cycles = 0;
+        while c.busy() {
+            c.step();
+            cycles += 1;
+            assert!(cycles < max, "kernel did not complete in {max} cycles");
+        }
+        cycles
+    }
+
+    fn start(c: &mut Carus) {
+        c.config_mode = true;
+        c.bus_write(CTL_OFFSET, 4, CTL_START);
+        c.config_mode = false;
+    }
+
+    #[test]
+    fn vector_add_kernel() {
+        let mut c = Carus::new(4);
+        // v0 = [1..64], v1 = 100s; kernel: v2 = v0 + v1 (e32, vl=64).
+        let vl = 64u32;
+        for j in 0..vl {
+            c.vrf.set_elem(0, j, vl, Sew::E32, j + 1);
+            c.vrf.set_elem(1, j, vl, Sew::E32, 100);
+        }
+        let mut a = Asm::new(0);
+        a.li(A0, vl as i32).vsetvli(T0, A0, Sew::E32).vadd_vv(2, 0, 1).ebreak();
+        c.load_kernel(&a.assemble().unwrap().words);
+        start(&mut c);
+        assert!(c.busy());
+        run(&mut c, 10_000);
+        assert!(c.irq());
+        for j in 0..vl {
+            assert_eq!(c.vrf.elem_signed(2, j, vl, Sew::E32), (j + 101) as i32);
+        }
+        // Status protocol.
+        c.config_mode = true;
+        let (s, _) = c.bus_read(CTL_OFFSET, 4);
+        assert_eq!(s & STATUS_DONE, STATUS_DONE);
+        assert_eq!(s & STATUS_BUSY, 0);
+        c.bus_write(CTL_OFFSET, 4, 0); // ack
+        let (s, _) = c.bus_read(CTL_OFFSET, 4);
+        assert_eq!(s, 0);
+        assert!(!c.irq());
+    }
+
+    #[test]
+    fn emvx_emvv_roundtrip() {
+        let mut c = Carus::new(4);
+        let vl = 16u32;
+        for j in 0..vl {
+            c.vrf.set_elem(0, j, vl, Sew::E32, 50 + j);
+        }
+        // Kernel: x = v0[3]; v1[5] = x + 7.
+        let mut a = Asm::new(0);
+        a.li(A0, vl as i32)
+            .vsetvli(T0, A0, Sew::E32)
+            .li(A1, 3)
+            .emvx(A2, 0, A1) // a2 = v0[3] = 53
+            .addi(A2, A2, 7)
+            .li(A1, 5)
+            .emvv(1, A1, A2) // v1[5] = 60
+            .ebreak();
+        c.load_kernel(&a.assemble().unwrap().words);
+        start(&mut c);
+        run(&mut c, 10_000);
+        assert_eq!(c.vrf.elem_unsigned(1, 5, vl, Sew::E32), 60);
+    }
+
+    #[test]
+    fn indirect_addressing_loop() {
+        // The paper's key trick: one vmacc instruction reused across
+        // iterations by bumping the packed-index GPR with a single addi.
+        let mut c = Carus::new(4);
+        let vl = 32u32;
+        let sew = Sew::E8;
+        // v8..v11 are four input rows; v16 accumulates.
+        for r in 8..12u8 {
+            for j in 0..vl {
+                c.vrf.set_elem(r, j, vl, sew, (r as u32 + j) & 0x7f);
+            }
+        }
+        for j in 0..vl {
+            c.vrf.set_elem(16, j, vl, sew, 0);
+        }
+        // Kernel: for k in 0..4: v16 += 2 * v(8+k)  — vmaccr.vx with the
+        // index GPR packing {vs1=0, vs2=8+k, vd=16} and scalar x=2.
+        let mut a = Asm::new(0);
+        a.li(A0, vl as i32)
+            .vsetvli(T0, A0, Sew::E8)
+            .li(A1, 2) // scalar multiplier
+            .li(A2, crate::isa::xvnmc::pack_indexes(16, 8, 0) as i32)
+            .li(A3, 4) // k counter
+            .label("loop")
+            .vmaccr_vx(A2, A1)
+            .addi(A2, A2, 0x100) // bump vs2 byte
+            .addi(A3, A3, -1)
+            .bne(A3, ZERO, "loop")
+            .ebreak();
+        c.load_kernel(&a.assemble().unwrap().words);
+        start(&mut c);
+        run(&mut c, 100_000);
+        for j in 0..vl {
+            let expect: i32 = (8..12).map(|r| 2 * (((r + j) & 0x7f) as i8 as i32)).sum();
+            let got = c.vrf.elem_signed(16, j, vl, sew);
+            assert_eq!(got, (expect as i8) as i32, "element {j}");
+        }
+    }
+
+    #[test]
+    fn memory_mode_transparent_and_double_buffering() {
+        let mut c = Carus::new(4);
+        // Plain SRAM behaviour in memory mode.
+        c.bus_write(0x123 & !3, 4, 0xfeed_cafe);
+        let (v, p) = c.bus_read(0x120, 4);
+        assert_eq!(v, 0xfeed_cafe);
+        assert_eq!(p, 0, "no penalty when VPU idle");
+
+        // Start a long kernel, then access memory mid-run: 1-cycle penalty.
+        let mut a = Asm::new(0);
+        a.li(A0, 1024).vsetvli(T0, A0, Sew::E8).vadd_vx(2, 1, ZERO).vadd_vx(3, 1, ZERO).ebreak();
+        c.load_kernel(&a.assemble().unwrap().words);
+        start(&mut c);
+        for _ in 0..10 {
+            c.step();
+        }
+        assert!(c.vpu.busy());
+        let (_, p) = c.bus_read(0x7000, 4);
+        assert_eq!(p, 1, "conflict penalty while VPU busy");
+        run(&mut c, 100_000);
+    }
+
+    #[test]
+    fn args_visible_to_kernel() {
+        let mut c = Carus::new(4);
+        c.set_arg(0, 42);
+        // Kernel: a0 = arg0; v0[0] = a0 (e32).
+        let mut a = Asm::new(0);
+        a.li(A0, 16)
+            .vsetvli(T0, A0, Sew::E32)
+            .li(A1, ARG_OFFSET as i32)
+            .lw(A2, 0, A1)
+            .li(A3, 0)
+            .emvv(0, A3, A2)
+            .ebreak();
+        c.load_kernel(&a.assemble().unwrap().words);
+        start(&mut c);
+        run(&mut c, 10_000);
+        assert_eq!(c.vrf.elem_unsigned(0, 0, 16, Sew::E32), 42);
+    }
+
+    #[test]
+    fn illegal_kernel_flags_done() {
+        let mut c = Carus::new(4);
+        c.load_kernel(&[0xffff_ffff]);
+        start(&mut c);
+        run(&mut c, 100);
+        assert!(c.irq());
+    }
+
+    #[test]
+    fn scalar_vector_overlap_hides_index_update(){
+        // Fig. 5: scalar instructions execute while the VPU runs. A loop of
+        // vmacc + index updates must cost ≈ the vector time alone.
+        let mut c = Carus::new(4);
+        let mut a = Asm::new(0);
+        let n = 8;
+        a.li(A0, 1024)
+            .vsetvli(T0, A0, Sew::E8)
+            .li(A1, 3)
+            .li(A2, crate::isa::xvnmc::pack_indexes(20, 8, 0) as i32)
+            .li(A3, n)
+            .label("loop")
+            .vmaccr_vx(A2, A1)
+            .addi(A2, A2, 1)
+            .addi(A3, A3, -1)
+            .bne(A3, ZERO, "loop")
+            .ebreak();
+        c.load_kernel(&a.assemble().unwrap().words);
+        start(&mut c);
+        let cycles = run(&mut c, 100_000);
+        // Vector time: n × (4 + 64×4) ≈ 2080 minus queue overlap; scalar
+        // loop (5 cycles/iter) hides under it. Allow 5 % slack.
+        let vec_time = n as u64 * (4 + 64 * 4);
+        assert!(
+            cycles < vec_time + vec_time / 20 + 20,
+            "cycles = {cycles}, vector-only = {vec_time}"
+        );
+    }
+}

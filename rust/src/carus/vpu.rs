@@ -1,0 +1,612 @@
+//! NM-Carus Vector Processing Unit (§III-B2).
+//!
+//! Single-issue vector machine with configurable hardware unrolling
+//! (lanes). Pipeline: decode → {arithmetic unit | move/slide unit | CSR
+//! unit} → commit, with a two-entry scoreboard (one executing + one queued
+//! instruction) so the eCPU can run ahead by one vector instruction.
+//!
+//! # Timing model
+//!
+//! Each lane owns one single-port VRF bank and one serial ALU, so the
+//! per-word cost of an instruction is the max of the ALU occupancy and the
+//! VRF port occupancy (§III-B2: "the throughput of the arithmetic unit is
+//! never lower than the slower unit between the ALU and the VRF"):
+//!
+//! * partitioned 16-bit **adder**: a 32-bit word every 2 cycles, any SEW;
+//! * 16-bit **multiplier**: 4×8-bit in 4 cycles, 2×16-bit in 2, 1×32-bit in
+//!   3 (three 16-bit passes + accumulation);
+//! * `vmacc`: 4 cycles (e8), 3 (e16), 3 (e32) per word ⇒ the paper's
+//!   1 / 0.67 / 0.33 MAC/cycle/lane;
+//! * elementary **logic**: 1 cycle/word; serial 8-bit barrel **shifter**:
+//!   4 cycles/word;
+//! * VRF port: `vector_reads(op) + 1` accesses per word.
+//!
+//! Execution time of an instruction with `W` words on the busiest lane is
+//! `ISSUE_OVERHEAD + W_lane · max(alu, vrf)`; back-to-back instructions
+//! overlap decode, which is what makes the NM-Carus matmul saturate at
+//! 0.48 output/cycle instead of the ideal 0.50 (Fig. 12).
+
+use super::vrf::Vrf;
+use crate::isa::xvnmc::{VOp, VSrcKind};
+use crate::isa::Sew;
+use crate::simd::swar;
+
+/// Fixed per-instruction overhead (decode + commit handshake), partially
+/// overlapped for queued instructions.
+pub const ISSUE_OVERHEAD: u32 = 4;
+/// Scalar↔vector element move cost once the pipeline is empty.
+pub const EMV_COST: u32 = 3;
+
+/// Current vector configuration (vtype CSR + vl).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Vtype {
+    pub vl: u32,
+    pub sew: Sew,
+}
+
+impl Vtype {
+    /// VLMAX for a SEW under the 32-register architectural view.
+    pub fn vlmax(sew: Sew) -> u32 {
+        super::vrf::VREG_BYTES / sew.bytes()
+    }
+}
+
+/// Resolved scalar operand of a vector instruction (GPR values are read at
+/// issue time on the eCPU side).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Operand {
+    V(u8),
+    X(u32),
+    I(i32),
+}
+
+impl Operand {
+    pub fn kind(self) -> VSrcKind {
+        match self {
+            Operand::V(_) => VSrcKind::Vv,
+            Operand::X(_) => VSrcKind::Vx,
+            Operand::I(_) => VSrcKind::Vi,
+        }
+    }
+}
+
+/// A fully-resolved vector instruction ready for the execution units.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VecCmd {
+    Op { op: VOp, vd: u8, vs2: u8, src: Operand },
+    /// emvv: write `value` into element `idx` of `vd`.
+    InsertElem { vd: u8, idx: u32, value: u32 },
+}
+
+/// VPU activity counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct VpuStats {
+    pub instrs: u64,
+    pub busy_cycles: u64,
+    pub idle_cycles: u64,
+    /// Word-granular VRF accesses charged by the timing model.
+    pub vrf_reads: u64,
+    pub vrf_writes: u64,
+    /// Element ops by energy class.
+    pub alu_light_elems: u64,
+    pub alu_add_elems: u64,
+    pub alu_mul_elems: u64,
+}
+
+/// The VPU: one executing instruction + one queued (scoreboard of 2).
+#[derive(Debug, Clone)]
+pub struct Vpu {
+    pub lanes: u32,
+    pub vt: Vtype,
+    exec_remaining: u32,
+    /// Destination register of the executing instruction (scoreboard entry).
+    exec_vd: Option<u8>,
+    queued: Option<VecCmd>,
+    pub stats: VpuStats,
+}
+
+impl VecCmd {
+    /// Destination logical register (scoreboard tracking).
+    pub fn vd(&self) -> u8 {
+        match *self {
+            VecCmd::Op { vd, .. } => vd,
+            VecCmd::InsertElem { vd, .. } => vd,
+        }
+    }
+}
+
+impl Vpu {
+    pub fn new(lanes: u32) -> Self {
+        Vpu {
+            lanes,
+            vt: Vtype { vl: Vtype::vlmax(Sew::E32), sew: Sew::E32 },
+            exec_remaining: 0,
+            exec_vd: None,
+            queued: None,
+            stats: VpuStats::default(),
+        }
+    }
+
+    /// Scoreboard query: does any in-flight instruction write `r`?
+    /// (`emvx` reading `r` must wait; reads of other registers proceed —
+    /// the paper's precise-hazard behaviour that lets the eCPU prefetch
+    /// scalar operands while unrelated vector instructions drain.)
+    pub fn writes_reg_in_flight(&self, r: u8) -> bool {
+        (self.exec_remaining > 0 && self.exec_vd == Some(r))
+            || self.queued.as_ref().is_some_and(|q| q.vd() == r)
+    }
+
+    /// Any instruction in flight?
+    pub fn busy(&self) -> bool {
+        self.exec_remaining > 0 || self.queued.is_some()
+    }
+
+    /// Free slot in the scoreboard?
+    pub fn can_accept(&self) -> bool {
+        self.queued.is_none()
+    }
+
+    /// Pipeline completely drained (required by emvx / vsetvl)?
+    pub fn empty(&self) -> bool {
+        self.exec_remaining == 0 && self.queued.is_none()
+    }
+
+    /// Issue a resolved command. Caller must check [`Vpu::can_accept`].
+    /// Functional effects apply when the command starts executing.
+    pub fn issue(&mut self, cmd: VecCmd, vrf: &mut Vrf) {
+        debug_assert!(self.can_accept());
+        if self.exec_remaining == 0 {
+            self.start(cmd, vrf);
+        } else {
+            self.queued = Some(cmd);
+        }
+    }
+
+    fn start(&mut self, cmd: VecCmd, vrf: &mut Vrf) {
+        self.stats.instrs += 1;
+        self.exec_vd = Some(cmd.vd());
+        let cost = self.apply(cmd, vrf);
+        self.exec_remaining = cost;
+    }
+
+    /// Advance one cycle.
+    #[inline]
+    pub fn step(&mut self, vrf: &mut Vrf) {
+        if self.exec_remaining > 0 {
+            self.stats.busy_cycles += 1;
+            self.exec_remaining -= 1;
+            if self.exec_remaining == 0 {
+                self.exec_vd = None;
+                if let Some(cmd) = self.queued.take() {
+                    // Queued instruction starts immediately: its decode
+                    // overlapped with the tail of the previous one.
+                    self.start(cmd, vrf);
+                    self.exec_remaining = self.exec_remaining.saturating_sub(2);
+                }
+            }
+        } else {
+            self.stats.idle_cycles += 1;
+        }
+    }
+
+    /// Set vtype/vl (CSR unit; caller enforces pipeline-empty).
+    /// Returns the granted `vl`.
+    pub fn set_vtype(&mut self, avl: u32, sew: Sew) -> u32 {
+        let vl = avl.min(Vtype::vlmax(sew));
+        self.vt = Vtype { vl, sew };
+        vl
+    }
+
+    /// Read element `idx` of `vs2` for emvx (caller enforces empty +
+    /// charges [`EMV_COST`]).
+    pub fn read_elem(&self, vrf: &Vrf, vs2: u8, idx: u32) -> u32 {
+        vrf.elem_unsigned(vs2, idx.min(self.vt.vl - 1), self.vt.vl, self.vt.sew)
+    }
+
+    /// ALU occupancy per 32-bit word (§III-B2 datapath).
+    pub fn alu_cycles_per_word(op: VOp, sew: Sew) -> u32 {
+        match op {
+            VOp::Add | VOp::Sub | VOp::Min | VOp::Minu | VOp::Max | VOp::Maxu => 2,
+            VOp::And | VOp::Or | VOp::Xor => 1,
+            VOp::Sll | VOp::Srl | VOp::Sra => 4,
+            VOp::Mul => match sew {
+                Sew::E8 => 4,
+                Sew::E16 => 2,
+                Sew::E32 => 3,
+            },
+            VOp::Macc => match sew {
+                Sew::E8 => 4,
+                Sew::E16 => 3,
+                Sew::E32 => 3,
+            },
+            VOp::Mv => 1,
+            VOp::SlideUp | VOp::SlideDown | VOp::Slide1Up | VOp::Slide1Down => 2,
+        }
+    }
+
+    /// Total per-word occupancy: max(ALU, VRF single port).
+    pub fn cycles_per_word(op: VOp, src: VSrcKind, sew: Sew) -> u32 {
+        let vrf = op.vector_reads(src) + 1;
+        Self::alu_cycles_per_word(op, sew).max(vrf)
+    }
+
+    /// Execution cycles for an element-wise op at the current vtype.
+    pub fn op_cost(&self, op: VOp, src: VSrcKind) -> u32 {
+        let bytes = self.vt.vl * self.vt.sew.bytes();
+        let words = bytes.div_ceil(4);
+        let words_per_lane = words.div_ceil(self.lanes);
+        ISSUE_OVERHEAD + words_per_lane * Self::cycles_per_word(op, src, self.vt.sew)
+    }
+
+    /// Word-level SWAR execution for element-wise ops. Returns false when
+    /// the op needs the element loop.
+    fn word_fast_path(&self, op: VOp, vd: u8, vs2: u8, src: Operand, vrf: &mut Vrf) -> bool {
+        use crate::simd::elem;
+        let Vtype { vl, sew } = self.vt;
+        let words = vl * sew.bytes() / 4;
+        let vd_w = (vd as u32 * vl * sew.bytes()) / 4;
+        let vs2_w = (vs2 as u32 * vl * sew.bytes()) / 4;
+        // Scalar operand splatted to a word, or a second vector register.
+        let (vs1_w, splat): (u32, Option<u32>) = match src {
+            Operand::V(v1) => ((v1 as u32 * vl * sew.bytes()) / 4, None),
+            Operand::X(x) => (0, Some(elem::splat(x, sew))),
+            Operand::I(i) => (0, Some(elem::splat(i as u32, sew))),
+        };
+        let word_of_src = |vrf: &Vrf, w: u32| splat.unwrap_or_else(|| vrf.word(vs1_w + w));
+        match op {
+            VOp::Mv => {
+                for w in 0..words {
+                    let v = word_of_src(vrf, w);
+                    vrf.set_word(vd_w + w, v);
+                }
+                true
+            }
+            VOp::Add | VOp::Sub | VOp::Mul | VOp::Macc | VOp::And | VOp::Or | VOp::Xor
+            | VOp::Min | VOp::Minu | VOp::Max | VOp::Maxu | VOp::Sll | VOp::Srl | VOp::Sra => {
+                for w in 0..words {
+                    let a = vrf.word(vs2_w + w);
+                    let b = word_of_src(vrf, w);
+                    let r = match op {
+                        VOp::Add => swar::add(a, b, sew),
+                        VOp::Sub => swar::sub(a, b, sew),
+                        VOp::Mul => swar::mul(a, b, sew),
+                        VOp::Macc => swar::mac(vrf.word(vd_w + w), a, b, sew),
+                        VOp::And => a & b,
+                        VOp::Or => a | b,
+                        VOp::Xor => a ^ b,
+                        VOp::Min => swar::min_signed(a, b, sew),
+                        VOp::Minu => swar::min_unsigned(a, b, sew),
+                        VOp::Max => swar::max_signed(a, b, sew),
+                        VOp::Maxu => swar::max_unsigned(a, b, sew),
+                        VOp::Sll => swar::sll(a, b, sew),
+                        VOp::Srl => swar::srl(a, b, sew),
+                        VOp::Sra => swar::sra(a, b, sew),
+                        _ => unreachable!(),
+                    };
+                    vrf.set_word(vd_w + w, r);
+                }
+                true
+            }
+            // Slides cross word boundaries: element loop.
+            VOp::SlideUp | VOp::SlideDown | VOp::Slide1Up | VOp::Slide1Down => false,
+        }
+    }
+
+    /// Apply a command functionally, count events, return its cost.
+    fn apply(&mut self, cmd: VecCmd, vrf: &mut Vrf) -> u32 {
+        match cmd {
+            VecCmd::InsertElem { vd, idx, value } => {
+                let Vtype { vl, sew } = self.vt;
+                vrf.set_elem(vd, idx.min(vl - 1), vl, sew, value);
+                self.stats.vrf_writes += 1;
+                EMV_COST
+            }
+            VecCmd::Op { op, vd, vs2, src } => {
+                let Vtype { vl, sew } = self.vt;
+                let words = (vl * sew.bytes()).div_ceil(4) as u64;
+                self.stats.vrf_reads += words * op.vector_reads(src.kind()) as u64;
+                self.stats.vrf_writes += words;
+                let elems = vl as u64;
+                match op {
+                    VOp::Mul | VOp::Macc => self.stats.alu_mul_elems += elems,
+                    VOp::Add | VOp::Sub | VOp::Min | VOp::Minu | VOp::Max | VOp::Maxu => {
+                        self.stats.alu_add_elems += elems
+                    }
+                    _ => self.stats.alu_light_elems += elems,
+                }
+                self.exec_op(op, vd, vs2, src, vrf);
+                self.op_cost(op, src.kind())
+            }
+        }
+    }
+
+    /// Element-wise functional semantics (RVV-style operand order:
+    /// `vd[i] = vs2[i] ⊙ src[i]`; `vmacc`: `vd[i] += src · vs2[i]`).
+    fn exec_op(&self, op: VOp, vd: u8, vs2: u8, src: Operand, vrf: &mut Vrf) {
+        let Vtype { vl, sew } = self.vt;
+        // Word-level fast path: when register slices are word-aligned,
+        // process 32-bit words through the shared SWAR algebra instead of
+        // per-element loops (≈3× on the vmacc hot path; EXPERIMENTS.md
+        // §Perf). Falls back to the element loop for slides and unaligned
+        // geometries.
+        let bytes = vl * sew.bytes();
+        if bytes % 4 == 0 && self.word_fast_path(op, vd, vs2, src, vrf) {
+            return;
+        }
+        let sget = |vrf: &Vrf, r: u8, j: u32| vrf.elem_signed(r, j, vl, sew);
+        let uget = |vrf: &Vrf, r: u8, j: u32| vrf.elem_unsigned(r, j, vl, sew);
+        // Straightforward per-element loop. Scalar operands are truncated
+        // to SEW and sign-extended, as the hardware does.
+        let scalar_s = |x: u32| -> i32 { crate::isa::sext(x, sew.bits()) };
+        let scalar_u = |x: u32| -> u32 {
+            match sew {
+                Sew::E8 => x & 0xff,
+                Sew::E16 => x & 0xffff,
+                Sew::E32 => x,
+            }
+        };
+        match op {
+            VOp::SlideUp | VOp::SlideDown | VOp::Slide1Up | VOp::Slide1Down => {
+                let off = match src {
+                    Operand::X(x) => x,
+                    Operand::I(i) => i as u32,
+                    Operand::V(_) => unreachable!("slides have no vv form"),
+                };
+                // Read the source fully first (the move/slide unit buffers
+                // through the lane ALUs), then write — safe for vd == vs2.
+                let snapshot: Vec<u32> = (0..vl).map(|j| uget(vrf, vs2, j)).collect();
+                match op {
+                    VOp::SlideDown => {
+                        for j in 0..vl {
+                            let v = snapshot.get((j as usize) + (off as usize)).copied().unwrap_or(0);
+                            vrf.set_elem(vd, j, vl, sew, v);
+                        }
+                    }
+                    VOp::SlideUp => {
+                        // Elements below `off` keep their old value (RVV).
+                        for j in (off.min(vl))..vl {
+                            vrf.set_elem(vd, j, vl, sew, snapshot[(j - off) as usize]);
+                        }
+                    }
+                    VOp::Slide1Down => {
+                        for j in 0..vl.saturating_sub(1) {
+                            vrf.set_elem(vd, j, vl, sew, snapshot[j as usize + 1]);
+                        }
+                        vrf.set_elem(vd, vl - 1, vl, sew, off);
+                    }
+                    VOp::Slide1Up => {
+                        for j in (1..vl).rev() {
+                            vrf.set_elem(vd, j, vl, sew, snapshot[j as usize - 1]);
+                        }
+                        vrf.set_elem(vd, 0, vl, sew, off);
+                    }
+                    _ => unreachable!(),
+                }
+                return;
+            }
+            VOp::Mv => {
+                for j in 0..vl {
+                    let v = match src {
+                        Operand::V(v1) => uget(vrf, v1, j),
+                        Operand::X(x) => scalar_u(x),
+                        Operand::I(i) => scalar_u(i as u32),
+                    };
+                    vrf.set_elem(vd, j, vl, sew, v);
+                }
+                return;
+            }
+            _ => {}
+        }
+        for j in 0..vl {
+            let a = sget(vrf, vs2, j); // vs2 element
+            let b_s: i32 = match src {
+                Operand::V(v1) => sget(vrf, v1, j),
+                Operand::X(x) => scalar_s(x),
+                Operand::I(i) => i,
+            };
+            let a_u = uget(vrf, vs2, j);
+            let b_u: u32 = match src {
+                Operand::V(v1) => uget(vrf, v1, j),
+                Operand::X(x) => scalar_u(x),
+                Operand::I(i) => scalar_u(i as u32),
+            };
+            let shamt = b_u & (sew.bits() - 1);
+            let r: u32 = match op {
+                VOp::Add => (a.wrapping_add(b_s)) as u32,
+                VOp::Sub => (a.wrapping_sub(b_s)) as u32,
+                VOp::Mul => (a.wrapping_mul(b_s)) as u32,
+                VOp::Macc => {
+                    let acc = sget(vrf, vd, j);
+                    acc.wrapping_add(b_s.wrapping_mul(a)) as u32
+                }
+                VOp::And => a_u & b_u,
+                VOp::Or => a_u | b_u,
+                VOp::Xor => a_u ^ b_u,
+                VOp::Min => a.min(b_s) as u32,
+                VOp::Max => a.max(b_s) as u32,
+                VOp::Minu => a_u.min(b_u),
+                VOp::Maxu => a_u.max(b_u),
+                VOp::Sll => a_u << shamt,
+                VOp::Srl => a_u >> shamt,
+                VOp::Sra => (a >> shamt) as u32,
+                VOp::Mv | VOp::SlideUp | VOp::SlideDown | VOp::Slide1Up | VOp::Slide1Down => {
+                    unreachable!()
+                }
+            };
+            vrf.set_elem(vd, j, vl, sew, r);
+        }
+    }
+}
+
+/// Reference semantics used by tests: packed-SIMD word ops must agree with
+/// the shared SWAR algebra for whole words.
+pub fn word_op_reference(op: VOp, a: u32, b: u32, sew: Sew) -> Option<u32> {
+    Some(match op {
+        VOp::Add => swar::add(a, b, sew),
+        VOp::Sub => swar::sub(a, b, sew),
+        VOp::Mul => swar::mul(a, b, sew),
+        VOp::And => a & b,
+        VOp::Or => a | b,
+        VOp::Xor => a ^ b,
+        VOp::Min => swar::min_signed(a, b, sew),
+        VOp::Max => swar::max_signed(a, b, sew),
+        VOp::Minu => swar::min_unsigned(a, b, sew),
+        VOp::Maxu => swar::max_unsigned(a, b, sew),
+        VOp::Sll => swar::sll(a, b, sew),
+        VOp::Srl => swar::srl(a, b, sew),
+        VOp::Sra => swar::sra(a, b, sew),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::xvnmc::VSrcKind;
+
+    fn drain(vpu: &mut Vpu, vrf: &mut Vrf) -> u32 {
+        let mut cycles = 0;
+        while vpu.busy() {
+            vpu.step(vrf);
+            cycles += 1;
+            assert!(cycles < 1_000_000);
+        }
+        cycles
+    }
+
+    #[test]
+    fn macc_throughput_matches_paper() {
+        // 1 / 0.67 / 0.33 MAC per cycle per lane (§III-B2).
+        assert_eq!(Vpu::cycles_per_word(VOp::Macc, VSrcKind::Vx, Sew::E8), 4); // 4 MACs / 4 cyc
+        assert_eq!(Vpu::cycles_per_word(VOp::Macc, VSrcKind::Vx, Sew::E16), 3); // 2 / 3
+        assert_eq!(Vpu::cycles_per_word(VOp::Macc, VSrcKind::Vx, Sew::E32), 3); // 1 / 3
+    }
+
+    #[test]
+    fn vrf_port_binds_light_ops() {
+        // vadd.vv: ALU needs 2, VRF needs 3 accesses → 3.
+        assert_eq!(Vpu::cycles_per_word(VOp::Add, VSrcKind::Vv, Sew::E8), 3);
+        // vadd.vx: 2.
+        assert_eq!(Vpu::cycles_per_word(VOp::Add, VSrcKind::Vx, Sew::E32), 2);
+        // vxor.vv: ALU 1, VRF 3 → 3.
+        assert_eq!(Vpu::cycles_per_word(VOp::Xor, VSrcKind::Vv, Sew::E16), 3);
+        // vmax.vx: 2 (the ReLU op).
+        assert_eq!(Vpu::cycles_per_word(VOp::Max, VSrcKind::Vx, Sew::E8), 2);
+        // shifts are shifter-bound: 4.
+        assert_eq!(Vpu::cycles_per_word(VOp::Sra, VSrcKind::Vx, Sew::E8), 4);
+    }
+
+    #[test]
+    fn vadd_vv_functional() {
+        let mut vrf = Vrf::new(4);
+        let mut vpu = Vpu::new(4);
+        let vl = vpu.set_vtype(64, Sew::E16);
+        assert_eq!(vl, 64);
+        for j in 0..64 {
+            vrf.set_elem(1, j, 64, Sew::E16, j + 1);
+            vrf.set_elem(2, j, 64, Sew::E16, 1000 + j);
+        }
+        vpu.issue(VecCmd::Op { op: VOp::Add, vd: 3, vs2: 1, src: Operand::V(2) }, &mut vrf);
+        drain(&mut vpu, &mut vrf);
+        for j in 0..64 {
+            assert_eq!(vrf.elem_signed(3, j, 64, Sew::E16), (j + 1 + 1000 + j) as i32);
+        }
+    }
+
+    #[test]
+    fn vmacc_vx_accumulates() {
+        let mut vrf = Vrf::new(4);
+        let mut vpu = Vpu::new(4);
+        vpu.set_vtype(16, Sew::E32);
+        for j in 0..16 {
+            vrf.set_elem(0, j, 16, Sew::E32, j); // vs2
+            vrf.set_elem(1, j, 16, Sew::E32, 100); // vd (acc)
+        }
+        vpu.issue(VecCmd::Op { op: VOp::Macc, vd: 1, vs2: 0, src: Operand::X(3) }, &mut vrf);
+        drain(&mut vpu, &mut vrf);
+        for j in 0..16 {
+            assert_eq!(vrf.elem_signed(1, j, 16, Sew::E32), 100 + 3 * j as i32);
+        }
+    }
+
+    #[test]
+    fn cost_model_scales_with_lanes_and_vl() {
+        let mut v4 = Vpu::new(4);
+        v4.set_vtype(1024, Sew::E8); // 256 words → 64 words/lane
+        assert_eq!(v4.op_cost(VOp::Macc, VSrcKind::Vx), ISSUE_OVERHEAD + 64 * 4);
+        let mut v8 = Vpu::new(8);
+        v8.set_vtype(1024, Sew::E8);
+        assert_eq!(v8.op_cost(VOp::Macc, VSrcKind::Vx), ISSUE_OVERHEAD + 32 * 4);
+        let mut v1 = Vpu::new(1);
+        v1.set_vtype(1024, Sew::E8);
+        assert_eq!(v1.op_cost(VOp::Macc, VSrcKind::Vx), ISSUE_OVERHEAD + 256 * 4);
+    }
+
+    #[test]
+    fn scoreboard_two_in_flight_overlaps_issue() {
+        let mut vrf = Vrf::new(4);
+        let mut vpu = Vpu::new(4);
+        vpu.set_vtype(256, Sew::E8);
+        let cmd = VecCmd::Op { op: VOp::Add, vd: 2, vs2: 1, src: Operand::X(1) };
+        assert!(vpu.can_accept());
+        vpu.issue(cmd, &mut vrf);
+        assert!(vpu.busy());
+        assert!(vpu.can_accept(), "one more slot");
+        vpu.issue(cmd, &mut vrf);
+        assert!(!vpu.can_accept());
+        let single = vpu.op_cost(VOp::Add, VSrcKind::Vx);
+        let total = drain(&mut vpu, &mut vrf);
+        // Second instruction saves 2 cycles of issue overhead.
+        assert_eq!(total, 2 * single - 2);
+    }
+
+    #[test]
+    fn slides() {
+        let mut vrf = Vrf::new(4);
+        let mut vpu = Vpu::new(4);
+        vpu.set_vtype(8, Sew::E32);
+        for j in 0..8 {
+            vrf.set_elem(0, j, 8, Sew::E32, 10 + j);
+        }
+        // slidedown by 2: vd[j] = vs2[j+2], tail zeros.
+        vpu.issue(VecCmd::Op { op: VOp::SlideDown, vd: 1, vs2: 0, src: Operand::X(2) }, &mut vrf);
+        drain(&mut vpu, &mut vrf);
+        for j in 0..6 {
+            assert_eq!(vrf.elem_unsigned(1, j, 8, Sew::E32), 12 + j);
+        }
+        assert_eq!(vrf.elem_unsigned(1, 6, 8, Sew::E32), 0);
+        // slide1up pushes a scalar into element 0.
+        vpu.issue(VecCmd::Op { op: VOp::Slide1Up, vd: 2, vs2: 0, src: Operand::X(99) }, &mut vrf);
+        drain(&mut vpu, &mut vrf);
+        assert_eq!(vrf.elem_unsigned(2, 0, 8, Sew::E32), 99);
+        assert_eq!(vrf.elem_unsigned(2, 7, 8, Sew::E32), 16);
+        // In-place slidedown (vd == vs2) must use the snapshot.
+        vpu.issue(VecCmd::Op { op: VOp::SlideDown, vd: 0, vs2: 0, src: Operand::X(1) }, &mut vrf);
+        drain(&mut vpu, &mut vrf);
+        assert_eq!(vrf.elem_unsigned(0, 0, 8, Sew::E32), 11);
+    }
+
+    #[test]
+    fn scalar_truncated_to_sew() {
+        let mut vrf = Vrf::new(4);
+        let mut vpu = Vpu::new(4);
+        vpu.set_vtype(4, Sew::E8);
+        for j in 0..4 {
+            vrf.set_elem(0, j, 4, Sew::E8, 1);
+        }
+        // 0x1FF truncates to 0xFF = -1 (signed 8-bit).
+        vpu.issue(VecCmd::Op { op: VOp::Add, vd: 1, vs2: 0, src: Operand::X(0x1ff) }, &mut vrf);
+        drain(&mut vpu, &mut vrf);
+        assert_eq!(vrf.elem_signed(1, 0, 4, Sew::E8), 0);
+    }
+
+    #[test]
+    fn insert_elem_and_read_elem() {
+        let mut vrf = Vrf::new(4);
+        let mut vpu = Vpu::new(4);
+        vpu.set_vtype(16, Sew::E8);
+        vpu.issue(VecCmd::InsertElem { vd: 2, idx: 7, value: 0x5a }, &mut vrf);
+        drain(&mut vpu, &mut vrf);
+        assert_eq!(vpu.read_elem(&vrf, 2, 7), 0x5a);
+    }
+}

@@ -1,0 +1,248 @@
+//! NM-Carus Vector Register File (§III-B2, Fig. 6).
+//!
+//! The VRF doubles as the host-visible 32 KiB memory: it is implemented as
+//! `lanes` single-port SRAM banks with **word interleaving** — words that
+//! are contiguous in the host address space map to adjacent banks
+//! (`bank = word_index % lanes`), so the elements with the same index of
+//! naturally-aligned vectors land in the same bank and each lane ALU owns
+//! exactly one bank.
+//!
+//! *Logical* vector registers (up to 256, §III-B1) are slices of this
+//! space: with the current `vtype = (vl, sew)`, logical register `r` spans
+//! bytes `[r·vl·sew, (r+1)·vl·sew)`. The standard 32-register view of the
+//! direct-encoded instructions corresponds to `vl = VLMAX` where
+//! `VLMAX · sew = 1 KiB` (32 × 1 KiB = 32 KiB).
+
+use crate::isa::Sew;
+use crate::mem::{Bank, MacroKind};
+
+/// Total capacity (32 KiB — the drop-in replacement target).
+pub const CAPACITY: u32 = 32 * 1024;
+
+/// Architectural vector-register slice when using direct 5-bit encodings.
+pub const VREG_BYTES: u32 = CAPACITY / 32;
+
+/// The banked VRF.
+#[derive(Debug, Clone)]
+pub struct Vrf {
+    pub banks: Vec<Bank>,
+    pub lanes: u32,
+    bank_bytes: u32,
+}
+
+impl Vrf {
+    /// Build a VRF with `lanes` equal banks (lanes must divide 8 K words).
+    pub fn new(lanes: u32) -> Self {
+        assert!(lanes.is_power_of_two() && (1..=16).contains(&lanes));
+        let bank_bytes = CAPACITY / lanes;
+        let kind = match bank_bytes {
+            16384 => MacroKind::Sram16k,
+            8192 => MacroKind::Sram8k,
+            // Smaller banks: account them with the 8 KiB energy constants
+            // (conservative; only used in lane-scaling ablations).
+            _ => MacroKind::Sram8k,
+        };
+        let mut banks = Vec::with_capacity(lanes as usize);
+        for _ in 0..lanes {
+            let mut b = Bank::new(kind);
+            if bank_bytes != b.kind.capacity() {
+                // Resize via a fresh bank of raw bytes.
+                b = Bank::rom(vec![0; bank_bytes as usize]);
+            }
+            banks.push(b);
+        }
+        Vrf { banks, lanes, bank_bytes }
+    }
+
+    /// (bank, byte-offset-in-bank) of a global byte address.
+    #[inline]
+    fn locate(&self, byte_addr: u32) -> (usize, u32) {
+        let word = (byte_addr / 4) % (CAPACITY / 4);
+        let bank = (word % self.lanes) as usize;
+        let row = word / self.lanes;
+        (bank, row * 4 + byte_addr % 4)
+    }
+
+    /// Bank index that holds a global word (the lane that processes it).
+    #[inline]
+    pub fn bank_of_word(&self, word: u32) -> usize {
+        (word % self.lanes) as usize
+    }
+
+    // ---- Host-side (bus) access: counted --------------------------------
+
+    pub fn mem_read(&mut self, off: u32, size: u32) -> u32 {
+        debug_assert!(off % size == 0);
+        let (b, o) = self.locate(off);
+        self.banks[b].read(o, size)
+    }
+
+    pub fn mem_write(&mut self, off: u32, size: u32, val: u32) {
+        debug_assert!(off % size == 0);
+        let (b, o) = self.locate(off);
+        self.banks[b].write(o, size, val);
+    }
+
+    // ---- VPU functional access: NOT counted (the VPU timing model counts
+    // word-granular accesses; see `VpuStats`) ------------------------------
+
+    /// Read element `j` of logical register `r` under `(vl, sew)`,
+    /// sign-extended.
+    pub fn elem_signed(&self, r: u8, j: u32, vl: u32, sew: Sew) -> i32 {
+        let addr = self.elem_addr(r, j, vl, sew);
+        let (b, o) = self.locate(addr);
+        let raw = self.banks[b].peek(o, sew.bytes());
+        crate::isa::sext(raw, sew.bits())
+    }
+
+    /// Read element zero-extended.
+    pub fn elem_unsigned(&self, r: u8, j: u32, vl: u32, sew: Sew) -> u32 {
+        let addr = self.elem_addr(r, j, vl, sew);
+        let (b, o) = self.locate(addr);
+        self.banks[b].peek(o, sew.bytes())
+    }
+
+    /// Write element `j` of logical register `r`.
+    pub fn set_elem(&mut self, r: u8, j: u32, vl: u32, sew: Sew, v: u32) {
+        let addr = self.elem_addr(r, j, vl, sew);
+        let (b, o) = self.locate(addr);
+        self.banks[b].poke(o, sew.bytes(), v);
+    }
+
+    /// Byte address of a logical-register element.
+    #[inline]
+    pub fn elem_addr(&self, r: u8, j: u32, vl: u32, sew: Sew) -> u32 {
+        debug_assert!(j < vl, "element {j} out of range (vl={vl})");
+        let base = (r as u32) * vl * sew.bytes();
+        let addr = base + j * sew.bytes();
+        debug_assert!(
+            addr + sew.bytes() <= CAPACITY,
+            "logical reg v{r}[{j}] (vl={vl}, {sew}) beyond VRF capacity"
+        );
+        addr % CAPACITY
+    }
+
+    /// Whole-word fast accessors (global word index; non-counting). The
+    /// VPU's word-level functional fast path uses these — see
+    /// EXPERIMENTS.md §Perf.
+    #[inline]
+    pub fn word(&self, w: u32) -> u32 {
+        let w = w % (CAPACITY / 4);
+        self.banks[(w % self.lanes) as usize].peek((w / self.lanes) * 4, 4)
+    }
+    #[inline]
+    pub fn set_word(&mut self, w: u32, v: u32) {
+        let w = w % (CAPACITY / 4);
+        self.banks[(w % self.lanes) as usize].poke((w / self.lanes) * 4, 4, v);
+    }
+
+    /// Non-counting debug/driver accessors at global byte addresses.
+    pub fn peek(&self, off: u32, size: u32) -> u32 {
+        let (b, o) = self.locate(off);
+        self.banks[b].peek(o, size)
+    }
+    pub fn poke(&mut self, off: u32, size: u32, val: u32) {
+        let (b, o) = self.locate(off);
+        self.banks[b].poke(o, size, val);
+    }
+    /// Bulk load at a global byte offset (word-interleave aware).
+    pub fn load(&mut self, off: u32, bytes: &[u8]) {
+        for (i, &byte) in bytes.iter().enumerate() {
+            self.poke(off + i as u32, 1, byte as u32);
+        }
+    }
+    /// Bulk dump.
+    pub fn dump(&self, off: u32, len: u32) -> Vec<u8> {
+        (0..len).map(|i| self.peek(off + i, 1) as u8).collect()
+    }
+
+    pub fn reset_stats(&mut self) {
+        for b in &mut self.banks {
+            b.reset_stats();
+        }
+    }
+
+    /// Total counted host accesses (reads, writes) across banks.
+    pub fn host_accesses(&self) -> (u64, u64) {
+        let mut r = 0;
+        let mut w = 0;
+        for b in &self.banks {
+            r += b.stats.reads;
+            w += b.stats.writes;
+        }
+        (r, w)
+    }
+
+    /// Bytes per bank.
+    pub fn bank_bytes(&self) -> u32 {
+        self.bank_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_interleaving() {
+        let v = Vrf::new(4);
+        // Consecutive words hit consecutive banks.
+        for w in 0..16u32 {
+            assert_eq!(v.bank_of_word(w), (w % 4) as usize);
+        }
+        let mut v = Vrf::new(4);
+        v.poke(0, 4, 0x1111_1111);
+        v.poke(4, 4, 0x2222_2222);
+        v.poke(16, 4, 0x3333_3333);
+        // Words 0 and 4 are both bank 0 (16 = word 4, 4 % 4 = 0).
+        assert_eq!(v.banks[0].peek(0, 4), 0x1111_1111);
+        assert_eq!(v.banks[1].peek(0, 4), 0x2222_2222);
+        assert_eq!(v.banks[0].peek(4, 4), 0x3333_3333);
+    }
+
+    #[test]
+    fn host_view_is_linear() {
+        let mut v = Vrf::new(4);
+        let data: Vec<u8> = (0..64).map(|i| i as u8).collect();
+        v.load(0x100, &data);
+        assert_eq!(v.dump(0x100, 64), data);
+        // Sub-word host access.
+        assert_eq!(v.mem_read(0x100, 1), 0);
+        assert_eq!(v.mem_read(0x104, 4), 0x0706_0504);
+        let (r, _w) = v.host_accesses();
+        assert_eq!(r, 2);
+    }
+
+    #[test]
+    fn logical_register_slicing() {
+        let mut v = Vrf::new(4);
+        let (vl, sew) = (256, Sew::E8);
+        // reg 3 starts at byte 3*256.
+        v.set_elem(3, 0, vl, sew, 0xab);
+        assert_eq!(v.peek(768, 1), 0xab);
+        v.set_elem(3, 255, vl, sew, 0x7f);
+        assert_eq!(v.elem_signed(3, 255, vl, sew), 0x7f);
+        // 16-bit elements sign-extend.
+        let (vl, sew) = (128, Sew::E16);
+        v.set_elem(0, 5, vl, sew, 0xffff);
+        assert_eq!(v.elem_signed(0, 5, vl, sew), -1);
+        assert_eq!(v.elem_unsigned(0, 5, vl, sew), 0xffff);
+    }
+
+    #[test]
+    fn vlmax_view_covers_32_regs() {
+        let v = Vrf::new(4);
+        let sew = Sew::E32;
+        let vlmax = VREG_BYTES / sew.bytes(); // 256
+        assert_eq!(v.elem_addr(31, vlmax - 1, vlmax, sew), CAPACITY - 4);
+    }
+
+    #[test]
+    fn lane_scaling_configs() {
+        for lanes in [1u32, 2, 4, 8, 16] {
+            let v = Vrf::new(lanes);
+            assert_eq!(v.banks.len(), lanes as usize);
+            assert_eq!(v.bank_bytes() * lanes, CAPACITY);
+        }
+    }
+}

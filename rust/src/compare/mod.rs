@@ -1,0 +1,322 @@
+//! State-of-the-art comparison models: BLADE, C-SRAM, Vecim (§V-C).
+//!
+//! Tables VII and VIII compare NM-Caesar/NM-Carus against three published
+//! CIM designs. The paper derives the comparator numbers from the
+//! respective articles plus technology-scaling rules (28 nm / 22 nm →
+//! 65 nm via SRAM-bitcell scaling factors, best-case for the comparators);
+//! we encode those published/scaled values as data (they are measurements
+//! of other people's silicon — not something a simulator can reproduce)
+//! and compute **our two columns** from the validated microarchitecture
+//! models.
+//!
+//! Throughput conventions (paper footnote e): one MAC = two elementary
+//! operations; peak numbers are 8-bit MACs.
+
+use crate::area;
+use crate::carus::vpu::Vpu;
+use crate::energy::params as ep;
+use crate::isa::xvnmc::{VOp, VSrcKind};
+use crate::isa::Sew;
+
+/// Nominal NMC clock (the 65 nm post-layout 330 MHz of Table IV).
+pub const F_NOM_MHZ: f64 = 330.0;
+
+/// One design's Table VII row.
+#[derive(Debug, Clone)]
+pub struct SotaRow {
+    pub name: &'static str,
+    pub cim_type: &'static str,
+    pub arrays: &'static str,
+    pub bitcell_density_pct: f64,
+    pub constraints: &'static str,
+    pub technology: &'static str,
+    pub area_um2: f64,
+    pub freq_mhz: f64,
+    pub peak_gops: f64,
+    pub gops_per_w: f64,
+    pub gops_per_mm2: f64,
+}
+
+/// Published + paper-scaled comparator rows (Table VII columns 1–3).
+pub fn comparators() -> Vec<SotaRow> {
+    vec![
+        SotaRow {
+            name: "BLADE (28nm)",
+            cim_type: "IMC",
+            arrays: "16 x 2 KiB",
+            bitcell_density_pct: 53.5,
+            constraints: "word alignment, local-group placement",
+            technology: "28 nm",
+            area_um2: 64.0e3,
+            freq_mhz: 2200.0,
+            peak_gops: 35.2,
+            gops_per_w: 830.7,
+            gops_per_mm2: 550.0,
+        },
+        SotaRow {
+            name: "BLADE (65nm scaled)",
+            cim_type: "IMC",
+            arrays: "16 x 2 KiB",
+            bitcell_density_pct: 53.5,
+            constraints: "word alignment, local-group placement",
+            technology: "65 nm (scaled)",
+            area_um2: 580.0e3,
+            freq_mhz: 330.0,
+            peak_gops: 5.3,
+            gops_per_w: 254.2,
+            gops_per_mm2: 9.1,
+        },
+        SotaRow {
+            name: "C-SRAM (22nm)",
+            cim_type: "IMC+NMC",
+            arrays: "4 x 8 KiB",
+            bitcell_density_pct: 20.3,
+            constraints: "word alignment, data replication",
+            technology: "22 nm",
+            area_um2: 17.5e3,
+            freq_mhz: 1000.0,
+            peak_gops: 10.7,
+            gops_per_w: 52.0,
+            gops_per_mm2: 611.0,
+        },
+        SotaRow {
+            name: "C-SRAM (65nm scaled)",
+            cim_type: "IMC+NMC",
+            arrays: "4 x 8 KiB",
+            bitcell_density_pct: 20.3,
+            constraints: "word alignment, data replication",
+            technology: "65 nm (scaled)",
+            area_um2: f64::NAN, // paper: "N/A" (mixed IMC/NMC scaling untrivial)
+            freq_mhz: 330.0,
+            peak_gops: 3.5,
+            gops_per_w: 13.2,
+            gops_per_mm2: f64::NAN,
+        },
+        SotaRow {
+            name: "Vecim (65nm)",
+            cim_type: "IMC+NMC",
+            arrays: "1 x 16 KiB (4 lanes)",
+            bitcell_density_pct: 1.7,
+            constraints: "vector alignment",
+            technology: "65 nm",
+            area_um2: 4.0e6,
+            freq_mhz: 250.0,
+            peak_gops: 31.8,
+            gops_per_w: 289.1,
+            gops_per_mm2: 8.0,
+        },
+    ]
+}
+
+/// Our NM-Caesar row, computed from the microarchitecture + energy model.
+pub fn caesar_row() -> SotaRow {
+    // Peak: one packed MAC micro-op (4 8-bit MACs) every 2 cycles.
+    let macs_per_cycle = 4.0 / 2.0;
+    let peak_gops = macs_per_cycle * 2.0 * F_NOM_MHZ / 1e3;
+    // Macro-level power while streaming MACs: 2 bank reads + amortized
+    // write + 4 mul-class element ops per 2 cycles + controller.
+    let e_per_op = 2.0 * ep::E_SRAM16K_READ + 0.5 * ep::E_SRAM16K_WRITE
+        + 4.0 * ep::E_ALU_MUL_ELEM
+        + 2.0 * ep::E_CAESAR_CTL_CYCLE;
+    let pj_per_cycle = e_per_op / 2.0;
+    let gops_per_w = peak_gops / (pj_per_cycle * F_NOM_MHZ * 1e6 / 1e12); // GOPS / W
+    let a = area::caesar().total();
+    SotaRow {
+        name: "NM-Caesar (this work)",
+        cim_type: "NMC",
+        arrays: "1 x 32 KiB",
+        bitcell_density_pct: 54.0,
+        constraints: "word alignment",
+        technology: "65 nm",
+        area_um2: a,
+        freq_mhz: F_NOM_MHZ,
+        peak_gops,
+        gops_per_w,
+        gops_per_mm2: peak_gops / (a / 1e6),
+    }
+}
+
+/// Our NM-Carus row (4 lanes).
+pub fn carus_row(lanes: u32) -> SotaRow {
+    // Peak: 1 MAC/cycle/lane at 8 bit.
+    let peak_gops = lanes as f64 * 2.0 * F_NOM_MHZ / 1e3;
+    // Macro-level power: per lane per 4-cycle word step: 3 VRF accesses +
+    // 4 mul-class ops, plus VPU control and (amortized) eCPU.
+    let e_word = 3.0 * ep::E_SRAM8K_READ + 4.0 * ep::E_ALU_MUL_ELEM;
+    let pj_per_cycle =
+        lanes as f64 * e_word / 4.0 + ep::E_VPU_CTL_CYCLE + 0.2 * ep::E_ECPU_CYCLE;
+    let gops_per_w = peak_gops / (pj_per_cycle * F_NOM_MHZ * 1e6 / 1e12);
+    let a = area::carus(lanes).total();
+    SotaRow {
+        name: "NM-Carus (this work)",
+        cim_type: "NMC",
+        arrays: "1 x 32 KiB (4 lanes)",
+        bitcell_density_pct: 33.0,
+        constraints: "vector alignment",
+        technology: "65 nm",
+        area_um2: a,
+        freq_mhz: F_NOM_MHZ,
+        peak_gops,
+        gops_per_w,
+        gops_per_mm2: peak_gops / (a / 1e6),
+    }
+}
+
+/// Table VIII: matmul A[10,10] × B[10,p] peak comparison.
+///
+/// Comparator cycle counts are the paper's best-case estimates (data
+/// replication and structural hazards neglected); ours follow the validated
+/// microarchitectural cost models.
+#[derive(Debug, Clone)]
+pub struct MatmulPerf {
+    pub name: &'static str,
+    /// (cycles, energy pJ/MAC) per bitwidth [e8, e16, e32].
+    pub cycles: [f64; 3],
+    pub pj_per_mac: [f64; 3],
+    pub freq_mhz: f64,
+}
+
+/// Table VIII workload: p per width (footnotes d/e/f).
+pub const T8_P: [u32; 3] = [1024, 512, 256];
+const T8_MACS: [f64; 3] = [10.0 * 10.0 * 1024.0, 10.0 * 10.0 * 512.0, 10.0 * 10.0 * 256.0];
+
+pub fn table8_comparators() -> Vec<MatmulPerf> {
+    vec![
+        MatmulPerf {
+            name: "BLADE 16x2KiB (28nm)",
+            cycles: [12.8e3, 25.6e3, 51.2e3],
+            pj_per_mac: [2.4, 8.1, 31.1],
+            freq_mhz: 2200.0,
+        },
+        MatmulPerf {
+            name: "BLADE 16x2KiB (65nm)",
+            cycles: [12.8e3, 25.6e3, 51.2e3],
+            pj_per_mac: [7.9, 26.7, 103.0],
+            freq_mhz: 330.0,
+        },
+        MatmulPerf {
+            name: "BLADE 1x32KiB (28nm)",
+            cycles: [204.8e3, 409.6e3, 819.2e3],
+            pj_per_mac: [13.0, 29.4, 96.9],
+            freq_mhz: 2200.0,
+        },
+        MatmulPerf {
+            name: "BLADE 1x32KiB (65nm)",
+            cycles: [204.8e3, 409.6e3, 819.2e3],
+            pj_per_mac: [43.0, 97.1, 320.0],
+            freq_mhz: 330.0,
+        },
+        MatmulPerf {
+            name: "C-SRAM 8x4KiB (22nm)",
+            cycles: [19.2e3, 38.4e3, 76.8e3],
+            pj_per_mac: [38.8, 155.0, 621.0],
+            freq_mhz: 1000.0,
+        },
+        MatmulPerf {
+            name: "C-SRAM 8x4KiB (65nm)",
+            cycles: [19.2e3, 38.4e3, 76.8e3],
+            pj_per_mac: [150.0, 600.0, 2400.0],
+            freq_mhz: 330.0,
+        },
+    ]
+}
+
+/// Our NM-Caesar Table VIII row: packed `MAC_*` streams, one micro-op per
+/// word of the output row per k (2 cycles each).
+pub fn table8_caesar() -> MatmulPerf {
+    let mut cycles = [0.0; 3];
+    let mut pj = [0.0; 3];
+    for (i, sew) in [Sew::E8, Sew::E16, Sew::E32].iter().enumerate() {
+        let p = T8_P[i];
+        let lanes = sew.lanes();
+        let chunks = (10 * p).div_ceil(lanes); // output words
+        let ops = chunks as f64 * 10.0; // k = 10 per chunk
+        cycles[i] = ops * 2.0;
+        // Energy per op (macro level), spread over the MACs it performs.
+        let e_op = 2.0 * ep::E_SRAM16K_READ + 0.5 * ep::E_SRAM16K_WRITE
+            + lanes as f64 * ep::E_ALU_MUL_ELEM
+            + 2.0 * ep::E_CAESAR_CTL_CYCLE;
+        pj[i] = e_op * ops / T8_MACS[i];
+    }
+    MatmulPerf { name: "NM-Caesar (this work)", cycles, pj_per_mac: pj, freq_mhz: F_NOM_MHZ }
+}
+
+/// Our NM-Carus Table VIII row: the VPU cost model over 10 rows × 10
+/// vmacc.vx (plus issue overhead), 4 lanes.
+pub fn table8_carus(lanes: u32) -> MatmulPerf {
+    let mut cycles = [0.0; 3];
+    let mut pj = [0.0; 3];
+    for (i, sew) in [Sew::E8, Sew::E16, Sew::E32].iter().enumerate() {
+        let p = T8_P[i];
+        let words = (p * sew.bytes()).div_ceil(4);
+        let wpl = words.div_ceil(lanes);
+        let cpw = Vpu::cycles_per_word(VOp::Macc, VSrcKind::Vx, *sew);
+        let per_vmacc = (crate::carus::vpu::ISSUE_OVERHEAD + wpl * cpw) as f64;
+        // 10 output rows × 10 k-steps, emvx hidden, minus queue overlap.
+        cycles[i] = 100.0 * (per_vmacc - 2.0) + 50.0 /* boot + row control */;
+        let e_vmacc = words as f64
+            * (3.0 * ep::E_SRAM8K_READ + sew.lanes() as f64 * ep::E_ALU_MUL_ELEM)
+            + per_vmacc * ep::E_VPU_CTL_CYCLE;
+        pj[i] = (100.0 * e_vmacc) / T8_MACS[i];
+    }
+    MatmulPerf { name: "NM-Carus (this work)", cycles, pj_per_mac: pj, freq_mhz: F_NOM_MHZ }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_throughput_matches_paper() {
+        // Paper Table VII: NM-Caesar 1.32 GOPS, NM-Carus 2.64 GOPS.
+        assert!((caesar_row().peak_gops - 1.32).abs() < 0.01);
+        assert!((carus_row(4).peak_gops - 2.64).abs() < 0.01);
+    }
+
+    #[test]
+    fn carus_beats_caesar_in_efficiency() {
+        // The paper's qualitative ordering (Table VII): NM-Carus peak
+        // efficiency above NM-Caesar's.
+        assert!(carus_row(4).gops_per_w > caesar_row().gops_per_w);
+    }
+
+    #[test]
+    fn table8_caesar_cycles_match_paper() {
+        // Paper: 51.2e3 cycles at every width.
+        let r = table8_caesar();
+        for (i, &c) in r.cycles.iter().enumerate() {
+            assert!((c - 51.2e3).abs() < 1.0, "width {i}: {c}");
+        }
+    }
+
+    #[test]
+    fn table8_carus_cycles_close_to_paper() {
+        // Paper: 26.6e3 / 19.5e3 / 26.0e3. Our model: exact for e8/e16;
+        // e32 comes out faster (19.2e3) because our 32-bit MAC costs 3
+        // cycles/word vs. the paper's apparent 4 — documented deviation.
+        let r = table8_carus(4);
+        assert!((r.cycles[0] - 26.6e3).abs() / 26.6e3 < 0.05, "e8: {}", r.cycles[0]);
+        assert!((r.cycles[1] - 19.5e3).abs() / 19.5e3 < 0.05, "e16: {}", r.cycles[1]);
+        assert!(r.cycles[2] < 27.0e3, "e32: {}", r.cycles[2]);
+    }
+
+    #[test]
+    fn carus_energy_ordering_vs_comparators_scaled() {
+        // Paper: NM-Carus is the most energy-efficient design at 65 nm on
+        // 32-bit data (beats BLADE-65 by ≈3×).
+        let carus = table8_carus(4);
+        let blade65 = &table8_comparators()[1];
+        assert!(carus.pj_per_mac[2] < blade65.pj_per_mac[2]);
+    }
+
+    #[test]
+    fn lane_scaling_monotonic() {
+        // Throughput scales ~linearly with lanes; area overhead contained
+        // ("a similar performance density is expected from NM-Carus
+        // instances with a higher lane count").
+        let g4 = carus_row(4);
+        let g8 = carus_row(8);
+        assert!((g8.peak_gops / g4.peak_gops - 2.0).abs() < 0.01);
+        assert!(g8.gops_per_mm2 > g4.gops_per_mm2 * 1.3);
+    }
+}

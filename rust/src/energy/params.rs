@@ -1,0 +1,77 @@
+//! 65 nm energy calibration constants (pJ per event, typical corner).
+//!
+//! Derivation notes — every constant traces to a published anchor:
+//!
+//! * **SRAM access energies.** 65 nm low-power single-port compiler macros
+//!   run ≈0.25–0.35 pJ/bit/read at this capacity; the paper's own Fig. 13
+//!   requires the 32 KiB bank to burn about as much as the CV32E40P core on
+//!   the fetch-dominated CPU case (≈9 fetches + 3 data accesses per 10
+//!   cycles ≈ CPU core energy) ⇒ ~9 pJ/read. Smaller macros scale
+//!   sub-linearly (shorter bit-lines): 16 KiB ≈ 0.72×, 8 KiB ≈ 0.52×,
+//!   matching commercial compiler datasheets. Writes ≈ 1.15× reads.
+//! * **CPU core energies.** CV32E40P ≈ 35 µW/MHz at 65 nm LP (literature on
+//!   PULPino-class cores) ⇒ ≈9 pJ/cycle active. CV32E20 ("micro-riscy") is
+//!   reported ~2.5–3× leaner ⇒ 3.5 pJ/cycle. The CV32E40X in RV32EC config
+//!   plus the XIF sits between ⇒ 4 pJ/cycle. Clock-gated cores keep ~10 %.
+//! * **ALU element-op energies.** The ~100:1 SRAM:ALU rule [Hennessy &
+//!   Patterson] puts an 8-bit add at ~0.03 pJ and a 32-bit MAC around
+//!   1–3 pJ at 65 nm; we charge per *element* op through the shared
+//!   SIMD datapath (incl. local register/pipeline overhead), with
+//!   multiplies ≈ 2.5× adds.
+//! * **Interconnect.** OBI crossbar transaction ≈1.5 pJ (drivers + arbitration),
+//!   DMA engine ≈2 pJ/active cycle. Residual always-on power (peripheral
+//!   subsystem, clock tree, leakage) ≈ 1 mW at 250 MHz ⇒ 4 pJ/cycle.
+//!
+//! The end-to-end validation of these numbers is `rust/tests/calibration.rs`
+//! which reproduces the Table V energy ratios within tolerance, and the
+//! Fig. 13 breakdown shares.
+
+/// System clock: 250 MHz post-layout operating point (§V-A1).
+pub const F_CLK_HZ: f64 = 250.0e6;
+/// Cycle time in ns.
+pub const CYCLE_NS: f64 = 4.0;
+
+// --- Memory macros (pJ per access) -----------------------------------------
+pub const E_SRAM32K_READ: f64 = 9.0;
+pub const E_SRAM32K_WRITE: f64 = 10.4;
+pub const E_SRAM16K_READ: f64 = 6.5;
+pub const E_SRAM16K_WRITE: f64 = 7.5;
+pub const E_SRAM8K_READ: f64 = 4.7;
+pub const E_SRAM8K_WRITE: f64 = 5.4;
+/// 512 B latch-based register file (NM-Carus eMEM).
+pub const E_EMEM_ACCESS: f64 = 1.2;
+/// Embedded flash read (AD weight streaming).
+pub const E_ROM_READ: f64 = 15.0;
+
+// --- CPU cores (pJ per cycle) ----------------------------------------------
+pub const E_CPU_E40P_CYCLE: f64 = 9.0;
+pub const E_CPU_E20_CYCLE: f64 = 3.5;
+pub const E_ECPU_CYCLE: f64 = 4.0;
+pub const E_CPU_SLEEP_CYCLE: f64 = 0.9;
+pub const E_ECPU_SLEEP_CYCLE: f64 = 0.4;
+
+// --- SIMD/vector ALU datapaths (pJ per element operation) -------------------
+/// Logic / min / max / shift element ops.
+pub const E_ALU_LIGHT_ELEM: f64 = 0.9;
+/// Add/sub element ops (partitioned multi-precision adder).
+pub const E_ALU_ADD_ELEM: f64 = 1.2;
+/// Multiply / MAC / dot element ops (16-bit multiplier passes).
+pub const E_ALU_MUL_ELEM: f64 = 3.0;
+
+// --- NMC control logic (pJ per cycle) ----------------------------------------
+/// NM-Caesar controller + pipeline registers while busy.
+pub const E_CAESAR_CTL_CYCLE: f64 = 1.6;
+/// NM-Carus VPU control (decode/commit/loop unit) while busy.
+pub const E_VPU_CTL_CYCLE: f64 = 2.2;
+/// NM-Carus VPU when clock-gated (no vector instruction in flight).
+pub const E_VPU_GATED_CYCLE: f64 = 0.15;
+
+// --- Interconnect ------------------------------------------------------------
+/// One granted crossbar transaction.
+pub const E_BUS_TXN: f64 = 1.5;
+/// DMA engine per active cycle.
+pub const E_DMA_CYCLE: f64 = 2.0;
+
+// --- Always-on residue (pJ per cycle) ----------------------------------------
+/// Peripheral subsystem + clock tree + leakage of the whole MCU.
+pub const E_STATIC_CYCLE: f64 = 4.0;

@@ -1,0 +1,193 @@
+//! Instruction-set definitions for every ISA in the HEEPerator system.
+//!
+//! Four instruction families coexist in the simulated SoC:
+//! - **RV32I/M** ([`rv32`]): the host CPU (CV32E40P, RV32IMC) and, in its
+//!   RV32E subset, the CV32E20 host used in Table VI and the NM-Carus
+//!   embedded CPU (eCPU, RV32EC).
+//! - **Xcv** ([`xcv`]): the small CV32E40P DSP-extension subset (packed-SIMD
+//!   dot products, min/max) used by the RV32IMCXcv baselines of Table VI.
+//! - **xvnmc** ([`xvnmc`]): the paper's custom RISC-V vector extension for
+//!   near-memory computing (Tables II/III), encoded in the *Custom-2* space
+//!   (major opcode `0x5b`), including the indirect-register-addressing
+//!   variants that are the paper's key code-size contribution.
+//! - **NM-Caesar micro-ops**: *not* RISC-V — they are encoded in bus write
+//!   transactions and live in [`crate::caesar::isa`].
+//!
+//! Compressed (C) encodings are handled at the cost-model level: the
+//! assembler emits 32-bit encodings and the cycle/energy model charges
+//! fetches per instruction, which is what determines the paper's numbers
+//! (CV32E40P fetches through a prefetch buffer; code size is not a measured
+//! quantity in the paper's evaluation).
+
+pub mod rv32;
+pub mod xcv;
+pub mod xvnmc;
+
+/// A RISC-V integer register index (`x0`..`x31`).
+///
+/// RV32E configurations restrict usage to `x0`..`x15`; this is enforced by
+/// the CPU model (illegal-instruction trap), not by the type.
+pub type Reg = u8;
+
+/// ABI register names, for the assembler DSL and disassembly.
+pub mod reg {
+    use super::Reg;
+    pub const ZERO: Reg = 0;
+    pub const RA: Reg = 1;
+    pub const SP: Reg = 2;
+    pub const GP: Reg = 3;
+    pub const TP: Reg = 4;
+    pub const T0: Reg = 5;
+    pub const T1: Reg = 6;
+    pub const T2: Reg = 7;
+    pub const S0: Reg = 8;
+    pub const FP: Reg = 8;
+    pub const S1: Reg = 9;
+    pub const A0: Reg = 10;
+    pub const A1: Reg = 11;
+    pub const A2: Reg = 12;
+    pub const A3: Reg = 13;
+    pub const A4: Reg = 14;
+    pub const A5: Reg = 15;
+    // Registers below are unavailable on RV32E (x16..x31).
+    pub const A6: Reg = 16;
+    pub const A7: Reg = 17;
+    pub const S2: Reg = 18;
+    pub const S3: Reg = 19;
+    pub const S4: Reg = 20;
+    pub const S5: Reg = 21;
+    pub const S6: Reg = 22;
+    pub const S7: Reg = 23;
+    pub const S8: Reg = 24;
+    pub const S9: Reg = 25;
+    pub const S10: Reg = 26;
+    pub const S11: Reg = 27;
+    pub const T3: Reg = 28;
+    pub const T4: Reg = 29;
+    pub const T5: Reg = 30;
+    pub const T6: Reg = 31;
+
+    /// ABI name of a register, for disassembly.
+    pub fn name(r: Reg) -> &'static str {
+        const NAMES: [&str; 32] = [
+            "zero", "ra", "sp", "gp", "tp", "t0", "t1", "t2", "s0", "s1", "a0", "a1", "a2", "a3",
+            "a4", "a5", "a6", "a7", "s2", "s3", "s4", "s5", "s6", "s7", "s8", "s9", "s10", "s11",
+            "t3", "t4", "t5", "t6",
+        ];
+        NAMES[(r & 31) as usize]
+    }
+}
+
+/// Element width selector shared by every SIMD/vector datapath in the
+/// system (NM-Caesar CSR, NM-Carus `vtype.sew`, Xcv packed ops).
+///
+/// The paper deliberately supports only the standard 8/16/32-bit integer
+/// types (§III, "support for application-specific lower-precision data
+/// types was considered but not implemented").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Sew {
+    /// 8-bit elements (4 per 32-bit word).
+    E8,
+    /// 16-bit elements (2 per 32-bit word).
+    E16,
+    /// 32-bit elements (1 per 32-bit word).
+    E32,
+}
+
+impl Sew {
+    /// Element size in bytes.
+    pub fn bytes(self) -> u32 {
+        match self {
+            Sew::E8 => 1,
+            Sew::E16 => 2,
+            Sew::E32 => 4,
+        }
+    }
+    /// Elements per 32-bit word.
+    pub fn lanes(self) -> u32 {
+        4 / self.bytes()
+    }
+    /// Element size in bits.
+    pub fn bits(self) -> u32 {
+        8 * self.bytes()
+    }
+    /// vtype/CSR encoding (0, 1, 2) as in RVV.
+    pub fn code(self) -> u32 {
+        match self {
+            Sew::E8 => 0,
+            Sew::E16 => 1,
+            Sew::E32 => 2,
+        }
+    }
+    /// Decode from a vtype/CSR field.
+    pub fn from_code(c: u32) -> Option<Sew> {
+        match c & 0x7 {
+            0 => Some(Sew::E8),
+            1 => Some(Sew::E16),
+            2 => Some(Sew::E32),
+            _ => None,
+        }
+    }
+    /// All supported widths, for parameter sweeps.
+    pub const ALL: [Sew; 3] = [Sew::E8, Sew::E16, Sew::E32];
+}
+
+impl std::fmt::Display for Sew {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}-bit", self.bits())
+    }
+}
+
+/// Sign-extend the low `bits` of `v`.
+#[inline]
+pub fn sext(v: u32, bits: u32) -> i32 {
+    debug_assert!(bits >= 1 && bits <= 32);
+    let shift = 32 - bits;
+    ((v << shift) as i32) >> shift
+}
+
+/// Extract bit field `[hi:lo]` of `v`.
+#[inline]
+pub fn bits(v: u32, hi: u32, lo: u32) -> u32 {
+    (v >> lo) & ((1u64 << (hi - lo + 1)) - 1) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sew_geometry() {
+        assert_eq!(Sew::E8.lanes(), 4);
+        assert_eq!(Sew::E16.lanes(), 2);
+        assert_eq!(Sew::E32.lanes(), 1);
+        for s in Sew::ALL {
+            assert_eq!(Sew::from_code(s.code()), Some(s));
+            assert_eq!(s.bits(), s.bytes() * 8);
+        }
+        assert_eq!(Sew::from_code(3), None);
+    }
+
+    #[test]
+    fn sext_works() {
+        assert_eq!(sext(0xfff, 12), -1);
+        assert_eq!(sext(0x7ff, 12), 2047);
+        assert_eq!(sext(0x800, 12), -2048);
+        assert_eq!(sext(0xffff_ffff, 32), -1);
+        assert_eq!(sext(1, 1), -1);
+    }
+
+    #[test]
+    fn bits_extract() {
+        assert_eq!(bits(0xdead_beef, 31, 28), 0xd);
+        assert_eq!(bits(0xdead_beef, 3, 0), 0xf);
+        assert_eq!(bits(0xdead_beef, 31, 0), 0xdead_beef);
+    }
+
+    #[test]
+    fn reg_names() {
+        assert_eq!(reg::name(reg::ZERO), "zero");
+        assert_eq!(reg::name(reg::A0), "a0");
+        assert_eq!(reg::name(reg::T6), "t6");
+    }
+}

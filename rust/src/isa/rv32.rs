@@ -1,0 +1,663 @@
+//! RV32I/M instruction definitions, encoder, and decoder.
+//!
+//! The decoder also dispatches into the [`super::xcv`] (Custom-0/Custom-1)
+//! and [`super::xvnmc`] (Custom-2) spaces so that a single [`decode`] call
+//! handles every instruction the simulated CPUs can fetch.
+//!
+//! Encodings follow the RISC-V unprivileged spec v20191213. Only 32-bit
+//! encodings are produced (see [`crate::isa`] module docs for how the C
+//! extension is accounted for).
+
+use super::xcv::XcvInstr;
+use super::xvnmc::VInstr;
+use super::{bits, reg, sext, Reg};
+
+/// ALU operations shared by register-register and register-immediate forms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AluOp {
+    Add,
+    Sub,
+    Sll,
+    Slt,
+    Sltu,
+    Xor,
+    Srl,
+    Sra,
+    Or,
+    And,
+}
+
+/// M-extension multiply/divide operations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MulOp {
+    Mul,
+    Mulh,
+    Mulhsu,
+    Mulhu,
+    Div,
+    Divu,
+    Rem,
+    Remu,
+}
+
+/// Conditional branch comparisons.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BranchOp {
+    Beq,
+    Bne,
+    Blt,
+    Bge,
+    Bltu,
+    Bgeu,
+}
+
+/// Load widths/signedness.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LoadOp {
+    Lb,
+    Lh,
+    Lw,
+    Lbu,
+    Lhu,
+}
+
+impl LoadOp {
+    /// Access size in bytes.
+    pub fn size(self) -> u32 {
+        match self {
+            LoadOp::Lb | LoadOp::Lbu => 1,
+            LoadOp::Lh | LoadOp::Lhu => 2,
+            LoadOp::Lw => 4,
+        }
+    }
+}
+
+/// Store widths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StoreOp {
+    Sb,
+    Sh,
+    Sw,
+}
+
+impl StoreOp {
+    /// Access size in bytes.
+    pub fn size(self) -> u32 {
+        match self {
+            StoreOp::Sb => 1,
+            StoreOp::Sh => 2,
+            StoreOp::Sw => 4,
+        }
+    }
+}
+
+/// Zicsr operations (subset: we model `csrrw`/`csrrs` with register source,
+/// which is all the firmware needs for mstatus/mie and custom NMC CSRs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CsrOp {
+    Csrrw,
+    Csrrs,
+    Csrrc,
+}
+
+/// A decoded RV32 instruction (including the custom extension spaces).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Instr {
+    Lui { rd: Reg, imm: i32 },
+    Auipc { rd: Reg, imm: i32 },
+    Jal { rd: Reg, off: i32 },
+    Jalr { rd: Reg, rs1: Reg, off: i32 },
+    Branch { op: BranchOp, rs1: Reg, rs2: Reg, off: i32 },
+    Load { op: LoadOp, rd: Reg, rs1: Reg, off: i32 },
+    Store { op: StoreOp, rs2: Reg, rs1: Reg, off: i32 },
+    AluImm { op: AluOp, rd: Reg, rs1: Reg, imm: i32 },
+    Alu { op: AluOp, rd: Reg, rs1: Reg, rs2: Reg },
+    MulDiv { op: MulOp, rd: Reg, rs1: Reg, rs2: Reg },
+    Csr { op: CsrOp, rd: Reg, rs1: Reg, csr: u16 },
+    Ecall,
+    Ebreak,
+    Wfi,
+    Fence,
+    /// CV32E40P DSP extension (Custom-0/1 spaces).
+    Xcv(XcvInstr),
+    /// NM-Carus `xvnmc` vector extension (Custom-2 space, opcode 0x5b).
+    Xvnmc(VInstr),
+}
+
+const OP_LUI: u32 = 0b0110111;
+const OP_AUIPC: u32 = 0b0010111;
+const OP_JAL: u32 = 0b1101111;
+const OP_JALR: u32 = 0b1100111;
+const OP_BRANCH: u32 = 0b1100011;
+const OP_LOAD: u32 = 0b0000011;
+const OP_STORE: u32 = 0b0100011;
+const OP_IMM: u32 = 0b0010011;
+const OP_REG: u32 = 0b0110011;
+const OP_SYSTEM: u32 = 0b1110011;
+const OP_FENCE: u32 = 0b0001111;
+pub const OP_CUSTOM0: u32 = 0b0001011; // 0x0b — Xcv ALU/SIMD
+pub const OP_CUSTOM1: u32 = 0b0101011; // 0x2b — Xcv dot products
+pub const OP_CUSTOM2: u32 = 0b1011011; // 0x5b — xvnmc (Table III)
+
+#[inline]
+fn r_type(funct7: u32, rs2: Reg, rs1: Reg, funct3: u32, rd: Reg, opcode: u32) -> u32 {
+    (funct7 << 25)
+        | ((rs2 as u32 & 31) << 20)
+        | ((rs1 as u32 & 31) << 15)
+        | (funct3 << 12)
+        | ((rd as u32 & 31) << 7)
+        | opcode
+}
+
+#[inline]
+fn i_type(imm: i32, rs1: Reg, funct3: u32, rd: Reg, opcode: u32) -> u32 {
+    ((imm as u32 & 0xfff) << 20)
+        | ((rs1 as u32 & 31) << 15)
+        | (funct3 << 12)
+        | ((rd as u32 & 31) << 7)
+        | opcode
+}
+
+#[inline]
+fn s_type(imm: i32, rs2: Reg, rs1: Reg, funct3: u32, opcode: u32) -> u32 {
+    let imm = imm as u32;
+    (bits(imm, 11, 5) << 25)
+        | ((rs2 as u32 & 31) << 20)
+        | ((rs1 as u32 & 31) << 15)
+        | (funct3 << 12)
+        | (bits(imm, 4, 0) << 7)
+        | opcode
+}
+
+#[inline]
+fn b_type(off: i32, rs2: Reg, rs1: Reg, funct3: u32, opcode: u32) -> u32 {
+    let imm = off as u32;
+    (bits(imm, 12, 12) << 31)
+        | (bits(imm, 10, 5) << 25)
+        | ((rs2 as u32 & 31) << 20)
+        | ((rs1 as u32 & 31) << 15)
+        | (funct3 << 12)
+        | (bits(imm, 4, 1) << 8)
+        | (bits(imm, 11, 11) << 7)
+        | opcode
+}
+
+#[inline]
+fn u_type(imm: i32, rd: Reg, opcode: u32) -> u32 {
+    ((imm as u32) & 0xffff_f000) | ((rd as u32 & 31) << 7) | opcode
+}
+
+#[inline]
+fn j_type(off: i32, rd: Reg, opcode: u32) -> u32 {
+    let imm = off as u32;
+    (bits(imm, 20, 20) << 31)
+        | (bits(imm, 10, 1) << 21)
+        | (bits(imm, 11, 11) << 20)
+        | (bits(imm, 19, 12) << 12)
+        | ((rd as u32 & 31) << 7)
+        | opcode
+}
+
+impl AluOp {
+    fn funct3(self) -> u32 {
+        match self {
+            AluOp::Add | AluOp::Sub => 0b000,
+            AluOp::Sll => 0b001,
+            AluOp::Slt => 0b010,
+            AluOp::Sltu => 0b011,
+            AluOp::Xor => 0b100,
+            AluOp::Srl | AluOp::Sra => 0b101,
+            AluOp::Or => 0b110,
+            AluOp::And => 0b111,
+        }
+    }
+    fn funct7(self) -> u32 {
+        match self {
+            AluOp::Sub | AluOp::Sra => 0b0100000,
+            _ => 0,
+        }
+    }
+}
+
+/// Encode an instruction into its 32-bit machine form.
+pub fn encode(i: &Instr) -> u32 {
+    match *i {
+        Instr::Lui { rd, imm } => u_type(imm, rd, OP_LUI),
+        Instr::Auipc { rd, imm } => u_type(imm, rd, OP_AUIPC),
+        Instr::Jal { rd, off } => j_type(off, rd, OP_JAL),
+        Instr::Jalr { rd, rs1, off } => i_type(off, rs1, 0b000, rd, OP_JALR),
+        Instr::Branch { op, rs1, rs2, off } => {
+            let f3 = match op {
+                BranchOp::Beq => 0b000,
+                BranchOp::Bne => 0b001,
+                BranchOp::Blt => 0b100,
+                BranchOp::Bge => 0b101,
+                BranchOp::Bltu => 0b110,
+                BranchOp::Bgeu => 0b111,
+            };
+            b_type(off, rs2, rs1, f3, OP_BRANCH)
+        }
+        Instr::Load { op, rd, rs1, off } => {
+            let f3 = match op {
+                LoadOp::Lb => 0b000,
+                LoadOp::Lh => 0b001,
+                LoadOp::Lw => 0b010,
+                LoadOp::Lbu => 0b100,
+                LoadOp::Lhu => 0b101,
+            };
+            i_type(off, rs1, f3, rd, OP_LOAD)
+        }
+        Instr::Store { op, rs2, rs1, off } => {
+            let f3 = match op {
+                StoreOp::Sb => 0b000,
+                StoreOp::Sh => 0b001,
+                StoreOp::Sw => 0b010,
+            };
+            s_type(off, rs2, rs1, f3, OP_STORE)
+        }
+        Instr::AluImm { op, rd, rs1, imm } => match op {
+            AluOp::Sll | AluOp::Srl | AluOp::Sra => {
+                let shamt = (imm as u32 & 31) as i32;
+                i_type(((op.funct7() << 5) as i32) | shamt, rs1, op.funct3(), rd, OP_IMM)
+            }
+            AluOp::Sub => panic!("subi does not exist; use addi with negated imm"),
+            _ => i_type(imm, rs1, op.funct3(), rd, OP_IMM),
+        },
+        Instr::Alu { op, rd, rs1, rs2 } => r_type(op.funct7(), rs2, rs1, op.funct3(), rd, OP_REG),
+        Instr::MulDiv { op, rd, rs1, rs2 } => {
+            let f3 = match op {
+                MulOp::Mul => 0b000,
+                MulOp::Mulh => 0b001,
+                MulOp::Mulhsu => 0b010,
+                MulOp::Mulhu => 0b011,
+                MulOp::Div => 0b100,
+                MulOp::Divu => 0b101,
+                MulOp::Rem => 0b110,
+                MulOp::Remu => 0b111,
+            };
+            r_type(0b0000001, rs2, rs1, f3, rd, OP_REG)
+        }
+        Instr::Csr { op, rd, rs1, csr } => {
+            let f3 = match op {
+                CsrOp::Csrrw => 0b001,
+                CsrOp::Csrrs => 0b010,
+                CsrOp::Csrrc => 0b011,
+            };
+            ((csr as u32) << 20) | ((rs1 as u32 & 31) << 15) | (f3 << 12) | ((rd as u32 & 31) << 7) | OP_SYSTEM
+        }
+        Instr::Ecall => OP_SYSTEM,
+        Instr::Ebreak => (1 << 20) | OP_SYSTEM,
+        Instr::Wfi => (0b0001000_00101 << 20) | OP_SYSTEM,
+        Instr::Fence => OP_FENCE,
+        Instr::Xcv(x) => super::xcv::encode(&x),
+        Instr::Xvnmc(v) => super::xvnmc::encode(&v),
+    }
+}
+
+/// Decode error: the word is not a recognized instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IllegalInstr(pub u32);
+
+impl std::fmt::Display for IllegalInstr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "illegal instruction {:#010x}", self.0)
+    }
+}
+impl std::error::Error for IllegalInstr {}
+
+/// Decode a 32-bit machine word.
+pub fn decode(w: u32) -> Result<Instr, IllegalInstr> {
+    let opcode = bits(w, 6, 0);
+    let rd = bits(w, 11, 7) as Reg;
+    let rs1 = bits(w, 19, 15) as Reg;
+    let rs2 = bits(w, 24, 20) as Reg;
+    let funct3 = bits(w, 14, 12);
+    let funct7 = bits(w, 31, 25);
+    let imm_i = sext(bits(w, 31, 20), 12);
+    match opcode {
+        OP_LUI => Ok(Instr::Lui { rd, imm: (w & 0xffff_f000) as i32 }),
+        OP_AUIPC => Ok(Instr::Auipc { rd, imm: (w & 0xffff_f000) as i32 }),
+        OP_JAL => {
+            let off = (bits(w, 31, 31) << 20)
+                | (bits(w, 19, 12) << 12)
+                | (bits(w, 20, 20) << 11)
+                | (bits(w, 30, 21) << 1);
+            Ok(Instr::Jal { rd, off: sext(off, 21) })
+        }
+        OP_JALR if funct3 == 0 => Ok(Instr::Jalr { rd, rs1, off: imm_i }),
+        OP_BRANCH => {
+            let op = match funct3 {
+                0b000 => BranchOp::Beq,
+                0b001 => BranchOp::Bne,
+                0b100 => BranchOp::Blt,
+                0b101 => BranchOp::Bge,
+                0b110 => BranchOp::Bltu,
+                0b111 => BranchOp::Bgeu,
+                _ => return Err(IllegalInstr(w)),
+            };
+            let off = (bits(w, 31, 31) << 12)
+                | (bits(w, 7, 7) << 11)
+                | (bits(w, 30, 25) << 5)
+                | (bits(w, 11, 8) << 1);
+            Ok(Instr::Branch { op, rs1, rs2, off: sext(off, 13) })
+        }
+        OP_LOAD => {
+            let op = match funct3 {
+                0b000 => LoadOp::Lb,
+                0b001 => LoadOp::Lh,
+                0b010 => LoadOp::Lw,
+                0b100 => LoadOp::Lbu,
+                0b101 => LoadOp::Lhu,
+                _ => return Err(IllegalInstr(w)),
+            };
+            Ok(Instr::Load { op, rd, rs1, off: imm_i })
+        }
+        OP_STORE => {
+            let op = match funct3 {
+                0b000 => StoreOp::Sb,
+                0b001 => StoreOp::Sh,
+                0b010 => StoreOp::Sw,
+                _ => return Err(IllegalInstr(w)),
+            };
+            let off = sext((bits(w, 31, 25) << 5) | bits(w, 11, 7), 12);
+            Ok(Instr::Store { op, rs2, rs1, off })
+        }
+        OP_IMM => {
+            let op = match funct3 {
+                0b000 => AluOp::Add,
+                0b001 => AluOp::Sll,
+                0b010 => AluOp::Slt,
+                0b011 => AluOp::Sltu,
+                0b100 => AluOp::Xor,
+                0b101 => {
+                    if funct7 == 0b0100000 {
+                        AluOp::Sra
+                    } else if funct7 == 0 {
+                        AluOp::Srl
+                    } else {
+                        return Err(IllegalInstr(w));
+                    }
+                }
+                0b110 => AluOp::Or,
+                0b111 => AluOp::And,
+                _ => return Err(IllegalInstr(w)),
+            };
+            let imm = match op {
+                AluOp::Sll | AluOp::Srl | AluOp::Sra => {
+                    if op == AluOp::Sll && funct7 != 0 {
+                        return Err(IllegalInstr(w));
+                    }
+                    bits(w, 24, 20) as i32
+                }
+                _ => imm_i,
+            };
+            Ok(Instr::AluImm { op, rd, rs1, imm })
+        }
+        OP_REG => {
+            if funct7 == 0b0000001 {
+                let op = match funct3 {
+                    0b000 => MulOp::Mul,
+                    0b001 => MulOp::Mulh,
+                    0b010 => MulOp::Mulhsu,
+                    0b011 => MulOp::Mulhu,
+                    0b100 => MulOp::Div,
+                    0b101 => MulOp::Divu,
+                    0b110 => MulOp::Rem,
+                    _ => MulOp::Remu,
+                };
+                return Ok(Instr::MulDiv { op, rd, rs1, rs2 });
+            }
+            let op = match funct3 {
+                0b000 => {
+                    if funct7 == 0b0100000 {
+                        AluOp::Sub
+                    } else if funct7 == 0 {
+                        AluOp::Add
+                    } else {
+                        return Err(IllegalInstr(w));
+                    }
+                }
+                0b001 => AluOp::Sll,
+                0b010 => AluOp::Slt,
+                0b011 => AluOp::Sltu,
+                0b100 => AluOp::Xor,
+                0b101 => {
+                    if funct7 == 0b0100000 {
+                        AluOp::Sra
+                    } else if funct7 == 0 {
+                        AluOp::Srl
+                    } else {
+                        return Err(IllegalInstr(w));
+                    }
+                }
+                0b110 => AluOp::Or,
+                0b111 => AluOp::And,
+                _ => return Err(IllegalInstr(w)),
+            };
+            if op != AluOp::Sub && op != AluOp::Sra && funct7 != 0 {
+                return Err(IllegalInstr(w));
+            }
+            Ok(Instr::Alu { op, rd, rs1, rs2 })
+        }
+        OP_SYSTEM => match funct3 {
+            0b000 => match bits(w, 31, 20) {
+                0 => Ok(Instr::Ecall),
+                1 => Ok(Instr::Ebreak),
+                0b0001000_00101 => Ok(Instr::Wfi),
+                _ => Err(IllegalInstr(w)),
+            },
+            0b001 => Ok(Instr::Csr { op: CsrOp::Csrrw, rd, rs1, csr: bits(w, 31, 20) as u16 }),
+            0b010 => Ok(Instr::Csr { op: CsrOp::Csrrs, rd, rs1, csr: bits(w, 31, 20) as u16 }),
+            0b011 => Ok(Instr::Csr { op: CsrOp::Csrrc, rd, rs1, csr: bits(w, 31, 20) as u16 }),
+            _ => Err(IllegalInstr(w)),
+        },
+        OP_FENCE => Ok(Instr::Fence),
+        OP_CUSTOM0 | OP_CUSTOM1 => super::xcv::decode(w).map(Instr::Xcv).ok_or(IllegalInstr(w)),
+        OP_CUSTOM2 => super::xvnmc::decode(w).map(Instr::Xvnmc).ok_or(IllegalInstr(w)),
+        _ => Err(IllegalInstr(w)),
+    }
+}
+
+/// Render an instruction in assembly-like form (debug/tracing aid).
+pub fn disasm(i: &Instr) -> String {
+    use reg::name as n;
+    match *i {
+        Instr::Lui { rd, imm } => format!("lui {}, {:#x}", n(rd), (imm as u32) >> 12),
+        Instr::Auipc { rd, imm } => format!("auipc {}, {:#x}", n(rd), (imm as u32) >> 12),
+        Instr::Jal { rd, off } => format!("jal {}, {}", n(rd), off),
+        Instr::Jalr { rd, rs1, off } => format!("jalr {}, {}({})", n(rd), off, n(rs1)),
+        Instr::Branch { op, rs1, rs2, off } => {
+            let m = match op {
+                BranchOp::Beq => "beq",
+                BranchOp::Bne => "bne",
+                BranchOp::Blt => "blt",
+                BranchOp::Bge => "bge",
+                BranchOp::Bltu => "bltu",
+                BranchOp::Bgeu => "bgeu",
+            };
+            format!("{} {}, {}, {}", m, n(rs1), n(rs2), off)
+        }
+        Instr::Load { op, rd, rs1, off } => {
+            let m = match op {
+                LoadOp::Lb => "lb",
+                LoadOp::Lh => "lh",
+                LoadOp::Lw => "lw",
+                LoadOp::Lbu => "lbu",
+                LoadOp::Lhu => "lhu",
+            };
+            format!("{} {}, {}({})", m, n(rd), off, n(rs1))
+        }
+        Instr::Store { op, rs2, rs1, off } => {
+            let m = match op {
+                StoreOp::Sb => "sb",
+                StoreOp::Sh => "sh",
+                StoreOp::Sw => "sw",
+            };
+            format!("{} {}, {}({})", m, n(rs2), off, n(rs1))
+        }
+        Instr::AluImm { op, rd, rs1, imm } => {
+            let m = match op {
+                AluOp::Add => "addi",
+                AluOp::Sll => "slli",
+                AluOp::Slt => "slti",
+                AluOp::Sltu => "sltiu",
+                AluOp::Xor => "xori",
+                AluOp::Srl => "srli",
+                AluOp::Sra => "srai",
+                AluOp::Or => "ori",
+                AluOp::And => "andi",
+                AluOp::Sub => "subi?",
+            };
+            format!("{} {}, {}, {}", m, n(rd), n(rs1), imm)
+        }
+        Instr::Alu { op, rd, rs1, rs2 } => {
+            let m = match op {
+                AluOp::Add => "add",
+                AluOp::Sub => "sub",
+                AluOp::Sll => "sll",
+                AluOp::Slt => "slt",
+                AluOp::Sltu => "sltu",
+                AluOp::Xor => "xor",
+                AluOp::Srl => "srl",
+                AluOp::Sra => "sra",
+                AluOp::Or => "or",
+                AluOp::And => "and",
+            };
+            format!("{} {}, {}, {}", m, n(rd), n(rs1), n(rs2))
+        }
+        Instr::MulDiv { op, rd, rs1, rs2 } => {
+            let m = match op {
+                MulOp::Mul => "mul",
+                MulOp::Mulh => "mulh",
+                MulOp::Mulhsu => "mulhsu",
+                MulOp::Mulhu => "mulhu",
+                MulOp::Div => "div",
+                MulOp::Divu => "divu",
+                MulOp::Rem => "rem",
+                MulOp::Remu => "remu",
+            };
+            format!("{} {}, {}, {}", m, n(rd), n(rs1), n(rs2))
+        }
+        Instr::Csr { op, rd, rs1, csr } => {
+            let m = match op {
+                CsrOp::Csrrw => "csrrw",
+                CsrOp::Csrrs => "csrrs",
+                CsrOp::Csrrc => "csrrc",
+            };
+            format!("{} {}, {:#x}, {}", m, n(rd), csr, n(rs1))
+        }
+        Instr::Ecall => "ecall".into(),
+        Instr::Ebreak => "ebreak".into(),
+        Instr::Wfi => "wfi".into(),
+        Instr::Fence => "fence".into(),
+        Instr::Xcv(x) => super::xcv::disasm(&x),
+        Instr::Xvnmc(v) => super::xvnmc::disasm(&v),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt(i: Instr) {
+        let w = encode(&i);
+        let back = decode(w).unwrap_or_else(|e| panic!("{e} while decoding {i:?}"));
+        assert_eq!(back, i, "round-trip failed for {i:?} ({w:#010x})");
+    }
+
+    #[test]
+    fn roundtrip_ui_types() {
+        rt(Instr::Lui { rd: 5, imm: 0x12345 << 12 });
+        rt(Instr::Auipc { rd: 1, imm: (-1i32 << 12) & (0xfffff << 12) as i32 as i32 });
+        rt(Instr::Jal { rd: 1, off: 2048 });
+        rt(Instr::Jal { rd: 0, off: -4 });
+        rt(Instr::Jalr { rd: 0, rs1: 1, off: 0 });
+    }
+
+    #[test]
+    fn roundtrip_branches() {
+        for op in [BranchOp::Beq, BranchOp::Bne, BranchOp::Blt, BranchOp::Bge, BranchOp::Bltu, BranchOp::Bgeu] {
+            rt(Instr::Branch { op, rs1: 3, rs2: 4, off: -8 });
+            rt(Instr::Branch { op, rs1: 31, rs2: 0, off: 4094 });
+        }
+    }
+
+    #[test]
+    fn roundtrip_mem() {
+        for op in [LoadOp::Lb, LoadOp::Lh, LoadOp::Lw, LoadOp::Lbu, LoadOp::Lhu] {
+            rt(Instr::Load { op, rd: 10, rs1: 2, off: -2048 });
+            rt(Instr::Load { op, rd: 10, rs1: 2, off: 2047 });
+        }
+        for op in [StoreOp::Sb, StoreOp::Sh, StoreOp::Sw] {
+            rt(Instr::Store { op, rs2: 7, rs1: 8, off: -1 });
+        }
+    }
+
+    #[test]
+    fn roundtrip_alu() {
+        for op in [
+            AluOp::Add,
+            AluOp::Sub,
+            AluOp::Sll,
+            AluOp::Slt,
+            AluOp::Sltu,
+            AluOp::Xor,
+            AluOp::Srl,
+            AluOp::Sra,
+            AluOp::Or,
+            AluOp::And,
+        ] {
+            rt(Instr::Alu { op, rd: 1, rs1: 2, rs2: 3 });
+            if op != AluOp::Sub {
+                let imm = match op {
+                    AluOp::Sll | AluOp::Srl | AluOp::Sra => 31,
+                    _ => -7,
+                };
+                rt(Instr::AluImm { op, rd: 1, rs1: 2, imm });
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_muldiv_csr_sys() {
+        for op in [
+            MulOp::Mul,
+            MulOp::Mulh,
+            MulOp::Mulhsu,
+            MulOp::Mulhu,
+            MulOp::Div,
+            MulOp::Divu,
+            MulOp::Rem,
+            MulOp::Remu,
+        ] {
+            rt(Instr::MulDiv { op, rd: 4, rs1: 5, rs2: 6 });
+        }
+        rt(Instr::Csr { op: CsrOp::Csrrw, rd: 1, rs1: 2, csr: 0x300 });
+        rt(Instr::Csr { op: CsrOp::Csrrs, rd: 0, rs1: 0, csr: 0x344 });
+        rt(Instr::Ecall);
+        rt(Instr::Ebreak);
+        rt(Instr::Wfi);
+        rt(Instr::Fence);
+    }
+
+    #[test]
+    fn known_encodings() {
+        // Cross-checked against riscv-tests / gnu as output.
+        assert_eq!(encode(&Instr::AluImm { op: AluOp::Add, rd: 0, rs1: 0, imm: 0 }), 0x0000_0013); // nop
+        assert_eq!(
+            encode(&Instr::Alu { op: AluOp::Add, rd: 10, rs1: 11, rs2: 12 }),
+            0x00c5_8533
+        ); // add a0,a1,a2
+        assert_eq!(
+            encode(&Instr::Load { op: LoadOp::Lw, rd: 10, rs1: 2, off: 8 }),
+            0x0081_2503
+        ); // lw a0,8(sp)
+        assert_eq!(encode(&Instr::Ecall), 0x0000_0073);
+    }
+
+    #[test]
+    fn illegal_rejected() {
+        assert!(decode(0xffff_ffff).is_err());
+        assert!(decode(0x0000_0000).is_err());
+    }
+}

@@ -1,0 +1,476 @@
+//! `xvnmc` — the paper's custom RISC-V vector extension for NMC devices.
+//!
+//! This is the ISA contribution of §III-B1 (Tables II and III): an
+//! RVV-inspired integer vector extension encoded in the *Custom-2* 25-bit
+//! space (major opcode `0x5b`), with three distinctive features:
+//!
+//! 1. **No vector loads/stores.** The VRF *is* the host-visible memory; the
+//!    host populates it through the bus, so the extension is independent of
+//!    the data bus width and needs no address-generation hardware.
+//! 2. **Indirect register addressing** (`[r]` variants): the indexes of
+//!    `vd`, `vs2` and `vs1` are taken from the three least-significant
+//!    bytes of a scalar GPR instead of the instruction's immediate fields,
+//!    so one vector instruction can be reused across loop iterations with a
+//!    single scalar `add` updating the index GPR — the paper's answer to
+//!    the code-size explosion of hardcoded register numbers (up to 256
+//!    logical vectors). We map the indirect flag onto the RVV `vm` bit
+//!    (bit 25, `vm=0` ⇒ indirect) and the index GPR onto the `rs2/vs2`
+//!    field, consistent with the paper's description ("encode the index of
+//!    the source and destination vector registers in the three
+//!    least-significant bytes of a scalar GPR (rs2)").
+//! 3. **Scalar↔vector element moves** (`emvv`/`emvx`): the only channel
+//!    between eCPU GPRs and VRF elements (OPMVX format).
+//!
+//! Instruction formats follow RVV 1.0: `funct6 | vm | vs2 | vs1 | funct3 |
+//! vd | opcode`, with `funct3` selecting OPIVV/OPIVX/OPIVI/OPMVV/OPMVX/
+//! OPCFG. `funct6` assignments reuse the RVV values for the shared
+//! mnemonics so the extension reads naturally to an RVV-literate toolchain.
+
+use super::{bits, reg, sext, Reg};
+
+/// funct3 minor-opcode spaces (RVV names).
+const OPIVV: u32 = 0b000;
+const OPMVV: u32 = 0b010;
+const OPIVI: u32 = 0b011;
+const OPIVX: u32 = 0b100;
+const OPMVX: u32 = 0b110;
+const OPCFG: u32 = 0b111;
+
+pub use super::rv32::OP_CUSTOM2;
+
+/// Vector arithmetic/logic/permutation operations (Table II).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum VOp {
+    Add,
+    Sub,
+    Mul,
+    Macc,
+    And,
+    Or,
+    Xor,
+    Min,
+    Minu,
+    Max,
+    Maxu,
+    Sll,
+    Srl,
+    Sra,
+    /// `xvnmc.vmv` — copy a vector (`vv`) or splat a scalar/immediate.
+    Mv,
+    SlideUp,
+    SlideDown,
+    Slide1Up,
+    Slide1Down,
+}
+
+impl VOp {
+    /// Which source variants exist for this op (Table II columns).
+    pub fn allows(self, src: VSrcKind) -> bool {
+        use VSrcKind::*;
+        match self {
+            VOp::Add | VOp::And | VOp::Or | VOp::Xor | VOp::Sll | VOp::Srl | VOp::Sra | VOp::Mv => {
+                matches!(src, Vv | Vx | Vi)
+            }
+            VOp::Sub | VOp::Mul | VOp::Macc | VOp::Min | VOp::Minu | VOp::Max | VOp::Maxu => {
+                matches!(src, Vv | Vx)
+            }
+            VOp::SlideUp | VOp::SlideDown => matches!(src, Vx | Vi),
+            VOp::Slide1Up | VOp::Slide1Down => matches!(src, Vx),
+        }
+    }
+
+    /// True for ops executed by the move/slide (permutation) unit rather
+    /// than the arithmetic unit (§III-B2 execution engine split).
+    pub fn is_permutation(self) -> bool {
+        matches!(
+            self,
+            VOp::Mv | VOp::SlideUp | VOp::SlideDown | VOp::Slide1Up | VOp::Slide1Down
+        )
+    }
+
+    /// Number of *vector* register operands read per element-wise step,
+    /// used by the VPU timing model to bound VRF port pressure.
+    pub fn vector_reads(self, src: VSrcKind) -> u32 {
+        let from_src = matches!(src, VSrcKind::Vv) as u32;
+        match self {
+            // vmacc additionally reads the accumulator vd.
+            VOp::Macc => 1 + from_src + 1,
+            // vmv.vv reads only vs1 (vs2 unused); vmv.vx/vi reads nothing.
+            VOp::Mv => from_src,
+            _ => 1 + from_src,
+        }
+    }
+}
+
+/// The three source-operand kinds of Table III.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum VSrcKind {
+    Vv,
+    Vx,
+    Vi,
+}
+
+/// Second source operand.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VSrc {
+    /// Vector register `vs1`.
+    V(u8),
+    /// Scalar GPR `rs1`.
+    X(Reg),
+    /// 5-bit sign-extended immediate.
+    I(i8),
+}
+
+impl VSrc {
+    pub fn kind(self) -> VSrcKind {
+        match self {
+            VSrc::V(_) => VSrcKind::Vv,
+            VSrc::X(_) => VSrcKind::Vx,
+            VSrc::I(_) => VSrcKind::Vi,
+        }
+    }
+}
+
+/// A decoded xvnmc instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VInstr {
+    /// Vector arithmetic / logic / permutation (Table II top blocks).
+    ///
+    /// With `indirect = true`, `idx_gpr` names the scalar GPR whose bytes
+    /// `{[23:16]=vs1, [15:8]=vs2, [7:0]=vd}` provide the *logical* register
+    /// indexes at execution time; the `vd`/`vs2` fields here are ignored
+    /// (and `VSrc::V` values are overridden).
+    Op {
+        op: VOp,
+        vd: u8,
+        vs2: u8,
+        src: VSrc,
+        indirect: bool,
+        /// Only meaningful when `indirect`.
+        idx_gpr: Reg,
+    },
+    /// `xvnmc.emvv vd, x[rs2], x[rs1]` — v\[vd\]\[x\[rs2\]\] = x\[rs1\].
+    Emvv { vd: u8, idx: Reg, rs1: Reg },
+    /// `xvnmc.emvx rd, vs2, x[rs1]` — x\[rd\] = v\[vs2\]\[x\[rs1\]\].
+    Emvx { rd: Reg, vs2: u8, idx: Reg },
+    /// `xvnmc.vsetvli rd, rs1, vtypei` — set VL from AVL in rs1 + vtype imm.
+    VsetVli { rd: Reg, rs1: Reg, vtype: u16 },
+    /// `xvnmc.vsetivli rd, uimm, vtypei` — immediate AVL form.
+    VsetIVli { rd: Reg, avl: u8, vtype: u16 },
+    /// `xvnmc.vsetvl rd, rs1, rs2` — fully register form.
+    VsetVl { rd: Reg, rs1: Reg, rs2: Reg },
+}
+
+fn funct6(op: VOp) -> u32 {
+    match op {
+        VOp::Add => 0b000000,
+        VOp::Sub => 0b000010,
+        VOp::Minu => 0b000100,
+        VOp::Min => 0b000101,
+        VOp::Maxu => 0b000110,
+        VOp::Max => 0b000111,
+        VOp::And => 0b001001,
+        VOp::Or => 0b001010,
+        VOp::Xor => 0b001011,
+        VOp::SlideUp | VOp::Slide1Up => 0b001110,
+        VOp::SlideDown | VOp::Slide1Down => 0b001111,
+        VOp::Mv => 0b010111,
+        VOp::Sll => 0b100101,
+        VOp::Srl => 0b101000,
+        VOp::Sra => 0b101001,
+        VOp::Mul => 0b100111,
+        VOp::Macc => 0b101101,
+    }
+}
+
+fn arith_op_from(f6: u32, minor: u32) -> Option<VOp> {
+    Some(match (f6, minor) {
+        (0b000000, OPIVV | OPIVX | OPIVI) => VOp::Add,
+        (0b000010, OPIVV | OPIVX) => VOp::Sub,
+        (0b000100, OPIVV | OPIVX) => VOp::Minu,
+        (0b000101, OPIVV | OPIVX) => VOp::Min,
+        (0b000110, OPIVV | OPIVX) => VOp::Maxu,
+        (0b000111, OPIVV | OPIVX) => VOp::Max,
+        (0b001001, OPIVV | OPIVX | OPIVI) => VOp::And,
+        (0b001010, OPIVV | OPIVX | OPIVI) => VOp::Or,
+        (0b001011, OPIVV | OPIVX | OPIVI) => VOp::Xor,
+        (0b001110, OPIVX | OPIVI) => VOp::SlideUp,
+        (0b001110, OPMVX) => VOp::Slide1Up,
+        (0b001111, OPIVX | OPIVI) => VOp::SlideDown,
+        (0b001111, OPMVX) => VOp::Slide1Down,
+        (0b010111, OPIVV | OPIVX | OPIVI) => VOp::Mv,
+        (0b100101, OPIVV | OPIVX | OPIVI) => VOp::Sll,
+        (0b101000, OPIVV | OPIVX | OPIVI) => VOp::Srl,
+        (0b101001, OPIVV | OPIVX | OPIVI) => VOp::Sra,
+        (0b100111, OPMVV | OPMVX) => VOp::Mul,
+        (0b101101, OPMVV | OPMVX) => VOp::Macc,
+        _ => return None,
+    })
+}
+
+const F6_EMVV: u32 = 0b010000;
+const F6_EMVX: u32 = 0b010001;
+
+/// Encode an xvnmc instruction (opcode 0x5b).
+pub fn encode(v: &VInstr) -> u32 {
+    let enc = |f6: u32, vm: u32, vs2f: u32, vs1f: u32, minor: u32, vdf: u32| {
+        (f6 << 26) | (vm << 25) | ((vs2f & 31) << 20) | ((vs1f & 31) << 15) | (minor << 12) | ((vdf & 31) << 7) | OP_CUSTOM2
+    };
+    match *v {
+        VInstr::Op { op, vd, vs2, src, indirect, idx_gpr } => {
+            assert!(op.allows(src.kind()), "{op:?} does not allow {:?}", src.kind());
+            assert!(!indirect || op != VOp::Mv || src.kind() != VSrcKind::Vv || true);
+            let vm = if indirect { 0 } else { 1 };
+            // In indirect mode the vs2 field carries the index GPR.
+            let vs2f = if indirect { idx_gpr as u32 } else { vs2 as u32 };
+            let (minor, vs1f) = match (src, op) {
+                (VSrc::V(vs1), VOp::Mul | VOp::Macc) => (OPMVV, vs1 as u32),
+                (VSrc::X(rs1), VOp::Mul | VOp::Macc) => (OPMVX, rs1 as u32),
+                (VSrc::X(rs1), VOp::Slide1Up | VOp::Slide1Down) => (OPMVX, rs1 as u32),
+                (VSrc::V(vs1), _) => (OPIVV, vs1 as u32),
+                (VSrc::X(rs1), _) => (OPIVX, rs1 as u32),
+                (VSrc::I(imm), _) => (OPIVI, (imm as u32) & 31),
+            };
+            enc(funct6(op), vm, vs2f, vs1f, minor, vd as u32)
+        }
+        VInstr::Emvv { vd, idx, rs1 } => enc(F6_EMVV, 1, idx as u32, rs1 as u32, OPMVX, vd as u32),
+        VInstr::Emvx { rd, vs2, idx } => enc(F6_EMVX, 1, vs2 as u32, idx as u32, OPMVX, rd as u32),
+        VInstr::VsetVli { rd, rs1, vtype } => {
+            // bit31 = 0, zimm[10:0] in bits 30:20.
+            ((vtype as u32 & 0x7ff) << 20) | ((rs1 as u32 & 31) << 15) | (OPCFG << 12) | ((rd as u32 & 31) << 7) | OP_CUSTOM2
+        }
+        VInstr::VsetIVli { rd, avl, vtype } => {
+            // bits 31:30 = 0b11, zimm[9:0] in 29:20, uimm[4:0] in 19:15.
+            (0b11 << 30)
+                | ((vtype as u32 & 0x3ff) << 20)
+                | ((avl as u32 & 31) << 15)
+                | (OPCFG << 12)
+                | ((rd as u32 & 31) << 7)
+                | OP_CUSTOM2
+        }
+        VInstr::VsetVl { rd, rs1, rs2 } => {
+            // bit31 = 1, bits 30:25 = 0.
+            (1 << 31) | ((rs2 as u32 & 31) << 20) | ((rs1 as u32 & 31) << 15) | (OPCFG << 12) | ((rd as u32 & 31) << 7) | OP_CUSTOM2
+        }
+    }
+}
+
+/// Decode a word from the Custom-2 space. Returns `None` if not xvnmc.
+pub fn decode(w: u32) -> Option<VInstr> {
+    if bits(w, 6, 0) != OP_CUSTOM2 {
+        return None;
+    }
+    let minor = bits(w, 14, 12);
+    let rd = bits(w, 11, 7) as Reg;
+    let rs1 = bits(w, 19, 15) as Reg;
+    let rs2f = bits(w, 24, 20);
+    if minor == OPCFG {
+        if bits(w, 31, 31) == 0 {
+            return Some(VInstr::VsetVli { rd, rs1, vtype: bits(w, 30, 20) as u16 });
+        }
+        if bits(w, 31, 30) == 0b11 {
+            return Some(VInstr::VsetIVli { rd, avl: rs1, vtype: bits(w, 29, 20) as u16 });
+        }
+        if bits(w, 30, 25) == 0 {
+            return Some(VInstr::VsetVl { rd, rs1, rs2: rs2f as Reg });
+        }
+        return None;
+    }
+    let f6 = bits(w, 31, 26);
+    let vm = bits(w, 25, 25);
+    if minor == OPMVX && f6 == F6_EMVV {
+        return Some(VInstr::Emvv { vd: rd, idx: rs2f as Reg, rs1 });
+    }
+    if minor == OPMVX && f6 == F6_EMVX {
+        return Some(VInstr::Emvx { rd, vs2: rs2f as u8, idx: rs1 });
+    }
+    let op = arith_op_from(f6, minor)?;
+    let src = match minor {
+        OPIVV | OPMVV => VSrc::V(rs1),
+        OPIVX | OPMVX => VSrc::X(rs1),
+        OPIVI => VSrc::I(sext(rs1 as u32, 5) as i8),
+        _ => return None,
+    };
+    if !op.allows(src.kind()) {
+        return None;
+    }
+    let indirect = vm == 0;
+    Some(VInstr::Op {
+        op,
+        vd: rd,
+        vs2: if indirect { 0 } else { rs2f as u8 },
+        src,
+        indirect,
+        idx_gpr: if indirect { rs2f as Reg } else { 0 },
+    })
+}
+
+/// Mnemonic of an op (without the `xvnmc.` prefix or variant suffix).
+pub fn mnemonic(op: VOp) -> &'static str {
+    match op {
+        VOp::Add => "vadd",
+        VOp::Sub => "vsub",
+        VOp::Mul => "vmul",
+        VOp::Macc => "vmacc",
+        VOp::And => "vand",
+        VOp::Or => "vor",
+        VOp::Xor => "vxor",
+        VOp::Min => "vmin",
+        VOp::Minu => "vminu",
+        VOp::Max => "vmax",
+        VOp::Maxu => "vmaxu",
+        VOp::Sll => "vsll",
+        VOp::Srl => "vsrl",
+        VOp::Sra => "vsra",
+        VOp::Mv => "vmv",
+        VOp::SlideUp => "vslideup",
+        VOp::SlideDown => "vslidedown",
+        VOp::Slide1Up => "vslide1up",
+        VOp::Slide1Down => "vslide1down",
+    }
+}
+
+/// Assembly-like rendering.
+pub fn disasm(v: &VInstr) -> String {
+    match *v {
+        VInstr::Op { op, vd, vs2, src, indirect, idx_gpr } => {
+            let r = if indirect { "r" } else { "" };
+            let (suffix, srcs) = match src {
+                VSrc::V(v1) => ("vv", format!("v{v1}")),
+                VSrc::X(r1) => ("vx", reg::name(r1).to_string()),
+                VSrc::I(i) => ("vi", format!("{i}")),
+            };
+            if indirect {
+                format!("xvnmc.{}{r}.{suffix} [{}], {srcs}", mnemonic(op), reg::name(idx_gpr))
+            } else {
+                format!("xvnmc.{}.{suffix} v{vd}, v{vs2}, {srcs}", mnemonic(op))
+            }
+        }
+        VInstr::Emvv { vd, idx, rs1 } => {
+            format!("xvnmc.emvv v{vd}[{}], {}", reg::name(idx), reg::name(rs1))
+        }
+        VInstr::Emvx { rd, vs2, idx } => {
+            format!("xvnmc.emvx {}, v{vs2}[{}]", reg::name(rd), reg::name(idx))
+        }
+        VInstr::VsetVli { rd, rs1, vtype } => {
+            format!("xvnmc.vsetvli {}, {}, {:#x}", reg::name(rd), reg::name(rs1), vtype)
+        }
+        VInstr::VsetIVli { rd, avl, vtype } => {
+            format!("xvnmc.vsetivli {}, {avl}, {vtype:#x}", reg::name(rd))
+        }
+        VInstr::VsetVl { rd, rs1, rs2 } => {
+            format!("xvnmc.vsetvl {}, {}, {}", reg::name(rd), reg::name(rs1), reg::name(rs2))
+        }
+    }
+}
+
+/// Pack logical register indexes for indirect addressing, as the kernel
+/// code does at runtime: `{vs1[23:16], vs2[15:8], vd[7:0]}`.
+#[inline]
+pub fn pack_indexes(vd: u8, vs2: u8, vs1: u8) -> u32 {
+    (vd as u32) | ((vs2 as u32) << 8) | ((vs1 as u32) << 16)
+}
+
+/// Unpack the indirect index GPR value.
+#[inline]
+pub fn unpack_indexes(x: u32) -> (u8, u8, u8) {
+    (x as u8, (x >> 8) as u8, (x >> 16) as u8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ALL_OPS: [VOp; 19] = [
+        VOp::Add,
+        VOp::Sub,
+        VOp::Mul,
+        VOp::Macc,
+        VOp::And,
+        VOp::Or,
+        VOp::Xor,
+        VOp::Min,
+        VOp::Minu,
+        VOp::Max,
+        VOp::Maxu,
+        VOp::Sll,
+        VOp::Srl,
+        VOp::Sra,
+        VOp::Mv,
+        VOp::SlideUp,
+        VOp::SlideDown,
+        VOp::Slide1Up,
+        VOp::Slide1Down,
+    ];
+
+    #[test]
+    fn roundtrip_all_variants() {
+        for op in ALL_OPS {
+            for src in [VSrc::V(3), VSrc::X(9), VSrc::I(-5)] {
+                if !op.allows(src.kind()) {
+                    continue;
+                }
+                for indirect in [false, true] {
+                    let i = VInstr::Op {
+                        op,
+                        vd: if indirect { 0 } else { 17 },
+                        vs2: if indirect { 0 } else { 11 },
+                        src,
+                        indirect,
+                        idx_gpr: if indirect { 12 } else { 0 },
+                    };
+                    let w = encode(&i);
+                    assert_eq!(decode(w), Some(i), "{}", disasm(&i));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_moves_and_config() {
+        for i in [
+            VInstr::Emvv { vd: 5, idx: 4, rs1: 6 },
+            VInstr::Emvx { rd: 5, vs2: 30, idx: 4 },
+            VInstr::VsetVli { rd: 1, rs1: 2, vtype: 0x10 },
+            VInstr::VsetIVli { rd: 1, avl: 16, vtype: 0x8 },
+            VInstr::VsetVl { rd: 1, rs1: 2, rs2: 3 },
+        ] {
+            let w = encode(&i);
+            assert_eq!(decode(w), Some(i), "{}", disasm(&i));
+        }
+    }
+
+    #[test]
+    fn table2_variant_matrix() {
+        // Spot-check the variant availability matrix of Table II.
+        assert!(VOp::Add.allows(VSrcKind::Vi));
+        assert!(!VOp::Sub.allows(VSrcKind::Vi));
+        assert!(!VOp::Macc.allows(VSrcKind::Vi));
+        assert!(VOp::SlideUp.allows(VSrcKind::Vi));
+        assert!(!VOp::SlideUp.allows(VSrcKind::Vv));
+        assert!(VOp::Slide1Up.allows(VSrcKind::Vx));
+        assert!(!VOp::Slide1Up.allows(VSrcKind::Vi));
+    }
+
+    #[test]
+    fn index_packing() {
+        let x = pack_indexes(200, 100, 50);
+        assert_eq!(unpack_indexes(x), (200, 100, 50));
+    }
+
+    #[test]
+    fn vector_read_counts() {
+        // Timing-model inputs: vmacc.vv reads 3 vectors, vadd.vx reads 1.
+        assert_eq!(VOp::Macc.vector_reads(VSrcKind::Vv), 3);
+        assert_eq!(VOp::Macc.vector_reads(VSrcKind::Vx), 2);
+        assert_eq!(VOp::Add.vector_reads(VSrcKind::Vx), 1);
+        assert_eq!(VOp::Add.vector_reads(VSrcKind::Vv), 2);
+        assert_eq!(VOp::Mv.vector_reads(VSrcKind::Vx), 0);
+    }
+
+    #[test]
+    fn opcode_space_is_custom2() {
+        let w = encode(&VInstr::Emvv { vd: 0, idx: 1, rs1: 2 });
+        assert_eq!(w & 0x7f, 0x5b);
+    }
+}

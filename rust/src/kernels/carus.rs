@@ -1,0 +1,449 @@
+//! NM-Carus benchmark kernels: RV32EC + xvnmc programs running on the eCPU.
+//!
+//! Driver pattern (§V-A2): the xvnmc kernel (assembled by the extended
+//! assembler) is staged in system SRAM, DMA-copied into the eMEM through
+//! the configuration interface, parameterized through the argument words at
+//! the top of the eMEM, and started via the control register. The host
+//! sleeps (`wfi`) on the NM-Carus completion interrupt. All of this —
+//! upload, bootstrap, execution — is inside the measured region, which is
+//! exactly the controller overhead Fig. 12 shows hurting NM-Carus on small
+//! workloads.
+//!
+//! Every loop body uses the indirect-register-addressing (`[r]`) variants
+//! with a single packed-index GPR bumped by one `addi` per iteration — the
+//! paper's code-size trick (§III-B1) that keeps all nine kernels within the
+//! 512 B eMEM.
+//!
+//! VRF layouts (logical registers of `vl·sew` bytes, `vl = VLMAX` ⇒ 1 KiB):
+//!
+//! | kernel | inputs | outputs | scratch |
+//! |---|---|---|---|
+//! | element-wise | src1 v0.., src2 v10.. | v20.. | — |
+//! | matmul | B rows v0–7, A columns v16–23 | v8–15 | — |
+//! | GEMM | + C rows v24–31 | v8–15 | — |
+//! | conv2d | image rows v0–7, filter v14 | v8–13 | v15 (slide) |
+//! | relu/leaky | v0..15 (in place) | v0..15 | v16 |
+//! | maxpool | rows v0–15 | v0–7 (packed by eCPU) | v16–24 |
+
+use super::golden::{unpack, WorkloadData, LEAKY_SHIFT};
+use super::{finish_run, Kernel, RunResult};
+use crate::asm::{Asm, Program};
+use crate::bus::{periph, BANK_SIZE, CARUS_BASE, PERIPH_BASE};
+use crate::carus::{ARG_OFFSET, CTL_OFFSET, CTL_START};
+use crate::isa::reg::*;
+use crate::isa::xvnmc::{pack_indexes, VOp, VSrc};
+use crate::isa::Sew;
+use crate::soc::Soc;
+
+/// Kernel staging address in system memory.
+const KERNEL_BASE: u32 = BANK_SIZE;
+/// 1 KiB logical registers (vl = VLMAX).
+const REG_BYTES: u32 = 1024;
+
+pub fn run(kernel: Kernel, sew: Sew, data: &WorkloadData) -> RunResult {
+    let mut soc = Soc::heeperator();
+    let built = build(kernel, sew, data, &mut soc);
+
+    // Stage the kernel binary in system SRAM.
+    let kbytes: Vec<u8> = built.kernel.words.iter().flat_map(|w| w.to_le_bytes()).collect();
+    soc.load_data(KERNEL_BASE, &kbytes);
+
+    // Host firmware: config mode → DMA kernel upload → args → start → wfi.
+    let mut a = Asm::new(0);
+    a.li(T0, (PERIPH_BASE + periph::CARUS_MODE) as i32)
+        .li(T1, 1)
+        .sw(T1, 0, T0) // configuration mode
+        .li(T0, (PERIPH_BASE + periph::DMA_SRC) as i32)
+        .li(T1, KERNEL_BASE as i32)
+        .sw(T1, 0, T0)
+        .li(T0, (PERIPH_BASE + periph::DMA_DST) as i32)
+        .li(T1, CARUS_BASE as i32)
+        .sw(T1, 0, T0)
+        .li(T0, (PERIPH_BASE + periph::DMA_LEN) as i32)
+        .li(T1, kbytes.len() as i32)
+        .sw(T1, 0, T0)
+        .li(T0, (PERIPH_BASE + periph::DMA_CTL) as i32)
+        .li(T1, 0b01) // start | copy
+        .sw(T1, 0, T0)
+        .wfi() // until DMA done
+        .li(T0, (PERIPH_BASE + periph::DMA_STATUS) as i32)
+        .lw(T1, 0, T0); // ack
+    // Argument words.
+    for (i, &arg) in built.args.iter().enumerate() {
+        a.li(T0, (CARUS_BASE + ARG_OFFSET + 4 * i as u32) as i32)
+            .li(T1, arg as i32)
+            .sw(T1, 0, T0);
+    }
+    a.li(A0, (CARUS_BASE + CTL_OFFSET) as i32)
+        .li(T1, CTL_START as i32)
+        .sw(T1, 0, A0) // start the kernel
+        .wfi() // until NM-Carus IRQ
+        .lw(A1, 0, A0) // status
+        .sw(ZERO, 0, A0) // ack done
+        .li(T0, (PERIPH_BASE + periph::CARUS_MODE) as i32)
+        .sw(ZERO, 0, T0) // back to memory mode
+        .ebreak();
+    let prog: Program = a.assemble().expect("carus driver assembles");
+    soc.load_firmware(&prog, 0);
+    soc.reset_stats();
+    let (halt, _) = soc.run(200_000_000);
+    let mut res = finish_run(&mut soc, halt, kernel, sew);
+    res.output = (built.extract)(&soc);
+    res
+}
+
+struct Built {
+    kernel: Program,
+    args: Vec<u32>,
+    extract: Box<dyn Fn(&Soc) -> Vec<u8>>,
+}
+
+/// Assemble an eCPU kernel (base 0 = eMEM).
+fn kasm(build: impl FnOnce(&mut Asm)) -> Program {
+    let mut a = Asm::new(0);
+    build(&mut a);
+    let p = a.assemble().expect("carus kernel assembles");
+    assert!(
+        p.size() <= ARG_OFFSET,
+        "kernel does not fit the eMEM: {} bytes",
+        p.size()
+    );
+    p
+}
+
+fn build(kernel: Kernel, sew: Sew, data: &WorkloadData, soc: &mut Soc) -> Built {
+    let vlmax = REG_BYTES / sew.bytes();
+    match kernel {
+        Kernel::Xor { n } | Kernel::Add { n } | Kernel::Mul { n } => {
+            let bytes = n * sew.bytes();
+            let nregs = bytes.div_ceil(REG_BYTES);
+            soc.carus.vrf.load(0, &data.a); // v0..
+            soc.carus.vrf.load(10 * REG_BYTES, &data.b); // v10..
+            let op = match kernel {
+                Kernel::Xor { .. } => VOp::Xor,
+                Kernel::Add { .. } => VOp::Add,
+                _ => VOp::Mul,
+            };
+            // loop k: v(20+k) = v(0+k) ⊙ v(10+k), indirect, one addi bump.
+            let k = kasm(|a| {
+                a.li(T0, ARG_OFFSET as i32)
+                    .lw(S0, 0, T0) // nregs
+                    .li(A0, vlmax as i32)
+                    .vsetvli(T0, A0, sew)
+                    .li(S1, pack_indexes(20, 0, 10) as i32)
+                    .label("loop")
+                    .v_opr(op, S1, VSrc::V(0))
+                    .li(T1, 0x010101)
+                    .add(S1, S1, T1)
+                    .addi(S0, S0, -1)
+                    .bne(S0, ZERO, "loop")
+                    .ebreak();
+            });
+            Built {
+                kernel: k,
+                args: vec![nregs],
+                extract: Box::new(move |soc| soc.dump(CARUS_BASE + 20 * REG_BYTES, bytes)),
+            }
+        }
+        Kernel::Relu { n } | Kernel::LeakyRelu { n } => {
+            let bytes = n * sew.bytes();
+            let nregs = bytes.div_ceil(REG_BYTES);
+            soc.carus.vrf.load(0, &data.a);
+            let leaky = matches!(kernel, Kernel::LeakyRelu { .. });
+            let k = kasm(|a| {
+                a.li(T0, ARG_OFFSET as i32)
+                    .lw(S0, 0, T0)
+                    .li(A0, vlmax as i32)
+                    .vsetvli(T0, A0, sew)
+                    .li(S1, pack_indexes(0, 0, 16) as i32) // {vd=k, vs2=k, vs1=16}
+                    .li(A1, LEAKY_SHIFT as i32)
+                    .label("loop");
+                if leaky {
+                    // v16 = v(k) >> 3 ; v(k) = max(v(k), v16).
+                    a.andi(T2, S1, 0xff) // k (low byte of the packed index)
+                        .slli(T2, T2, 8)
+                        .ori(T2, T2, 16) // {vd=16, vs2=k}
+                        .v_opr(VOp::Sra, T2, VSrc::X(A1))
+                        .v_opr(VOp::Max, S1, VSrc::V(0)); // vs1=16 from packed
+                } else {
+                    a.v_opr(VOp::Max, S1, VSrc::X(ZERO));
+                }
+                a.li(T1, 0x000101) // bump vd and vs2, keep vs1=16
+                    .add(S1, S1, T1)
+                    .addi(S0, S0, -1)
+                    .bne(S0, ZERO, "loop")
+                    .ebreak();
+            });
+            Built {
+                kernel: k,
+                args: vec![nregs],
+                extract: Box::new(move |soc| soc.dump(CARUS_BASE, bytes)),
+            }
+        }
+        Kernel::Matmul { p } | Kernel::Gemm { p } => {
+            let gemm = matches!(kernel, Kernel::Gemm { .. });
+            assert!(p >= 8, "vl = p must hold the 8-element A columns");
+            assert!(p * sew.bytes() <= REG_BYTES, "B row must fit one register");
+            let row_bytes = p * sew.bytes();
+            // vl = p ⇒ logical registers are row-sized. Layout: B rows
+            // v0–7, output rows v8–15, A *columns* v16–23 (column k in
+            // v(16+k): emvx's direct vs2 field stays constant per unrolled
+            // k-slot while the element index i is a GPR), C rows v24–31.
+            let av = unpack(&data.a, sew);
+            for r in 0..8u32 {
+                soc.carus.vrf.load(
+                    r * row_bytes,
+                    &data.b[(r * row_bytes) as usize..((r + 1) * row_bytes) as usize],
+                );
+            }
+            for k in 0..8u32 {
+                for i in 0..8u32 {
+                    soc.carus.vrf.set_elem(
+                        (16 + k) as u8,
+                        i,
+                        p,
+                        sew,
+                        av[(i * 8 + k) as usize] as u32,
+                    );
+                }
+            }
+            if gemm {
+                for r in 0..8u32 {
+                    soc.carus.vrf.load(
+                        (24 + r) * row_bytes,
+                        &data.c[(r * row_bytes) as usize..((r + 1) * row_bytes) as usize],
+                    );
+                }
+            }
+            let k = kasm(|a| {
+                a.li(T0, ARG_OFFSET as i32)
+                    .lw(A0, 0, T0) // p (AVL)
+                    .vsetvli(T0, A0, sew)
+                    .li(S0, 0) // i
+                    .li(A4, pack_indexes(8, 8, 0) as i32) // vsll {vd=8+i, vs2=8+i}
+                    .li(A5, pack_indexes(8, 24, 0) as i32) // β-vmacc {vd=8+i, vs2=24+i}
+                    .label("iloop")
+                    .addi(S1, S0, 8) // packed {vd=8+i, vs2=0}
+                    .v_opr(VOp::Mv, S1, VSrc::I(0)); // acc row = 0
+                for k in 0..8u8 {
+                    // a = A[i][k] (element i of the column register), then
+                    // acc += a · B[k] — the emvx never hazards (v16+k is
+                    // read-only), so it hides under the previous vmacc.
+                    a.emvx(A2, 16 + k, S0);
+                    if k > 0 {
+                        a.addi(S1, S1, 0x100); // vs2 = k
+                    }
+                    a.v_opr(VOp::Macc, S1, VSrc::X(A2));
+                }
+                if gemm {
+                    a.v_opr(VOp::Sll, A4, VSrc::I(1)) // out <<= 1 (α=2)
+                        .li(T1, 3)
+                        .v_opr(VOp::Macc, A5, VSrc::X(T1)) // out += 3·C
+                        .li(T1, 0x101)
+                        .add(A4, A4, T1)
+                        .add(A5, A5, T1);
+                }
+                a.addi(S0, S0, 1)
+                    .li(T2, 8)
+                    .bne(S0, T2, "iloop")
+                    .ebreak();
+            });
+            let bytes = 8 * row_bytes;
+            Built {
+                kernel: k,
+                args: vec![p],
+                extract: Box::new(move |soc| soc.dump(CARUS_BASE + 8 * row_bytes, bytes)),
+            }
+        }
+        Kernel::Conv2d { n, f } => {
+            assert!(n * sew.bytes() <= REG_BYTES);
+            let row_bytes = n * sew.bytes();
+            for r in 0..8u32 {
+                soc.carus.vrf.load(r * row_bytes, &data.a[(r * row_bytes) as usize..((r + 1) * row_bytes) as usize]);
+            }
+            soc.carus.vrf.load(14 * row_bytes, &data.b); // filter flat in v14
+            let (orows, ocols) = (8 - f + 1, n - f + 1);
+            let k = kasm(|a| {
+                a.li(T0, ARG_OFFSET as i32)
+                    .lw(A0, 0, T0) // n (AVL)
+                    .lw(A5, 4, T0) // f
+                    .lw(S0, 8, T0) // orows
+                    .vsetvli(T0, A0, sew)
+                    .li(S1, 0) // r
+                    .label("rloop")
+                    // acc row: {vd=8+r}
+                    .addi(T1, S1, 8)
+                    .v_opr(VOp::Mv, T1, VSrc::I(0))
+                    .li(A3, 0) // flat filter index dy*f+dx
+                    .li(T2, 0) // dy
+                    .label("dyloop")
+                    .li(A4, 0) // dx
+                    .label("dxloop")
+                    .emvx(A1, 14, A3) // w = F[dy*f+dx]
+                    // source row index = r + dy
+                    .add(A2, S1, T2)
+                    .beq(A4, ZERO, "noslide")
+                    // v15 = slidedown(v(r+dy), dx); src ← v15
+                    .slli(A2, A2, 8)
+                    .addi(A2, A2, 15) // {vd=15, vs2=r+dy}
+                    .v_opr(VOp::SlideDown, A2, VSrc::X(A4))
+                    .li(A2, 15)
+                    .label("noslide")
+                    // acc {vd=8+r, vs2=src}
+                    .slli(A2, A2, 8)
+                    .add(A2, A2, S1)
+                    .addi(A2, A2, 8)
+                    .v_opr(VOp::Macc, A2, VSrc::X(A1))
+                    .addi(A3, A3, 1)
+                    .addi(A4, A4, 1)
+                    .bne(A4, A5, "dxloop")
+                    .addi(T2, T2, 1)
+                    .bne(T2, A5, "dyloop")
+                    .addi(S1, S1, 1)
+                    .bne(S1, S0, "rloop")
+                    .ebreak();
+            });
+            let sewb = sew.bytes();
+            Built {
+                kernel: k,
+                args: vec![n, f, orows],
+                extract: Box::new(move |soc| {
+                    let mut out = Vec::new();
+                    for r in 0..orows {
+                        out.extend(soc.dump(CARUS_BASE + (8 + r) * row_bytes, ocols * sewb));
+                    }
+                    out
+                }),
+            }
+        }
+        Kernel::Maxpool { n } => {
+            assert!(n * sew.bytes() <= REG_BYTES);
+            let row_bytes = n * sew.bytes();
+            for r in 0..16u32 {
+                soc.carus.vrf.load(r * row_bytes, &data.a[(r * row_bytes) as usize..((r + 1) * row_bytes) as usize]);
+            }
+            let half = n / 2;
+            let k = kasm(|a| {
+                a.li(T0, ARG_OFFSET as i32)
+                    .lw(A0, 0, T0) // n (AVL)
+                    .lw(A5, 4, T0) // n/2
+                    .vsetvli(T0, A0, sew)
+                    // Phase 1+2: per output row r: v(16+r) = vmax(v2r, v2r+1);
+                    // v24 = slidedown(v(16+r), 1); v(16+r) = vmax(v16+r, v24).
+                    .li(S0, 0) // r
+                    .li(S1, pack_indexes(16, 0, 1) as i32)
+                    .label("vloop")
+                    .v_opr(VOp::Max, S1, VSrc::V(0))
+                    // slide: {vd=24, vs2=16+r}
+                    .addi(T1, S0, 16)
+                    .slli(T1, T1, 8)
+                    .addi(T1, T1, 24)
+                    .li(T2, 1)
+                    .v_opr(VOp::SlideDown, T1, VSrc::X(T2))
+                    // max: {vd=16+r, vs2=16+r, vs1=24}
+                    .addi(T1, S0, 16)
+                    .slli(T2, T1, 8)
+                    .add(T1, T1, T2)
+                    .li(T2, 24 << 16)
+                    .add(T1, T1, T2)
+                    .v_opr(VOp::Max, T1, VSrc::V(0))
+                    .li(T1, 0x20201) // vd += 1, vs2 += 2, vs1 += 2
+                    .add(S1, S1, T1)
+                    .addi(S0, S0, 1)
+                    .li(T1, 8)
+                    .bne(S0, T1, "vloop");
+                // Phase 3: eCPU compaction — unrolled over the 8 output rows
+                // (emvv's destination register is a direct field).
+                for r in 0..8u8 {
+                    let row = format!("cp{r}");
+                    a.li(T1, 0) // source element index (even)
+                        .li(T2, 0) // dest element index
+                        .label(&row)
+                        .emvx(A2, 16 + r, T1)
+                        .emvv(r, T2, A2)
+                        .addi(T1, T1, 2)
+                        .addi(T2, T2, 1)
+                        .bne(T2, A5, &row);
+                }
+                a.ebreak();
+            });
+            let sewb = sew.bytes();
+            Built {
+                kernel: k,
+                args: vec![n, half],
+                extract: Box::new(move |soc| {
+                    let mut out = Vec::new();
+                    for r in 0..8u32 {
+                        out.extend(soc.dump(CARUS_BASE + r * row_bytes, half * sewb));
+                    }
+                    out
+                }),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::golden;
+
+    fn check(kernel: Kernel, sew: Sew) -> RunResult {
+        let data = golden::generate(kernel, sew, 777);
+        let res = run(kernel, sew, &data);
+        assert_eq!(res.output, data.expect, "{kernel:?} {sew}");
+        res
+    }
+
+    #[test]
+    fn elementwise_all_widths() {
+        for sew in Sew::ALL {
+            check(Kernel::Xor { n: 2048 / sew.bytes() }, sew);
+            check(Kernel::Add { n: 2048 / sew.bytes() }, sew);
+            check(Kernel::Mul { n: 2048 / sew.bytes() }, sew);
+        }
+    }
+
+    #[test]
+    fn matmul_saturates_near_half_output_per_cycle() {
+        let res = check(Kernel::Matmul { p: 1024 }, Sew::E8);
+        let cpo = res.cycles_per_output();
+        // Paper Fig. 12: saturates at 0.48 output/cycle → ≈2.1 c/out.
+        assert!((1.9..2.6).contains(&cpo), "8-bit matmul: {cpo:.2} c/out (paper 2.08)");
+        check(Kernel::Matmul { p: 512 }, Sew::E16);
+        check(Kernel::Matmul { p: 256 }, Sew::E32);
+    }
+
+    #[test]
+    fn gemm_all_widths() {
+        check(Kernel::Gemm { p: 256 }, Sew::E8);
+        check(Kernel::Gemm { p: 128 }, Sew::E16);
+        check(Kernel::Gemm { p: 64 }, Sew::E32);
+    }
+
+    #[test]
+    fn conv2d() {
+        check(Kernel::Conv2d { n: 256, f: 3 }, Sew::E8);
+        check(Kernel::Conv2d { n: 128, f: 3 }, Sew::E16);
+        check(Kernel::Conv2d { n: 64, f: 4 }, Sew::E32);
+    }
+
+    #[test]
+    fn relu_and_leaky() {
+        for sew in Sew::ALL {
+            let res = check(Kernel::Relu { n: 4096 / sew.bytes() }, sew);
+            // vmax.vx: 2 c/word on 4 lanes → 0.5 c/word overall.
+            let words = (4096 / 4) as f64;
+            let cpw = res.cycles as f64 / words;
+            assert!(cpw < 1.2, "{sew} relu: {cpw:.2} c/word overall");
+            check(Kernel::LeakyRelu { n: 2048 / sew.bytes() }, sew);
+        }
+    }
+
+    #[test]
+    fn maxpool() {
+        for sew in Sew::ALL {
+            check(Kernel::Maxpool { n: 256 / sew.bytes() }, sew);
+        }
+    }
+}

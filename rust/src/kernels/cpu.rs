@@ -1,0 +1,409 @@
+//! CPU-only baseline kernels (RV32IMC, GCC 11 -O3 idioms), §V-A2.
+//!
+//! These firmware builders emulate what the paper's baseline compiler
+//! produces: word-packed loops where auto-vectorization applies (bitwise
+//! XOR at any width, SWAR addition at 8-bit), pointer-strength-reduced
+//! element loops elsewhere, non-unrolled reduction loops for matmul/conv
+//! (the measured 10–14 cycles/MAC of the paper's baselines), and
+//! data-dependent branches for ReLU/pooling (the paper calls these out as
+//! the CPU's weakness vs. the NMC min/max instructions).
+//!
+//! Memory map: firmware in SRAM bank 0; A/B/C/OUT in banks 1/2/3/4.
+
+use super::golden::{WorkloadData, GEMM_BETA, LEAKY_SHIFT};
+use super::{finish_run, Kernel, RunResult};
+use crate::asm::Asm;
+use crate::bus::BANK_SIZE;
+use crate::isa::reg::*;
+use crate::isa::Sew;
+use crate::soc::Soc;
+
+pub const A_BASE: u32 = BANK_SIZE;
+pub const B_BASE: u32 = 2 * BANK_SIZE;
+pub const C_BASE: u32 = 3 * BANK_SIZE;
+pub const OUT_BASE: u32 = 4 * BANK_SIZE;
+
+/// Build + run a CPU kernel; returns the measured result with the
+/// canonical output extracted from the OUT bank.
+pub fn run(kernel: Kernel, sew: Sew, data: &WorkloadData) -> RunResult {
+    let mut soc = Soc::heeperator();
+    soc.load_data(A_BASE, &data.a);
+    if !data.b.is_empty() {
+        soc.load_data(B_BASE, &data.b);
+    }
+    if !data.c.is_empty() {
+        soc.load_data(C_BASE, &data.c);
+    }
+    let mut a = Asm::new(0);
+    build(&mut a, kernel, sew);
+    let prog = a.assemble().expect("cpu kernel assembles");
+    soc.load_firmware(&prog, 0);
+    soc.reset_stats();
+    let (halt, _) = soc.run(200_000_000);
+    let mut res = finish_run(&mut soc, halt, kernel, sew);
+    res.output = soc.dump(OUT_BASE, (kernel.outputs() * sew.bytes() as u64) as u32);
+    res
+}
+
+/// Load/store helpers dispatching on SEW (signed loads, like GCC emits for
+/// signed element types).
+fn lx(a: &mut Asm, sew: Sew, rd: u8, off: i32, rs1: u8) {
+    match sew {
+        Sew::E8 => a.lb(rd, off, rs1),
+        Sew::E16 => a.lh(rd, off, rs1),
+        Sew::E32 => a.lw(rd, off, rs1),
+    };
+}
+fn sx(a: &mut Asm, sew: Sew, rs2: u8, off: i32, rs1: u8) {
+    match sew {
+        Sew::E8 => a.sb(rs2, off, rs1),
+        Sew::E16 => a.sh(rs2, off, rs1),
+        Sew::E32 => a.sw(rs2, off, rs1),
+    };
+}
+
+fn build(a: &mut Asm, kernel: Kernel, sew: Sew) {
+    match kernel {
+        Kernel::Xor { n } => xor_kernel(a, n, sew),
+        Kernel::Add { n } => add_kernel(a, n, sew),
+        Kernel::Mul { n } => mul_kernel(a, n, sew),
+        Kernel::Matmul { p } => matmul_kernel(a, p, sew, false),
+        Kernel::Gemm { p } => matmul_kernel(a, p, sew, true),
+        Kernel::Conv2d { n, f } => conv2d_kernel(a, n, f, sew),
+        Kernel::Relu { n } => relu_kernel(a, n, sew, false),
+        Kernel::LeakyRelu { n } => relu_kernel(a, n, sew, true),
+        Kernel::Maxpool { n } => maxpool_kernel(a, n, sew),
+    }
+}
+
+/// Bitwise XOR: -O3 packs any width into word operations (4/2/1 elements
+/// per iteration — the linear sub-word scaling the paper observes).
+fn xor_kernel(a: &mut Asm, n: u32, sew: Sew) {
+    let bytes = n * sew.bytes();
+    assert!(bytes % 4 == 0);
+    a.li(A0, A_BASE as i32)
+        .li(A1, B_BASE as i32)
+        .li(A2, OUT_BASE as i32)
+        .li(A3, (A_BASE + bytes) as i32)
+        .label("loop")
+        .lw(T0, 0, A0)
+        .lw(T1, 0, A1)
+        .xor(T0, T0, T1)
+        .sw(T0, 0, A2)
+        .addi(A0, A0, 4)
+        .addi(A1, A1, 4)
+        .addi(A2, A2, 4)
+        .bne(A0, A3, "loop")
+        .ebreak();
+}
+
+/// Element-wise addition: 8-bit uses the classic SWAR trick (what the paper
+/// attributes to compiler auto-vectorization); 16/32-bit run element loops.
+fn add_kernel(a: &mut Asm, n: u32, sew: Sew) {
+    match sew {
+        Sew::E8 => {
+            let bytes = n;
+            a.li(A0, A_BASE as i32)
+                .li(A1, B_BASE as i32)
+                .li(A2, OUT_BASE as i32)
+                .li(A3, (A_BASE + bytes) as i32)
+                .li(S2, 0x7f7f7f7fu32 as i32)
+                .li(S3, 0x80808080u32 as i32)
+                .label("loop")
+                .lw(T0, 0, A0)
+                .lw(T1, 0, A1)
+                .and(T2, T0, S2)
+                .and(T3, T1, S2)
+                .add(T2, T2, T3)
+                .xor(T3, T0, T1)
+                .and(T3, T3, S3)
+                .xor(T2, T2, T3)
+                .sw(T2, 0, A2)
+                .addi(A0, A0, 4)
+                .addi(A1, A1, 4)
+                .addi(A2, A2, 4)
+                .bne(A0, A3, "loop")
+                .ebreak();
+        }
+        Sew::E16 | Sew::E32 => {
+            let sb = sew.bytes() as i32;
+            a.li(A0, A_BASE as i32)
+                .li(A1, B_BASE as i32)
+                .li(A2, OUT_BASE as i32)
+                .li(A3, (A_BASE + n * sew.bytes()) as i32)
+                .label("loop");
+            lx(a, sew, T0, 0, A0);
+            lx(a, sew, T1, 0, A1);
+            a.add(T0, T0, T1);
+            sx(a, sew, T0, 0, A2);
+            a.addi(A0, A0, sb)
+                .addi(A1, A1, sb)
+                .addi(A2, A2, sb)
+                .bne(A0, A3, "loop")
+                .ebreak();
+        }
+    }
+}
+
+/// Element-wise multiplication: no SWAR possible → element loop at every
+/// width (the paper's flat ≈11 cycles/element baseline).
+fn mul_kernel(a: &mut Asm, n: u32, sew: Sew) {
+    let sb = sew.bytes() as i32;
+    a.li(A0, A_BASE as i32)
+        .li(A1, B_BASE as i32)
+        .li(A2, OUT_BASE as i32)
+        .li(A3, (A_BASE + n * sew.bytes()) as i32)
+        .label("loop");
+    lx(a, sew, T0, 0, A0);
+    lx(a, sew, T1, 0, A1);
+    a.mul(T0, T0, T1);
+    sx(a, sew, T0, 0, A2);
+    a.addi(A0, A0, sb)
+        .addi(A1, A1, sb)
+        .addi(A2, A2, sb)
+        .bne(A0, A3, "loop")
+        .ebreak();
+}
+
+/// Matmul A[8,8]×B[8,p] (k-loop reduction, pointer strength reduction).
+/// GEMM adds α/β scaling (α=2 → slli; β=3 → slli+add).
+fn matmul_kernel(a: &mut Asm, p: u32, sew: Sew, gemm: bool) {
+    let sb = sew.bytes() as i32;
+    let row_stride = (p * sew.bytes()) as i32; // B row stride in bytes
+    a.li(S0, A_BASE as i32) // A row pointer
+        .li(S1, B_BASE as i32) // B base
+        .li(S7, OUT_BASE as i32) // OUT pointer
+        .li(S3, 8) // i counter
+        .li(S6, row_stride); // B row stride (may exceed addi range)
+    if gemm {
+        a.li(S8, C_BASE as i32); // C pointer
+    }
+    a.label("iloop")
+        .mv(T4, S1) // column pointer = B + j*sb
+        .li(S5, p as i32) // j counter
+        .label("jloop")
+        .mv(T0, S0) // A[i] walker
+        .mv(T1, T4) // B[.][j] walker
+        .li(T2, 0) // acc
+        .li(T3, 8) // k counter
+        .label("kloop");
+    lx(a, sew, T5, 0, T0);
+    lx(a, sew, T6, 0, T1);
+    a.mul(T5, T5, T6)
+        .add(T2, T2, T5)
+        .addi(T0, T0, sb)
+        .add(T1, T1, S6)
+        .addi(T3, T3, -1)
+        .bne(T3, ZERO, "kloop");
+    if gemm {
+        // out = (acc << 1) + 3*C[i][j]
+        a.slli(T2, T2, 1);
+        lx(a, sew, T5, 0, S8);
+        a.slli(T6, T5, 1).add(T5, T5, T6); // 3*c
+        debug_assert_eq!(GEMM_BETA, 3);
+        a.add(T2, T2, T5).addi(S8, S8, sb);
+    }
+    sx(a, sew, T2, 0, S7);
+    a.addi(S7, S7, sb)
+        .addi(T4, T4, sb)
+        .addi(S5, S5, -1)
+        .bne(S5, ZERO, "jloop")
+        .addi(S0, S0, 8 * sb)
+        .addi(S3, S3, -1)
+        .bne(S3, ZERO, "iloop")
+        .ebreak();
+}
+
+/// Valid 2D convolution A[8,n] ⊛ F[f,f] with non-unrolled filter loops.
+fn conv2d_kernel(a: &mut Asm, n: u32, f: u32, sew: Sew) {
+    let sb = sew.bytes() as i32;
+    let rowb = (n * sew.bytes()) as i32;
+    let orows = 8 - f as i32 + 1;
+    let ocols = n as i32 - f as i32 + 1;
+    a.li(S0, A_BASE as i32) // image row-0 pointer for output row r
+        .li(S1, B_BASE as i32) // filter base
+        .li(S7, OUT_BASE as i32) // out pointer
+        .li(S3, orows) // r counter
+        .li(S6, rowb) // image row stride
+        .label("rloop")
+        .mv(S4, S0) // window column pointer
+        .li(S5, ocols) // c counter
+        .label("cloop")
+        .li(T2, 0) // acc
+        .mv(S9, S1) // filter walker
+        .mv(S10, S4) // window row pointer
+        .li(T3, f as i32) // dy counter
+        .label("dyloop")
+        .mv(T0, S10) // window element walker
+        .li(T6, f as i32) // dx counter
+        .label("dxloop");
+    lx(a, sew, T5, 0, T0);
+    lx(a, sew, T1, 0, S9);
+    a.mul(T5, T5, T1)
+        .add(T2, T2, T5)
+        .addi(T0, T0, sb)
+        .addi(S9, S9, sb)
+        .addi(T6, T6, -1)
+        .bne(T6, ZERO, "dxloop")
+        .add(S10, S10, S6)
+        .addi(T3, T3, -1)
+        .bne(T3, ZERO, "dyloop");
+    sx(a, sew, T2, 0, S7);
+    a.addi(S7, S7, sb)
+        .addi(S4, S4, sb)
+        .addi(S5, S5, -1)
+        .bne(S5, ZERO, "cloop")
+        .add(S0, S0, S6)
+        .addi(S3, S3, -1)
+        .bne(S3, ZERO, "rloop")
+        .ebreak();
+}
+
+/// ReLU / leaky ReLU with the data-dependent branch the paper attributes
+/// the CPU's poor showing to.
+fn relu_kernel(a: &mut Asm, n: u32, sew: Sew, leaky: bool) {
+    let sb = sew.bytes() as i32;
+    a.li(A0, A_BASE as i32)
+        .li(A2, OUT_BASE as i32)
+        .li(A3, (A_BASE + n * sew.bytes()) as i32)
+        .label("loop");
+    lx(a, sew, T0, 0, A0);
+    a.bge(T0, ZERO, "store");
+    if leaky {
+        a.srai(T0, T0, LEAKY_SHIFT as i32);
+    } else {
+        a.li(T0, 0);
+    }
+    a.label("store");
+    sx(a, sew, T0, 0, A2);
+    a.addi(A0, A0, sb)
+        .addi(A2, A2, sb)
+        .bne(A0, A3, "loop")
+        .ebreak();
+}
+
+/// 2×2/stride-2 max pooling over a 16×n image, generic window loops with
+/// compare-and-branch max (the paper's baseline idiom).
+fn maxpool_kernel(a: &mut Asm, n: u32, sew: Sew) {
+    let sb = sew.bytes() as i32;
+    let rowb = (n * sew.bytes()) as i32;
+    let min_val = match sew {
+        Sew::E8 => -128,
+        Sew::E16 => -32768,
+        Sew::E32 => i32::MIN,
+    };
+    a.li(S0, A_BASE as i32) // window row-0 base for output row r
+        .li(S7, OUT_BASE as i32)
+        .li(S3, 8) // r counter (16/2)
+        .li(S6, rowb)
+        .label("rloop")
+        .mv(S4, S0) // window pointer
+        .li(S5, (n / 2) as i32) // c counter
+        .label("cloop")
+        .li(T2, min_val) // acc = min
+        .mv(S10, S4) // window row pointer
+        .li(T3, 2) // dy
+        .label("dyloop")
+        .mv(T0, S10)
+        .li(T6, 2) // dx
+        .label("dxloop");
+    lx(a, sew, T5, 0, T0);
+    a.bge(T2, T5, "skip") // keep acc if acc >= x
+        .mv(T2, T5)
+        .label("skip")
+        .addi(T0, T0, sb)
+        .addi(T6, T6, -1)
+        .bne(T6, ZERO, "dxloop")
+        .add(S10, S10, S6)
+        .addi(T3, T3, -1)
+        .bne(T3, ZERO, "dyloop");
+    sx(a, sew, T2, 0, S7);
+    a.addi(S7, S7, sb)
+        .addi(S4, S4, 2 * sb)
+        .addi(S5, S5, -1)
+        .bne(S5, ZERO, "cloop")
+        .add(S0, S0, S6)
+        .add(S0, S0, S6) // advance two image rows
+        .addi(S3, S3, -1)
+        .bne(S3, ZERO, "rloop")
+        .ebreak();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::golden;
+
+    fn check(kernel: Kernel, sew: Sew) -> RunResult {
+        let data = golden::generate(kernel, sew, 99);
+        let res = run(kernel, sew, &data);
+        assert_eq!(res.output, data.expect, "{kernel:?} {sew}");
+        res
+    }
+
+    #[test]
+    fn xor_all_widths_correct_and_timed() {
+        for sew in Sew::ALL {
+            let res = check(Kernel::Xor { n: 256 }, sew);
+            // ≈10 cycles per word.
+            let words = (256 * sew.bytes() / 4) as f64;
+            let cpw = res.cycles as f64 / words;
+            assert!((9.0..11.5).contains(&cpw), "{sew}: {cpw:.2} c/word");
+        }
+    }
+
+    #[test]
+    fn add_swar_8bit() {
+        let res = check(Kernel::Add { n: 512 }, Sew::E8);
+        let cpe = res.cycles_per_output();
+        assert!((3.0..4.6).contains(&cpe), "8-bit add: {cpe:.2} c/el (paper: 4.0)");
+        check(Kernel::Add { n: 128 }, Sew::E16);
+        check(Kernel::Add { n: 128 }, Sew::E32);
+    }
+
+    #[test]
+    fn mul_element_loops() {
+        for sew in Sew::ALL {
+            let res = check(Kernel::Mul { n: 128 }, sew);
+            let cpe = res.cycles_per_output();
+            assert!((9.0..12.5).contains(&cpe), "{sew} mul: {cpe:.2} c/el (paper ≈11)");
+        }
+    }
+
+    #[test]
+    fn matmul_and_gemm() {
+        for sew in Sew::ALL {
+            let res = check(Kernel::Matmul { p: 16 }, sew);
+            let cpe = res.cycles_per_output();
+            assert!((75.0..120.0).contains(&cpe), "{sew} matmul: {cpe:.2} c/out (paper 89–112)");
+        }
+        check(Kernel::Gemm { p: 16 }, Sew::E8);
+        check(Kernel::Gemm { p: 8 }, Sew::E32);
+    }
+
+    #[test]
+    fn conv2d_small() {
+        for (sew, f) in [(Sew::E8, 3), (Sew::E16, 4), (Sew::E32, 3)] {
+            let res = check(Kernel::Conv2d { n: 32, f }, sew);
+            let cpe = res.cycles_per_output();
+            assert!(cpe > 60.0 && cpe < 260.0, "{sew} conv f={f}: {cpe:.2} c/out");
+        }
+    }
+
+    #[test]
+    fn relu_and_leaky() {
+        for sew in Sew::ALL {
+            check(Kernel::Relu { n: 256 }, sew);
+            check(Kernel::LeakyRelu { n: 256 }, sew);
+        }
+    }
+
+    #[test]
+    fn maxpool() {
+        for sew in Sew::ALL {
+            let res = check(Kernel::Maxpool { n: 32 }, sew);
+            let cpe = res.cycles_per_output();
+            assert!((35.0..75.0).contains(&cpe), "{sew} maxpool: {cpe:.2} c/out (paper 50–65)");
+        }
+    }
+}

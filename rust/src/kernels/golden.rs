@@ -1,0 +1,261 @@
+//! Deterministic input generation + golden reference semantics for the
+//! benchmark kernels.
+//!
+//! All three execution targets consume the byte arrays produced here, and
+//! their outputs must match [`WorkloadData::expect`] bit-exactly. The same
+//! semantics are implemented in pure-jnp in `python/compile/kernels/ref.py`
+//! and AOT-compiled through JAX/Pallas; `rust/tests/golden_runtime.rs`
+//! closes the loop by executing the HLO artifacts via PJRT and comparing.
+//!
+//! Arithmetic convention: elements are 2's-complement of the kernel SEW;
+//! accumulating kernels (matmul/GEMM/conv) accumulate **mod 2^sew** — the
+//! natural semantics of the packed datapaths, and identical to truncating
+//! an int32 accumulation at the end.
+
+use super::Kernel;
+use crate::isa::Sew;
+
+/// Splitmix64: tiny, deterministic, good-enough generator for inputs.
+#[derive(Debug, Clone)]
+pub struct Rng(pub u64);
+
+impl Rng {
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+    pub fn next_u32(&mut self) -> u32 {
+        self.next_u64() as u32
+    }
+    /// Random element value (full range of the SEW), sign-extended to i64.
+    pub fn elem(&mut self, sew: Sew) -> i64 {
+        match sew {
+            Sew::E8 => self.next_u32() as u8 as i8 as i64,
+            Sew::E16 => self.next_u32() as u16 as i16 as i64,
+            Sew::E32 => self.next_u32() as i32 as i64,
+        }
+    }
+}
+
+/// Pack an element array (sign-agnostic, low bits) into little-endian bytes.
+pub fn pack(vals: &[i64], sew: Sew) -> Vec<u8> {
+    let mut out = Vec::with_capacity(vals.len() * sew.bytes() as usize);
+    for &v in vals {
+        match sew {
+            Sew::E8 => out.push(v as u8),
+            Sew::E16 => out.extend_from_slice(&(v as u16).to_le_bytes()),
+            Sew::E32 => out.extend_from_slice(&(v as u32).to_le_bytes()),
+        }
+    }
+    out
+}
+
+/// Unpack little-endian bytes into sign-extended elements.
+pub fn unpack(bytes: &[u8], sew: Sew) -> Vec<i64> {
+    let sz = sew.bytes() as usize;
+    bytes
+        .chunks(sz)
+        .map(|c| match sew {
+            Sew::E8 => c[0] as i8 as i64,
+            Sew::E16 => i16::from_le_bytes([c[0], c[1]]) as i64,
+            Sew::E32 => i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as i64,
+        })
+        .collect()
+}
+
+/// Truncate to SEW (mod 2^sew) and sign-extend back — the wrap semantics.
+#[inline]
+pub fn wrap(v: i64, sew: Sew) -> i64 {
+    match sew {
+        Sew::E8 => v as i8 as i64,
+        Sew::E16 => v as i16 as i64,
+        Sew::E32 => v as i32 as i64,
+    }
+}
+
+/// Inputs + expected output of one kernel instance.
+#[derive(Debug, Clone)]
+pub struct WorkloadData {
+    /// First operand (A / input image / x).
+    pub a: Vec<u8>,
+    /// Second operand (B / filter), empty when unused.
+    pub b: Vec<u8>,
+    /// Third operand (GEMM C), empty when unused.
+    pub c: Vec<u8>,
+    /// Expected canonical output.
+    pub expect: Vec<u8>,
+}
+
+/// GEMM constants (powers of two / small so every target can compute them
+/// without a hardware multiplier: α·x = x<<1, β·x = (x<<1)+x).
+pub const GEMM_ALPHA: i64 = 2;
+pub const GEMM_BETA: i64 = 3;
+/// Leaky-ReLU negative-slope shift (slope 1/8).
+pub const LEAKY_SHIFT: u32 = 3;
+
+/// Generate inputs and the expected output for a kernel instance.
+pub fn generate(kernel: Kernel, sew: Sew, seed: u64) -> WorkloadData {
+    let mut rng = Rng(seed ^ 0xabcd_ef01_2345_6789);
+    match kernel {
+        Kernel::Xor { n } | Kernel::Add { n } | Kernel::Mul { n } => {
+            let a: Vec<i64> = (0..n).map(|_| rng.elem(sew)).collect();
+            let b: Vec<i64> = (0..n).map(|_| rng.elem(sew)).collect();
+            let out: Vec<i64> = a
+                .iter()
+                .zip(&b)
+                .map(|(&x, &y)| match kernel {
+                    Kernel::Xor { .. } => wrap(x ^ y, sew),
+                    Kernel::Add { .. } => wrap(x + y, sew),
+                    _ => wrap(x * y, sew),
+                })
+                .collect();
+            WorkloadData { a: pack(&a, sew), b: pack(&b, sew), c: vec![], expect: pack(&out, sew) }
+        }
+        Kernel::Matmul { p } | Kernel::Gemm { p } => {
+            let a: Vec<i64> = (0..64).map(|_| rng.elem(sew)).collect(); // A[8,8]
+            let b: Vec<i64> = (0..8 * p).map(|_| rng.elem(sew)).collect(); // B[8,p] row-major
+            let is_gemm = matches!(kernel, Kernel::Gemm { .. });
+            let c: Vec<i64> =
+                if is_gemm { (0..8 * p).map(|_| rng.elem(sew)).collect() } else { vec![] };
+            let mut out = vec![0i64; 8 * p as usize];
+            for i in 0..8usize {
+                for j in 0..p as usize {
+                    let mut acc: i64 = 0;
+                    for k in 0..8usize {
+                        acc = wrap(acc + wrap(a[i * 8 + k] * b[k * p as usize + j], sew), sew);
+                    }
+                    out[i * p as usize + j] = if is_gemm {
+                        wrap(
+                            wrap(GEMM_ALPHA * acc, sew) + wrap(GEMM_BETA * c[i * p as usize + j], sew),
+                            sew,
+                        )
+                    } else {
+                        acc
+                    };
+                }
+            }
+            WorkloadData {
+                a: pack(&a, sew),
+                b: pack(&b, sew),
+                c: pack(&c, sew),
+                expect: pack(&out, sew),
+            }
+        }
+        Kernel::Conv2d { n, f } => {
+            let rows = 8usize;
+            let (n, f) = (n as usize, f as usize);
+            let img: Vec<i64> = (0..rows * n).map(|_| rng.elem(sew)).collect();
+            let filt: Vec<i64> = (0..f * f).map(|_| rng.elem(sew)).collect();
+            let (orows, ocols) = (rows - f + 1, n - f + 1);
+            let mut out = vec![0i64; orows * ocols];
+            for r in 0..orows {
+                for c in 0..ocols {
+                    let mut acc = 0i64;
+                    for dy in 0..f {
+                        for dx in 0..f {
+                            acc = wrap(acc + wrap(img[(r + dy) * n + c + dx] * filt[dy * f + dx], sew), sew);
+                        }
+                    }
+                    out[r * ocols + c] = acc;
+                }
+            }
+            WorkloadData {
+                a: pack(&img, sew),
+                b: pack(&filt, sew),
+                c: vec![],
+                expect: pack(&out, sew),
+            }
+        }
+        Kernel::Relu { n } | Kernel::LeakyRelu { n } => {
+            let a: Vec<i64> = (0..n).map(|_| rng.elem(sew)).collect();
+            let out: Vec<i64> = a
+                .iter()
+                .map(|&x| {
+                    if x >= 0 {
+                        x
+                    } else if matches!(kernel, Kernel::Relu { .. }) {
+                        0
+                    } else {
+                        x >> LEAKY_SHIFT
+                    }
+                })
+                .collect();
+            WorkloadData { a: pack(&a, sew), b: vec![], c: vec![], expect: pack(&out, sew) }
+        }
+        Kernel::Maxpool { n } => {
+            let rows = 16usize;
+            let n = n as usize;
+            let img: Vec<i64> = (0..rows * n).map(|_| rng.elem(sew)).collect();
+            let (orows, ocols) = (rows / 2, n / 2);
+            let mut out = vec![0i64; orows * ocols];
+            for r in 0..orows {
+                for c in 0..ocols {
+                    let m = img[2 * r * n + 2 * c]
+                        .max(img[2 * r * n + 2 * c + 1])
+                        .max(img[(2 * r + 1) * n + 2 * c])
+                        .max(img[(2 * r + 1) * n + 2 * c + 1]);
+                    out[r * ocols + c] = m;
+                }
+            }
+            WorkloadData { a: pack(&img, sew), b: vec![], c: vec![], expect: pack(&out, sew) }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let d1 = generate(Kernel::Add { n: 64 }, Sew::E16, 7);
+        let d2 = generate(Kernel::Add { n: 64 }, Sew::E16, 7);
+        assert_eq!(d1.a, d2.a);
+        assert_eq!(d1.expect, d2.expect);
+        let d3 = generate(Kernel::Add { n: 64 }, Sew::E16, 8);
+        assert_ne!(d1.a, d3.a);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        for sew in Sew::ALL {
+            let vals: Vec<i64> = vec![-1, 0, 1, 127, -128];
+            let bytes = pack(&vals, sew);
+            assert_eq!(unpack(&bytes, sew), vals.iter().map(|&v| wrap(v, sew)).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn add_wraps() {
+        // 8-bit: 127 + 1 = -128.
+        assert_eq!(wrap(127 + 1, Sew::E8), -128);
+        assert_eq!(wrap(0x7fff + 1, Sew::E16), -0x8000);
+    }
+
+    #[test]
+    fn matmul_small_by_hand() {
+        // Identity-like check with controlled inputs via a fixed seed: just
+        // verify shape and mod-arithmetic consistency with i32 accumulation.
+        let d = generate(Kernel::Matmul { p: 4 }, Sew::E8, 42);
+        let a = unpack(&d.a, Sew::E8);
+        let b = unpack(&d.b, Sew::E8);
+        let out = unpack(&d.expect, Sew::E8);
+        assert_eq!(out.len(), 32);
+        // Recompute one element with i64 accumulation then wrap: must match
+        // (wrap-at-each-step == wrap-at-end for mod-2^k arithmetic).
+        let mut acc = 0i64;
+        for k in 0..8 {
+            acc += a[k] * b[k * 4];
+        }
+        assert_eq!(wrap(acc, Sew::E8), out[0]);
+    }
+
+    #[test]
+    fn maxpool_shape() {
+        let d = generate(Kernel::Maxpool { n: 8 }, Sew::E32, 1);
+        assert_eq!(unpack(&d.expect, Sew::E32).len(), 8 * 4);
+    }
+}

@@ -1,0 +1,307 @@
+//! Benchmark kernel suite (Table V / Fig. 11 / Fig. 12 workloads).
+//!
+//! Nine kernels × three element widths × three execution targets:
+//!
+//! | Kernel | CPU (RV32IMC, -O3 style) | NM-Caesar | NM-Carus |
+//! |---|---|---|---|
+//! | bitwise XOR | word-packed loop | `XOR` stream | `vxor[r].vv` |
+//! | element-wise add | SWAR (8-bit) / scalar | `ADD` stream | `vadd[r].vv` |
+//! | element-wise mul | scalar loop | `MUL` stream | `vmul[r].vv` |
+//! | matmul A[8,8]×B[8,p] | k-loop MACs | `DOT_*` stream | `vmacc.vx` + `emvx` |
+//! | GEMM α(AB)+βC | + scale/add | + `MUL`/`ADD` | + `vmul.vx`/`vadd.vv` |
+//! | 2D conv A[8,n]⊛F[f,f] | MAC loops | `DOT_*` on rows | `vmacc.vx` + slides |
+//! | ReLU | branchy loop | `MAX` vs 0 | `vmax.vx` |
+//! | leaky ReLU (shift slope) | branchy + `sra` | `MAX`+`SLR`-based | `vsra` + `vmax.vv` |
+//! | max pooling 2×2/s2 | window loops | `MAX` rows + CPU horiz. | `vmax.vv`+slide+eCPU |
+//!
+//! Every target runs on the *same* deterministic inputs (seeded generator in
+//! [`golden`]) and is checked against the same golden reference — which is
+//! itself cross-checked against the AOT-compiled JAX/Pallas artifacts by
+//! `rust/tests/golden_runtime.rs`. Output canonical form: little-endian
+//! elements of the kernel's SEW, wrapping 2's-complement semantics
+//! (accumulations mod 2^sew, matching the packed hardware datapaths).
+
+pub mod caesar;
+pub mod cpu;
+pub mod carus;
+pub mod golden;
+
+use crate::energy::Breakdown;
+use crate::isa::Sew;
+use crate::soc::{Halt, Soc};
+
+/// Execution target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Target {
+    Cpu,
+    Caesar,
+    Carus,
+}
+
+impl Target {
+    pub const ALL: [Target; 3] = [Target::Cpu, Target::Caesar, Target::Carus];
+    pub fn name(self) -> &'static str {
+        match self {
+            Target::Cpu => "CPU (RV32IMC)",
+            Target::Caesar => "NM-Caesar",
+            Target::Carus => "NM-Carus",
+        }
+    }
+}
+
+/// Kernel + shape. Sizes are free parameters; [`Kernel::paper_default`]
+/// yields the Table V footnote sizes for a given target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kernel {
+    /// Element-wise bitwise XOR over `n` elements.
+    Xor { n: u32 },
+    /// Element-wise addition.
+    Add { n: u32 },
+    /// Element-wise multiplication.
+    Mul { n: u32 },
+    /// A[8,8] × B[8,p] (row-major B, accumulate mod 2^sew).
+    Matmul { p: u32 },
+    /// α(A[8,8]×B[8,p]) + βC[8,p] with α=2, β=3.
+    Gemm { p: u32 },
+    /// Valid 2D convolution A[8,n] ⊛ F[f,f].
+    Conv2d { n: u32, f: u32 },
+    /// max(x, 0) over `n` elements.
+    Relu { n: u32 },
+    /// x ≥ 0 ? x : x >> 3 (slope 1/8, §V footnote f).
+    LeakyRelu { n: u32 },
+    /// 2×2 max pooling, stride 2, over a 16-row × `n`-col image.
+    Maxpool { n: u32 },
+}
+
+/// Kernel families (size-independent identity, used by the harness).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Family {
+    Xor,
+    Add,
+    Mul,
+    Matmul,
+    Gemm,
+    Conv2d,
+    Relu,
+    LeakyRelu,
+    Maxpool,
+}
+
+impl Family {
+    pub const ALL: [Family; 9] = [
+        Family::Xor,
+        Family::Add,
+        Family::Mul,
+        Family::Matmul,
+        Family::Gemm,
+        Family::Conv2d,
+        Family::Relu,
+        Family::LeakyRelu,
+        Family::Maxpool,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Family::Xor => "Bitwise XOR",
+            Family::Add => "Element-wise addition",
+            Family::Mul => "Element-wise multiplication",
+            Family::Matmul => "Matrix multiplication",
+            Family::Gemm => "GEMM",
+            Family::Conv2d => "2D convolution",
+            Family::Relu => "ReLU",
+            Family::LeakyRelu => "Leaky ReLU",
+            Family::Maxpool => "Max pooling",
+        }
+    }
+}
+
+impl Kernel {
+    pub fn family(self) -> Family {
+        match self {
+            Kernel::Xor { .. } => Family::Xor,
+            Kernel::Add { .. } => Family::Add,
+            Kernel::Mul { .. } => Family::Mul,
+            Kernel::Matmul { .. } => Family::Matmul,
+            Kernel::Gemm { .. } => Family::Gemm,
+            Kernel::Conv2d { .. } => Family::Conv2d,
+            Kernel::Relu { .. } => Family::Relu,
+            Kernel::LeakyRelu { .. } => Family::LeakyRelu,
+            Kernel::Maxpool { .. } => Family::Maxpool,
+        }
+    }
+
+    /// The paper's Table V footnote sizes for (family, target, sew).
+    pub fn paper_default(family: Family, target: Target, sew: Sew) -> Kernel {
+        let small = target == Target::Caesar;
+        match family {
+            // footnote a: 8 KiB (Caesar) / 10 KiB (CPU, Carus) of input,
+            // split across the two operands.
+            Family::Xor | Family::Add | Family::Mul => {
+                let total_bytes = if small { 8 * 1024 } else { 10 * 1024 };
+                let n = total_bytes / 2 / sew.bytes();
+                match family {
+                    Family::Xor => Kernel::Xor { n },
+                    Family::Add => Kernel::Add { n },
+                    _ => Kernel::Mul { n },
+                }
+            }
+            // footnote b/c: p = {128,256,512} (Caesar), {256,512,1024}
+            // (CPU/Carus) for {32,16,8} bits.
+            Family::Matmul | Family::Gemm => {
+                let p = match (small, sew) {
+                    (true, Sew::E32) => 128,
+                    (true, Sew::E16) => 256,
+                    (true, Sew::E8) => 512,
+                    (false, Sew::E32) => 256,
+                    (false, Sew::E16) => 512,
+                    (false, Sew::E8) => 1024,
+                };
+                if family == Family::Matmul {
+                    Kernel::Matmul { p }
+                } else {
+                    Kernel::Gemm { p }
+                }
+            }
+            // footnote d: n={64,64,128}, f={3,4,4} (Caesar);
+            // n={256,512,1024}, f=3 (CPU/Carus) for {32,16,8} bits.
+            Family::Conv2d => {
+                let (n, f) = match (small, sew) {
+                    (true, Sew::E32) => (64, 3),
+                    (true, Sew::E16) => (64, 4),
+                    (true, Sew::E8) => (128, 4),
+                    (false, Sew::E32) => (256, 3),
+                    (false, Sew::E16) => (512, 3),
+                    (false, Sew::E8) => (1024, 3),
+                };
+                Kernel::Conv2d { n, f }
+            }
+            // footnote e: 8 KiB (Caesar) / 16 KiB (CPU, Carus).
+            Family::Relu | Family::LeakyRelu => {
+                let n = if small { 8 * 1024 } else { 16 * 1024 } / sew.bytes();
+                if family == Family::Relu {
+                    Kernel::Relu { n }
+                } else {
+                    Kernel::LeakyRelu { n }
+                }
+            }
+            // footnote g: 8 KiB (Caesar) / 16 KiB (CPU, Carus); 16 rows.
+            Family::Maxpool => {
+                let bytes = if small { 8 * 1024 } else { 16 * 1024 };
+                Kernel::Maxpool { n: bytes / 16 / sew.bytes() }
+            }
+        }
+    }
+
+    /// Number of output elements (the "output" of cycles/output).
+    pub fn outputs(self) -> u64 {
+        match self {
+            Kernel::Xor { n } | Kernel::Add { n } | Kernel::Mul { n } => n as u64,
+            Kernel::Matmul { p } | Kernel::Gemm { p } => 8 * p as u64,
+            Kernel::Conv2d { n, f } => (8 - f as u64 + 1) * (n as u64 - f as u64 + 1),
+            Kernel::Relu { n } | Kernel::LeakyRelu { n } => n as u64,
+            Kernel::Maxpool { n } => 8 * (n as u64 / 2),
+        }
+    }
+}
+
+/// Result of one kernel run on one target.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub kernel: Kernel,
+    pub sew: Sew,
+    pub target: Target,
+    /// Cycles of the measured region (kernel only, like the paper).
+    pub cycles: u64,
+    /// Output elements produced.
+    pub outputs: u64,
+    /// Energy of the measured region.
+    pub energy: Breakdown,
+    /// Canonical output bytes (little-endian sew elements).
+    pub output: Vec<u8>,
+    /// Full activity (Fig. 13 power breakdowns).
+    pub activity: crate::energy::Activity,
+}
+
+impl RunResult {
+    pub fn cycles_per_output(&self) -> f64 {
+        self.cycles as f64 / self.outputs as f64
+    }
+    pub fn energy_per_output_pj(&self) -> f64 {
+        self.energy.total() / self.outputs as f64
+    }
+    /// Average power in mW.
+    pub fn avg_power_mw(&self) -> f64 {
+        self.energy.avg_power_mw(self.cycles)
+    }
+}
+
+/// Run a kernel on a target with seeded inputs; panics on a functional
+/// mismatch against the golden reference (the simulator is expected to be
+/// bit-exact).
+pub fn run(target: Target, kernel: Kernel, sew: Sew, seed: u64) -> RunResult {
+    let data = golden::generate(kernel, sew, seed);
+    let mut res = match target {
+        Target::Cpu => cpu::run(kernel, sew, &data),
+        Target::Caesar => caesar::run(kernel, sew, &data),
+        Target::Carus => carus::run(kernel, sew, &data),
+    };
+    assert_eq!(
+        res.output, data.expect,
+        "{target:?} {kernel:?} {sew} output mismatch vs golden reference"
+    );
+    res.kernel = kernel;
+    res.sew = sew;
+    res.target = target;
+    res
+}
+
+/// Common driver plumbing shared by the three target modules.
+pub(crate) fn finish_run(soc: &mut Soc, halt: Halt, kernel: Kernel, sew: Sew) -> RunResult {
+    assert_eq!(halt, Halt::Done, "{kernel:?} {sew} did not complete");
+    RunResult {
+        kernel,
+        sew,
+        target: Target::Cpu, // overwritten by `run`
+        cycles: soc.cycle,
+        outputs: kernel.outputs(),
+        energy: soc.energy(),
+        output: Vec::new(),
+        activity: soc.activity(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_sizes() {
+        // Matmul p per footnote b.
+        assert_eq!(
+            Kernel::paper_default(Family::Matmul, Target::Carus, Sew::E8),
+            Kernel::Matmul { p: 1024 }
+        );
+        assert_eq!(
+            Kernel::paper_default(Family::Matmul, Target::Caesar, Sew::E32),
+            Kernel::Matmul { p: 128 }
+        );
+        // Element-wise input sizes: 10 KiB → 5120 e8 elements per operand.
+        assert_eq!(Kernel::paper_default(Family::Add, Target::Cpu, Sew::E8), Kernel::Add { n: 5120 });
+        assert_eq!(
+            Kernel::paper_default(Family::Relu, Target::Carus, Sew::E16),
+            Kernel::Relu { n: 8192 }
+        );
+        // Conv2d shapes.
+        assert_eq!(
+            Kernel::paper_default(Family::Conv2d, Target::Caesar, Sew::E8),
+            Kernel::Conv2d { n: 128, f: 4 }
+        );
+    }
+
+    #[test]
+    fn output_counts() {
+        assert_eq!(Kernel::Matmul { p: 512 }.outputs(), 8 * 512);
+        assert_eq!(Kernel::Conv2d { n: 256, f: 3 }.outputs(), 6 * 254);
+        assert_eq!(Kernel::Maxpool { n: 512 }.outputs(), 8 * 256);
+    }
+}

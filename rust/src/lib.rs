@@ -1,0 +1,43 @@
+//! # heeperator — NM-Caesar / NM-Carus near-memory computing, reproduced
+//!
+//! Full-system reproduction of *"Scalable and RISC-V Programmable
+//! Near-Memory Computing Architectures for Edge Nodes"* (IEEE TETC 2024):
+//! a cycle-approximate, energy-annotated simulator of the HEEPerator MCU
+//! (X-HEEP host + NM-Caesar + NM-Carus), the paper's custom ISAs and
+//! toolchains, analytical area/energy models calibrated to the paper's
+//! 65 nm post-layout data, and a PJRT-based golden-model runtime that
+//! cross-checks every simulated kernel against AOT-compiled JAX/Pallas
+//! artifacts.
+//!
+//! Architecture map (see DESIGN.md for the full inventory):
+//! - [`isa`], [`asm`]: RV32IM/E + Xcv + xvnmc definitions and assembler.
+//! - [`simd`]: shared packed-SIMD element algebra.
+//! - [`mem`], [`bus`], [`dma`]: memory subsystem substrates.
+//! - [`cpu`]: RV32 ISS with CV32E40P-class timing.
+//! - [`caesar`], [`carus`]: the paper's two NMC macros.
+//! - [`soc`]: the HEEPerator system (cycle-stepped co-simulation).
+//! - [`kernels`], [`apps`]: benchmark kernels (3 targets × 9 kernels ×
+//!   3 bitwidths) and the Anomaly-Detection application.
+//! - [`energy`], [`area`]: calibrated 65 nm power/area models.
+//! - [`compare`]: BLADE / C-SRAM / Vecim analytical comparison models.
+//! - [`runtime`]: PJRT golden-model executor (loads `artifacts/*.hlo.txt`).
+//! - [`harness`]: regenerates every table and figure of §V.
+
+pub mod apps;
+pub mod area;
+pub mod asm;
+pub mod benchlib;
+pub mod bus;
+pub mod compare;
+pub mod cpu;
+pub mod dma;
+pub mod energy;
+pub mod harness;
+pub mod isa;
+pub mod kernels;
+pub mod mem;
+pub mod runtime;
+pub mod caesar;
+pub mod carus;
+pub mod simd;
+pub mod soc;

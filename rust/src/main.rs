@@ -1,0 +1,86 @@
+//! `heeperator` — CLI for the NM-Caesar / NM-Carus reproduction.
+//!
+//! Regenerates every table and figure of the paper's evaluation:
+//!
+//! ```text
+//! heeperator all [--quick] [--out DIR]   # everything (Tables IV–VIII, Figs 7/11/12/13)
+//! heeperator table4|fig7|table5|fig11|fig12|fig13|table6|table7|table8 [--quick] [--out DIR]
+//! heeperator ad                           # Anomaly-Detection end-to-end summary
+//! ```
+//!
+//! (Hand-rolled argument parsing: clap is not in the offline vendor set.)
+
+use nmc::harness::{self, Report};
+use std::io::Write;
+
+fn write_reports(reports: &[Report], out: Option<&str>) {
+    for r in reports {
+        println!("== {} — {} ==", r.id, r.title);
+        println!("{}", r.text);
+        if let Some(dir) = out {
+            std::fs::create_dir_all(dir).expect("create results dir");
+            let mut path = std::path::PathBuf::from(dir);
+            path.push(format!("{}.txt", r.id));
+            std::fs::write(&path, &r.text).expect("write report");
+            for (name, csv) in &r.csv {
+                let mut p = std::path::PathBuf::from(dir);
+                p.push(name);
+                std::fs::write(&p, csv).expect("write csv");
+            }
+            println!("(written to {dir}/{}.txt)", r.id);
+        }
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let quick = args.iter().any(|a| a == "--quick");
+    let out = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str);
+
+    match cmd {
+        "all" => {
+            let reports = harness::all(quick);
+            write_reports(&reports, out.or(Some("results")));
+        }
+        "table4" => write_reports(&[harness::table4()], out),
+        "fig7" => write_reports(&[harness::fig7()], out),
+        "table5" | "fig11" => {
+            let rows = harness::run_table5(quick);
+            let reps = vec![harness::table5(&rows), harness::fig11(&rows)];
+            write_reports(&reps, out);
+        }
+        "fig12" => write_reports(&[harness::fig12(quick)], out),
+        "fig13" => write_reports(&[harness::fig13()], out),
+        "table6" => write_reports(&[harness::table6()], out),
+        "table7" => write_reports(&[harness::table7()], out),
+        "table8" => write_reports(&[harness::table8()], out),
+        "ablations" => write_reports(&harness::ablations::all(), out),
+        "ad" => {
+            let m = nmc::apps::anomaly::model(2);
+            let golden = nmc::apps::anomaly::golden_forward(&m);
+            for res in [
+                nmc::apps::anomaly::run_cpu(&m),
+                nmc::apps::anomaly::run_caesar(&m),
+                nmc::apps::anomaly::run_carus(&m),
+            ] {
+                let ok = res.output == golden;
+                println!(
+                    "{:<22} {:>9} cycles  {:>8.2} uJ  output {}",
+                    res.name,
+                    res.cycles,
+                    res.energy_uj,
+                    if ok { "OK (matches golden)" } else { "MISMATCH" }
+                );
+            }
+        }
+        _ => {
+            let mut o = std::io::stdout();
+            writeln!(o, "usage: heeperator <all|table4|fig7|table5|fig11|fig12|fig13|table6|table7|table8|ablations|ad> [--quick] [--out DIR]").unwrap();
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! Memory models: single-port SRAM banks, register-file macros, and the
+//! flash/ROM used to stream Anomaly-Detection weights.
+//!
+//! Every model is functional (byte-accurate little-endian storage) plus
+//! *event-counting*: each read/write access increments per-bank counters
+//! that the [`crate::energy`] model later converts to pJ using the 65 nm
+//! calibration table. Single-port timing (one access per cycle) is enforced
+//! by the owners of the banks (SoC bus, Caesar scheduler, Carus VRF lanes),
+//! not here — this module only provides the storage and the accounting.
+
+/// Access counters for one memory macro.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MemStats {
+    pub reads: u64,
+    pub writes: u64,
+}
+
+impl MemStats {
+    /// Total accesses.
+    pub fn total(&self) -> u64 {
+        self.reads + self.writes
+    }
+    /// Accumulate another counter set (used by the SoC energy roll-up).
+    pub fn add(&mut self, other: &MemStats) {
+        self.reads += other.reads;
+        self.writes += other.writes;
+    }
+}
+
+/// Kind of memory macro, used by the energy/area models to pick constants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MacroKind {
+    /// Foundry single-port 6T SRAM, 32 KiB (the reference bank).
+    Sram32k,
+    /// 16 KiB single-port SRAM (NM-Caesar internal banks).
+    Sram16k,
+    /// 8 KiB single-port SRAM (NM-Carus VRF banks).
+    Sram8k,
+    /// 512 B register-file macro (NM-Carus eMEM).
+    RegFile512,
+    /// Embedded flash/ROM (weight storage for the AD app).
+    Rom,
+}
+
+impl MacroKind {
+    /// Capacity in bytes (Rom is unboundedly sized by its contents).
+    pub fn capacity(self) -> u32 {
+        match self {
+            MacroKind::Sram32k => 32 * 1024,
+            MacroKind::Sram16k => 16 * 1024,
+            MacroKind::Sram8k => 8 * 1024,
+            MacroKind::RegFile512 => 512,
+            MacroKind::Rom => u32::MAX,
+        }
+    }
+}
+
+/// A single-port memory bank (SRAM / register file / ROM).
+#[derive(Debug, Clone)]
+pub struct Bank {
+    pub kind: MacroKind,
+    data: Vec<u8>,
+    pub stats: MemStats,
+}
+
+impl Bank {
+    /// Create a zero-initialized bank of the macro's natural capacity.
+    pub fn new(kind: MacroKind) -> Self {
+        let cap = if kind == MacroKind::Rom { 0 } else { kind.capacity() as usize };
+        Bank { kind, data: vec![0; cap], stats: MemStats::default() }
+    }
+
+    /// Create a ROM from contents.
+    pub fn rom(contents: Vec<u8>) -> Self {
+        Bank { kind: MacroKind::Rom, data: contents, stats: MemStats::default() }
+    }
+
+    /// Size in bytes.
+    pub fn len(&self) -> u32 {
+        self.data.len() as u32
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Read `size` ∈ {1,2,4} bytes at `off`, zero-extended. Counts one access.
+    #[inline]
+    pub fn read(&mut self, off: u32, size: u32) -> u32 {
+        self.stats.reads += 1;
+        self.peek(off, size)
+    }
+
+    /// Read without counting an access (debug/verification path).
+    #[inline]
+    pub fn peek(&self, off: u32, size: u32) -> u32 {
+        let o = off as usize;
+        match size {
+            1 => self.data[o] as u32,
+            2 => u16::from_le_bytes([self.data[o], self.data[o + 1]]) as u32,
+            4 => u32::from_le_bytes([self.data[o], self.data[o + 1], self.data[o + 2], self.data[o + 3]]),
+            _ => panic!("unsupported access size {size}"),
+        }
+    }
+
+    /// Write `size` ∈ {1,2,4} bytes at `off`. Counts one access.
+    #[inline]
+    pub fn write(&mut self, off: u32, size: u32, val: u32) {
+        self.stats.writes += 1;
+        self.poke(off, size, val);
+    }
+
+    /// Write without counting an access (initialization path).
+    #[inline]
+    pub fn poke(&mut self, off: u32, size: u32, val: u32) {
+        let o = off as usize;
+        match size {
+            1 => self.data[o] = val as u8,
+            2 => self.data[o..o + 2].copy_from_slice(&(val as u16).to_le_bytes()),
+            4 => self.data[o..o + 4].copy_from_slice(&val.to_le_bytes()),
+            _ => panic!("unsupported access size {size}"),
+        }
+    }
+
+    /// Bulk-load bytes at `off` without counting accesses (program load,
+    /// dataset initialization — the paper embeds inputs in the firmware).
+    pub fn load(&mut self, off: u32, bytes: &[u8]) {
+        let o = off as usize;
+        self.data[o..o + bytes.len()].copy_from_slice(bytes);
+    }
+
+    /// Snapshot a byte range without counting accesses.
+    pub fn dump(&self, off: u32, len: u32) -> Vec<u8> {
+        self.data[off as usize..(off + len) as usize].to_vec()
+    }
+
+    /// Reset counters (between benchmark phases).
+    pub fn reset_stats(&mut self) {
+        self.stats = MemStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rw_all_sizes_little_endian() {
+        let mut b = Bank::new(MacroKind::Sram32k);
+        b.write(0x100, 4, 0xdead_beef);
+        assert_eq!(b.read(0x100, 1), 0xef);
+        assert_eq!(b.read(0x101, 1), 0xbe);
+        assert_eq!(b.read(0x100, 2), 0xbeef);
+        assert_eq!(b.read(0x102, 2), 0xdead);
+        assert_eq!(b.read(0x100, 4), 0xdead_beef);
+        assert_eq!(b.stats, MemStats { reads: 5, writes: 1 });
+    }
+
+    #[test]
+    fn peek_poke_do_not_count() {
+        let mut b = Bank::new(MacroKind::Sram8k);
+        b.poke(0, 4, 42);
+        assert_eq!(b.peek(0, 4), 42);
+        assert_eq!(b.stats.total(), 0);
+    }
+
+    #[test]
+    fn load_and_dump() {
+        let mut b = Bank::new(MacroKind::RegFile512);
+        b.load(16, &[1, 2, 3, 4]);
+        assert_eq!(b.dump(16, 4), vec![1, 2, 3, 4]);
+        assert_eq!(b.peek(16, 4), 0x0403_0201);
+    }
+
+    #[test]
+    fn subword_write_preserves_neighbors() {
+        let mut b = Bank::new(MacroKind::Sram16k);
+        b.poke(8, 4, 0xffff_ffff);
+        b.write(9, 1, 0x00);
+        assert_eq!(b.peek(8, 4), 0xffff_00ff);
+        b.write(10, 2, 0x1234);
+        assert_eq!(b.peek(8, 4), 0x1234_00ff);
+    }
+
+    #[test]
+    fn rom_from_contents() {
+        let b = Bank::rom(vec![9, 8, 7, 6]);
+        assert_eq!(b.len(), 4);
+        assert_eq!(b.peek(0, 4), 0x0607_0809);
+    }
+}

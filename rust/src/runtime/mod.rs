@@ -1,0 +1,127 @@
+//! PJRT golden-model runtime: loads the AOT-compiled HLO artifacts
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and executes
+//! them on the XLA CPU client.
+//!
+//! This is the bridge that closes the three-layer loop: the JAX/Pallas
+//! kernels (Layers 1–2) are the bit-exact functional oracles for the
+//! simulated hardware (Layer 3). Python never runs at simulation time —
+//! only the serialized HLO does.
+//!
+//! Interchange conventions (see `python/compile/aot.py`):
+//! - HLO **text**, parsed with `HloModuleProto::from_text_file` (jax ≥ 0.5
+//!   emits 64-bit instruction ids that xla_extension 0.5.1 rejects in
+//!   proto form; the text parser reassigns ids).
+//! - All artifact interfaces are int32 tensors; results are 1-tuples.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Where the artifacts live: `$NMC_ARTIFACTS` or `<repo>/artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("NMC_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    // Relative to the crate root (tests/benches run from there).
+    let candidates = [Path::new("artifacts"), Path::new("../artifacts")];
+    for c in candidates {
+        if c.exists() {
+            return c.to_path_buf();
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+/// True if the artifact set has been built (`make artifacts`).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+/// An int32 tensor argument.
+#[derive(Debug, Clone)]
+pub struct TensorI32 {
+    pub data: Vec<i32>,
+    pub shape: Vec<i64>,
+}
+
+impl TensorI32 {
+    pub fn new(data: Vec<i32>, shape: &[i64]) -> Self {
+        assert_eq!(data.len() as i64, shape.iter().product::<i64>());
+        TensorI32 { data, shape: shape.to_vec() }
+    }
+    /// From sign-extended kernel elements (the simulator's canonical form).
+    pub fn from_elems(elems: &[i64], shape: &[i64]) -> Self {
+        Self::new(elems.iter().map(|&v| v as i32).collect(), shape)
+    }
+}
+
+/// The PJRT CPU runtime with a compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, cache: HashMap::new(), dir: artifacts_dir() })
+    }
+
+    /// Number of PJRT devices (sanity/introspection).
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .map_err(|e| anyhow!("loading {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute artifact `name` with int32 inputs; returns the flattened
+    /// int32 output of the 1-tuple result.
+    pub fn execute(&mut self, name: &str, inputs: &[TensorI32]) -> Result<Vec<i32>> {
+        self.load(name)?;
+        let exe = &self.cache[name];
+        let mut lits = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            let lit = xla::Literal::vec1(&t.data)
+                .reshape(&t.shape)
+                .map_err(|e| anyhow!("reshape {:?}: {e:?}", t.shape))?;
+            lits.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        out.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifacts_dir_resolves() {
+        let d = artifacts_dir();
+        assert!(d.ends_with("artifacts"));
+    }
+
+    // Execution tests live in rust/tests/golden_runtime.rs (they require
+    // `make artifacts` to have run).
+}

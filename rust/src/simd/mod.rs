@@ -1,0 +1,298 @@
+//! Packed-SIMD (SWAR) word semantics shared by every datapath in the system.
+//!
+//! NM-Caesar's ALU (§III-A2), NM-Carus's lane ALUs (§III-B2) and the Xcv
+//! DSP extension all operate on 32-bit words holding 4×8-bit, 2×16-bit or
+//! 1×32-bit integer elements. Centralizing the element algebra here means
+//! the simulator, the golden Rust references and the instruction semantics
+//! can never drift apart — and the property tests in
+//! `rust/tests/prop_invariants.rs` verify each packed op against a
+//! per-element scalar loop.
+
+use crate::isa::Sew;
+
+/// Element-wise view of a 32-bit word.
+pub mod elem {
+    use super::Sew;
+
+    /// Extract element `i` of `w` as a sign-extended i32.
+    #[inline]
+    pub fn get_signed(w: u32, i: u32, sew: Sew) -> i32 {
+        match sew {
+            Sew::E8 => (w >> (8 * i)) as u8 as i8 as i32,
+            Sew::E16 => (w >> (16 * i)) as u16 as i16 as i32,
+            Sew::E32 => w as i32,
+        }
+    }
+
+    /// Extract element `i` of `w` zero-extended.
+    #[inline]
+    pub fn get_unsigned(w: u32, i: u32, sew: Sew) -> u32 {
+        match sew {
+            Sew::E8 => (w >> (8 * i)) as u8 as u32,
+            Sew::E16 => (w >> (16 * i)) as u16 as u32,
+            Sew::E32 => w,
+        }
+    }
+
+    /// Replace element `i` of `w` with the low bits of `v`.
+    #[inline]
+    pub fn set(w: u32, i: u32, sew: Sew, v: u32) -> u32 {
+        match sew {
+            Sew::E8 => {
+                let sh = 8 * i;
+                (w & !(0xffu32 << sh)) | ((v & 0xff) << sh)
+            }
+            Sew::E16 => {
+                let sh = 16 * i;
+                (w & !(0xffffu32 << sh)) | ((v & 0xffff) << sh)
+            }
+            Sew::E32 => v,
+        }
+    }
+
+    /// Build a word by broadcasting (splatting) `v` into every element.
+    #[inline]
+    pub fn splat(v: u32, sew: Sew) -> u32 {
+        match sew {
+            Sew::E8 => {
+                let b = v & 0xff;
+                b | (b << 8) | (b << 16) | (b << 24)
+            }
+            Sew::E16 => {
+                let h = v & 0xffff;
+                h | (h << 16)
+            }
+            Sew::E32 => v,
+        }
+    }
+}
+
+/// Packed word operations. Each function computes, element by element, the
+/// obvious scalar operation with wrap-around integer semantics (matching
+/// the 2's-complement hardware datapath).
+pub mod swar {
+    use super::{elem, Sew};
+
+    /// Apply a scalar binary op element-wise. The building block for all
+    /// packed ops; the per-op wrappers below exist so hot paths stay
+    /// monomorphized and readable.
+    #[inline]
+    pub fn map2(a: u32, b: u32, sew: Sew, f: impl Fn(i32, i32) -> i32) -> u32 {
+        match sew {
+            Sew::E32 => f(a as i32, b as i32) as u32,
+            _ => {
+                let mut out = 0u32;
+                for i in 0..sew.lanes() {
+                    let r = f(elem::get_signed(a, i, sew), elem::get_signed(b, i, sew));
+                    out = elem::set(out, i, sew, r as u32);
+                }
+                out
+            }
+        }
+    }
+
+    /// Packed wrapping addition.
+    #[inline]
+    pub fn add(a: u32, b: u32, sew: Sew) -> u32 {
+        match sew {
+            Sew::E32 => a.wrapping_add(b),
+            // Classic SWAR: clear each element's MSB, add, restore carries.
+            Sew::E16 | Sew::E8 => {
+                let (mask_lo, mask_hi) = if sew == Sew::E8 {
+                    (0x7f7f_7f7fu32, 0x8080_8080u32)
+                } else {
+                    (0x7fff_7fffu32, 0x8000_8000u32)
+                };
+                let s = (a & mask_lo).wrapping_add(b & mask_lo);
+                s ^ ((a ^ b) & mask_hi)
+            }
+        }
+    }
+
+    /// Packed wrapping subtraction.
+    #[inline]
+    pub fn sub(a: u32, b: u32, sew: Sew) -> u32 {
+        map2(a, b, sew, |x, y| x.wrapping_sub(y))
+    }
+
+    /// Packed truncating multiplication (low `sew` bits of the product).
+    #[inline]
+    pub fn mul(a: u32, b: u32, sew: Sew) -> u32 {
+        map2(a, b, sew, |x, y| x.wrapping_mul(y))
+    }
+
+    /// Packed signed minimum.
+    #[inline]
+    pub fn min_signed(a: u32, b: u32, sew: Sew) -> u32 {
+        map2(a, b, sew, |x, y| x.min(y))
+    }
+
+    /// Packed signed maximum.
+    #[inline]
+    pub fn max_signed(a: u32, b: u32, sew: Sew) -> u32 {
+        map2(a, b, sew, |x, y| x.max(y))
+    }
+
+    /// Packed unsigned minimum.
+    #[inline]
+    pub fn min_unsigned(a: u32, b: u32, sew: Sew) -> u32 {
+        let mut out = 0u32;
+        for i in 0..sew.lanes() {
+            let r = elem::get_unsigned(a, i, sew).min(elem::get_unsigned(b, i, sew));
+            out = elem::set(out, i, sew, r);
+        }
+        out
+    }
+
+    /// Packed unsigned maximum.
+    #[inline]
+    pub fn max_unsigned(a: u32, b: u32, sew: Sew) -> u32 {
+        let mut out = 0u32;
+        for i in 0..sew.lanes() {
+            let r = elem::get_unsigned(a, i, sew).max(elem::get_unsigned(b, i, sew));
+            out = elem::set(out, i, sew, r);
+        }
+        out
+    }
+
+    /// Packed logical shift left. The shift amount for each element is the
+    /// corresponding element of `b`, masked to the element width.
+    #[inline]
+    pub fn sll(a: u32, b: u32, sew: Sew) -> u32 {
+        let m = sew.bits() - 1;
+        map2(a, b, sew, |x, y| ((x as u32) << (y as u32 & m)) as i32)
+    }
+
+    /// Packed logical shift right (zero fill within each element).
+    #[inline]
+    pub fn srl(a: u32, b: u32, sew: Sew) -> u32 {
+        let m = sew.bits() - 1;
+        let mut out = 0u32;
+        for i in 0..sew.lanes() {
+            let sh = elem::get_unsigned(b, i, sew) & m;
+            out = elem::set(out, i, sew, elem::get_unsigned(a, i, sew) >> sh);
+        }
+        out
+    }
+
+    /// Packed arithmetic shift right (sign fill within each element).
+    #[inline]
+    pub fn sra(a: u32, b: u32, sew: Sew) -> u32 {
+        let m = sew.bits() - 1;
+        map2(a, b, sew, |x, y| x >> (y as u32 & m))
+    }
+
+    /// Sum of signed element-wise products of one word pair (the Xcv
+    /// `cv.sdotsp` / NM-Caesar `DOT` primitive). Returns the full i32 sum.
+    #[inline]
+    pub fn dotp_signed(a: u32, b: u32, sew: Sew) -> i32 {
+        let mut acc = 0i32;
+        for i in 0..sew.lanes() {
+            acc = acc.wrapping_add(
+                elem::get_signed(a, i, sew).wrapping_mul(elem::get_signed(b, i, sew)),
+            );
+        }
+        acc
+    }
+
+    /// Packed element-wise MAC: `acc[i] + a[i]*b[i]` per element (the
+    /// NM-Caesar `MAC` and NM-Carus `vmacc` primitive).
+    #[inline]
+    pub fn mac(acc: u32, a: u32, b: u32, sew: Sew) -> u32 {
+        match sew {
+            Sew::E32 => (acc as i32).wrapping_add((a as i32).wrapping_mul(b as i32)) as u32,
+            _ => {
+                let mut out = 0u32;
+                for i in 0..sew.lanes() {
+                    let r = elem::get_signed(acc, i, sew).wrapping_add(
+                        elem::get_signed(a, i, sew).wrapping_mul(elem::get_signed(b, i, sew)),
+                    );
+                    out = elem::set(out, i, sew, r as u32);
+                }
+                out
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_swar_matches_scalar() {
+        // SWAR fast path vs map2 reference over interesting patterns.
+        let pats = [0u32, 0xffff_ffff, 0x7f80_017f, 0x8000_0001, 0x1234_5678, 0xdead_beef];
+        for &a in &pats {
+            for &b in &pats {
+                for sew in Sew::ALL {
+                    let fast = swar::add(a, b, sew);
+                    let slow = swar::map2(a, b, sew, |x, y| x.wrapping_add(y));
+                    assert_eq!(fast, slow, "add {a:#x}+{b:#x} {sew}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn elem_set_get_roundtrip() {
+        for sew in Sew::ALL {
+            for i in 0..sew.lanes() {
+                let w = elem::set(0xaaaa_aaaa, i, sew, 0x5b);
+                assert_eq!(elem::get_unsigned(w, i, sew), 0x5b);
+            }
+        }
+    }
+
+    #[test]
+    fn splat_fills_all_lanes() {
+        assert_eq!(elem::splat(0xab, Sew::E8), 0xabab_abab);
+        assert_eq!(elem::splat(0x1234, Sew::E16), 0x1234_1234);
+        assert_eq!(elem::splat(0xdeadbeef, Sew::E32), 0xdead_beef);
+    }
+
+    #[test]
+    fn mul_truncates_per_element() {
+        // 8-bit: 16*16 = 256 → truncates to 0.
+        let a = elem::splat(16, Sew::E8);
+        assert_eq!(swar::mul(a, a, Sew::E8), 0);
+        // 16-bit keeps it: 256 fits.
+        let a = elem::splat(16, Sew::E16);
+        assert_eq!(swar::mul(a, a, Sew::E16), elem::splat(256, Sew::E16));
+    }
+
+    #[test]
+    fn shifts_mask_amounts() {
+        // Shift amount masked to element width: 8-bit shift by 9 == shift by 1.
+        let a = elem::splat(0x40, Sew::E8);
+        let nine = elem::splat(9, Sew::E8);
+        let one = elem::splat(1, Sew::E8);
+        assert_eq!(swar::sll(a, nine, Sew::E8), swar::sll(a, one, Sew::E8));
+        // sra keeps sign within element.
+        let neg = elem::splat(0x80, Sew::E8); // -128 per lane
+        assert_eq!(swar::sra(neg, one, Sew::E8), elem::splat(0xc0, Sew::E8)); // -64
+        // srl zero-fills.
+        assert_eq!(swar::srl(neg, one, Sew::E8), elem::splat(0x40, Sew::E8));
+    }
+
+    #[test]
+    fn mac_per_element() {
+        let acc = elem::splat(10, Sew::E16);
+        let a = elem::splat(3, Sew::E16);
+        let b = elem::splat(4, Sew::E16);
+        assert_eq!(swar::mac(acc, a, b, Sew::E16), elem::splat(22, Sew::E16));
+        // Negative products.
+        let a = elem::splat((-3i32) as u32, Sew::E8);
+        let b = elem::splat(4, Sew::E8);
+        assert_eq!(swar::mac(0, a, b, Sew::E8), elem::splat((-12i32) as u32, Sew::E8));
+    }
+
+    #[test]
+    fn dotp_all_widths() {
+        let a = 0x0102_0304u32; // bytes 4,3,2,1
+        let b = 0x0101_0101u32;
+        assert_eq!(swar::dotp_signed(a, b, Sew::E8), 10);
+        assert_eq!(swar::dotp_signed(a, b, Sew::E16), (0x0304 * 0x0101 + 0x0102 * 0x0101));
+        assert_eq!(swar::dotp_signed(2, 3, Sew::E32), 6);
+    }
+}

@@ -1,0 +1,160 @@
+//! Calibration lock: the simulator must reproduce the paper's anchor
+//! numbers within the documented tolerances (DESIGN.md §5).
+//!
+//! These tests are the contract behind every table: if a model change
+//! drifts the calibration, they fail loudly with the paper value attached.
+
+use nmc::energy::params::CYCLE_NS;
+use nmc::isa::Sew;
+use nmc::kernels::{run, Family, Kernel, Target};
+
+fn rel_err(measured: f64, paper: f64) -> f64 {
+    (measured - paper).abs() / paper
+}
+
+#[test]
+fn cpu_elementwise_baselines_match_paper_cycles() {
+    // Table V baseline columns (cycles/output).
+    let cases = [
+        (Family::Xor, Sew::E8, 2.5, 0.08),
+        (Family::Xor, Sew::E32, 10.0, 0.05),
+        (Family::Add, Sew::E8, 4.0, 0.15),
+        (Family::Add, Sew::E32, 10.0, 0.05),
+        (Family::Mul, Sew::E16, 11.0, 0.12),
+    ];
+    for (fam, sew, paper, tol) in cases {
+        let k = Kernel::paper_default(fam, Target::Cpu, sew);
+        let res = run(Target::Cpu, k, sew, 1);
+        let cpo = res.cycles_per_output();
+        assert!(
+            rel_err(cpo, paper) < tol,
+            "{fam:?} {sew}: {cpo:.2} c/out vs paper {paper}"
+        );
+    }
+}
+
+#[test]
+fn cpu_add32_energy_anchor() {
+    // The master energy anchor: 32-bit element-wise add ≈ 278 pJ/output.
+    let res = run(Target::Cpu, Kernel::Add { n: 1280 }, Sew::E32, 2);
+    let pj = res.energy_per_output_pj();
+    assert!(rel_err(pj, 278.0) < 0.2, "add32: {pj:.1} pJ/out vs paper 278");
+}
+
+#[test]
+fn caesar_matmul_cycles_match_paper() {
+    // Paper: 4 cycles/output at 8 bit (2 micro-ops), 16 at 32 bit.
+    let res = run(Target::Caesar, Kernel::Matmul { p: 512 }, Sew::E8, 3);
+    assert!(rel_err(res.cycles_per_output(), 4.0) < 0.1, "{}", res.cycles_per_output());
+    let res = run(Target::Caesar, Kernel::Matmul { p: 128 }, Sew::E32, 3);
+    assert!(rel_err(res.cycles_per_output(), 16.0) < 0.1, "{}", res.cycles_per_output());
+}
+
+#[test]
+fn carus_matmul_saturation_matches_fig12() {
+    // Fig. 12: NM-Carus saturates at 0.48 output/cycle (8-bit, large P);
+    // NM-Caesar at 0.25.
+    let carus = run(Target::Carus, Kernel::Matmul { p: 1024 }, Sew::E8, 4);
+    let opc = carus.outputs as f64 / carus.cycles as f64;
+    assert!(rel_err(opc, 0.48) < 0.07, "carus: {opc:.3} out/cycle vs paper 0.48");
+    let caesar = run(Target::Caesar, Kernel::Matmul { p: 512 }, Sew::E8, 4);
+    let opc = caesar.outputs as f64 / caesar.cycles as f64;
+    assert!(rel_err(opc, 0.25) < 0.05, "caesar: {opc:.3} out/cycle vs paper 0.25");
+}
+
+#[test]
+fn carus_macs_per_cycle_per_lane() {
+    // §III-B2: 1 / 0.67 / 0.33 MAC/cycle/lane. Measured end-to-end on the
+    // saturated matmul (8 MACs per output).
+    for (sew, p, paper, tol) in [
+        (Sew::E8, 1024u32, 1.0, 0.1),
+        (Sew::E16, 512, 0.67, 0.1),
+        (Sew::E32, 256, 0.33, 0.35), // our 32-bit MAC is 3 cyc/word vs paper's 4 (documented)
+    ] {
+        let res = run(Target::Carus, Kernel::Matmul { p }, sew, 4);
+        let macs = res.outputs as f64 * 8.0;
+        let mpc = macs / res.cycles as f64 / 4.0; // 4 lanes
+        assert!(
+            rel_err(mpc, paper) < tol,
+            "{sew}: {mpc:.2} MAC/cycle/lane vs paper {paper}"
+        );
+    }
+}
+
+#[test]
+fn fig13_breakdown_shapes() {
+    // CPU case: memory ≈ CPU. Caesar case: memory dominates (half of it
+    // the micro-op stream). Carus case: VRF dominates the macro.
+    let cpu = run(Target::Cpu, Kernel::paper_default(Family::Conv2d, Target::Cpu, Sew::E8), Sew::E8, 5);
+    let b = &cpu.energy;
+    let ratio = b.memory / b.cpu;
+    assert!((0.6..1.6).contains(&ratio), "cpu conv: mem/cpu = {ratio:.2}");
+
+    let czr = run(
+        Target::Caesar,
+        Kernel::paper_default(Family::Conv2d, Target::Caesar, Sew::E8),
+        Sew::E8,
+        5,
+    );
+    let b = &czr.energy;
+    let mem_share = b.memory / b.total();
+    assert!(
+        (0.45..0.85).contains(&mem_share),
+        "caesar conv: memory share = {mem_share:.2} (paper ~0.7)"
+    );
+}
+
+#[test]
+fn ad_single_core_cycles_match_paper() {
+    // Table VI: 561e3 cycles (CV32E40P, RV32IMCXcv), ±12 %.
+    let m = nmc::apps::anomaly::model(2);
+    let res = nmc::apps::anomaly::run_cpu(&m);
+    assert!(
+        rel_err(res.cycles as f64, 561.0e3) < 0.12,
+        "AD single-core: {} cycles vs paper 561e3",
+        res.cycles
+    );
+}
+
+#[test]
+fn ad_nmc_ratios_match_paper_shape() {
+    let m = nmc::apps::anomaly::model(2);
+    let single = nmc::apps::anomaly::run_cpu(&m);
+    let caesar = nmc::apps::anomaly::run_caesar(&m);
+    let carus = nmc::apps::anomaly::run_carus(&m);
+    let czr_spd = single.cycles as f64 / caesar.cycles as f64;
+    let carus_spd = single.cycles as f64 / carus.cycles as f64;
+    // Paper: 1.29x and 3.55x. Shape requirements: Caesar between 1x and
+    // 2x (slower than dual-core); Carus between 2.8x and 5.2x.
+    assert!((1.0..2.0).contains(&czr_spd), "caesar: {czr_spd:.2}x (paper 1.29x)");
+    assert!((2.8..5.2).contains(&carus_spd), "carus: {carus_spd:.2}x (paper 3.55x)");
+    // Energy ordering: Carus < Caesar < single (Table VI).
+    assert!(carus.energy_uj < caesar.energy_uj);
+    assert!(caesar.energy_uj < single.energy_uj);
+}
+
+#[test]
+fn system_power_in_plausible_mw_range() {
+    // Sanity: an edge MCU at 250 MHz burns single-digit mW in this class.
+    let res = run(Target::Cpu, Kernel::Add { n: 1280 }, Sew::E32, 6);
+    let mw = res.energy.total() / (res.cycles as f64 * CYCLE_NS);
+    assert!((3.0..15.0).contains(&mw), "avg power = {mw:.2} mW");
+}
+
+#[test]
+fn headline_conclusion_ratios() {
+    // §VI: "timing speed-up of up to 25.8x and 50.0x, energy reduction of
+    // 23.2x and 33.1x ... in a matrix multiplication kernel". Our baselines
+    // are slightly faster than GCC's, so we accept >=70 % of the headline.
+    let cpu = run(Target::Cpu, Kernel::Matmul { p: 1024 }, Sew::E8, 7);
+    let czr = run(Target::Caesar, Kernel::Matmul { p: 512 }, Sew::E8, 7);
+    let car = run(Target::Carus, Kernel::Matmul { p: 1024 }, Sew::E8, 7);
+    let czr_spd = cpu.cycles_per_output() / czr.cycles_per_output();
+    let car_spd = cpu.cycles_per_output() / car.cycles_per_output();
+    assert!(czr_spd > 0.7 * 25.8, "caesar matmul speedup {czr_spd:.1}");
+    assert!(car_spd > 0.7 * 50.0, "carus matmul speedup {car_spd:.1}");
+    let czr_e = cpu.energy_per_output_pj() / czr.energy_per_output_pj();
+    let car_e = cpu.energy_per_output_pj() / car.energy_per_output_pj();
+    assert!(czr_e > 0.6 * 23.2, "caesar matmul energy gain {czr_e:.1}");
+    assert!(car_e > 0.6 * 33.1, "carus matmul energy gain {car_e:.1}");
+}

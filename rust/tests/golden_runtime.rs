@@ -1,0 +1,167 @@
+//! Golden-runtime cross-checks: the simulated hardware vs the AOT-compiled
+//! JAX/Pallas artifacts, executed via PJRT.
+//!
+//! The chain verified here:
+//!   simulator (cycle model, packed datapaths)
+//!     == Rust golden reference (kernels::golden)
+//!     == Pallas kernels (python, AOT-lowered)
+//! Each test generates a workload, runs the artifact through the PJRT CPU
+//! client, and compares bit-exactly with the Rust golden expectation — the
+//! same expectation every simulator target is asserted against in
+//! `kernels::run`. Requires `make artifacts`; tests skip gracefully when
+//! the artifacts have not been built.
+
+use nmc::isa::Sew;
+use nmc::kernels::golden::{self, unpack};
+use nmc::kernels::{Family, Kernel, Target};
+use nmc::runtime::{artifacts_available, Runtime, TensorI32};
+
+fn sew_name(sew: Sew) -> &'static str {
+    match sew {
+        Sew::E8 => "e8",
+        Sew::E16 => "e16",
+        Sew::E32 => "e32",
+    }
+}
+
+fn need_runtime() -> Option<Runtime> {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new().expect("PJRT CPU client"))
+}
+
+fn elems(bytes: &[u8], sew: Sew) -> Vec<i64> {
+    unpack(bytes, sew)
+}
+
+#[test]
+fn elementwise_artifacts_match_golden() {
+    let Some(mut rt) = need_runtime() else { return };
+    for sew in Sew::ALL {
+        for (fam, name) in [(Family::Xor, "xor"), (Family::Add, "add"), (Family::Mul, "mul")] {
+            let kernel = Kernel::paper_default(fam, Target::Cpu, sew);
+            let (Kernel::Xor { n } | Kernel::Add { n } | Kernel::Mul { n }) = kernel else {
+                unreachable!()
+            };
+            let data = golden::generate(kernel, sew, 42);
+            let a = TensorI32::from_elems(&elems(&data.a, sew), &[n as i64]);
+            let b = TensorI32::from_elems(&elems(&data.b, sew), &[n as i64]);
+            let out = rt
+                .execute(&format!("{name}_{}", sew_name(sew)), &[a, b])
+                .expect("artifact executes");
+            let want: Vec<i32> = elems(&data.expect, sew).iter().map(|&v| v as i32).collect();
+            assert_eq!(out, want, "{name} {sew}");
+        }
+    }
+}
+
+#[test]
+fn matmul_and_gemm_artifacts_match_golden() {
+    let Some(mut rt) = need_runtime() else { return };
+    for sew in Sew::ALL {
+        let kernel = Kernel::paper_default(Family::Matmul, Target::Cpu, sew);
+        let Kernel::Matmul { p } = kernel else { unreachable!() };
+        let data = golden::generate(kernel, sew, 7);
+        let a = TensorI32::from_elems(&elems(&data.a, sew), &[8, 8]);
+        let b = TensorI32::from_elems(&elems(&data.b, sew), &[8, p as i64]);
+        let out = rt.execute(&format!("matmul_{}", sew_name(sew)), &[a, b]).unwrap();
+        let want: Vec<i32> = elems(&data.expect, sew).iter().map(|&v| v as i32).collect();
+        assert_eq!(out, want, "matmul {sew}");
+
+        let kernel = Kernel::paper_default(Family::Gemm, Target::Cpu, sew);
+        let Kernel::Gemm { p } = kernel else { unreachable!() };
+        let data = golden::generate(kernel, sew, 8);
+        let a = TensorI32::from_elems(&elems(&data.a, sew), &[8, 8]);
+        let b = TensorI32::from_elems(&elems(&data.b, sew), &[8, p as i64]);
+        let c = TensorI32::from_elems(&elems(&data.c, sew), &[8, p as i64]);
+        let out = rt.execute(&format!("gemm_{}", sew_name(sew)), &[a, b, c]).unwrap();
+        let want: Vec<i32> = elems(&data.expect, sew).iter().map(|&v| v as i32).collect();
+        assert_eq!(out, want, "gemm {sew}");
+    }
+}
+
+#[test]
+fn conv_relu_maxpool_artifacts_match_golden() {
+    let Some(mut rt) = need_runtime() else { return };
+    for sew in Sew::ALL {
+        // conv2d (CPU shapes: f = 3).
+        let kernel = Kernel::paper_default(Family::Conv2d, Target::Cpu, sew);
+        let Kernel::Conv2d { n, f } = kernel else { unreachable!() };
+        assert_eq!(f, 3);
+        let data = golden::generate(kernel, sew, 9);
+        let img = TensorI32::from_elems(&elems(&data.a, sew), &[8, n as i64]);
+        let filt = TensorI32::from_elems(&elems(&data.b, sew), &[3, 3]);
+        let out = rt.execute(&format!("conv2d_{}", sew_name(sew)), &[img, filt]).unwrap();
+        let want: Vec<i32> = elems(&data.expect, sew).iter().map(|&v| v as i32).collect();
+        assert_eq!(out, want, "conv2d {sew}");
+
+        // relu / leaky.
+        for (fam, name) in [(Family::Relu, "relu"), (Family::LeakyRelu, "leaky_relu")] {
+            let kernel = Kernel::paper_default(fam, Target::Cpu, sew);
+            let (Kernel::Relu { n } | Kernel::LeakyRelu { n }) = kernel else { unreachable!() };
+            let data = golden::generate(kernel, sew, 10);
+            let a = TensorI32::from_elems(&elems(&data.a, sew), &[n as i64]);
+            let out = rt.execute(&format!("{name}_{}", sew_name(sew)), &[a]).unwrap();
+            let want: Vec<i32> = elems(&data.expect, sew).iter().map(|&v| v as i32).collect();
+            assert_eq!(out, want, "{name} {sew}");
+        }
+
+        // maxpool.
+        let kernel = Kernel::paper_default(Family::Maxpool, Target::Cpu, sew);
+        let Kernel::Maxpool { n } = kernel else { unreachable!() };
+        let data = golden::generate(kernel, sew, 11);
+        let img = TensorI32::from_elems(&elems(&data.a, sew), &[16, n as i64]);
+        let out = rt.execute(&format!("maxpool_{}", sew_name(sew)), &[img]).unwrap();
+        let want: Vec<i32> = elems(&data.expect, sew).iter().map(|&v| v as i32).collect();
+        assert_eq!(out, want, "maxpool {sew}");
+    }
+}
+
+#[test]
+fn ad_autoencoder_artifact_matches_simulator_and_golden() {
+    let Some(mut rt) = need_runtime() else { return };
+    use nmc::apps::anomaly;
+    let m = anomaly::model(2);
+    // Inputs as i32 tensors.
+    let mut inputs =
+        vec![TensorI32::new(m.input.iter().map(|&v| v as i32).collect(), &[640])];
+    for (l, &(ins, outs, _)) in anomaly::network().iter().enumerate() {
+        inputs.push(TensorI32::new(
+            m.weights[l].iter().map(|&v| v as i32).collect(),
+            &[outs as i64, ins as i64],
+        ));
+    }
+    let xla_out = rt.execute("ad_autoencoder", &inputs).expect("AD artifact");
+    let golden: Vec<i32> = anomaly::golden_forward(&m).iter().map(|&v| v as i32).collect();
+    assert_eq!(xla_out, golden, "XLA vs Rust golden");
+
+    // And the full simulated NM-Carus system produces the same bits.
+    let sim = anomaly::run_carus(&m);
+    let sim_out: Vec<i32> = sim.output.iter().map(|&v| v as i32).collect();
+    assert_eq!(sim_out, xla_out, "simulator vs XLA artifact");
+}
+
+#[test]
+fn simulator_outputs_equal_artifacts_for_random_matmuls() {
+    // Property-style: several random seeds; simulator (all three targets)
+    // vs the XLA artifact on the paper matmul shape.
+    let Some(mut rt) = need_runtime() else { return };
+    let sew = Sew::E8;
+    let kernel = Kernel::paper_default(Family::Matmul, Target::Cpu, sew);
+    let Kernel::Matmul { p } = kernel else { unreachable!() };
+    for seed in [1u64, 99, 12345] {
+        let data = golden::generate(kernel, sew, seed);
+        let a = TensorI32::from_elems(&elems(&data.a, sew), &[8, 8]);
+        let b = TensorI32::from_elems(&elems(&data.b, sew), &[8, p as i64]);
+        let xla_out = rt.execute("matmul_e8", &[a, b]).unwrap();
+        // CPU + Carus targets run the same shape (Caesar uses smaller p —
+        // covered by its own golden checks in kernels::caesar tests).
+        for target in [Target::Cpu, Target::Carus] {
+            let res = nmc::kernels::run(target, kernel, sew, seed);
+            let sim: Vec<i32> = elems(&res.output, sew).iter().map(|&v| v as i32).collect();
+            assert_eq!(sim, xla_out, "{target:?} seed {seed}");
+        }
+    }
+}

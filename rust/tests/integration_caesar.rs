@@ -1,0 +1,114 @@
+//! NM-Caesar integration: the full Table V column at paper sizes, issue
+//! strategy ablation (host-driven vs DMA-streamed), and code-size metrics.
+
+use nmc::isa::Sew;
+use nmc::kernels::{golden, run, Family, Kernel, Target};
+
+#[test]
+fn full_table5_caesar_column_correct() {
+    // Every kernel family × width at paper sizes completes and matches the
+    // golden reference bit-exactly (the inner `run` asserts equality).
+    for family in Family::ALL {
+        for sew in Sew::ALL {
+            let k = Kernel::paper_default(family, Target::Caesar, sew);
+            let res = run(Target::Caesar, k, sew, 21);
+            assert!(res.cycles > 0 && res.outputs > 0, "{family:?} {sew}");
+        }
+    }
+}
+
+#[test]
+fn caesar_speedups_within_band_of_paper() {
+    // Spot-check improvement factors at full size (paper ±40 % band — our
+    // CPU baseline is slightly better than GCC's, see EXPERIMENTS.md).
+    let cases = [
+        (Family::Xor, Sew::E8, 5.0),
+        (Family::Mul, Sew::E8, 22.0),
+        (Family::Matmul, Sew::E8, 28.0),
+        (Family::Relu, Sew::E8, 26.0),
+        (Family::Conv2d, Sew::E32, 6.4),
+    ];
+    for (family, sew, paper) in cases {
+        let cpu = run(Target::Cpu, Kernel::paper_default(family, Target::Cpu, sew), sew, 3);
+        let czr = run(Target::Caesar, Kernel::paper_default(family, Target::Caesar, sew), sew, 3);
+        let spd = cpu.cycles_per_output() / czr.cycles_per_output();
+        assert!(
+            spd > paper * 0.6 && spd < paper * 1.4,
+            "{family:?} {sew}: {spd:.1}x vs paper {paper}x"
+        );
+    }
+}
+
+#[test]
+fn caesar_offload_overhead_is_small_and_constant() {
+    // Fig. 12 insight: NM-Caesar's offload overhead is a small constant
+    // (the paper quotes 5 cycles for the bare trigger; our measured region
+    // additionally includes DMA programming + wfi + mode toggles ≈ 100
+    // cycles of driver code), so the gain holds even for short tasks.
+    let r4 = run(Target::Caesar, Kernel::Matmul { p: 4 }, Sew::E8, 9);
+    let r8 = run(Target::Caesar, Kernel::Matmul { p: 8 }, Sew::E8, 9);
+    let r16 = run(Target::Caesar, Kernel::Matmul { p: 16 }, Sew::E8, 9);
+    // Compute scales linearly with P; the constant driver overhead is the
+    // intercept and must stay under ~120 cycles.
+    let per_p = (r16.cycles - r8.cycles) as f64 / 8.0;
+    let overhead = r4.cycles as f64 - 4.0 * per_p;
+    assert!(
+        (0.0..=120.0).contains(&overhead),
+        "offload overhead ≈ {overhead:.0} cycles (r4 = {})",
+        r4.cycles
+    );
+    // And tiny offloads still beat the CPU.
+    let cpu = run(Target::Cpu, Kernel::Matmul { p: 4 }, Sew::E8, 9);
+    assert!(r4.cycles < cpu.cycles, "caesar {} vs cpu {}", r4.cycles, cpu.cycles);
+}
+
+#[test]
+fn same_bank_penalty_visible_end_to_end() {
+    // Build two identical XOR streams, one with both operands in bank 0:
+    // the same-bank version must take ~1.5× the cycles.
+    use nmc::caesar::Caesar;
+    use nmc::caesar::isa::{encode, MicroOp, Op};
+    let mk = |same_bank: bool| -> u64 {
+        let mut c = Caesar::new();
+        let ops = 256;
+        for i in 0..ops {
+            while !c.ready() {
+                c.step();
+            }
+            let (s1, s2) = if same_bank { (i as u16, i as u16 + 1024) } else { (i as u16, 4096 + i as u16) };
+            c.issue(2048 + i, encode(&MicroOp { op: Op::Xor, src1: s1, src2: s2 }));
+            c.step();
+        }
+        while !c.ready() {
+            c.step();
+        }
+        c.stats.busy_cycles
+    };
+    let cross = mk(false);
+    let same = mk(true);
+    assert_eq!(cross, 512);
+    assert_eq!(same, 768);
+}
+
+#[test]
+fn stream_code_size_matches_model() {
+    // The DMA stream costs 8 bytes per micro-op — the code-size overhead
+    // the paper attributes to predefined command sequences (§I).
+    use nmc::caesar::compiler::CaesarProgram;
+    let mut p = CaesarProgram::new();
+    p.csrw(Sew::E8);
+    for i in 0..100 {
+        p.add(2048 + i, i, 4096 + i);
+    }
+    assert_eq!(p.code_bytes(), 101 * 8);
+}
+
+#[test]
+fn caesar_output_exact_across_seeds() {
+    for seed in [1u64, 2, 3, 4, 5] {
+        let k = Kernel::Gemm { p: 32 };
+        let data = golden::generate(k, Sew::E16, seed);
+        let res = nmc::kernels::caesar::run(k, Sew::E16, &data);
+        assert_eq!(res.output, data.expect, "seed {seed}");
+    }
+}

@@ -1,0 +1,221 @@
+//! System-level integration: bus contention, DMA/CPU interleavings, mode
+//! transparency, and failure injection.
+
+use nmc::asm::Asm;
+use nmc::bus::{periph, BANK_SIZE, CAESAR_BASE, CARUS_BASE, PERIPH_BASE};
+use nmc::isa::reg::*;
+use nmc::soc::{Halt, Soc};
+
+fn firmware(build: impl FnOnce(&mut Asm)) -> nmc::asm::Program {
+    let mut a = Asm::new(0);
+    build(&mut a);
+    a.assemble().unwrap()
+}
+
+#[test]
+fn nmc_macros_are_transparent_srams_in_memory_mode() {
+    // The paper's requirement (1): "functionally, it is part of the host
+    // system's memory space and should operate like a conventional memory".
+    // Write/read byte/half/word patterns over both macros and a real bank;
+    // results must be identical.
+    let mut soc = Soc::heeperator();
+    let bases = [BANK_SIZE, CAESAR_BASE, CARUS_BASE];
+    let fw = firmware(|a| {
+        for (i, &b) in bases.iter().enumerate() {
+            a.li(A0, b as i32)
+                .li(T0, 0x1234_5678)
+                .sw(T0, 0, A0)
+                .li(T0, 0xab)
+                .sb(T0, 1, A0)
+                .li(T0, 0xcdef_u32 as i32)
+                .sh(T0, 6, A0)
+                .lw(A1, 0, A0)
+                .sw(A1, 64 + 8 * i as i32, A0) // store readback nearby
+                .lhu(A2, 6, A0)
+                .sw(A2, 68 + 8 * i as i32, A0);
+        }
+        a.ebreak();
+    });
+    soc.load_firmware(&fw, 0);
+    let (halt, _) = soc.run(100_000);
+    assert_eq!(halt, Halt::Done);
+    let expect_word = 0x1234_ab78u32;
+    for &b in &bases {
+        let i = bases.iter().position(|&x| x == b).unwrap() as u32;
+        let w = u32::from_le_bytes(soc.dump(b + 64 + 8 * i, 4).try_into().unwrap());
+        let h = u32::from_le_bytes(soc.dump(b + 68 + 8 * i, 4).try_into().unwrap());
+        assert_eq!(w, expect_word, "word at {b:#x}");
+        assert_eq!(h, 0xcdef, "half at {b:#x}");
+    }
+}
+
+#[test]
+fn dma_and_cpu_contend_on_the_same_bank() {
+    // CPU hammers bank 1 while the DMA copies within bank 1: the CPU must
+    // observe wait cycles (crossbar: one transaction per slave per cycle).
+    let mut soc = Soc::heeperator();
+    soc.load_data(BANK_SIZE, &vec![7u8; 4096]);
+    let fw = firmware(|a| {
+        // Program a long DMA copy bank1 → bank1 (src/dst both in bank 1).
+        a.li(T0, (PERIPH_BASE + periph::DMA_SRC) as i32)
+            .li(T1, BANK_SIZE as i32)
+            .sw(T1, 0, T0)
+            .li(T0, (PERIPH_BASE + periph::DMA_DST) as i32)
+            .li(T1, (BANK_SIZE + 0x1000) as i32)
+            .sw(T1, 0, T0)
+            .li(T0, (PERIPH_BASE + periph::DMA_LEN) as i32)
+            .li(T1, 0x800)
+            .sw(T1, 0, T0)
+            .li(T0, (PERIPH_BASE + periph::DMA_CTL) as i32)
+            .li(T1, 1)
+            .sw(T1, 0, T0)
+            // Poll data in the same bank while the DMA runs.
+            .li(A0, BANK_SIZE as i32)
+            .li(A2, 300)
+            .label("loop")
+            .lw(T2, 0, A0)
+            .addi(A2, A2, -1)
+            .bne(A2, ZERO, "loop")
+            .ebreak();
+    });
+    soc.load_firmware(&fw, 0);
+    soc.reset_stats();
+    let (halt, _) = soc.run(100_000);
+    assert_eq!(halt, Halt::Done);
+    assert!(soc.counters.cpu_wait_cycles > 50, "wait cycles = {}", soc.counters.cpu_wait_cycles);
+}
+
+#[test]
+fn cpu_unaffected_when_dma_hits_other_banks() {
+    // Same loop, but the DMA works in bank 2 — near-zero contention.
+    let mut soc = Soc::heeperator();
+    soc.load_data(2 * BANK_SIZE, &vec![7u8; 4096]);
+    let fw = firmware(|a| {
+        a.li(T0, (PERIPH_BASE + periph::DMA_SRC) as i32)
+            .li(T1, (2 * BANK_SIZE) as i32)
+            .sw(T1, 0, T0)
+            .li(T0, (PERIPH_BASE + periph::DMA_DST) as i32)
+            .li(T1, (2 * BANK_SIZE + 0x1000) as i32)
+            .sw(T1, 0, T0)
+            .li(T0, (PERIPH_BASE + periph::DMA_LEN) as i32)
+            .li(T1, 0x800)
+            .sw(T1, 0, T0)
+            .li(T0, (PERIPH_BASE + periph::DMA_CTL) as i32)
+            .li(T1, 1)
+            .sw(T1, 0, T0)
+            .li(A0, BANK_SIZE as i32)
+            .li(A2, 300)
+            .label("loop")
+            .lw(T2, 0, A0)
+            .addi(A2, A2, -1)
+            .bne(A2, ZERO, "loop")
+            .ebreak();
+    });
+    soc.load_firmware(&fw, 0);
+    soc.reset_stats();
+    soc.run(100_000);
+    assert!(soc.counters.cpu_wait_cycles <= 4, "wait cycles = {}", soc.counters.cpu_wait_cycles);
+}
+
+#[test]
+fn runaway_firmware_times_out() {
+    // Failure injection: an infinite loop must hit the cycle limit, not hang.
+    let mut soc = Soc::heeperator();
+    let fw = firmware(|a| {
+        a.label("spin").j("spin");
+    });
+    soc.load_firmware(&fw, 0);
+    let (halt, cycles) = soc.run(10_000);
+    assert_eq!(halt, Halt::Timeout);
+    assert!(cycles >= 10_000);
+}
+
+#[test]
+fn falling_off_program_traps() {
+    // Failure injection: missing ebreak → trap, reported as such.
+    let mut soc = Soc::heeperator();
+    let fw = firmware(|a| {
+        a.nop().nop();
+    });
+    soc.load_firmware(&fw, 0);
+    let (halt, _) = soc.run(1_000);
+    assert_eq!(halt, Halt::Trap);
+}
+
+#[test]
+fn wfi_without_pending_irq_sleeps_until_dma() {
+    let mut soc = Soc::heeperator();
+    soc.load_data(BANK_SIZE, &vec![1u8; 1024]);
+    let fw = firmware(|a| {
+        a.li(T0, (PERIPH_BASE + periph::DMA_SRC) as i32)
+            .li(T1, BANK_SIZE as i32)
+            .sw(T1, 0, T0)
+            .li(T0, (PERIPH_BASE + periph::DMA_DST) as i32)
+            .li(T1, (2 * BANK_SIZE) as i32)
+            .sw(T1, 0, T0)
+            .li(T0, (PERIPH_BASE + periph::DMA_LEN) as i32)
+            .li(T1, 0x400)
+            .sw(T1, 0, T0)
+            .li(T0, (PERIPH_BASE + periph::DMA_CTL) as i32)
+            .li(T1, 1)
+            .sw(T1, 0, T0)
+            .wfi()
+            .ebreak();
+    });
+    soc.load_firmware(&fw, 0);
+    soc.reset_stats();
+    let (halt, _) = soc.run(100_000);
+    assert_eq!(halt, Halt::Done);
+    // The CPU slept for most of the ≈256-cycle transfer.
+    assert!(soc.counters.cpu_sleep > 150, "slept {} cycles", soc.counters.cpu_sleep);
+}
+
+#[test]
+fn caesar_backpressure_stalls_host_issue() {
+    // Host-driven compute back-to-back: the 2-cycle pipeline must throttle
+    // the store stream (the paper's §III-A2 contention note).
+    use nmc::caesar::isa::{encode, MicroOp, Op};
+    let mut soc = Soc::heeperator();
+    let op = encode(&MicroOp { op: Op::Add, src1: 0, src2: 4096 });
+    let fw = firmware(|a| {
+        a.li(T0, (PERIPH_BASE + periph::CAESAR_IMC) as i32)
+            .li(T1, 1)
+            .sw(T1, 0, T0)
+            .li(A0, CAESAR_BASE as i32)
+            .li(A1, op as i32)
+            .li(A2, 64);
+        a.label("loop");
+        // Two stores back-to-back per iteration: the second must wait.
+        a.sw(A1, 0x2000, A0)
+            .sw(A1, 0x2004, A0)
+            .addi(A2, A2, -1)
+            .bne(A2, ZERO, "loop")
+            .ebreak();
+    });
+    soc.load_firmware(&fw, 0);
+    soc.reset_stats();
+    let (halt, _) = soc.run(100_000);
+    assert_eq!(halt, Halt::Done);
+    assert!(soc.counters.cpu_wait_cycles > 30, "stall cycles = {}", soc.counters.cpu_wait_cycles);
+    assert_eq!(soc.caesar.stats.instrs, 128);
+}
+
+#[test]
+fn mcycle_monotone_and_matches_simulation() {
+    let mut soc = Soc::heeperator();
+    let fw = firmware(|a| {
+        a.li(T0, (PERIPH_BASE + periph::MCYCLE) as i32)
+            .lw(A0, 0, T0)
+            .li(A2, 50)
+            .label("l")
+            .addi(A2, A2, -1)
+            .bne(A2, ZERO, "l")
+            .lw(A1, 0, T0)
+            .ebreak();
+    });
+    soc.load_firmware(&fw, 0);
+    soc.run(100_000);
+    let delta = soc.cpu.regs[A1 as usize] - soc.cpu.regs[A0 as usize];
+    // 50 iterations × (addi 1 + taken bne 3) ≈ 200 (+ final not-taken).
+    assert!((190..215).contains(&delta), "mcycle delta = {delta}");
+}
