@@ -1,0 +1,133 @@
+//! Deterministic `std::thread` worker pool for the report harness.
+//!
+//! `heeperator all` regenerates nine independent reports (Tables IV–VIII,
+//! Figs 7/11/12/13) plus four ablations; each one builds its own `Soc`
+//! instances from scratch, so they share no mutable state and can run
+//! concurrently. This module fans a list of report *thunks* out over a
+//! bounded worker pool and collects the results **in submission order**,
+//! which is what keeps the parallel output byte-identical to the
+//! sequential one (the acceptance contract of `--jobs`).
+//!
+//! Hand-rolled on `std::sync::mpsc` + a shared `VecDeque` work queue:
+//! rayon is not in the offline vendor set, and the workload shape (a
+//! dozen coarse, seconds-long jobs) needs nothing fancier than
+//! work-stealing-free FIFO dispatch.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// A unit of work: produces one ordered result.
+pub type Job<T> = Box<dyn FnOnce() -> T + Send + 'static>;
+
+/// Default worker count: one per available hardware thread.
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `jobs` on up to `workers` threads; results are returned in
+/// submission order regardless of completion order.
+///
+/// `workers <= 1` degenerates to a plain in-order loop on the calling
+/// thread (the `--jobs 1` sequential baseline). A panicking job poisons
+/// nothing: the panic is propagated to the caller after the surviving
+/// workers drain, via the worker's `JoinHandle`.
+pub fn run_ordered<T: Send + 'static>(jobs: Vec<Job<T>>, workers: usize) -> Vec<T> {
+    let n = jobs.len();
+    if workers <= 1 || n <= 1 {
+        return jobs.into_iter().map(|job| job()).collect();
+    }
+    let queue: Arc<Mutex<VecDeque<(usize, Job<T>)>>> =
+        Arc::new(Mutex::new(jobs.into_iter().enumerate().collect()));
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    let workers = workers.min(n);
+    let mut handles = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        let queue = Arc::clone(&queue);
+        let tx = tx.clone();
+        handles.push(std::thread::spawn(move || loop {
+            // Pop under the lock, run outside it.
+            let next = queue.lock().expect("work queue poisoned").pop_front();
+            let Some((idx, job)) = next else { break };
+            // A send can only fail if the collector hung up early, which
+            // it never does while workers hold results to deliver.
+            let _ = tx.send((idx, job()));
+        }));
+    }
+    drop(tx); // collector stops when every worker is done
+
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for (idx, result) in rx {
+        slots[idx] = Some(result);
+    }
+    for h in handles {
+        if let Err(payload) = h.join() {
+            std::panic::resume_unwind(payload);
+        }
+    }
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| s.unwrap_or_else(|| panic!("job {i} produced no result")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_submission_order() {
+        // Jobs finish out of order (later jobs sleep less) but the output
+        // must stay ordered by submission index.
+        let jobs: Vec<Job<usize>> = (0..16)
+            .map(|i| {
+                Box::new(move || {
+                    std::thread::sleep(std::time::Duration::from_millis((16 - i) as u64));
+                    i
+                }) as Job<usize>
+            })
+            .collect();
+        let out = run_ordered(jobs, 8);
+        assert_eq!(out, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sequential_and_parallel_agree() {
+        let mk = || -> Vec<Job<String>> {
+            (0..12).map(|i| Box::new(move || format!("report-{i}")) as Job<String>).collect()
+        };
+        let seq = run_ordered(mk(), 1);
+        let par = run_ordered(mk(), 4);
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn worker_count_edge_cases() {
+        let mk = |n: usize| -> Vec<Job<usize>> {
+            (0..n).map(|i| Box::new(move || i * i) as Job<usize>).collect()
+        };
+        assert_eq!(run_ordered(mk(0), 4), Vec::<usize>::new());
+        assert_eq!(run_ordered(mk(1), 4), vec![0]);
+        // More workers than jobs.
+        assert_eq!(run_ordered(mk(3), 64), vec![0, 1, 4]);
+        // Zero workers degrades to sequential, not deadlock.
+        assert_eq!(run_ordered(mk(3), 0), vec![0, 1, 4]);
+    }
+
+    #[test]
+    fn default_jobs_is_positive() {
+        assert!(default_jobs() >= 1);
+    }
+
+    #[test]
+    fn panics_propagate() {
+        let jobs: Vec<Job<u32>> = vec![
+            Box::new(|| 1),
+            Box::new(|| panic!("boom")),
+            Box::new(|| 3),
+        ];
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_ordered(jobs, 2)));
+        assert!(res.is_err(), "worker panic must reach the caller");
+    }
+}

@@ -9,6 +9,7 @@
 //! values next to the simulated ones, which is what EXPERIMENTS.md records.
 
 pub mod ablations;
+pub mod executor;
 
 use crate::apps::anomaly;
 use crate::area;
@@ -37,11 +38,16 @@ fn fmt_si(v: f64) -> String {
     if !v.is_finite() {
         return "N/A".into();
     }
-    if v >= 1.0e6 {
-        format!("{:.1}e3", v / 1.0e3)
-    } else if v >= 1.0e3 {
+    // Thresholds sit at the {:.1} rounding boundary of the next unit so
+    // no value ever renders out of notation (999 950 is "1.0M", never
+    // "1000.0k").
+    if v >= 999.95e6 {
+        format!("{:.1}G", v / 1.0e9)
+    } else if v >= 999.95e3 {
+        format!("{:.1}M", v / 1.0e6)
+    } else if v >= 999.5 {
         format!("{:.1}k", v / 1.0e3)
-    } else if v >= 100.0 {
+    } else if v >= 99.95 {
         format!("{v:.0}")
     } else {
         format!("{v:.1}")
@@ -506,19 +512,44 @@ pub fn table8() -> Report {
     r
 }
 
-/// Run everything; returns the reports in paper order.
+/// The full report set as independent thunks, in paper order. Each thunk
+/// is self-contained (builds its own `Soc` instances), which is what lets
+/// the executor fan them out; Table V and Fig. 11 share one `run_table5`
+/// grid and therefore ride in a single thunk.
+fn report_jobs(quick: bool) -> Vec<executor::Job<Vec<Report>>> {
+    vec![
+        Box::new(|| vec![table4()]),
+        Box::new(|| vec![fig7()]),
+        Box::new(move || {
+            let rows = run_table5(quick);
+            vec![table5(&rows), fig11(&rows)]
+        }),
+        Box::new(move || vec![fig12(quick)]),
+        Box::new(|| vec![fig13()]),
+        Box::new(|| vec![table6()]),
+        Box::new(|| vec![table7()]),
+        Box::new(|| vec![table8()]),
+        Box::new(|| vec![ablations::lane_scaling()]),
+        Box::new(|| vec![ablations::issue_strategy()]),
+        Box::new(|| vec![ablations::bank_placement()]),
+        Box::new(|| vec![ablations::scoreboard_policy()]),
+    ]
+}
+
+/// Run everything on `jobs` worker threads; returns the reports in paper
+/// order. Output is byte-identical for every `jobs` value — the executor
+/// collects results in submission order and each report is a pure
+/// function of its own freshly-built simulator state.
+pub fn all_with_jobs(quick: bool, jobs: usize) -> Vec<Report> {
+    executor::run_ordered(report_jobs(quick), jobs)
+        .into_iter()
+        .flatten()
+        .collect()
+}
+
+/// Run everything with one worker per available core.
 pub fn all(quick: bool) -> Vec<Report> {
-    let mut out = vec![table4(), fig7()];
-    let rows = run_table5(quick);
-    out.push(table5(&rows));
-    out.push(fig11(&rows));
-    out.push(fig12(quick));
-    out.push(fig13());
-    out.push(table6());
-    out.push(table7());
-    out.push(table8());
-    out.extend(ablations::all());
-    out
+    all_with_jobs(quick, executor::default_jobs())
 }
 
 #[cfg(test)]
@@ -544,6 +575,55 @@ mod tests {
     fn static_reports_render() {
         for rep in [table4(), fig7(), table7(), table8()] {
             assert!(!rep.text.is_empty(), "{}", rep.id);
+        }
+    }
+
+    #[test]
+    fn fmt_si_boundaries() {
+        // Sub-hundred keeps one decimal; 100..1k is integral.
+        assert_eq!(fmt_si(0.0), "0.0");
+        assert_eq!(fmt_si(99.94), "99.9");
+        assert_eq!(fmt_si(100.0), "100");
+        assert_eq!(fmt_si(999.0), "999");
+        // Kilo range, including the rounding boundary into it.
+        assert_eq!(fmt_si(999.6), "1.0k");
+        assert_eq!(fmt_si(1.0e3), "1.0k");
+        assert_eq!(fmt_si(256.0e3), "256.0k");
+        assert_eq!(fmt_si(999_940.0), "999.9k");
+        // Mega range — previously rendered as the bogus "1500.0e3" style.
+        // 999 950 rounds *up* a unit: "1.0M", never "1000.0k".
+        assert_eq!(fmt_si(999_950.0), "1.0M");
+        assert_eq!(fmt_si(1.0e6), "1.0M");
+        assert_eq!(fmt_si(1.5e6), "1.5M");
+        assert_eq!(fmt_si(4.0e6), "4.0M");
+        assert_eq!(fmt_si(120.0e6), "120.0M");
+        // Giga range exists rather than saturating at "1500.0M".
+        assert_eq!(fmt_si(1.5e9), "1.5G");
+        // Non-finite values degrade to N/A (Table VII has an N/A cell).
+        assert_eq!(fmt_si(f64::NAN), "N/A");
+        assert_eq!(fmt_si(f64::INFINITY), "N/A");
+    }
+
+    #[test]
+    fn parallel_reports_byte_identical_to_sequential() {
+        // The executor contract on real report thunks: same bytes, any
+        // worker count. Static reports keep this cheap; the full-grid
+        // identity is exercised by `heeperator all --quick` end to end.
+        let mk = || -> Vec<executor::Job<Vec<Report>>> {
+            vec![
+                Box::new(|| vec![table4()]),
+                Box::new(|| vec![fig7()]),
+                Box::new(|| vec![table7()]),
+                Box::new(|| vec![table8()]),
+            ]
+        };
+        let seq: Vec<Report> = executor::run_ordered(mk(), 1).into_iter().flatten().collect();
+        let par: Vec<Report> = executor::run_ordered(mk(), 4).into_iter().flatten().collect();
+        assert_eq!(seq.len(), par.len());
+        for (s, p) in seq.iter().zip(&par) {
+            assert_eq!(s.id, p.id);
+            assert_eq!(s.text, p.text, "{} text diverged", s.id);
+            assert_eq!(s.csv, p.csv, "{} csv diverged", s.id);
         }
     }
 }

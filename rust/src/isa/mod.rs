@@ -141,7 +141,7 @@ impl std::fmt::Display for Sew {
 /// Sign-extend the low `bits` of `v`.
 #[inline]
 pub fn sext(v: u32, bits: u32) -> i32 {
-    debug_assert!(bits >= 1 && bits <= 32);
+    debug_assert!((1..=32).contains(&bits));
     let shift = 32 - bits;
     ((v << shift) as i32) >> shift
 }

@@ -9,7 +9,8 @@
 //! cross-checks every simulated kernel against AOT-compiled JAX/Pallas
 //! artifacts.
 //!
-//! Architecture map (see DESIGN.md for the full inventory):
+//! Architecture map (the repo-root `DESIGN.md` carries the full module
+//! inventory and the calibration / invariant anchors §5 and §7):
 //! - [`isa`], [`asm`]: RV32IM/E + Xcv + xvnmc definitions and assembler.
 //! - [`simd`]: shared packed-SIMD element algebra.
 //! - [`mem`], [`bus`], [`dma`]: memory subsystem substrates.
@@ -20,8 +21,10 @@
 //!   3 bitwidths) and the Anomaly-Detection application.
 //! - [`energy`], [`area`]: calibrated 65 nm power/area models.
 //! - [`compare`]: BLADE / C-SRAM / Vecim analytical comparison models.
-//! - [`runtime`]: PJRT golden-model executor (loads `artifacts/*.hlo.txt`).
-//! - [`harness`]: regenerates every table and figure of §V.
+//! - [`runtime`]: PJRT golden-model seam (loads `artifacts/*.hlo.txt`;
+//!   offline builds skip gracefully).
+//! - [`harness`]: regenerates every table and figure of §V, fanning the
+//!   independent reports over the [`harness::executor`] thread pool.
 
 pub mod apps;
 pub mod area;

@@ -3,15 +3,73 @@
 //! Regenerates every table and figure of the paper's evaluation:
 //!
 //! ```text
-//! heeperator all [--quick] [--out DIR]   # everything (Tables IV–VIII, Figs 7/11/12/13)
+//! heeperator all [--quick] [--out DIR] [--jobs N]   # everything (Tables IV–VIII, Figs 7/11/12/13)
 //! heeperator table4|fig7|table5|fig11|fig12|fig13|table6|table7|table8 [--quick] [--out DIR]
-//! heeperator ad                           # Anomaly-Detection end-to-end summary
+//! heeperator ablations [--out DIR]                  # the four ablation studies
+//! heeperator ad                                     # Anomaly-Detection end-to-end summary
 //! ```
+//!
+//! `all` fans the independent reports out over a `std::thread` worker
+//! pool (`harness::executor`); `--jobs N` bounds the pool, `--jobs 1` is
+//! the sequential baseline and produces byte-identical report text.
 //!
 //! (Hand-rolled argument parsing: clap is not in the offline vendor set.)
 
-use nmc::harness::{self, Report};
+use nmc::harness::{self, executor, Report};
 use std::io::Write;
+
+/// Parsed command line. Kept dumb (no behavior) so tests can assert on
+/// exactly what the hand-rolled parser extracted.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Cli {
+    cmd: String,
+    quick: bool,
+    out: Option<String>,
+    jobs: Option<usize>,
+}
+
+/// Parse `args` (everything after argv[0]). Unknown flags are ignored —
+/// the subcommand dispatcher prints usage for unknown commands — but a
+/// present, unparsable `--jobs` value is an error: silently falling
+/// back to full parallelism would do the opposite of what the user
+/// asked for.
+fn parse_args(args: &[String]) -> Result<Cli, String> {
+    let mut cmd: Option<String> = None;
+    let mut quick = false;
+    let mut out: Option<String> = None;
+    let mut jobs: Option<usize> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--quick" => quick = true,
+            "--out" => {
+                // A following flag is not a value — leave it for the loop.
+                if let Some(v) = args.get(i + 1).filter(|v| !v.starts_with("--")) {
+                    out = Some(v.clone());
+                    i += 1; // consume the value
+                }
+            }
+            "--jobs" => {
+                if let Some(v) = args.get(i + 1).filter(|v| !v.starts_with("--")) {
+                    match v.parse::<usize>() {
+                        Ok(n) => jobs = Some(n.max(1)),
+                        Err(_) => return Err(format!("--jobs expects a number, got `{v}`")),
+                    }
+                    i += 1; // consume the value
+                }
+            }
+            a if !a.starts_with("--") => {
+                // First free-standing word is the subcommand.
+                if cmd.is_none() {
+                    cmd = Some(a.to_string());
+                }
+            }
+            _ => {} // unknown flag: ignored
+        }
+        i += 1;
+    }
+    Ok(Cli { cmd: cmd.unwrap_or_else(|| "help".to_string()), quick, out, jobs })
+}
 
 fn write_reports(reports: &[Report], out: Option<&str>) {
     for r in reports {
@@ -34,27 +92,29 @@ fn write_reports(reports: &[Report], out: Option<&str>) {
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let cmd = args.first().map(String::as_str).unwrap_or("help");
-    let quick = args.iter().any(|a| a == "--quick");
-    let out = args
-        .iter()
-        .position(|a| a == "--out")
-        .and_then(|i| args.get(i + 1))
-        .map(String::as_str);
+    let cli = match parse_args(&args) {
+        Ok(cli) => cli,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let out = cli.out.as_deref();
+    let jobs = cli.jobs.unwrap_or_else(executor::default_jobs);
 
-    match cmd {
+    match cli.cmd.as_str() {
         "all" => {
-            let reports = harness::all(quick);
+            let reports = harness::all_with_jobs(cli.quick, jobs);
             write_reports(&reports, out.or(Some("results")));
         }
         "table4" => write_reports(&[harness::table4()], out),
         "fig7" => write_reports(&[harness::fig7()], out),
         "table5" | "fig11" => {
-            let rows = harness::run_table5(quick);
+            let rows = harness::run_table5(cli.quick);
             let reps = vec![harness::table5(&rows), harness::fig11(&rows)];
             write_reports(&reps, out);
         }
-        "fig12" => write_reports(&[harness::fig12(quick)], out),
+        "fig12" => write_reports(&[harness::fig12(cli.quick)], out),
         "fig13" => write_reports(&[harness::fig13()], out),
         "table6" => write_reports(&[harness::table6()], out),
         "table7" => write_reports(&[harness::table7()], out),
@@ -81,6 +141,94 @@ fn main() {
         _ => {
             let mut o = std::io::stdout();
             writeln!(o, "usage: heeperator <all|table4|fig7|table5|fig11|fig12|fig13|table6|table7|table8|ablations|ad> [--quick] [--out DIR]").unwrap();
+            writeln!(o, "       `all` additionally accepts --jobs N (worker pool bound; 1 = sequential)").unwrap();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(list: &[&str]) -> Vec<String> {
+        list.iter().map(|s| s.to_string()).collect()
+    }
+
+    /// Parse a known-good command line.
+    fn p(list: &[&str]) -> Cli {
+        parse_args(&argv(list)).expect("valid command line")
+    }
+
+    #[test]
+    fn subcommand_selection() {
+        assert_eq!(p(&["all"]).cmd, "all");
+        assert_eq!(p(&["table5", "--quick"]).cmd, "table5");
+        // No positional argument → help.
+        assert_eq!(p(&[]).cmd, "help");
+        assert_eq!(p(&["--quick"]).cmd, "help");
+        // Flags before the subcommand still find it.
+        assert_eq!(p(&["--quick", "fig12"]).cmd, "fig12");
+    }
+
+    #[test]
+    fn quick_flag() {
+        assert!(p(&["all", "--quick"]).quick);
+        assert!(!p(&["all"]).quick);
+    }
+
+    #[test]
+    fn out_dir_parsing() {
+        assert_eq!(p(&["all", "--out", "results/x"]).out.as_deref(), Some("results/x"));
+        // Dangling --out without a value is tolerated as no-out.
+        assert_eq!(p(&["all", "--out"]).out, None);
+        assert_eq!(p(&["all"]).out, None);
+        // A following flag is not swallowed as the value.
+        let cli = p(&["all", "--out", "--quick"]);
+        assert_eq!(cli.out, None);
+        assert!(cli.quick);
+    }
+
+    #[test]
+    fn jobs_parsing_and_clamping() {
+        assert_eq!(p(&["all", "--jobs", "4"]).jobs, Some(4));
+        // 0 clamps to the sequential minimum of 1.
+        assert_eq!(p(&["all", "--jobs", "0"]).jobs, Some(1));
+        // Missing value means "default worker count".
+        assert_eq!(p(&["all", "--jobs"]).jobs, None);
+        assert_eq!(p(&["all"]).jobs, None);
+        // A following flag is not swallowed as the value.
+        let cli = p(&["all", "--jobs", "--quick"]);
+        assert_eq!(cli.jobs, None);
+        assert!(cli.quick);
+    }
+
+    #[test]
+    fn garbage_jobs_value_is_an_error() {
+        // Falling back to max parallelism would invert the user's intent.
+        let err = parse_args(&argv(&["all", "--jobs", "lots"])).unwrap_err();
+        assert!(err.contains("--jobs"), "{err}");
+        assert!(err.contains("lots"), "{err}");
+    }
+
+    #[test]
+    fn combined_flags_any_order() {
+        let cli = p(&["--jobs", "2", "all", "--quick", "--out", "r"]);
+        assert_eq!(
+            cli,
+            Cli { cmd: "all".into(), quick: true, out: Some("r".into()), jobs: Some(2) }
+        );
+    }
+
+    #[test]
+    fn table4_smoke_nonempty_text_and_csv() {
+        let rep = harness::table4();
+        assert_eq!(rep.id, "table4");
+        assert!(rep.text.contains("NM-Caesar"));
+        assert!(rep.text.contains("NM-Carus"));
+        assert!(!rep.csv.is_empty());
+        let (name, csv) = &rep.csv[0];
+        assert_eq!(name, "table4.csv");
+        assert!(csv.lines().count() >= 4, "header + three rows");
+        assert!(csv.starts_with("macro,area_um2"));
     }
 }

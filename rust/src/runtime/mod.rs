@@ -1,20 +1,29 @@
-//! PJRT golden-model runtime: loads the AOT-compiled HLO artifacts
-//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and executes
-//! them on the XLA CPU client.
+//! Golden-model runtime interface: the bridge to the AOT-compiled HLO
+//! artifacts (`artifacts/*.hlo.txt`, produced once by `make artifacts`).
 //!
-//! This is the bridge that closes the three-layer loop: the JAX/Pallas
+//! This is the seam that closes the three-layer loop: the JAX/Pallas
 //! kernels (Layers 1–2) are the bit-exact functional oracles for the
 //! simulated hardware (Layer 3). Python never runs at simulation time —
-//! only the serialized HLO does.
+//! only the serialized HLO does, executed by a PJRT CPU client.
+//!
+//! # Offline builds
+//!
+//! The PJRT/XLA bindings (`xla_extension`) are **not** in the offline
+//! vendor set, so this module is std-only: it keeps the artifact
+//! discovery, the tensor interchange type and the [`Runtime`] API, but
+//! [`Runtime::new`] reports [`RuntimeError::BackendUnavailable`] unless a
+//! real backend is wired in behind the (dependency-less) `pjrt` cargo
+//! feature. Callers — `rust/tests/golden_runtime.rs`, the examples —
+//! treat both "artifacts not built" and "backend unavailable" as a
+//! graceful skip: the simulator's own golden references
+//! ([`crate::kernels::golden`]) remain authoritative either way.
 //!
 //! Interchange conventions (see `python/compile/aot.py`):
-//! - HLO **text**, parsed with `HloModuleProto::from_text_file` (jax ≥ 0.5
-//!   emits 64-bit instruction ids that xla_extension 0.5.1 rejects in
-//!   proto form; the text parser reassigns ids).
+//! - HLO **text** (jax ≥ 0.5 emits 64-bit instruction ids that
+//!   xla_extension 0.5.1 rejects in proto form; the text parser
+//!   reassigns ids).
 //! - All artifact interfaces are int32 tensors; results are 1-tuples.
 
-use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 /// Where the artifacts live: `$NMC_ARTIFACTS` or `<repo>/artifacts`.
@@ -37,6 +46,37 @@ pub fn artifacts_available() -> bool {
     artifacts_dir().join("manifest.json").exists()
 }
 
+/// Errors surfaced by the golden runtime. All of them are *skippable*
+/// from the test suite's point of view: they mean the golden cross-check
+/// cannot run here, not that the simulator is wrong.
+#[derive(Debug)]
+pub enum RuntimeError {
+    /// No execution backend compiled in (the offline, std-only build).
+    BackendUnavailable(&'static str),
+    /// The artifact file does not exist (run `make artifacts`).
+    MissingArtifact(PathBuf),
+    /// Backend-reported failure (load/compile/execute).
+    Execution(String),
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::BackendUnavailable(why) => {
+                write!(f, "PJRT backend unavailable: {why}")
+            }
+            RuntimeError::MissingArtifact(p) => {
+                write!(f, "artifact {} not found (run `make artifacts`)", p.display())
+            }
+            RuntimeError::Execution(e) => write!(f, "golden runtime failure: {e}"),
+        }
+    }
+}
+impl std::error::Error for RuntimeError {}
+
+/// Local result alias (anyhow is not in the offline vendor set).
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
 /// An int32 tensor argument.
 #[derive(Debug, Clone)]
 pub struct TensorI32 {
@@ -53,62 +93,68 @@ impl TensorI32 {
     pub fn from_elems(elems: &[i64], shape: &[i64]) -> Self {
         Self::new(elems.iter().map(|&v| v as i32).collect(), shape)
     }
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
 }
 
-/// The PJRT CPU runtime with a compiled-executable cache.
+/// The golden-model runtime. A real backend adds its client handle and
+/// a name → compiled-executable cache here.
+///
+/// In the offline build this is a shell: construction fails with
+/// [`RuntimeError::BackendUnavailable`], so no caller can reach
+/// [`Runtime::execute`] without a real backend.
 pub struct Runtime {
-    client: xla::PjRtClient,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
     dir: PathBuf,
 }
 
 impl Runtime {
+    /// Connect to the PJRT CPU client.
+    ///
+    /// Fails with [`RuntimeError::BackendUnavailable`] when the crate was
+    /// built without an execution backend (the default offline build).
     pub fn new() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Runtime { client, cache: HashMap::new(), dir: artifacts_dir() })
-    }
-
-    /// Number of PJRT devices (sanity/introspection).
-    pub fn device_count(&self) -> usize {
-        self.client.device_count()
-    }
-
-    fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.cache.contains_key(name) {
-            let path = self.dir.join(format!("{name}.hlo.txt"));
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("artifact path not utf-8")?,
-            )
-            .map_err(|e| anyhow!("loading {path:?}: {e:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-            self.cache.insert(name.to_string(), exe);
+        if cfg!(feature = "pjrt") {
+            // The feature only reserves the plumbing; the bindings still
+            // have to be vendored before this can become a live client.
+            return Err(RuntimeError::BackendUnavailable(
+                "the `pjrt` feature is a stub until the xla_extension bindings are vendored",
+            ));
         }
-        Ok(&self.cache[name])
+        Err(RuntimeError::BackendUnavailable(
+            "built without the `pjrt` feature (offline, std-only vendor set)",
+        ))
+    }
+
+    /// Number of PJRT devices (sanity/introspection). Always 0 until a
+    /// real backend is wired in — do not conflate with the executable
+    /// cache size.
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    /// Path of a named artifact, checked for existence.
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            return Err(RuntimeError::MissingArtifact(path));
+        }
+        Ok(path)
     }
 
     /// Execute artifact `name` with int32 inputs; returns the flattened
     /// int32 output of the 1-tuple result.
     pub fn execute(&mut self, name: &str, inputs: &[TensorI32]) -> Result<Vec<i32>> {
-        self.load(name)?;
-        let exe = &self.cache[name];
-        let mut lits = Vec::with_capacity(inputs.len());
-        for t in inputs {
-            let lit = xla::Literal::vec1(&t.data)
-                .reshape(&t.shape)
-                .map_err(|e| anyhow!("reshape {:?}: {e:?}", t.shape))?;
-            lits.push(lit);
-        }
-        let result = exe
-            .execute::<xla::Literal>(&lits)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        out.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+        // Construction is impossible without a backend, so this is
+        // unreachable today; keep the checks so a future backend slots in
+        // without touching the call sites.
+        self.artifact_path(name)?;
+        let _ = inputs;
+        Err(RuntimeError::BackendUnavailable("no execution backend compiled in"))
     }
 }
 
@@ -122,6 +168,33 @@ mod tests {
         assert!(d.ends_with("artifacts"));
     }
 
-    // Execution tests live in rust/tests/golden_runtime.rs (they require
-    // `make artifacts` to have run).
+    #[test]
+    fn offline_build_reports_backend_unavailable() {
+        // The graceful-skip contract: no panic, a descriptive error.
+        match Runtime::new() {
+            Ok(_) => panic!("offline build must not produce a live runtime"),
+            Err(e) => {
+                let msg = e.to_string();
+                assert!(msg.contains("PJRT backend unavailable"), "{msg}");
+            }
+        }
+    }
+
+    #[test]
+    fn tensor_shape_checked() {
+        let t = TensorI32::new(vec![1, 2, 3, 4, 5, 6], &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert!(!t.is_empty());
+        let t = TensorI32::from_elems(&[-1i64, 2], &[2]);
+        assert_eq!(t.data, vec![-1, 2]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_shape_mismatch_panics() {
+        TensorI32::new(vec![1, 2, 3], &[2, 2]);
+    }
+
+    // Execution tests live in rust/tests/golden_runtime.rs (they skip
+    // unless `make artifacts` has run *and* a backend is compiled in).
 }

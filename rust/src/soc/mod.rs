@@ -534,7 +534,7 @@ mod tests {
     use crate::isa::reg::*;
     use crate::isa::Sew;
 
-    const CODE_BASE: u32 = bus::BANK_SIZE * 0; // bank 0
+    const CODE_BASE: u32 = bus::SRAM_BASE; // bank 0
 
     fn firmware(build: impl FnOnce(&mut Asm)) -> crate::asm::Program {
         let mut a = Asm::new(CODE_BASE);
