@@ -12,7 +12,9 @@
 
 use nmc::apps::anomaly;
 use nmc::area;
+use nmc::kernels::Target;
 use nmc::runtime::{artifacts_available, Runtime, TensorI32};
+use nmc::sweep::SweepSession;
 
 fn main() {
     let m = anomaly::model(2);
@@ -48,13 +50,16 @@ fn main() {
     }
 
     // --- the five system configurations ------------------------------------
-    let single = anomaly::run_cpu(&m);
+    // Simulated through the session (the same memoized path `heeperator
+    // table6` / `ad` use; the multicore rows are derived projections).
+    let session = SweepSession::new();
+    let single = session.anomaly(Target::Cpu, 2);
     let configs = vec![
-        single.clone(),
+        single.as_ref().clone(),
         anomaly::scale_multicore(&single, 2),
         anomaly::scale_multicore(&single, 4),
-        anomaly::run_caesar(&m),
-        anomaly::run_carus(&m),
+        session.anomaly(Target::Caesar, 2).as_ref().clone(),
+        session.anomaly(Target::Carus, 2).as_ref().clone(),
     ];
     let areas = [
         area::system_cpu_cluster(1),

@@ -6,12 +6,17 @@
 //! CPU-based controller needs larger workloads to amortize its bootstrap
 //! but saturates at ≈0.48 output/cycle — 2× NM-Caesar's 0.25.
 //!
+//! All points drain through one `SweepSession`, the same memoizing path
+//! the report harness uses — re-requesting a point is free.
+//!
 //! Run with: `cargo run --release --example matmul_sweep`
 
 use nmc::isa::Sew;
-use nmc::kernels::{run, Kernel, Target};
+use nmc::kernels::{Kernel, Target};
+use nmc::sweep::SweepSession;
 
 fn main() {
+    let session = SweepSession::new();
     println!("{:>5} {:>7} | {:>12} {:>12} | {:>12} {:>12} | {:>12}", "P", "width", "caesar o/c", "caesar pJ/o", "carus o/c", "carus pJ/o", "cpu o/c");
     for sew in Sew::ALL {
         let pmax = 1024 / sew.bytes();
@@ -19,9 +24,9 @@ fn main() {
             if p > pmax {
                 continue;
             }
-            let caesar = run(Target::Caesar, Kernel::Matmul { p }, sew, 3);
-            let carus = run(Target::Carus, Kernel::Matmul { p }, sew, 3);
-            let cpu = run(Target::Cpu, Kernel::Matmul { p }, sew, 3);
+            let caesar = session.run(Target::Caesar, Kernel::Matmul { p }, sew, 3);
+            let carus = session.run(Target::Carus, Kernel::Matmul { p }, sew, 3);
+            let cpu = session.run(Target::Cpu, Kernel::Matmul { p }, sew, 3);
             println!(
                 "{:>5} {:>7} | {:>12.3} {:>12.1} | {:>12.3} {:>12.1} | {:>12.3}",
                 p,
@@ -35,4 +40,5 @@ fn main() {
         }
     }
     println!("\npaper saturation (8-bit): NM-Carus 0.48 out/cycle, 66 pJ/out; NM-Caesar 0.25 out/cycle, 175 pJ/out");
+    println!("({} grid points simulated once each through the sweep session)", session.simulations());
 }

@@ -1,28 +1,39 @@
 //! End-to-end driver benchmarks: the Anomaly-Detection app and the
-//! saturated matmul, as wall-time + simulated-cycle rate.
+//! saturated matmul, as wall-time + simulated-cycle rate. Iterations use
+//! a fresh `SweepSession` each (the cache must stay cold so every rep
+//! simulates), going through the same session path the harness uses.
 use nmc::apps::anomaly;
 use nmc::benchlib::{bench, sink, throughput};
 use nmc::isa::Sew;
-use nmc::kernels::{run, Kernel, Target};
+use nmc::kernels::{Kernel, Target};
+use nmc::sweep::SweepSession;
 
 fn main() {
-    let m0 = anomaly::model(2);
-    let cycles = anomaly::run_carus(&m0).cycles;
+    let cycles = SweepSession::new().anomaly(Target::Carus, 2).cycles;
     let m = bench("e2e_ad_carus", || {
-        sink(anomaly::run_carus(&m0).cycles);
+        sink(SweepSession::new().anomaly(Target::Carus, 2).cycles);
     });
     throughput(&m, cycles as f64, "sim-cycles");
 
-    let cycles = anomaly::run_cpu(&m0).cycles;
+    let cycles = SweepSession::new().anomaly(Target::Cpu, 2).cycles;
     let m = bench("e2e_ad_cpu", || {
-        sink(anomaly::run_cpu(&m0).cycles);
+        sink(SweepSession::new().anomaly(Target::Cpu, 2).cycles);
     });
     throughput(&m, cycles as f64, "sim-cycles");
 
-    let r = run(Target::Carus, Kernel::Matmul { p: 1024 }, Sew::E8, 1);
-    let c = r.cycles;
+    let c = SweepSession::new().run(Target::Carus, Kernel::Matmul { p: 1024 }, Sew::E8, 1).cycles;
     let m = bench("e2e_matmul_carus_e8", || {
-        sink(run(Target::Carus, Kernel::Matmul { p: 1024 }, Sew::E8, 1).cycles);
+        sink(SweepSession::new().run(Target::Carus, Kernel::Matmul { p: 1024 }, Sew::E8, 1).cycles);
     });
     throughput(&m, c as f64, "sim-cycles");
+
+    // The model-build + golden-forward setup cost on its own (no SoC
+    // simulation). Note this is NOT the session cache-hit path — a warm
+    // `SweepSession` hit is just a map lookup + Arc clone (see
+    // `fig12_sweep_quick_cached` in bench_tables for that).
+    let m = bench("ad_model_golden_forward", || {
+        let m0 = anomaly::model(2);
+        sink(anomaly::golden_forward(&m0).len());
+    });
+    throughput(&m, anomaly::total_macs() as f64, "MACs");
 }

@@ -1,21 +1,38 @@
 //! Table-regeneration benchmarks: wall time to reproduce each paper
-//! table/figure (the deliverable-(d) harness itself).
+//! table/figure (the deliverable-(d) harness itself). Each iteration
+//! drains through a *fresh* `SweepSession` so the measurement covers real
+//! simulations, not cache hits; one extra benchmark measures the warmed
+//! cache-hit path itself.
 use nmc::benchlib::{bench, sink};
 use nmc::harness;
+use nmc::sweep::SweepSession;
 
 fn main() {
     let m = bench("table5_full_grid", || {
-        sink(harness::run_table5(false).len());
+        let session = SweepSession::new();
+        sink(harness::run_table5(&session, false).len());
     });
     println!("table5 full grid: {:.2} s", m.median_ns / 1e9);
     let m = bench("table6_anomaly_detection", || {
-        sink(harness::table6().text.len());
+        let session = SweepSession::new();
+        sink(harness::table6(&session).text.len());
     });
     println!("table6: {:.2} s", m.median_ns / 1e9);
     let m = bench("fig12_sweep_quick", || {
-        sink(harness::fig12(true).text.len());
+        let session = SweepSession::new();
+        sink(harness::fig12(&session, true).text.len());
     });
     println!("fig12 quick: {:.2} s", m.median_ns / 1e9);
+    // The cache-hit path: a warmed session re-serving the quick Fig. 12
+    // sweep without simulating.
+    let warm = SweepSession::new();
+    sink(harness::fig12(&warm, true).text.len());
+    let sims = warm.simulations();
+    let m = bench("fig12_sweep_quick_cached", || {
+        sink(harness::fig12(&warm, true).text.len());
+    });
+    assert_eq!(warm.simulations(), sims, "warm reps must not simulate");
+    println!("fig12 quick (cached): {:.2} ms", m.median_ns / 1e6);
     let m = bench("static_tables", || {
         sink((harness::table4().text.len(), harness::table7().text.len(), harness::table8().text.len()));
     });

@@ -130,6 +130,19 @@ fn finish(name: &'static str, soc: &Soc, output: Vec<i8>) -> AdResult {
     }
 }
 
+/// Dispatch one Table VI system configuration by execution target — the
+/// seam [`crate::sweep::SweepSession::anomaly`] memoizes behind, so every
+/// consumer (Table VI, `heeperator ad`, the example, the benches) shares
+/// one simulation per invocation.
+pub fn run_target(m: &Model, target: crate::kernels::Target) -> AdResult {
+    use crate::kernels::Target;
+    match target {
+        Target::Cpu => run_cpu(m),
+        Target::Caesar => run_caesar(m),
+        Target::Carus => run_carus(m),
+    }
+}
+
 /// Ideal-linear-scaling multi-core projection from the single-core run
 /// (the paper's own Table VI methodology).
 pub fn scale_multicore(single: &AdResult, cores: u64) -> AdResult {

@@ -198,6 +198,25 @@ impl Asm {
         self.instr(Instr::Store { op: StoreOp::Sw, rs2, rs1, off })
     }
 
+    /// SEW-dispatched signed element load (`lb`/`lh`/`lw`) — the shared
+    /// helper behind every kernel builder that walks element arrays
+    /// (signed loads, like GCC emits for signed element types).
+    pub fn lx(&mut self, sew: Sew, rd: Reg, off: i32, rs1: Reg) -> &mut Self {
+        match sew {
+            Sew::E8 => self.lb(rd, off, rs1),
+            Sew::E16 => self.lh(rd, off, rs1),
+            Sew::E32 => self.lw(rd, off, rs1),
+        }
+    }
+    /// SEW-dispatched element store (`sb`/`sh`/`sw`), dual of [`Asm::lx`].
+    pub fn sx(&mut self, sew: Sew, rs2: Reg, off: i32, rs1: Reg) -> &mut Self {
+        match sew {
+            Sew::E8 => self.sb(rs2, off, rs1),
+            Sew::E16 => self.sh(rs2, off, rs1),
+            Sew::E32 => self.sw(rs2, off, rs1),
+        }
+    }
+
     #[track_caller]
     fn chk12(imm: i32) -> i32 {
         assert!((-2048..=2047).contains(&imm), "12-bit immediate out of range: {imm}");
@@ -587,5 +606,22 @@ mod tests {
         for w in &p.words {
             assert_eq!(w & 0x7f, 0x5b, "{w:#010x} not custom-2");
         }
+    }
+
+    #[test]
+    fn lx_sx_dispatch_on_sew() {
+        // The shared SEW helpers emit exactly the width-specific opcodes.
+        let mut a = Asm::new(0);
+        for sew in Sew::ALL {
+            a.lx(sew, T0, 0, A0).sx(sew, T0, 0, A1);
+        }
+        let mut b = Asm::new(0);
+        b.lb(T0, 0, A0)
+            .sb(T0, 0, A1)
+            .lh(T0, 0, A0)
+            .sh(T0, 0, A1)
+            .lw(T0, 0, A0)
+            .sw(T0, 0, A1);
+        assert_eq!(a.assemble().unwrap().words, b.assemble().unwrap().words);
     }
 }

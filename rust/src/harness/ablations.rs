@@ -27,8 +27,9 @@ use crate::cpu::CpuConfig;
 use crate::isa::reg::*;
 use crate::isa::xvnmc::VOp;
 use crate::isa::Sew;
-use crate::kernels::{run as krun, Kernel, Target};
+use crate::kernels::{Kernel, Target};
 use crate::soc::{Halt, Soc};
+use crate::sweep::SweepSession;
 use std::fmt::Write as _;
 
 /// Ablation 1: NM-Carus lane scaling on the saturated 8-bit matmul.
@@ -275,8 +276,10 @@ pub fn bank_placement() -> Report {
     r
 }
 
-/// Ablation 4: precise vs conservative emvx scoreboard.
-pub fn scoreboard_policy() -> Report {
+/// Ablation 4: precise vs conservative emvx scoreboard. The measured
+/// reference point drains through `session` — `heeperator all` shares it
+/// with any other report that asks for the same workload.
+pub fn scoreboard_policy(session: &SweepSession) -> Report {
     let mut r = Report::new(
         "ablation_scoreboard",
         "emvx hazard policy (matmul row loop, vl=1024, e8)",
@@ -301,7 +304,7 @@ pub fn scoreboard_policy() -> Report {
     )
     .unwrap();
     // Measured end-to-end (includes driver) must sit near the precise model.
-    let res = krun(Target::Carus, Kernel::Matmul { p: 1024 }, Sew::E8, 55);
+    let res = session.run(Target::Carus, Kernel::Matmul { p: 1024 }, Sew::E8, 55);
     writeln!(r.text, "measured end-to-end: {} cycles (precise-policy simulator)", res.cycles).unwrap();
     writeln!(
         r.text,
@@ -318,9 +321,10 @@ pub fn scoreboard_policy() -> Report {
     r
 }
 
-/// All ablations in order.
-pub fn all() -> Vec<Report> {
-    vec![lane_scaling(), issue_strategy(), bank_placement(), scoreboard_policy()]
+/// All ablations in order, sharing `session` where a study consumes
+/// grid workloads.
+pub fn all(session: &SweepSession) -> Vec<Report> {
+    vec![lane_scaling(), issue_strategy(), bank_placement(), scoreboard_policy(session)]
 }
 
 #[cfg(test)]
@@ -348,7 +352,7 @@ mod tests {
 
     #[test]
     fn scoreboard_policy_analysis() {
-        let rep = scoreboard_policy();
+        let rep = scoreboard_policy(&SweepSession::new());
         assert!(rep.text.contains("precise"));
     }
 }

@@ -16,8 +16,10 @@ use crate::area;
 use crate::compare;
 use crate::energy::Breakdown;
 use crate::isa::Sew;
-use crate::kernels::{self, Family, Kernel, RunResult, Target};
+use crate::kernels::{Family, Kernel, RunResult, Target};
+use crate::sweep::SweepSession;
 use std::fmt::Write as _;
+use std::sync::Arc;
 
 /// One regenerated experiment.
 pub struct Report {
@@ -38,19 +40,24 @@ fn fmt_si(v: f64) -> String {
     if !v.is_finite() {
         return "N/A".into();
     }
+    // Scale by magnitude so negative values pick the same unit as their
+    // absolute value instead of falling through every threshold and
+    // rendering unscaled ("-2.0M", never "-2000000.0").
+    let sign = if v < 0.0 { "-" } else { "" };
+    let m = v.abs();
     // Thresholds sit at the {:.1} rounding boundary of the next unit so
     // no value ever renders out of notation (999 950 is "1.0M", never
     // "1000.0k").
-    if v >= 999.95e6 {
-        format!("{:.1}G", v / 1.0e9)
-    } else if v >= 999.95e3 {
-        format!("{:.1}M", v / 1.0e6)
-    } else if v >= 999.5 {
-        format!("{:.1}k", v / 1.0e3)
-    } else if v >= 99.95 {
-        format!("{v:.0}")
+    if m >= 999.95e6 {
+        format!("{sign}{:.1}G", m / 1.0e9)
+    } else if m >= 999.95e3 {
+        format!("{sign}{:.1}M", m / 1.0e6)
+    } else if m >= 999.5 {
+        format!("{sign}{:.1}k", m / 1.0e3)
+    } else if m >= 99.95 {
+        format!("{sign}{m:.0}")
     } else {
-        format!("{v:.1}")
+        format!("{sign}{m:.1}")
     }
 }
 
@@ -145,13 +152,15 @@ pub fn paper_table5(family: Family, sew: Sew) -> (f64, f64, f64, f64, f64, f64) 
     }
 }
 
-/// One Table V cell group: measured results for the three targets.
+/// One Table V cell group: measured results for the three targets
+/// (shared out of the session cache — Table V and Fig. 11 read the same
+/// grid without re-simulating it).
 pub struct T5Row {
     pub family: Family,
     pub sew: Sew,
-    pub cpu: RunResult,
-    pub caesar: RunResult,
-    pub carus: RunResult,
+    pub cpu: Arc<RunResult>,
+    pub caesar: Arc<RunResult>,
+    pub carus: Arc<RunResult>,
 }
 
 impl T5Row {
@@ -169,8 +178,11 @@ impl T5Row {
     }
 }
 
-/// Run the full Table V grid. `quick` shrinks workloads (CI-friendly).
-pub fn run_table5(quick: bool) -> Vec<T5Row> {
+/// Run the full Table V grid through `session`. `quick` shrinks workloads
+/// (CI-friendly). Every report that needs the grid calls this with the
+/// shared session; the 81 points are simulated at most once per
+/// invocation.
+pub fn run_table5(session: &SweepSession, quick: bool) -> Vec<T5Row> {
     let mut rows = Vec::new();
     for family in Family::ALL {
         for sew in Sew::ALL {
@@ -190,11 +202,11 @@ pub fn run_table5(quick: bool) -> Vec<T5Row> {
                     Kernel::Maxpool { n } => Kernel::Maxpool { n: n / 4 },
                 }
             };
-            let cpu = kernels::run(Target::Cpu, shrink(Kernel::paper_default(family, Target::Cpu, sew)), sew, 5);
-            let caesar =
-                kernels::run(Target::Caesar, shrink(Kernel::paper_default(family, Target::Caesar, sew)), sew, 5);
-            let carus =
-                kernels::run(Target::Carus, shrink(Kernel::paper_default(family, Target::Carus, sew)), sew, 5);
+            let point = |target: Target| {
+                session.run(target, shrink(Kernel::paper_default(family, target, sew)), sew, 5)
+            };
+            let (cpu, caesar, carus) =
+                (point(Target::Cpu), point(Target::Caesar), point(Target::Carus));
             rows.push(T5Row { family, sew, cpu, caesar, carus });
         }
     }
@@ -276,7 +288,7 @@ pub fn fig11(rows: &[T5Row]) -> Report {
 // Fig. 12 — matmul scaling
 // ---------------------------------------------------------------------------
 
-pub fn fig12(quick: bool) -> Report {
+pub fn fig12(session: &SweepSession, quick: bool) -> Report {
     let mut r = Report::new("fig12", "Matmul throughput/energy scaling (Fig. 12)");
     let mut csv = String::from("target,sew,p,outputs_per_cycle,pj_per_output\n");
     let ps: &[u32] = if quick { &[8, 32, 128] } else { &[8, 16, 32, 64, 128, 256, 512, 1024] };
@@ -289,7 +301,7 @@ pub fn fig12(quick: bool) -> Report {
                 if target == Target::Cpu && sew != Sew::E32 {
                     continue;
                 }
-                let res = kernels::run(target, Kernel::Matmul { p }, sew, 6);
+                let res = session.run(target, Kernel::Matmul { p }, sew, 6);
                 let opc = res.outputs as f64 / res.cycles as f64;
                 writeln!(
                     r.text,
@@ -314,7 +326,7 @@ pub fn fig12(quick: bool) -> Report {
 // Fig. 13 — power breakdown (2D convolution)
 // ---------------------------------------------------------------------------
 
-pub fn fig13() -> Report {
+pub fn fig13(session: &SweepSession) -> Report {
     let mut r = Report::new("fig13", "Average power breakdown, 2D conv (Fig. 13)");
     let mut csv = String::from("target,sew,cpu_mw,memory_mw,nmc_mw,interconnect_mw,other_mw,total_mw\n");
     writeln!(
@@ -326,7 +338,7 @@ pub fn fig13() -> Report {
     for sew in [Sew::E8, Sew::E32] {
         for target in [Target::Cpu, Target::Caesar, Target::Carus] {
             let kernel = Kernel::paper_default(Family::Conv2d, target, sew);
-            let res = kernels::run(target, kernel, sew, 13);
+            let res = session.run(target, kernel, sew, 13);
             let b: Breakdown = res.energy;
             let cyc = res.cycles;
             let mw = |x: f64| x / (cyc as f64 * crate::energy::params::CYCLE_NS);
@@ -367,14 +379,13 @@ pub fn fig13() -> Report {
 // Table VI — Anomaly-Detection application
 // ---------------------------------------------------------------------------
 
-pub fn table6() -> Report {
+pub fn table6(session: &SweepSession) -> Report {
     let mut r = Report::new("table6", "Anomaly Detection end-to-end (Table VI)");
-    let m = anomaly::model(2);
-    let single = anomaly::run_cpu(&m);
+    let single = session.anomaly(Target::Cpu, 2);
     let dual = anomaly::scale_multicore(&single, 2);
     let quad = anomaly::scale_multicore(&single, 4);
-    let caesar = anomaly::run_caesar(&m);
-    let carus = anomaly::run_carus(&m);
+    let caesar = session.anomaly(Target::Caesar, 2);
+    let carus = session.anomaly(Target::Carus, 2);
 
     let areas = [
         area::system_cpu_cluster(1),
@@ -391,7 +402,7 @@ pub fn table6() -> Report {
         (1.29, 1.20, 0.90),
         (3.55, 2.36, 1.36),
     ];
-    let rows = [&single, &dual, &quad, &caesar, &carus];
+    let rows = [single.as_ref(), &dual, &quad, caesar.as_ref(), carus.as_ref()];
     let t = &mut r.text;
     writeln!(
         t,
@@ -512,36 +523,44 @@ pub fn table8() -> Report {
     r
 }
 
-/// The full report set as independent thunks, in paper order. Each thunk
-/// is self-contained (builds its own `Soc` instances), which is what lets
-/// the executor fan them out; Table V and Fig. 11 share one `run_table5`
-/// grid and therefore ride in a single thunk.
-fn report_jobs(quick: bool) -> Vec<executor::Job<Vec<Report>>> {
+/// The full report set as independent thunks, in paper order, all
+/// draining their simulations through one shared [`SweepSession`]. Table V
+/// and Fig. 11 are separate jobs that read the same 81-point grid — the
+/// session guarantees the grid is simulated at most once regardless of
+/// which job reaches a point first (a concurrent reader blocks on that
+/// point only, not the whole grid).
+fn report_jobs(session: &Arc<SweepSession>, quick: bool) -> Vec<executor::Job<Vec<Report>>> {
+    let s5 = Arc::clone(session);
+    let s11 = Arc::clone(session);
+    let s12 = Arc::clone(session);
+    let s13 = Arc::clone(session);
+    let s6 = Arc::clone(session);
+    let sab = Arc::clone(session);
     vec![
         Box::new(|| vec![table4()]),
         Box::new(|| vec![fig7()]),
-        Box::new(move || {
-            let rows = run_table5(quick);
-            vec![table5(&rows), fig11(&rows)]
-        }),
-        Box::new(move || vec![fig12(quick)]),
-        Box::new(|| vec![fig13()]),
-        Box::new(|| vec![table6()]),
+        Box::new(move || vec![table5(&run_table5(&s5, quick))]),
+        Box::new(move || vec![fig11(&run_table5(&s11, quick))]),
+        Box::new(move || vec![fig12(&s12, quick)]),
+        Box::new(move || vec![fig13(&s13)]),
+        Box::new(move || vec![table6(&s6)]),
         Box::new(|| vec![table7()]),
         Box::new(|| vec![table8()]),
         Box::new(|| vec![ablations::lane_scaling()]),
         Box::new(|| vec![ablations::issue_strategy()]),
         Box::new(|| vec![ablations::bank_placement()]),
-        Box::new(|| vec![ablations::scoreboard_policy()]),
+        Box::new(move || vec![ablations::scoreboard_policy(&sab)]),
     ]
 }
 
 /// Run everything on `jobs` worker threads; returns the reports in paper
 /// order. Output is byte-identical for every `jobs` value — the executor
-/// collects results in submission order and each report is a pure
-/// function of its own freshly-built simulator state.
+/// collects results in submission order, each report renders pure
+/// functions of its simulation results, and the shared session hands
+/// every consumer of a grid point the same memoized result.
 pub fn all_with_jobs(quick: bool, jobs: usize) -> Vec<Report> {
-    executor::run_ordered(report_jobs(quick), jobs)
+    let session = Arc::new(SweepSession::new());
+    executor::run_ordered(report_jobs(&session, quick), jobs)
         .into_iter()
         .flatten()
         .collect()
@@ -552,6 +571,85 @@ pub fn all(quick: bool) -> Vec<Report> {
     all_with_jobs(quick, executor::default_jobs())
 }
 
+// ---------------------------------------------------------------------------
+// `heeperator sweep` — arbitrary scenario points as a first-class report
+// ---------------------------------------------------------------------------
+
+/// Run an arbitrary list of `(target, kernel, sew)` scenario points
+/// through `session` and render them as one report — the engine behind
+/// `heeperator sweep`, where non-paper shapes become first-class
+/// workloads.
+pub fn sweep_report(
+    session: &SweepSession,
+    points: &[(Target, Kernel, Sew)],
+    seed: u64,
+) -> Report {
+    let mut r = Report::new("sweep", "Custom scenario sweep");
+    writeln!(
+        r.text,
+        "{:<12} {:<26} {:>6} {:>12} {:>10} {:>10} {:>10}",
+        "target", "kernel", "width", "cycles", "c/out", "pJ/out", "mW"
+    )
+    .unwrap();
+    let mut csv = String::from(
+        "target,family,sew,seed,n,p,f,cycles,outputs,cycles_per_output,pj_per_output,avg_power_mw\n",
+    );
+    for &(target, kernel, sew) in points {
+        let res = session.run(target, kernel, sew, seed);
+        // Free dimensions as separate CSV columns (the kernel debug form
+        // contains commas); absent dimensions stay empty.
+        let (n, p, f) = match kernel {
+            Kernel::Xor { n }
+            | Kernel::Add { n }
+            | Kernel::Mul { n }
+            | Kernel::Relu { n }
+            | Kernel::LeakyRelu { n }
+            | Kernel::Maxpool { n } => (Some(n), None, None),
+            Kernel::Matmul { p } | Kernel::Gemm { p } => (None, Some(p), None),
+            Kernel::Conv2d { n, f } => (Some(n), None, Some(f)),
+        };
+        let dim = |d: Option<u32>| d.map(|v| v.to_string()).unwrap_or_default();
+        writeln!(
+            r.text,
+            "{:<12} {:<26} {:>6} {:>12} {:>10.2} {:>10.1} {:>10.2}",
+            format!("{target:?}"),
+            format!("{kernel:?}"),
+            format!("{sew}"),
+            res.cycles,
+            res.cycles_per_output(),
+            res.energy_per_output_pj(),
+            res.avg_power_mw()
+        )
+        .unwrap();
+        writeln!(
+            csv,
+            "{:?},{:?},{},{},{},{},{},{},{},{:.4},{:.2},{:.3}",
+            target,
+            kernel.family(),
+            sew.bits(),
+            seed,
+            dim(n),
+            dim(p),
+            dim(f),
+            res.cycles,
+            res.outputs,
+            res.cycles_per_output(),
+            res.energy_per_output_pj(),
+            res.avg_power_mw()
+        )
+        .unwrap();
+    }
+    writeln!(
+        r.text,
+        "({} points, {} simulations — repeated points served from the session cache)",
+        points.len(),
+        session.simulations()
+    )
+    .unwrap();
+    r.csv.push(("sweep.csv".into(), csv));
+    r
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -560,15 +658,34 @@ mod tests {
     fn quick_table5_has_expected_shape() {
         // One family is enough for the unit test; the integration tests and
         // the CLI cover the full grid.
-        let cpu = kernels::run(Target::Cpu, Kernel::Relu { n: 512 }, Sew::E8, 5);
-        let caesar = kernels::run(Target::Caesar, Kernel::Relu { n: 512 }, Sew::E8, 5);
-        let carus = kernels::run(Target::Carus, Kernel::Relu { n: 512 }, Sew::E8, 5);
+        let session = SweepSession::new();
+        let cpu = session.run(Target::Cpu, Kernel::Relu { n: 512 }, Sew::E8, 5);
+        let caesar = session.run(Target::Caesar, Kernel::Relu { n: 512 }, Sew::E8, 5);
+        let carus = session.run(Target::Carus, Kernel::Relu { n: 512 }, Sew::E8, 5);
         let row = T5Row { family: Family::Relu, sew: Sew::E8, cpu, caesar, carus };
         assert!(row.caesar_speedup() > 5.0);
         assert!(row.carus_speedup() > row.caesar_speedup());
         let rep = table5(&[row]);
         assert!(rep.text.contains("ReLU"));
         assert!(!rep.csv.is_empty());
+    }
+
+    #[test]
+    fn sweep_report_renders_and_caches() {
+        let session = SweepSession::new();
+        let points = [
+            (Target::Cpu, Kernel::Relu { n: 128 }, Sew::E8),
+            (Target::Caesar, Kernel::Relu { n: 128 }, Sew::E8),
+            // Repeated point: must be served from the cache, not re-run.
+            (Target::Cpu, Kernel::Relu { n: 128 }, Sew::E8),
+        ];
+        let rep = sweep_report(&session, &points, 42);
+        assert_eq!(session.simulations(), 2, "repeated point must not re-simulate");
+        assert_eq!(rep.text.matches("Relu").count(), 3, "every point renders a row");
+        let (name, csv) = &rep.csv[0];
+        assert_eq!(name, "sweep.csv");
+        assert_eq!(csv.lines().count(), 4, "header + three rows");
+        assert!(csv.starts_with("target,family,sew,seed,n,p,f,"));
     }
 
     #[test]
@@ -602,6 +719,42 @@ mod tests {
         // Non-finite values degrade to N/A (Table VII has an N/A cell).
         assert_eq!(fmt_si(f64::NAN), "N/A");
         assert_eq!(fmt_si(f64::INFINITY), "N/A");
+        assert_eq!(fmt_si(f64::NEG_INFINITY), "N/A");
+    }
+
+    #[test]
+    fn fmt_si_negative_boundaries() {
+        // Negatives scale by magnitude — previously they fell through
+        // every threshold and rendered unscaled ("-2000000.0").
+        assert_eq!(fmt_si(-2.0e6), "-2.0M");
+        assert_eq!(fmt_si(-1.5e9), "-1.5G");
+        assert_eq!(fmt_si(-256.0e3), "-256.0k");
+        // The same rounding boundaries as the positive range.
+        assert_eq!(fmt_si(-999_940.0), "-999.9k");
+        assert_eq!(fmt_si(-999_950.0), "-1.0M");
+        assert_eq!(fmt_si(-999.6), "-1.0k");
+        assert_eq!(fmt_si(-999.0), "-999");
+        assert_eq!(fmt_si(-100.0), "-100");
+        assert_eq!(fmt_si(-99.94), "-99.9");
+        assert_eq!(fmt_si(-0.5), "-0.5");
+        // Signed zero renders unsigned.
+        assert_eq!(fmt_si(-0.0), "0.0");
+    }
+
+    #[test]
+    fn table5_and_fig11_share_one_simulated_grid() {
+        // The acceptance contract behind `heeperator all`: the second
+        // report consuming the Table V grid adds zero simulations.
+        let session = SweepSession::new();
+        let rows = run_table5(&session, true);
+        assert_eq!(rows.len(), 27);
+        let sims = session.simulations();
+        assert_eq!(sims, 81, "9 families x 3 widths x 3 targets");
+        let again = run_table5(&session, true);
+        assert_eq!(session.simulations(), sims, "second grid pass must be fully cached");
+        // And the two passes render byte-identically.
+        assert_eq!(table5(&rows).text, table5(&again).text);
+        assert_eq!(fig11(&rows).text, fig11(&again).text);
     }
 
     #[test]

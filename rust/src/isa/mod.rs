@@ -130,6 +130,16 @@ impl Sew {
     }
     /// All supported widths, for parameter sweeps.
     pub const ALL: [Sew; 3] = [Sew::E8, Sew::E16, Sew::E32];
+
+    /// Parse a CLI spelling (`8`, `e8`, `16`, `e16`, `32`, `e32`).
+    pub fn parse(s: &str) -> Option<Sew> {
+        match s.to_ascii_lowercase().as_str() {
+            "8" | "e8" => Some(Sew::E8),
+            "16" | "e16" => Some(Sew::E16),
+            "32" | "e32" => Some(Sew::E32),
+            _ => None,
+        }
+    }
 }
 
 impl std::fmt::Display for Sew {

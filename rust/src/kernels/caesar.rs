@@ -19,9 +19,14 @@
 //! Matmul/GEMM use the element-wise `MAC_*` family with splatted A
 //! coefficients (one instruction per word of the output row per k), which
 //! matches the paper's measured 2 instructions (4 cycles) per 8-bit output.
+//!
+//! Engine split: [`CaesarEngine::prepare`] compiles the micro-op stream
+//! and assembles the host driver (both pure functions of `(kernel, sew)`);
+//! [`CaesarEngine::execute`] stages one concrete workload into the macro
+//! and simulates.
 
 use super::golden::{pack, unpack, WorkloadData, LEAKY_SHIFT};
-use super::{finish_run, Kernel, RunResult};
+use super::{finish_run, Engine, EngineProgram, Kernel, RunResult, Target, SOC_RUN_TIMEOUT};
 use crate::asm::{Asm, Program};
 use crate::bus::{periph, BANK_SIZE, CAESAR_BASE, PERIPH_BASE};
 use crate::caesar::compiler::CaesarProgram;
@@ -62,49 +67,75 @@ const STREAM_BASE: u32 = BANK_SIZE;
 /// CPU-phase output area (maxpool horizontal reduction).
 const OUT_BASE: u32 = 4 * BANK_SIZE;
 
-pub fn run(kernel: Kernel, sew: Sew, data: &WorkloadData) -> RunResult {
-    let mut soc = Soc::heeperator();
-    let built = build(kernel, sew, data, &mut soc);
+/// The NM-Caesar backend (DMA-streamed micro-op sequences).
+pub struct CaesarEngine;
 
-    // Stage the micro-op stream in system SRAM (may span banks).
-    let stream = built.program.to_stream(CAESAR_BASE);
-    load_region(&mut soc, STREAM_BASE, &stream);
-
-    // Host firmware: imc=1 → DMA stream → wfi → imc=0 → optional CPU phase.
-    let mut a = Asm::new(0);
-    a.li(T0, (PERIPH_BASE + periph::CAESAR_IMC) as i32)
-        .li(T1, 1)
-        .sw(T1, 0, T0)
-        .li(T0, (PERIPH_BASE + periph::DMA_SRC) as i32)
-        .li(T1, STREAM_BASE as i32)
-        .sw(T1, 0, T0)
-        .li(T0, (PERIPH_BASE + periph::DMA_LEN) as i32)
-        .li(T1, built.program.stream_len() as i32)
-        .sw(T1, 0, T0)
-        .li(T0, (PERIPH_BASE + periph::DMA_CTL) as i32)
-        .li(T1, 0b11) // start | CaesarStream
-        .sw(T1, 0, T0)
-        .wfi()
-        .li(T0, (PERIPH_BASE + periph::DMA_STATUS) as i32)
-        .lw(T1, 0, T0) // ack irq
-        .li(T0, (PERIPH_BASE + periph::CAESAR_IMC) as i32)
-        .sw(ZERO, 0, T0);
-    if let Kernel::Maxpool { n } = kernel {
-        maxpool_cpu_phase(&mut a, n, sew);
-    }
-    a.ebreak();
-    let prog: Program = a.assemble().expect("caesar driver assembles");
-    soc.load_firmware(&prog, 0);
-    soc.reset_stats();
-    let (halt, _) = soc.run(200_000_000);
-    let mut res = finish_run(&mut soc, halt, kernel, sew);
-    res.output = (built.extract)(&soc);
-    res
+/// Engine-private prepared program: the rendered micro-op stream plus the
+/// assembled host driver that issues it (and, for maxpool, performs the
+/// horizontal CPU phase).
+struct CaesarPrepared {
+    stream: Vec<u8>,
+    driver: Program,
 }
 
-struct Built {
-    program: CaesarProgram,
-    extract: Box<dyn Fn(&Soc) -> Vec<u8>>,
+impl Engine for CaesarEngine {
+    fn target(&self) -> Target {
+        Target::Caesar
+    }
+
+    fn prepare(&self, kernel: Kernel, sew: Sew) -> EngineProgram {
+        let program = build_program(kernel, sew);
+        let stream = program.to_stream(CAESAR_BASE);
+
+        // Host firmware: imc=1 → DMA stream → wfi → imc=0 → optional CPU
+        // phase.
+        let mut a = Asm::new(0);
+        a.li(T0, (PERIPH_BASE + periph::CAESAR_IMC) as i32)
+            .li(T1, 1)
+            .sw(T1, 0, T0)
+            .li(T0, (PERIPH_BASE + periph::DMA_SRC) as i32)
+            .li(T1, STREAM_BASE as i32)
+            .sw(T1, 0, T0)
+            .li(T0, (PERIPH_BASE + periph::DMA_LEN) as i32)
+            .li(T1, program.stream_len() as i32)
+            .sw(T1, 0, T0)
+            .li(T0, (PERIPH_BASE + periph::DMA_CTL) as i32)
+            .li(T1, 0b11) // start | CaesarStream
+            .sw(T1, 0, T0)
+            .wfi()
+            .li(T0, (PERIPH_BASE + periph::DMA_STATUS) as i32)
+            .lw(T1, 0, T0) // ack irq
+            .li(T0, (PERIPH_BASE + periph::CAESAR_IMC) as i32)
+            .sw(ZERO, 0, T0);
+        if let Kernel::Maxpool { n } = kernel {
+            maxpool_cpu_phase(&mut a, n, sew);
+        }
+        a.ebreak();
+        let driver = a.assemble().expect("caesar driver assembles");
+        EngineProgram::new(Target::Caesar, kernel, sew, CaesarPrepared { stream, driver })
+    }
+
+    fn execute(&self, prog: &EngineProgram, data: &WorkloadData) -> RunResult {
+        let prepared: &CaesarPrepared = prog.payload();
+        let (kernel, sew) = (prog.kernel, prog.sew);
+        let mut soc = Soc::heeperator();
+        stage_data(&mut soc, kernel, sew, data);
+
+        // Stage the micro-op stream in system SRAM (may span banks).
+        load_region(&mut soc, STREAM_BASE, &prepared.stream);
+
+        soc.load_firmware(&prepared.driver, 0);
+        soc.reset_stats();
+        let (halt, _) = soc.run(SOC_RUN_TIMEOUT);
+        let mut res = finish_run(&mut soc, halt, Target::Caesar, kernel, sew);
+        res.output = extract(&soc, kernel, sew);
+        res
+    }
+}
+
+/// Build + run an NM-Caesar kernel (uncached prepare + execute).
+pub fn run(kernel: Kernel, sew: Sew, data: &WorkloadData) -> RunResult {
+    CaesarEngine.execute(&CaesarEngine.prepare(kernel, sew), data)
 }
 
 /// Load a byte region that may span multiple SRAM banks.
@@ -119,14 +150,14 @@ fn load_region(soc: &mut Soc, addr: u32, bytes: &[u8]) {
     }
 }
 
-fn build(kernel: Kernel, sew: Sew, data: &WorkloadData, soc: &mut Soc) -> Built {
+/// Compile the micro-op stream — a pure function of the workload *shape*
+/// (all operands are fixed [`layout`] word addresses).
+fn build_program(kernel: Kernel, sew: Sew) -> CaesarProgram {
     let mut p = CaesarProgram::new();
     p.csrw(sew);
     match kernel {
         Kernel::Xor { n } | Kernel::Add { n } | Kernel::Mul { n } => {
             let words = (n * sew.bytes()).div_ceil(4);
-            soc.caesar.load(layout::EW_SRC1 * 4, &data.a);
-            soc.caesar.load(layout::EW_SRC2 * 4, &data.b);
             for w in 0..words {
                 let (d, s1, s2) = (layout::EW_OUT + w, layout::EW_SRC1 + w, layout::EW_SRC2 + w);
                 match kernel {
@@ -135,23 +166,10 @@ fn build(kernel: Kernel, sew: Sew, data: &WorkloadData, soc: &mut Soc) -> Built 
                     _ => p.mul(d, s1, s2),
                 };
             }
-            let bytes = n * sew.bytes();
-            Built {
-                program: p,
-                extract: Box::new(move |soc| soc.dump(CAESAR_BASE + layout::EW_OUT * 4, bytes)),
-            }
         }
         Kernel::Relu { n } | Kernel::LeakyRelu { n } => {
             let words = (n * sew.bytes()).div_ceil(4);
-            soc.caesar.load(layout::RELU_SRC * 4, &data.a);
             let leaky = matches!(kernel, Kernel::LeakyRelu { .. });
-            soc.caesar.sew = sew;
-            if leaky {
-                // const word = splat(shift amount); scratch at CONST+1.
-                soc.caesar.splat_word(layout::RELU_CONST, LEAKY_SHIFT);
-            } else {
-                soc.caesar.splat_word(layout::RELU_CONST, 0);
-            }
             for w in 0..words {
                 let x = layout::RELU_SRC + w;
                 if leaky {
@@ -162,27 +180,9 @@ fn build(kernel: Kernel, sew: Sew, data: &WorkloadData, soc: &mut Soc) -> Built 
                     p.max(x, x, layout::RELU_CONST);
                 }
             }
-            let bytes = n * sew.bytes();
-            Built {
-                program: p,
-                extract: Box::new(move |soc| soc.dump(CAESAR_BASE + layout::RELU_SRC * 4, bytes)),
-            }
         }
         Kernel::Matmul { p: pp } | Kernel::Gemm { p: pp } => {
             let gemm = matches!(kernel, Kernel::Gemm { .. });
-            // Stage splat(A[i][k]) words.
-            let av = unpack(&data.a, sew);
-            soc.caesar.sew = sew;
-            for (i, &v) in av.iter().enumerate() {
-                soc.caesar.poke_word(layout::MM_ASPLAT + i as u32, elem::splat(v as u32, sew));
-            }
-            soc.caesar.load(layout::MM_B * 4, &data.b); // row-major B
-            if gemm {
-                soc.caesar.load(layout::MM_C * 4, &data.c);
-                soc.caesar.splat_word(layout::MM_SPLAT2, 2);
-                soc.caesar.splat_word(layout::MM_SPLAT3, 3);
-            }
-            let lanes = sew.lanes();
             let row_words = pp * sew.bytes() / 4; // B/C/OUT row length in words
             for i in 0..8u32 {
                 for w in 0..row_words {
@@ -201,42 +201,11 @@ fn build(kernel: Kernel, sew: Sew, data: &WorkloadData, soc: &mut Soc) -> Built 
                     }
                 }
             }
-            let _ = lanes;
-            let bytes = 8 * pp * sew.bytes();
-            Built {
-                program: p,
-                extract: Box::new(move |soc| soc.dump(CAESAR_BASE + layout::MM_OUT * 4, bytes)),
-            }
         }
         Kernel::Conv2d { n, f } => {
             let lanes = sew.lanes();
-            let img = unpack(&data.a, sew);
-            let filt = unpack(&data.b, sew);
-            soc.caesar.sew = sew;
-            // Shifted copies: copy s has img[row][col + s], one guard word
-            // per row against chunk overreach.
             let row_words = (n * sew.bytes()).div_ceil(4) + 1;
             let copy_words = 8 * row_words;
-            for s in 0..lanes {
-                for r in 0..8u32 {
-                    let vals: Vec<i64> = (0..n)
-                        .map(|c| {
-                            let cc = c + s;
-                            if cc < n {
-                                img[(r * n + cc) as usize]
-                            } else {
-                                0
-                            }
-                        })
-                        .collect();
-                    let base = (layout::CV_COPIES + s * copy_words + r * row_words) * 4;
-                    soc.caesar.load(base, &pack(&vals, sew));
-                }
-            }
-            // Filter splats.
-            for (i, &w) in filt.iter().enumerate() {
-                soc.caesar.poke_word(layout::CV_FSPLAT + i as u32, elem::splat(w as u32, sew));
-            }
             let (orows, ocols) = (8 - f + 1, n - f + 1);
             let out_row_words = (ocols * sew.bytes()).div_ceil(4) + 1;
             // Chunked MAC accumulation.
@@ -265,18 +234,85 @@ fn build(kernel: Kernel, sew: Sew, data: &WorkloadData, soc: &mut Soc) -> Built 
                     }
                 }
             }
-            // Extraction: reassemble padded rows.
-            let sewb = sew.bytes();
-            Built {
-                program: p,
-                extract: Box::new(move |soc| {
-                    let mut out = Vec::new();
-                    for r in 0..orows {
-                        let base = CAESAR_BASE + (layout::CV_OUT + r * out_row_words) * 4;
-                        out.extend(soc.dump(base, ocols * sewb));
-                    }
-                    out
-                }),
+        }
+        Kernel::Maxpool { n } => {
+            let row_words = (n * sew.bytes()).div_ceil(4);
+            // Vertical MAX of row pairs; horizontal reduction runs on the
+            // host CPU (see `maxpool_cpu_phase`).
+            for r in 0..8u32 {
+                for w in 0..row_words {
+                    p.max(
+                        layout::MP_VMAX + r * row_words + w,
+                        layout::MP_EVEN + r * row_words + w,
+                        layout::MP_ODD + r * row_words + w,
+                    );
+                }
+            }
+        }
+    }
+    p
+}
+
+/// Stage one concrete workload into the macro's banks per the [`layout`]
+/// contract the compiled stream expects.
+fn stage_data(soc: &mut Soc, kernel: Kernel, sew: Sew, data: &WorkloadData) {
+    match kernel {
+        Kernel::Xor { .. } | Kernel::Add { .. } | Kernel::Mul { .. } => {
+            soc.caesar.load(layout::EW_SRC1 * 4, &data.a);
+            soc.caesar.load(layout::EW_SRC2 * 4, &data.b);
+        }
+        Kernel::Relu { .. } | Kernel::LeakyRelu { .. } => {
+            soc.caesar.load(layout::RELU_SRC * 4, &data.a);
+            soc.caesar.sew = sew;
+            if matches!(kernel, Kernel::LeakyRelu { .. }) {
+                // const word = splat(shift amount); scratch at CONST+1.
+                soc.caesar.splat_word(layout::RELU_CONST, LEAKY_SHIFT);
+            } else {
+                soc.caesar.splat_word(layout::RELU_CONST, 0);
+            }
+        }
+        Kernel::Matmul { .. } | Kernel::Gemm { .. } => {
+            // Stage splat(A[i][k]) words.
+            let av = unpack(&data.a, sew);
+            soc.caesar.sew = sew;
+            for (i, &v) in av.iter().enumerate() {
+                soc.caesar.poke_word(layout::MM_ASPLAT + i as u32, elem::splat(v as u32, sew));
+            }
+            soc.caesar.load(layout::MM_B * 4, &data.b); // row-major B
+            if matches!(kernel, Kernel::Gemm { .. }) {
+                soc.caesar.load(layout::MM_C * 4, &data.c);
+                soc.caesar.splat_word(layout::MM_SPLAT2, 2);
+                soc.caesar.splat_word(layout::MM_SPLAT3, 3);
+            }
+        }
+        Kernel::Conv2d { n, f: _ } => {
+            let lanes = sew.lanes();
+            let img = unpack(&data.a, sew);
+            let filt = unpack(&data.b, sew);
+            soc.caesar.sew = sew;
+            // Shifted copies: copy s has img[row][col + s], one guard word
+            // per row against chunk overreach.
+            let row_words = (n * sew.bytes()).div_ceil(4) + 1;
+            let copy_words = 8 * row_words;
+            for s in 0..lanes {
+                for r in 0..8u32 {
+                    let vals: Vec<i64> = (0..n)
+                        .map(|c| {
+                            let cc = c + s;
+                            if cc < n {
+                                img[(r * n + cc) as usize]
+                            } else {
+                                0
+                            }
+                        })
+                        .collect();
+                    let base = (layout::CV_COPIES + s * copy_words + r * row_words) * 4;
+                    soc.caesar.load(base, &pack(&vals, sew));
+                }
+            }
+            // Filter splats.
+            for (i, &w) in filt.iter().enumerate() {
+                soc.caesar.poke_word(layout::CV_FSPLAT + i as u32, elem::splat(w as u32, sew));
             }
         }
         Kernel::Maxpool { n } => {
@@ -292,24 +328,35 @@ fn build(kernel: Kernel, sew: Sew, data: &WorkloadData, soc: &mut Soc) -> Built 
                 };
                 soc.caesar.load(base * 4, src);
             }
-            // Vertical MAX of row pairs.
-            for r in 0..8u32 {
-                for w in 0..row_words {
-                    p.max(
-                        layout::MP_VMAX + r * row_words + w,
-                        layout::MP_EVEN + r * row_words + w,
-                        layout::MP_ODD + r * row_words + w,
-                    );
-                }
-            }
-            // Horizontal reduction runs on the host CPU (see
-            // `maxpool_cpu_phase`); canonical output lands at OUT_BASE.
-            let bytes = 8 * (n / 2) * sew.bytes();
-            Built {
-                program: p,
-                extract: Box::new(move |soc| soc.dump(OUT_BASE, bytes)),
-            }
         }
+    }
+}
+
+/// Extract the canonical output — a pure function of the shape and the
+/// finished SoC state.
+fn extract(soc: &Soc, kernel: Kernel, sew: Sew) -> Vec<u8> {
+    match kernel {
+        Kernel::Xor { n } | Kernel::Add { n } | Kernel::Mul { n } => {
+            soc.dump(CAESAR_BASE + layout::EW_OUT * 4, n * sew.bytes())
+        }
+        Kernel::Relu { n } | Kernel::LeakyRelu { n } => {
+            soc.dump(CAESAR_BASE + layout::RELU_SRC * 4, n * sew.bytes())
+        }
+        Kernel::Matmul { p } | Kernel::Gemm { p } => {
+            soc.dump(CAESAR_BASE + layout::MM_OUT * 4, 8 * p * sew.bytes())
+        }
+        Kernel::Conv2d { n, f } => {
+            // Reassemble padded rows.
+            let (orows, ocols) = (8 - f + 1, n - f + 1);
+            let out_row_words = (ocols * sew.bytes()).div_ceil(4) + 1;
+            let mut out = Vec::new();
+            for r in 0..orows {
+                let base = CAESAR_BASE + (layout::CV_OUT + r * out_row_words) * 4;
+                out.extend(soc.dump(base, ocols * sew.bytes()));
+            }
+            out
+        }
+        Kernel::Maxpool { n } => soc.dump(OUT_BASE, 8 * (n / 2) * sew.bytes()),
     }
 }
 
@@ -325,25 +372,16 @@ fn maxpool_cpu_phase(a: &mut Asm, n: u32, sew: Sew) {
     a.li(A0, vmax_base as i32)
         .li(A2, OUT_BASE as i32)
         .li(A3, vmax_base as i32 + total_in_bytes)
-        .label("mp_loop");
-    match sew {
-        Sew::E8 => {
-            a.lb(T0, 0, A0).lb(T1, 1, A0);
-        }
-        Sew::E16 => {
-            a.lh(T0, 0, A0).lh(T1, 2, A0);
-        }
-        Sew::E32 => {
-            a.lw(T0, 0, A0).lw(T1, 4, A0);
-        }
-    }
-    a.bge(T0, T1, "mp_keep").mv(T0, T1).label("mp_keep");
-    match sew {
-        Sew::E8 => a.sb(T0, 0, A2),
-        Sew::E16 => a.sh(T0, 0, A2),
-        Sew::E32 => a.sw(T0, 0, A2),
-    };
-    a.addi(A0, A0, 2 * sb).addi(A2, A2, sb).bne(A0, A3, "mp_loop");
+        .label("mp_loop")
+        .lx(sew, T0, 0, A0)
+        .lx(sew, T1, sb, A0)
+        .bge(T0, T1, "mp_keep")
+        .mv(T0, T1)
+        .label("mp_keep")
+        .sx(sew, T0, 0, A2)
+        .addi(A0, A0, 2 * sb)
+        .addi(A2, A2, sb)
+        .bne(A0, A3, "mp_loop");
 }
 
 #[cfg(test)]
@@ -417,6 +455,20 @@ mod tests {
     fn maxpool_with_cpu_phase() {
         for sew in Sew::ALL {
             check(Kernel::Maxpool { n: 64 / sew.bytes() }, sew);
+        }
+    }
+
+    #[test]
+    fn prepared_program_is_reusable_across_workloads() {
+        // One prepared program, two different workloads: the program is
+        // data-independent by construction.
+        let kernel = Kernel::Add { n: 128 };
+        let prog = CaesarEngine.prepare(kernel, Sew::E16);
+        for seed in [1u64, 2] {
+            let data = golden::generate(kernel, Sew::E16, seed);
+            let res = CaesarEngine.execute(&prog, &data);
+            assert_eq!(res.output, data.expect, "seed {seed}");
+            assert_eq!(res.target, Target::Caesar);
         }
     }
 }

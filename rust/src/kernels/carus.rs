@@ -24,9 +24,14 @@
 //! | conv2d | image rows v0–7, filter v14 | v8–13 | v15 (slide) |
 //! | relu/leaky | v0..15 (in place) | v0..15 | v16 |
 //! | maxpool | rows v0–15 | v0–7 (packed by eCPU) | v16–24 |
+//!
+//! Engine split: [`CarusEngine::prepare`] assembles the eCPU kernel and
+//! the host driver (pure functions of `(kernel, sew)` — the argument words
+//! are shape parameters); [`CarusEngine::execute`] stages one concrete
+//! workload into the VRF and simulates.
 
 use super::golden::{unpack, WorkloadData, LEAKY_SHIFT};
-use super::{finish_run, Kernel, RunResult};
+use super::{finish_run, Engine, EngineProgram, Kernel, RunResult, Target, SOC_RUN_TIMEOUT};
 use crate::asm::{Asm, Program};
 use crate::bus::{periph, BANK_SIZE, CARUS_BASE, PERIPH_BASE};
 use crate::carus::{ARG_OFFSET, CTL_OFFSET, CTL_START};
@@ -40,62 +45,88 @@ const KERNEL_BASE: u32 = BANK_SIZE;
 /// 1 KiB logical registers (vl = VLMAX).
 const REG_BYTES: u32 = 1024;
 
-pub fn run(kernel: Kernel, sew: Sew, data: &WorkloadData) -> RunResult {
-    let mut soc = Soc::heeperator();
-    let built = build(kernel, sew, data, &mut soc);
+/// The NM-Carus backend (eCPU-sequenced xvnmc kernels).
+pub struct CarusEngine;
 
-    // Stage the kernel binary in system SRAM.
-    let kbytes: Vec<u8> = built.kernel.words.iter().flat_map(|w| w.to_le_bytes()).collect();
-    soc.load_data(KERNEL_BASE, &kbytes);
-
-    // Host firmware: config mode → DMA kernel upload → args → start → wfi.
-    let mut a = Asm::new(0);
-    a.li(T0, (PERIPH_BASE + periph::CARUS_MODE) as i32)
-        .li(T1, 1)
-        .sw(T1, 0, T0) // configuration mode
-        .li(T0, (PERIPH_BASE + periph::DMA_SRC) as i32)
-        .li(T1, KERNEL_BASE as i32)
-        .sw(T1, 0, T0)
-        .li(T0, (PERIPH_BASE + periph::DMA_DST) as i32)
-        .li(T1, CARUS_BASE as i32)
-        .sw(T1, 0, T0)
-        .li(T0, (PERIPH_BASE + periph::DMA_LEN) as i32)
-        .li(T1, kbytes.len() as i32)
-        .sw(T1, 0, T0)
-        .li(T0, (PERIPH_BASE + periph::DMA_CTL) as i32)
-        .li(T1, 0b01) // start | copy
-        .sw(T1, 0, T0)
-        .wfi() // until DMA done
-        .li(T0, (PERIPH_BASE + periph::DMA_STATUS) as i32)
-        .lw(T1, 0, T0); // ack
-    // Argument words.
-    for (i, &arg) in built.args.iter().enumerate() {
-        a.li(T0, (CARUS_BASE + ARG_OFFSET + 4 * i as u32) as i32)
-            .li(T1, arg as i32)
-            .sw(T1, 0, T0);
-    }
-    a.li(A0, (CARUS_BASE + CTL_OFFSET) as i32)
-        .li(T1, CTL_START as i32)
-        .sw(T1, 0, A0) // start the kernel
-        .wfi() // until NM-Carus IRQ
-        .lw(A1, 0, A0) // status
-        .sw(ZERO, 0, A0) // ack done
-        .li(T0, (PERIPH_BASE + periph::CARUS_MODE) as i32)
-        .sw(ZERO, 0, T0) // back to memory mode
-        .ebreak();
-    let prog: Program = a.assemble().expect("carus driver assembles");
-    soc.load_firmware(&prog, 0);
-    soc.reset_stats();
-    let (halt, _) = soc.run(200_000_000);
-    let mut res = finish_run(&mut soc, halt, kernel, sew);
-    res.output = (built.extract)(&soc);
-    res
+/// Engine-private prepared program: the eCPU kernel image (bytes, staged
+/// in system SRAM and DMA-uploaded by the driver) plus the assembled host
+/// driver that uploads, parameterizes, and starts it.
+struct CarusPrepared {
+    kernel_bytes: Vec<u8>,
+    driver: Program,
 }
 
-struct Built {
-    kernel: Program,
-    args: Vec<u32>,
-    extract: Box<dyn Fn(&Soc) -> Vec<u8>>,
+impl Engine for CarusEngine {
+    fn target(&self) -> Target {
+        Target::Carus
+    }
+
+    fn prepare(&self, kernel: Kernel, sew: Sew) -> EngineProgram {
+        let (kprog, args) = build_kernel(kernel, sew);
+        let kernel_bytes: Vec<u8> =
+            kprog.words.iter().flat_map(|w| w.to_le_bytes()).collect();
+
+        // Host firmware: config mode → DMA kernel upload → args → start →
+        // wfi.
+        let mut a = Asm::new(0);
+        a.li(T0, (PERIPH_BASE + periph::CARUS_MODE) as i32)
+            .li(T1, 1)
+            .sw(T1, 0, T0) // configuration mode
+            .li(T0, (PERIPH_BASE + periph::DMA_SRC) as i32)
+            .li(T1, KERNEL_BASE as i32)
+            .sw(T1, 0, T0)
+            .li(T0, (PERIPH_BASE + periph::DMA_DST) as i32)
+            .li(T1, CARUS_BASE as i32)
+            .sw(T1, 0, T0)
+            .li(T0, (PERIPH_BASE + periph::DMA_LEN) as i32)
+            .li(T1, kernel_bytes.len() as i32)
+            .sw(T1, 0, T0)
+            .li(T0, (PERIPH_BASE + periph::DMA_CTL) as i32)
+            .li(T1, 0b01) // start | copy
+            .sw(T1, 0, T0)
+            .wfi() // until DMA done
+            .li(T0, (PERIPH_BASE + periph::DMA_STATUS) as i32)
+            .lw(T1, 0, T0); // ack
+        // Argument words.
+        for (i, &arg) in args.iter().enumerate() {
+            a.li(T0, (CARUS_BASE + ARG_OFFSET + 4 * i as u32) as i32)
+                .li(T1, arg as i32)
+                .sw(T1, 0, T0);
+        }
+        a.li(A0, (CARUS_BASE + CTL_OFFSET) as i32)
+            .li(T1, CTL_START as i32)
+            .sw(T1, 0, A0) // start the kernel
+            .wfi() // until NM-Carus IRQ
+            .lw(A1, 0, A0) // status
+            .sw(ZERO, 0, A0) // ack done
+            .li(T0, (PERIPH_BASE + periph::CARUS_MODE) as i32)
+            .sw(ZERO, 0, T0) // back to memory mode
+            .ebreak();
+        let driver = a.assemble().expect("carus driver assembles");
+        EngineProgram::new(Target::Carus, kernel, sew, CarusPrepared { kernel_bytes, driver })
+    }
+
+    fn execute(&self, prog: &EngineProgram, data: &WorkloadData) -> RunResult {
+        let prepared: &CarusPrepared = prog.payload();
+        let (kernel, sew) = (prog.kernel, prog.sew);
+        let mut soc = Soc::heeperator();
+        stage_data(&mut soc, kernel, sew, data);
+
+        // Stage the kernel binary in system SRAM.
+        soc.load_data(KERNEL_BASE, &prepared.kernel_bytes);
+
+        soc.load_firmware(&prepared.driver, 0);
+        soc.reset_stats();
+        let (halt, _) = soc.run(SOC_RUN_TIMEOUT);
+        let mut res = finish_run(&mut soc, halt, Target::Carus, kernel, sew);
+        res.output = extract(&soc, kernel, sew);
+        res
+    }
+}
+
+/// Build + run an NM-Carus kernel (uncached prepare + execute).
+pub fn run(kernel: Kernel, sew: Sew, data: &WorkloadData) -> RunResult {
+    CarusEngine.execute(&CarusEngine.prepare(kernel, sew), data)
 }
 
 /// Assemble an eCPU kernel (base 0 = eMEM).
@@ -111,14 +142,14 @@ fn kasm(build: impl FnOnce(&mut Asm)) -> Program {
     p
 }
 
-fn build(kernel: Kernel, sew: Sew, data: &WorkloadData, soc: &mut Soc) -> Built {
+/// Assemble the eCPU program and its argument words — pure functions of
+/// the workload shape.
+fn build_kernel(kernel: Kernel, sew: Sew) -> (Program, Vec<u32>) {
     let vlmax = REG_BYTES / sew.bytes();
     match kernel {
         Kernel::Xor { n } | Kernel::Add { n } | Kernel::Mul { n } => {
             let bytes = n * sew.bytes();
             let nregs = bytes.div_ceil(REG_BYTES);
-            soc.carus.vrf.load(0, &data.a); // v0..
-            soc.carus.vrf.load(10 * REG_BYTES, &data.b); // v10..
             let op = match kernel {
                 Kernel::Xor { .. } => VOp::Xor,
                 Kernel::Add { .. } => VOp::Add,
@@ -139,16 +170,11 @@ fn build(kernel: Kernel, sew: Sew, data: &WorkloadData, soc: &mut Soc) -> Built 
                     .bne(S0, ZERO, "loop")
                     .ebreak();
             });
-            Built {
-                kernel: k,
-                args: vec![nregs],
-                extract: Box::new(move |soc| soc.dump(CARUS_BASE + 20 * REG_BYTES, bytes)),
-            }
+            (k, vec![nregs])
         }
         Kernel::Relu { n } | Kernel::LeakyRelu { n } => {
             let bytes = n * sew.bytes();
             let nregs = bytes.div_ceil(REG_BYTES);
-            soc.carus.vrf.load(0, &data.a);
             let leaky = matches!(kernel, Kernel::LeakyRelu { .. });
             let k = kasm(|a| {
                 a.li(T0, ARG_OFFSET as i32)
@@ -174,47 +200,16 @@ fn build(kernel: Kernel, sew: Sew, data: &WorkloadData, soc: &mut Soc) -> Built 
                     .bne(S0, ZERO, "loop")
                     .ebreak();
             });
-            Built {
-                kernel: k,
-                args: vec![nregs],
-                extract: Box::new(move |soc| soc.dump(CARUS_BASE, bytes)),
-            }
+            (k, vec![nregs])
         }
         Kernel::Matmul { p } | Kernel::Gemm { p } => {
             let gemm = matches!(kernel, Kernel::Gemm { .. });
             assert!(p >= 8, "vl = p must hold the 8-element A columns");
             assert!(p * sew.bytes() <= REG_BYTES, "B row must fit one register");
-            let row_bytes = p * sew.bytes();
             // vl = p ⇒ logical registers are row-sized. Layout: B rows
             // v0–7, output rows v8–15, A *columns* v16–23 (column k in
             // v(16+k): emvx's direct vs2 field stays constant per unrolled
             // k-slot while the element index i is a GPR), C rows v24–31.
-            let av = unpack(&data.a, sew);
-            for r in 0..8u32 {
-                soc.carus.vrf.load(
-                    r * row_bytes,
-                    &data.b[(r * row_bytes) as usize..((r + 1) * row_bytes) as usize],
-                );
-            }
-            for k in 0..8u32 {
-                for i in 0..8u32 {
-                    soc.carus.vrf.set_elem(
-                        (16 + k) as u8,
-                        i,
-                        p,
-                        sew,
-                        av[(i * 8 + k) as usize] as u32,
-                    );
-                }
-            }
-            if gemm {
-                for r in 0..8u32 {
-                    soc.carus.vrf.load(
-                        (24 + r) * row_bytes,
-                        &data.c[(r * row_bytes) as usize..((r + 1) * row_bytes) as usize],
-                    );
-                }
-            }
             let k = kasm(|a| {
                 a.li(T0, ARG_OFFSET as i32)
                     .lw(A0, 0, T0) // p (AVL)
@@ -248,21 +243,11 @@ fn build(kernel: Kernel, sew: Sew, data: &WorkloadData, soc: &mut Soc) -> Built 
                     .bne(S0, T2, "iloop")
                     .ebreak();
             });
-            let bytes = 8 * row_bytes;
-            Built {
-                kernel: k,
-                args: vec![p],
-                extract: Box::new(move |soc| soc.dump(CARUS_BASE + 8 * row_bytes, bytes)),
-            }
+            (k, vec![p])
         }
         Kernel::Conv2d { n, f } => {
             assert!(n * sew.bytes() <= REG_BYTES);
-            let row_bytes = n * sew.bytes();
-            for r in 0..8u32 {
-                soc.carus.vrf.load(r * row_bytes, &data.a[(r * row_bytes) as usize..((r + 1) * row_bytes) as usize]);
-            }
-            soc.carus.vrf.load(14 * row_bytes, &data.b); // filter flat in v14
-            let (orows, ocols) = (8 - f + 1, n - f + 1);
+            let orows = 8 - f + 1;
             let k = kasm(|a| {
                 a.li(T0, ARG_OFFSET as i32)
                     .lw(A0, 0, T0) // n (AVL)
@@ -303,25 +288,10 @@ fn build(kernel: Kernel, sew: Sew, data: &WorkloadData, soc: &mut Soc) -> Built 
                     .bne(S1, S0, "rloop")
                     .ebreak();
             });
-            let sewb = sew.bytes();
-            Built {
-                kernel: k,
-                args: vec![n, f, orows],
-                extract: Box::new(move |soc| {
-                    let mut out = Vec::new();
-                    for r in 0..orows {
-                        out.extend(soc.dump(CARUS_BASE + (8 + r) * row_bytes, ocols * sewb));
-                    }
-                    out
-                }),
-            }
+            (k, vec![n, f, orows])
         }
         Kernel::Maxpool { n } => {
             assert!(n * sew.bytes() <= REG_BYTES);
-            let row_bytes = n * sew.bytes();
-            for r in 0..16u32 {
-                soc.carus.vrf.load(r * row_bytes, &data.a[(r * row_bytes) as usize..((r + 1) * row_bytes) as usize]);
-            }
             let half = n / 2;
             let k = kasm(|a| {
                 a.li(T0, ARG_OFFSET as i32)
@@ -367,18 +337,101 @@ fn build(kernel: Kernel, sew: Sew, data: &WorkloadData, soc: &mut Soc) -> Built 
                 }
                 a.ebreak();
             });
-            let sewb = sew.bytes();
-            Built {
-                kernel: k,
-                args: vec![n, half],
-                extract: Box::new(move |soc| {
-                    let mut out = Vec::new();
-                    for r in 0..8u32 {
-                        out.extend(soc.dump(CARUS_BASE + r * row_bytes, half * sewb));
-                    }
-                    out
-                }),
+            (k, vec![n, half])
+        }
+    }
+}
+
+/// Stage one concrete workload into the VRF per the layout the kernel
+/// expects.
+fn stage_data(soc: &mut Soc, kernel: Kernel, sew: Sew, data: &WorkloadData) {
+    match kernel {
+        Kernel::Xor { .. } | Kernel::Add { .. } | Kernel::Mul { .. } => {
+            soc.carus.vrf.load(0, &data.a); // v0..
+            soc.carus.vrf.load(10 * REG_BYTES, &data.b); // v10..
+        }
+        Kernel::Relu { .. } | Kernel::LeakyRelu { .. } => {
+            soc.carus.vrf.load(0, &data.a);
+        }
+        Kernel::Matmul { p } | Kernel::Gemm { p } => {
+            let row_bytes = p * sew.bytes();
+            let av = unpack(&data.a, sew);
+            for r in 0..8u32 {
+                soc.carus.vrf.load(
+                    r * row_bytes,
+                    &data.b[(r * row_bytes) as usize..((r + 1) * row_bytes) as usize],
+                );
             }
+            for k in 0..8u32 {
+                for i in 0..8u32 {
+                    soc.carus.vrf.set_elem(
+                        (16 + k) as u8,
+                        i,
+                        p,
+                        sew,
+                        av[(i * 8 + k) as usize] as u32,
+                    );
+                }
+            }
+            if matches!(kernel, Kernel::Gemm { .. }) {
+                for r in 0..8u32 {
+                    soc.carus.vrf.load(
+                        (24 + r) * row_bytes,
+                        &data.c[(r * row_bytes) as usize..((r + 1) * row_bytes) as usize],
+                    );
+                }
+            }
+        }
+        Kernel::Conv2d { n, .. } => {
+            let row_bytes = n * sew.bytes();
+            for r in 0..8u32 {
+                soc.carus.vrf.load(
+                    r * row_bytes,
+                    &data.a[(r * row_bytes) as usize..((r + 1) * row_bytes) as usize],
+                );
+            }
+            soc.carus.vrf.load(14 * row_bytes, &data.b); // filter flat in v14
+        }
+        Kernel::Maxpool { n } => {
+            let row_bytes = n * sew.bytes();
+            for r in 0..16u32 {
+                soc.carus.vrf.load(
+                    r * row_bytes,
+                    &data.a[(r * row_bytes) as usize..((r + 1) * row_bytes) as usize],
+                );
+            }
+        }
+    }
+}
+
+/// Extract the canonical output from the VRF byte view.
+fn extract(soc: &Soc, kernel: Kernel, sew: Sew) -> Vec<u8> {
+    match kernel {
+        Kernel::Xor { n } | Kernel::Add { n } | Kernel::Mul { n } => {
+            soc.dump(CARUS_BASE + 20 * REG_BYTES, n * sew.bytes())
+        }
+        Kernel::Relu { n } | Kernel::LeakyRelu { n } => soc.dump(CARUS_BASE, n * sew.bytes()),
+        Kernel::Matmul { p } | Kernel::Gemm { p } => {
+            let row_bytes = p * sew.bytes();
+            soc.dump(CARUS_BASE + 8 * row_bytes, 8 * row_bytes)
+        }
+        Kernel::Conv2d { n, f } => {
+            let row_bytes = n * sew.bytes();
+            let (orows, ocols) = (8 - f + 1, n - f + 1);
+            let mut out = Vec::new();
+            for r in 0..orows {
+                out.extend(soc.dump(CARUS_BASE + (8 + r) * row_bytes, ocols * sew.bytes()));
+            }
+            out
+        }
+        Kernel::Maxpool { n } => {
+            let row_bytes = n * sew.bytes();
+            let half = n / 2;
+            let mut out = Vec::new();
+            for r in 0..8u32 {
+                out.extend(soc.dump(CARUS_BASE + r * row_bytes, half * sew.bytes()));
+            }
+            out
         }
     }
 }
@@ -444,6 +497,18 @@ mod tests {
     fn maxpool() {
         for sew in Sew::ALL {
             check(Kernel::Maxpool { n: 256 / sew.bytes() }, sew);
+        }
+    }
+
+    #[test]
+    fn prepared_program_is_reusable_across_workloads() {
+        let kernel = Kernel::Relu { n: 512 };
+        let prog = CarusEngine.prepare(kernel, Sew::E8);
+        for seed in [10u64, 11] {
+            let data = golden::generate(kernel, Sew::E8, seed);
+            let res = CarusEngine.execute(&prog, &data);
+            assert_eq!(res.output, data.expect, "seed {seed}");
+            assert_eq!(res.target, Target::Carus);
         }
     }
 }

@@ -11,8 +11,8 @@
 //! Memory map: firmware in SRAM bank 0; A/B/C/OUT in banks 1/2/3/4.
 
 use super::golden::{WorkloadData, GEMM_BETA, LEAKY_SHIFT};
-use super::{finish_run, Kernel, RunResult};
-use crate::asm::Asm;
+use super::{finish_run, Engine, EngineProgram, Kernel, RunResult, Target, SOC_RUN_TIMEOUT};
+use crate::asm::{Asm, Program};
 use crate::bus::BANK_SIZE;
 use crate::isa::reg::*;
 use crate::isa::Sew;
@@ -23,43 +23,50 @@ pub const B_BASE: u32 = 2 * BANK_SIZE;
 pub const C_BASE: u32 = 3 * BANK_SIZE;
 pub const OUT_BASE: u32 = 4 * BANK_SIZE;
 
-/// Build + run a CPU kernel; returns the measured result with the
-/// canonical output extracted from the OUT bank.
-pub fn run(kernel: Kernel, sew: Sew, data: &WorkloadData) -> RunResult {
-    let mut soc = Soc::heeperator();
-    soc.load_data(A_BASE, &data.a);
-    if !data.b.is_empty() {
-        soc.load_data(B_BASE, &data.b);
-    }
-    if !data.c.is_empty() {
-        soc.load_data(C_BASE, &data.c);
-    }
-    let mut a = Asm::new(0);
-    build(&mut a, kernel, sew);
-    let prog = a.assemble().expect("cpu kernel assembles");
-    soc.load_firmware(&prog, 0);
-    soc.reset_stats();
-    let (halt, _) = soc.run(200_000_000);
-    let mut res = finish_run(&mut soc, halt, kernel, sew);
-    res.output = soc.dump(OUT_BASE, (kernel.outputs() * sew.bytes() as u64) as u32);
-    res
+/// The CPU-only baseline backend (RV32IMC host, no NMC macro).
+pub struct CpuEngine;
+
+/// Engine-private prepared program: the assembled baseline firmware.
+struct CpuPrepared {
+    firmware: Program,
 }
 
-/// Load/store helpers dispatching on SEW (signed loads, like GCC emits for
-/// signed element types).
-fn lx(a: &mut Asm, sew: Sew, rd: u8, off: i32, rs1: u8) {
-    match sew {
-        Sew::E8 => a.lb(rd, off, rs1),
-        Sew::E16 => a.lh(rd, off, rs1),
-        Sew::E32 => a.lw(rd, off, rs1),
-    };
+impl Engine for CpuEngine {
+    fn target(&self) -> Target {
+        Target::Cpu
+    }
+
+    fn prepare(&self, kernel: Kernel, sew: Sew) -> EngineProgram {
+        let mut a = Asm::new(0);
+        build(&mut a, kernel, sew);
+        let firmware = a.assemble().expect("cpu kernel assembles");
+        EngineProgram::new(Target::Cpu, kernel, sew, CpuPrepared { firmware })
+    }
+
+    fn execute(&self, prog: &EngineProgram, data: &WorkloadData) -> RunResult {
+        let prepared: &CpuPrepared = prog.payload();
+        let (kernel, sew) = (prog.kernel, prog.sew);
+        let mut soc = Soc::heeperator();
+        soc.load_data(A_BASE, &data.a);
+        if !data.b.is_empty() {
+            soc.load_data(B_BASE, &data.b);
+        }
+        if !data.c.is_empty() {
+            soc.load_data(C_BASE, &data.c);
+        }
+        soc.load_firmware(&prepared.firmware, 0);
+        soc.reset_stats();
+        let (halt, _) = soc.run(SOC_RUN_TIMEOUT);
+        let mut res = finish_run(&mut soc, halt, Target::Cpu, kernel, sew);
+        res.output = soc.dump(OUT_BASE, (kernel.outputs() * sew.bytes() as u64) as u32);
+        res
+    }
 }
-fn sx(a: &mut Asm, sew: Sew, rs2: u8, off: i32, rs1: u8) {
-    match sew {
-        Sew::E8 => a.sb(rs2, off, rs1),
-        Sew::E16 => a.sh(rs2, off, rs1),
-        Sew::E32 => a.sw(rs2, off, rs1),
-    };
+
+/// Build + run a CPU kernel (uncached prepare + execute); returns the
+/// measured result with the canonical output extracted from the OUT bank.
+pub fn run(kernel: Kernel, sew: Sew, data: &WorkloadData) -> RunResult {
+    CpuEngine.execute(&CpuEngine.prepare(kernel, sew), data)
 }
 
 fn build(a: &mut Asm, kernel: Kernel, sew: Sew) {
@@ -132,10 +139,10 @@ fn add_kernel(a: &mut Asm, n: u32, sew: Sew) {
                 .li(A2, OUT_BASE as i32)
                 .li(A3, (A_BASE + n * sew.bytes()) as i32)
                 .label("loop");
-            lx(a, sew, T0, 0, A0);
-            lx(a, sew, T1, 0, A1);
+            a.lx(sew, T0, 0, A0);
+            a.lx(sew, T1, 0, A1);
             a.add(T0, T0, T1);
-            sx(a, sew, T0, 0, A2);
+            a.sx(sew, T0, 0, A2);
             a.addi(A0, A0, sb)
                 .addi(A1, A1, sb)
                 .addi(A2, A2, sb)
@@ -154,10 +161,10 @@ fn mul_kernel(a: &mut Asm, n: u32, sew: Sew) {
         .li(A2, OUT_BASE as i32)
         .li(A3, (A_BASE + n * sew.bytes()) as i32)
         .label("loop");
-    lx(a, sew, T0, 0, A0);
-    lx(a, sew, T1, 0, A1);
+    a.lx(sew, T0, 0, A0);
+    a.lx(sew, T1, 0, A1);
     a.mul(T0, T0, T1);
-    sx(a, sew, T0, 0, A2);
+    a.sx(sew, T0, 0, A2);
     a.addi(A0, A0, sb)
         .addi(A1, A1, sb)
         .addi(A2, A2, sb)
@@ -187,8 +194,8 @@ fn matmul_kernel(a: &mut Asm, p: u32, sew: Sew, gemm: bool) {
         .li(T2, 0) // acc
         .li(T3, 8) // k counter
         .label("kloop");
-    lx(a, sew, T5, 0, T0);
-    lx(a, sew, T6, 0, T1);
+    a.lx(sew, T5, 0, T0);
+    a.lx(sew, T6, 0, T1);
     a.mul(T5, T5, T6)
         .add(T2, T2, T5)
         .addi(T0, T0, sb)
@@ -198,12 +205,12 @@ fn matmul_kernel(a: &mut Asm, p: u32, sew: Sew, gemm: bool) {
     if gemm {
         // out = (acc << 1) + 3*C[i][j]
         a.slli(T2, T2, 1);
-        lx(a, sew, T5, 0, S8);
+        a.lx(sew, T5, 0, S8);
         a.slli(T6, T5, 1).add(T5, T5, T6); // 3*c
         debug_assert_eq!(GEMM_BETA, 3);
         a.add(T2, T2, T5).addi(S8, S8, sb);
     }
-    sx(a, sew, T2, 0, S7);
+    a.sx(sew, T2, 0, S7);
     a.addi(S7, S7, sb)
         .addi(T4, T4, sb)
         .addi(S5, S5, -1)
@@ -237,8 +244,8 @@ fn conv2d_kernel(a: &mut Asm, n: u32, f: u32, sew: Sew) {
         .mv(T0, S10) // window element walker
         .li(T6, f as i32) // dx counter
         .label("dxloop");
-    lx(a, sew, T5, 0, T0);
-    lx(a, sew, T1, 0, S9);
+    a.lx(sew, T5, 0, T0);
+    a.lx(sew, T1, 0, S9);
     a.mul(T5, T5, T1)
         .add(T2, T2, T5)
         .addi(T0, T0, sb)
@@ -248,7 +255,7 @@ fn conv2d_kernel(a: &mut Asm, n: u32, f: u32, sew: Sew) {
         .add(S10, S10, S6)
         .addi(T3, T3, -1)
         .bne(T3, ZERO, "dyloop");
-    sx(a, sew, T2, 0, S7);
+    a.sx(sew, T2, 0, S7);
     a.addi(S7, S7, sb)
         .addi(S4, S4, sb)
         .addi(S5, S5, -1)
@@ -267,7 +274,7 @@ fn relu_kernel(a: &mut Asm, n: u32, sew: Sew, leaky: bool) {
         .li(A2, OUT_BASE as i32)
         .li(A3, (A_BASE + n * sew.bytes()) as i32)
         .label("loop");
-    lx(a, sew, T0, 0, A0);
+    a.lx(sew, T0, 0, A0);
     a.bge(T0, ZERO, "store");
     if leaky {
         a.srai(T0, T0, LEAKY_SHIFT as i32);
@@ -275,7 +282,7 @@ fn relu_kernel(a: &mut Asm, n: u32, sew: Sew, leaky: bool) {
         a.li(T0, 0);
     }
     a.label("store");
-    sx(a, sew, T0, 0, A2);
+    a.sx(sew, T0, 0, A2);
     a.addi(A0, A0, sb)
         .addi(A2, A2, sb)
         .bne(A0, A3, "loop")
@@ -307,7 +314,7 @@ fn maxpool_kernel(a: &mut Asm, n: u32, sew: Sew) {
         .mv(T0, S10)
         .li(T6, 2) // dx
         .label("dxloop");
-    lx(a, sew, T5, 0, T0);
+    a.lx(sew, T5, 0, T0);
     a.bge(T2, T5, "skip") // keep acc if acc >= x
         .mv(T2, T5)
         .label("skip")
@@ -317,7 +324,7 @@ fn maxpool_kernel(a: &mut Asm, n: u32, sew: Sew) {
         .add(S10, S10, S6)
         .addi(T3, T3, -1)
         .bne(T3, ZERO, "dyloop");
-    sx(a, sew, T2, 0, S7);
+    a.sx(sew, T2, 0, S7);
     a.addi(S7, S7, sb)
         .addi(S4, S4, 2 * sb)
         .addi(S5, S5, -1)

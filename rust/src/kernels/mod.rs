@@ -29,6 +29,15 @@ pub mod golden;
 use crate::energy::Breakdown;
 use crate::isa::Sew;
 use crate::soc::{Halt, Soc};
+use self::golden::WorkloadData;
+use std::any::Any;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// SoC cycle budget for one kernel run; exceeding it is a hang, not a
+/// slow workload (the largest Table V point is two orders of magnitude
+/// below this).
+pub const SOC_RUN_TIMEOUT: u64 = 200_000_000;
 
 /// Execution target.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -47,11 +56,21 @@ impl Target {
             Target::Carus => "NM-Carus",
         }
     }
+
+    /// Parse a CLI spelling (`cpu`, `caesar`, `carus`).
+    pub fn parse(s: &str) -> Option<Target> {
+        match s.to_ascii_lowercase().as_str() {
+            "cpu" => Some(Target::Cpu),
+            "caesar" | "nm-caesar" => Some(Target::Caesar),
+            "carus" | "nm-carus" => Some(Target::Carus),
+            _ => None,
+        }
+    }
 }
 
 /// Kernel + shape. Sizes are free parameters; [`Kernel::paper_default`]
 /// yields the Table V footnote sizes for a given target.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Kernel {
     /// Element-wise bitwise XOR over `n` elements.
     Xor { n: u32 },
@@ -111,6 +130,23 @@ impl Family {
             Family::Relu => "ReLU",
             Family::LeakyRelu => "Leaky ReLU",
             Family::Maxpool => "Max pooling",
+        }
+    }
+
+    /// Parse a CLI spelling (`xor`, `add`, `mul`, `matmul`, `gemm`,
+    /// `conv2d`, `relu`, `leakyrelu`, `maxpool`).
+    pub fn parse(s: &str) -> Option<Family> {
+        match s.to_ascii_lowercase().as_str() {
+            "xor" => Some(Family::Xor),
+            "add" => Some(Family::Add),
+            "mul" => Some(Family::Mul),
+            "matmul" => Some(Family::Matmul),
+            "gemm" => Some(Family::Gemm),
+            "conv2d" | "conv" => Some(Family::Conv2d),
+            "relu" => Some(Family::Relu),
+            "leakyrelu" | "leaky-relu" | "leaky_relu" => Some(Family::LeakyRelu),
+            "maxpool" => Some(Family::Maxpool),
+            _ => None,
         }
     }
 }
@@ -192,6 +228,154 @@ impl Kernel {
         }
     }
 
+    /// Build a kernel of `family` with explicit free dimensions, falling
+    /// back to the paper's Table V shape for `(target, sew)` for any
+    /// dimension not given — the CLI `sweep` entry point for arbitrary,
+    /// non-paper workload shapes.
+    pub fn with_shape(
+        family: Family,
+        target: Target,
+        sew: Sew,
+        n: Option<u32>,
+        p: Option<u32>,
+        f: Option<u32>,
+    ) -> Kernel {
+        match Kernel::paper_default(family, target, sew) {
+            Kernel::Xor { n: dn } => Kernel::Xor { n: n.unwrap_or(dn) },
+            Kernel::Add { n: dn } => Kernel::Add { n: n.unwrap_or(dn) },
+            Kernel::Mul { n: dn } => Kernel::Mul { n: n.unwrap_or(dn) },
+            Kernel::Matmul { p: dp } => Kernel::Matmul { p: p.unwrap_or(dp) },
+            Kernel::Gemm { p: dp } => Kernel::Gemm { p: p.unwrap_or(dp) },
+            Kernel::Conv2d { n: dn, f: df } => {
+                Kernel::Conv2d { n: n.unwrap_or(dn), f: f.unwrap_or(df) }
+            }
+            Kernel::Relu { n: dn } => Kernel::Relu { n: n.unwrap_or(dn) },
+            Kernel::LeakyRelu { n: dn } => Kernel::LeakyRelu { n: n.unwrap_or(dn) },
+            Kernel::Maxpool { n: dn } => Kernel::Maxpool { n: n.unwrap_or(dn) },
+        }
+    }
+
+    /// Validate a scenario against `target`'s staging envelope, so an
+    /// impossible CLI shape becomes an error message instead of a panic
+    /// deep inside an engine. Encodes the same limits the engines assert
+    /// (which remain as backstops): word-aligned operand staging, the
+    /// 8-row matrix layout, NM-Caesar's bank regions, and NM-Carus's
+    /// 1 KiB logical registers.
+    pub fn validate(self, target: Target, sew: Sew) -> Result<(), String> {
+        use crate::bus::BANK_SIZE;
+        let sb = sew.bytes();
+        match self {
+            Kernel::Xor { n } | Kernel::Add { n } | Kernel::Mul { n } => {
+                let bytes = n * sb;
+                if n == 0 || bytes % 4 != 0 {
+                    return Err(format!("n = {n} must be positive and word-aligned at {sew}"));
+                }
+                // Per-operand staging regions: one SRAM bank (CPU), the
+                // 2048-word NM-Caesar src region, NM-Carus v0..v9.
+                let limit = match target {
+                    Target::Cpu => BANK_SIZE,
+                    Target::Caesar => 8 * 1024,
+                    Target::Carus => 10 * 1024,
+                };
+                if bytes > limit {
+                    return Err(format!("n = {n} exceeds {target:?} capacity ({limit} B per operand)"));
+                }
+            }
+            Kernel::Relu { n } | Kernel::LeakyRelu { n } => {
+                let bytes = n * sb;
+                if n == 0 || bytes % 4 != 0 {
+                    return Err(format!("n = {n} must be positive and word-aligned at {sew}"));
+                }
+                // In-place regions: bank (CPU), NM-Caesar bank 0, v0..v15.
+                let limit = match target {
+                    Target::Cpu => BANK_SIZE,
+                    Target::Caesar | Target::Carus => 16 * 1024,
+                };
+                if bytes > limit {
+                    return Err(format!("n = {n} exceeds {target:?} capacity ({limit} B)"));
+                }
+            }
+            Kernel::Matmul { p } | Kernel::Gemm { p } => {
+                let row_bytes = p * sb;
+                if p == 0 || row_bytes % 4 != 0 {
+                    return Err(format!("p = {p} must be positive and word-aligned at {sew}"));
+                }
+                match target {
+                    // B = 8 rows of p elements in one bank.
+                    Target::Cpu if 8 * row_bytes > BANK_SIZE => {
+                        return Err(format!("p = {p} exceeds the CPU bank (8·p·sew ≤ {BANK_SIZE} B)"));
+                    }
+                    Target::Caesar => {
+                        // GEMM shares bank 1 with the C rows and α-splat
+                        // (B region ends at MM_C = word 5120 ⇒ 512 B
+                        // rows); plain matmul only needs B below the bank
+                        // end and OUT below MM area of bank 0 (the Fig. 12
+                        // saturation point p = 1024 at 8 bit is valid).
+                        let limit = if matches!(self, Kernel::Gemm { .. }) { 512 } else { 2016 };
+                        if row_bytes > limit {
+                            return Err(format!(
+                                "p = {p} exceeds NM-Caesar's B region (p·sew ≤ {limit} B)"
+                            ));
+                        }
+                    }
+                    // vl = p: the row must fill ≥ the 8-element A columns
+                    // and fit one 1 KiB logical register.
+                    Target::Carus if p < 8 || row_bytes > 1024 => {
+                        return Err(format!("p = {p} out of NM-Carus range (8 ≤ p, p·sew ≤ 1024 B)"));
+                    }
+                    _ => {}
+                }
+            }
+            Kernel::Conv2d { n, f } => {
+                if n == 0 || f == 0 || f > 8 || f > n {
+                    return Err(format!("conv2d needs 0 < f ≤ 8 and f ≤ n (got n = {n}, f = {f})"));
+                }
+                let row_bytes = n * sb;
+                match target {
+                    Target::Cpu if 8 * row_bytes > BANK_SIZE => {
+                        return Err(format!("n = {n} exceeds the CPU bank (8·n·sew ≤ {BANK_SIZE} B)"));
+                    }
+                    Target::Caesar => {
+                        // Element-shifted image copies must fit bank 0.
+                        let copy_words = 8 * (row_bytes.div_ceil(4) + 1);
+                        if sew.lanes() * copy_words > 4096 {
+                            return Err(format!(
+                                "n = {n} exceeds NM-Caesar's shifted-copy region at {sew}"
+                            ));
+                        }
+                        // f·f filter splat words must stay below the conv
+                        // output region (CV_OUT − CV_FSPLAT = 32 words).
+                        if f * f > 32 {
+                            return Err(format!(
+                                "f = {f} exceeds NM-Caesar's filter-splat region (f·f ≤ 32)"
+                            ));
+                        }
+                    }
+                    Target::Carus if row_bytes > 1024 => {
+                        return Err(format!("n = {n} exceeds an NM-Carus register (n·sew ≤ 1024 B)"));
+                    }
+                    _ => {}
+                }
+            }
+            Kernel::Maxpool { n } => {
+                let row_bytes = n * sb;
+                if n == 0 || n % 2 != 0 || row_bytes % 4 != 0 {
+                    return Err(format!("n = {n} must be positive, even, and word-aligned at {sew}"));
+                }
+                let limit = match target {
+                    // 16 image rows in one bank.
+                    Target::Cpu => BANK_SIZE / 16,
+                    // 8 even/odd rows below the vmax region / one register.
+                    Target::Caesar | Target::Carus => 1024,
+                };
+                if row_bytes > limit {
+                    return Err(format!("n = {n} exceeds {target:?} capacity (n·sew ≤ {limit} B)"));
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Number of output elements (the "output" of cycles/output).
     pub fn outputs(self) -> u64 {
         match self {
@@ -235,33 +419,133 @@ impl RunResult {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Engine layer: firmware assembly separated from execution
+// ---------------------------------------------------------------------------
+
+/// A fully-assembled, data-independent program for one engine: everything
+/// derivable from `(kernel, sew)` alone — host firmware, micro-op streams,
+/// eCPU binaries. Produced by [`Engine::prepare`], cached process-wide by
+/// [`prepared`], consumed (any number of times) by [`Engine::execute`].
+///
+/// The payload is engine-private: each engine stores whatever its driver
+/// needs and downcasts it back in `execute`, so new near-memory backends
+/// can plug in without touching this type.
+pub struct EngineProgram {
+    pub target: Target,
+    pub kernel: Kernel,
+    pub sew: Sew,
+    payload: Box<dyn Any + Send + Sync>,
+}
+
+impl EngineProgram {
+    /// Wrap an engine-private payload.
+    pub fn new(
+        target: Target,
+        kernel: Kernel,
+        sew: Sew,
+        payload: impl Any + Send + Sync,
+    ) -> Self {
+        EngineProgram { target, kernel, sew, payload: Box::new(payload) }
+    }
+
+    /// Recover the engine-private payload; panics if `self` was prepared
+    /// by a different engine (a caller bug, not a data error).
+    pub fn payload<T: 'static>(&self) -> &T {
+        self.payload
+            .downcast_ref::<T>()
+            .unwrap_or_else(|| panic!("{:?} program handed to the wrong engine", self.target))
+    }
+}
+
+/// An execution backend: one simulated system that can run the kernel
+/// grid. `prepare` assembles everything that depends only on the workload
+/// *shape*; `execute` stages one concrete [`WorkloadData`], simulates, and
+/// extracts the canonical output. The split is what makes program caching
+/// ([`prepared`]) and result memoization ([`crate::sweep::SweepSession`])
+/// possible — and it is the seam new near-memory targets plug into.
+pub trait Engine: Send + Sync {
+    /// The target identity this engine simulates (carried into every
+    /// [`RunResult`] it produces).
+    fn target(&self) -> Target;
+    /// Assemble the data-independent program for `(kernel, sew)`.
+    fn prepare(&self, kernel: Kernel, sew: Sew) -> EngineProgram;
+    /// Build a fresh SoC, stage `data`, run `prog`, extract the output.
+    fn execute(&self, prog: &EngineProgram, data: &WorkloadData) -> RunResult;
+}
+
+/// The engine registry: every built-in execution backend.
+pub fn engines() -> [&'static dyn Engine; 3] {
+    [&cpu::CpuEngine, &caesar::CaesarEngine, &carus::CarusEngine]
+}
+
+/// Look up the engine for a target.
+pub fn engine(target: Target) -> &'static dyn Engine {
+    match target {
+        Target::Cpu => &cpu::CpuEngine,
+        Target::Caesar => &caesar::CaesarEngine,
+        Target::Carus => &carus::CarusEngine,
+    }
+}
+
+type ProgramKey = (Target, Kernel, Sew);
+
+fn program_cache() -> &'static Mutex<HashMap<ProgramKey, Arc<EngineProgram>>> {
+    static CACHE: OnceLock<Mutex<HashMap<ProgramKey, Arc<EngineProgram>>>> = OnceLock::new();
+    CACHE.get_or_init(Default::default)
+}
+
+/// Memoized [`Engine::prepare`]: each `(target, family, shape, sew)`
+/// program is assembled exactly once per process, no matter how many
+/// sweep points or report threads consume it.
+pub fn prepared(target: Target, kernel: Kernel, sew: Sew) -> Arc<EngineProgram> {
+    let key = (target, kernel, sew);
+    if let Some(p) = program_cache().lock().expect("program cache poisoned").get(&key) {
+        return Arc::clone(p);
+    }
+    // Assemble outside the lock (it is pure); a racing thread may do the
+    // same work once more, but the first insert wins and both share it.
+    let prog = Arc::new(engine(target).prepare(kernel, sew));
+    Arc::clone(
+        program_cache()
+            .lock()
+            .expect("program cache poisoned")
+            .entry(key)
+            .or_insert(prog),
+    )
+}
+
 /// Run a kernel on a target with seeded inputs; panics on a functional
 /// mismatch against the golden reference (the simulator is expected to be
-/// bit-exact).
+/// bit-exact). Firmware assembly is served from the [`prepared`] cache;
+/// the simulation itself always runs (memoize *results* with
+/// [`crate::sweep::SweepSession`]).
 pub fn run(target: Target, kernel: Kernel, sew: Sew, seed: u64) -> RunResult {
     let data = golden::generate(kernel, sew, seed);
-    let mut res = match target {
-        Target::Cpu => cpu::run(kernel, sew, &data),
-        Target::Caesar => caesar::run(kernel, sew, &data),
-        Target::Carus => carus::run(kernel, sew, &data),
-    };
+    let prog = prepared(target, kernel, sew);
+    let res = engine(target).execute(&prog, &data);
     assert_eq!(
         res.output, data.expect,
         "{target:?} {kernel:?} {sew} output mismatch vs golden reference"
     );
-    res.kernel = kernel;
-    res.sew = sew;
-    res.target = target;
     res
 }
 
-/// Common driver plumbing shared by the three target modules.
-pub(crate) fn finish_run(soc: &mut Soc, halt: Halt, kernel: Kernel, sew: Sew) -> RunResult {
-    assert_eq!(halt, Halt::Done, "{kernel:?} {sew} did not complete");
+/// Common driver plumbing shared by the three engines. The engine passes
+/// its own target identity — a `RunResult` is born labeled, there is no
+/// placeholder to overwrite.
+pub(crate) fn finish_run(
+    soc: &mut Soc,
+    halt: Halt,
+    target: Target,
+    kernel: Kernel,
+    sew: Sew,
+) -> RunResult {
+    assert_eq!(halt, Halt::Done, "{target:?} {kernel:?} {sew} did not complete");
     RunResult {
         kernel,
         sew,
-        target: Target::Cpu, // overwritten by `run`
+        target,
         cycles: soc.cycle,
         outputs: kernel.outputs(),
         energy: soc.energy(),
@@ -303,5 +587,102 @@ mod tests {
         assert_eq!(Kernel::Matmul { p: 512 }.outputs(), 8 * 512);
         assert_eq!(Kernel::Conv2d { n: 256, f: 3 }.outputs(), 6 * 254);
         assert_eq!(Kernel::Maxpool { n: 512 }.outputs(), 8 * 256);
+    }
+
+    #[test]
+    fn with_shape_overrides_and_defaults() {
+        // Explicit dimension wins.
+        assert_eq!(
+            Kernel::with_shape(Family::Matmul, Target::Carus, Sew::E8, None, Some(96), None),
+            Kernel::Matmul { p: 96 }
+        );
+        // Missing dimensions fall back to the paper shape per (target, sew).
+        assert_eq!(
+            Kernel::with_shape(Family::Matmul, Target::Carus, Sew::E8, None, None, None),
+            Kernel::paper_default(Family::Matmul, Target::Carus, Sew::E8)
+        );
+        // Conv2d mixes: explicit f, paper n.
+        assert_eq!(
+            Kernel::with_shape(Family::Conv2d, Target::Cpu, Sew::E16, None, None, Some(5)),
+            Kernel::Conv2d { n: 512, f: 5 }
+        );
+        // n applies to the element-wise families; p/f are ignored there.
+        assert_eq!(
+            Kernel::with_shape(Family::Relu, Target::Cpu, Sew::E8, Some(64), Some(7), Some(7)),
+            Kernel::Relu { n: 64 }
+        );
+    }
+
+    #[test]
+    fn validate_rejects_impossible_shapes() {
+        // Every paper-default grid point is valid on its own target.
+        for family in Family::ALL {
+            for target in Target::ALL {
+                for sew in Sew::ALL {
+                    let k = Kernel::paper_default(family, target, sew);
+                    assert_eq!(k.validate(target, sew), Ok(()), "{family:?} {target:?} {sew}");
+                }
+            }
+        }
+        // Filter larger than the 8-row image: would underflow `8 - f + 1`.
+        assert!(Kernel::Conv2d { n: 64, f: 12 }.validate(Target::Cpu, Sew::E8).is_err());
+        // NM-Caesar's filter-splat region holds 32 words: f = 5 fits,
+        // f = 6 would overrun into the conv output region.
+        assert!(Kernel::Conv2d { n: 128, f: 5 }.validate(Target::Caesar, Sew::E8).is_ok());
+        assert!(Kernel::Conv2d { n: 128, f: 6 }.validate(Target::Caesar, Sew::E8).is_err());
+        // NM-Carus B row must fit a 1 KiB logical register.
+        assert!(Kernel::Matmul { p: 1024 }.validate(Target::Carus, Sew::E32).is_err());
+        assert!(Kernel::Matmul { p: 4 }.validate(Target::Carus, Sew::E8).is_err());
+        // NM-Caesar: the Fig. 12 saturation matmul (p = 1024, 8-bit) is
+        // valid — only GEMM shares bank 1 with C and tightens to 512 B.
+        assert!(Kernel::Matmul { p: 1024 }.validate(Target::Caesar, Sew::E8).is_ok());
+        assert!(Kernel::Gemm { p: 1024 }.validate(Target::Caesar, Sew::E8).is_err());
+        assert!(Kernel::Gemm { p: 512 }.validate(Target::Caesar, Sew::E8).is_ok());
+        // Misaligned element-wise staging.
+        assert!(Kernel::Add { n: 129 }.validate(Target::Cpu, Sew::E8).is_err());
+        // Odd maxpool width has no 2x2 tiling.
+        assert!(Kernel::Maxpool { n: 30 }.validate(Target::Cpu, Sew::E16).is_ok());
+        assert!(Kernel::Maxpool { n: 31 }.validate(Target::Cpu, Sew::E16).is_err());
+        // Zero-sized workloads are rejected everywhere.
+        assert!(Kernel::Relu { n: 0 }.validate(Target::Caesar, Sew::E32).is_err());
+    }
+
+    #[test]
+    fn cli_spellings_parse() {
+        assert_eq!(Target::parse("carus"), Some(Target::Carus));
+        assert_eq!(Target::parse("NM-Caesar"), Some(Target::Caesar));
+        assert_eq!(Target::parse("gpu"), None);
+        assert_eq!(Family::parse("leakyrelu"), Some(Family::LeakyRelu));
+        assert_eq!(Family::parse("conv2d"), Some(Family::Conv2d));
+        assert_eq!(Family::parse("fft"), None);
+    }
+
+    #[test]
+    fn registry_covers_every_target_with_matching_identity() {
+        for (i, target) in Target::ALL.iter().enumerate() {
+            assert_eq!(engines()[i].target(), *target);
+            assert_eq!(engine(*target).target(), *target);
+        }
+    }
+
+    #[test]
+    fn prepared_programs_are_cached_and_shared() {
+        let kernel = Kernel::Relu { n: 128 };
+        let a = prepared(Target::Cpu, kernel, Sew::E8);
+        let b = prepared(Target::Cpu, kernel, Sew::E8);
+        assert!(Arc::ptr_eq(&a, &b), "same grid point must share one program");
+        assert_eq!(a.target, Target::Cpu);
+        assert_eq!(a.kernel, kernel);
+        // A different shape is a different program.
+        let c = prepared(Target::Cpu, Kernel::Relu { n: 256 }, Sew::E8);
+        assert!(!Arc::ptr_eq(&a, &c));
+    }
+
+    #[test]
+    #[should_panic(expected = "wrong engine")]
+    fn payload_downcast_guards_cross_engine_programs() {
+        let prog = cpu::CpuEngine.prepare(Kernel::Xor { n: 64 }, Sew::E32);
+        let data = golden::generate(Kernel::Xor { n: 64 }, Sew::E32, 1);
+        carus::CarusEngine.execute(&prog, &data);
     }
 }

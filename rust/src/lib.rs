@@ -23,8 +23,15 @@
 //! - [`compare`]: BLADE / C-SRAM / Vecim analytical comparison models.
 //! - [`runtime`]: PJRT golden-model seam (loads `artifacts/*.hlo.txt`;
 //!   offline builds skip gracefully).
+//! - [`kernels::Engine`]: the execution-backend seam — firmware assembly
+//!   (`prepare`) separated from simulation (`execute`), with assembled
+//!   programs cached per `(target, kernel, sew)`.
+//! - [`sweep`]: memoizing [`sweep::SweepSession`] — one simulation per
+//!   `(target, kernel, sew, seed)` point per invocation, shared by every
+//!   report, the CLI `sweep` subcommand, benches, and examples.
 //! - [`harness`]: regenerates every table and figure of §V, fanning the
-//!   independent reports over the [`harness::executor`] thread pool.
+//!   independent reports over the [`harness::executor`] thread pool and
+//!   deduplicating their simulations through one shared session.
 
 pub mod apps;
 pub mod area;
@@ -44,3 +51,4 @@ pub mod caesar;
 pub mod carus;
 pub mod simd;
 pub mod soc;
+pub mod sweep;

@@ -7,15 +7,27 @@
 //! heeperator table4|fig7|table5|fig11|fig12|fig13|table6|table7|table8 [--quick] [--out DIR]
 //! heeperator ablations [--out DIR]                  # the four ablation studies
 //! heeperator ad                                     # Anomaly-Detection end-to-end summary
+//! heeperator sweep --target T --family F --sew W [--n N] [--p P] [--f F] [--seed S] [--out DIR]
 //! ```
 //!
 //! `all` fans the independent reports out over a `std::thread` worker
 //! pool (`harness::executor`); `--jobs N` bounds the pool, `--jobs 1` is
-//! the sequential baseline and produces byte-identical report text.
+//! the sequential baseline and produces byte-identical report text. All
+//! simulations drain through one shared `sweep::SweepSession`, so each
+//! `(target, kernel, sew, seed)` grid point runs at most once per
+//! invocation no matter how many reports consume it.
+//!
+//! `sweep` runs arbitrary workload shapes: `--target`/`--family`/`--sew`
+//! accept a name or `all`; `--n`/`--p`/`--f` override the free
+//! dimensions (anything omitted falls back to the paper's Table V shape
+//! for that target/width).
 //!
 //! (Hand-rolled argument parsing: clap is not in the offline vendor set.)
 
 use nmc::harness::{self, executor, Report};
+use nmc::isa::Sew;
+use nmc::kernels::{Family, Kernel, Target};
+use nmc::sweep::SweepSession;
 use std::io::Write;
 
 /// Parsed command line. Kept dumb (no behavior) so tests can assert on
@@ -26,38 +38,104 @@ struct Cli {
     quick: bool,
     out: Option<String>,
     jobs: Option<usize>,
+    /// `sweep` selectors: target/family/sew name or "all" (default).
+    target: Option<String>,
+    family: Option<String>,
+    sew: Option<String>,
+    /// `sweep` free dimensions; absent = paper default per (target, sew).
+    n: Option<u32>,
+    p: Option<u32>,
+    f: Option<u32>,
+    seed: Option<u64>,
+}
+
+impl Cli {
+    fn new(cmd: &str) -> Cli {
+        Cli {
+            cmd: cmd.to_string(),
+            quick: false,
+            out: None,
+            jobs: None,
+            target: None,
+            family: None,
+            sew: None,
+            n: None,
+            p: None,
+            f: None,
+            seed: None,
+        }
+    }
+}
+
+/// Parse a `--flag value` string argument; a following flag is not a
+/// value (left for the loop), a missing value leaves the option unset.
+fn parse_str(args: &[String], i: &mut usize) -> Option<String> {
+    let v = args.get(*i + 1).filter(|v| !v.starts_with("--")).cloned();
+    if v.is_some() {
+        *i += 1; // consume the value
+    }
+    v
+}
+
+/// Parse a `--flag value` numeric argument; a present, unparsable value is
+/// an error (silently ignoring it would run the wrong workload), a missing
+/// value leaves the option unset.
+fn parse_num<T: std::str::FromStr>(
+    args: &[String],
+    i: &mut usize,
+    flag: &str,
+) -> Result<Option<T>, String> {
+    if let Some(v) = args.get(*i + 1).filter(|v| !v.starts_with("--")) {
+        match v.parse::<T>() {
+            Ok(n) => {
+                *i += 1; // consume the value
+                Ok(Some(n))
+            }
+            Err(_) => Err(format!("{flag} expects a number, got `{v}`")),
+        }
+    } else {
+        Ok(None)
+    }
 }
 
 /// Parse `args` (everything after argv[0]). Unknown flags are ignored —
 /// the subcommand dispatcher prints usage for unknown commands — but a
-/// present, unparsable `--jobs` value is an error: silently falling
-/// back to full parallelism would do the opposite of what the user
-/// asked for.
+/// present, unparsable numeric value is an error: silently falling back
+/// to a default would do the opposite of what the user asked for.
 fn parse_args(args: &[String]) -> Result<Cli, String> {
+    let mut cli = Cli::new("help");
     let mut cmd: Option<String> = None;
-    let mut quick = false;
-    let mut out: Option<String> = None;
-    let mut jobs: Option<usize> = None;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
-            "--quick" => quick = true,
+            "--quick" => cli.quick = true,
             "--out" => {
-                // A following flag is not a value — leave it for the loop.
-                if let Some(v) = args.get(i + 1).filter(|v| !v.starts_with("--")) {
-                    out = Some(v.clone());
-                    i += 1; // consume the value
+                if let Some(v) = parse_str(args, &mut i) {
+                    cli.out = Some(v);
                 }
             }
             "--jobs" => {
-                if let Some(v) = args.get(i + 1).filter(|v| !v.starts_with("--")) {
-                    match v.parse::<usize>() {
-                        Ok(n) => jobs = Some(n.max(1)),
-                        Err(_) => return Err(format!("--jobs expects a number, got `{v}`")),
-                    }
-                    i += 1; // consume the value
+                cli.jobs = parse_num::<usize>(args, &mut i, "--jobs")?.map(|n| n.max(1));
+            }
+            "--target" => {
+                if let Some(v) = parse_str(args, &mut i) {
+                    cli.target = Some(v);
                 }
             }
+            "--family" => {
+                if let Some(v) = parse_str(args, &mut i) {
+                    cli.family = Some(v);
+                }
+            }
+            "--sew" => {
+                if let Some(v) = parse_str(args, &mut i) {
+                    cli.sew = Some(v);
+                }
+            }
+            "--n" => cli.n = parse_num::<u32>(args, &mut i, "--n")?,
+            "--p" => cli.p = parse_num::<u32>(args, &mut i, "--p")?,
+            "--f" => cli.f = parse_num::<u32>(args, &mut i, "--f")?,
+            "--seed" => cli.seed = parse_num::<u64>(args, &mut i, "--seed")?,
             a if !a.starts_with("--") => {
                 // First free-standing word is the subcommand.
                 if cmd.is_none() {
@@ -68,7 +146,55 @@ fn parse_args(args: &[String]) -> Result<Cli, String> {
         }
         i += 1;
     }
-    Ok(Cli { cmd: cmd.unwrap_or_else(|| "help".to_string()), quick, out, jobs })
+    cli.cmd = cmd.unwrap_or_else(|| "help".to_string());
+    Ok(cli)
+}
+
+/// Resolve the `sweep` selectors into a concrete scenario point list.
+/// `all` (or an absent selector) expands over every target / family /
+/// width; explicit dimensions are applied per point with paper-default
+/// fallback, and every point is shape-validated so an impossible request
+/// becomes a CLI error rather than a panic inside an engine.
+fn sweep_points(cli: &Cli) -> Result<Vec<(Target, Kernel, Sew)>, String> {
+    fn select<T: Copy>(
+        spec: Option<&str>,
+        what: &str,
+        all: &[T],
+        parse: impl Fn(&str) -> Option<T>,
+        names: &str,
+    ) -> Result<Vec<T>, String> {
+        match spec {
+            None => Ok(all.to_vec()),
+            Some(s) if s.eq_ignore_ascii_case("all") => Ok(all.to_vec()),
+            Some(s) => parse(s)
+                .map(|t| vec![t])
+                .ok_or_else(|| format!("unknown {what} `{s}` (use one of {names} or `all`)")),
+        }
+    }
+    let targets =
+        select(cli.target.as_deref(), "--target", &Target::ALL, Target::parse, "cpu|caesar|carus")?;
+    let families = select(
+        cli.family.as_deref(),
+        "--family",
+        &Family::ALL,
+        Family::parse,
+        "xor|add|mul|matmul|gemm|conv2d|relu|leakyrelu|maxpool",
+    )?;
+    let sews = select(cli.sew.as_deref(), "--sew", &Sew::ALL, Sew::parse, "8|16|32")?;
+
+    let mut points = Vec::new();
+    for &target in &targets {
+        for &family in &families {
+            for &sew in &sews {
+                let kernel = Kernel::with_shape(family, target, sew, cli.n, cli.p, cli.f);
+                kernel
+                    .validate(target, sew)
+                    .map_err(|e| format!("{target:?} {family:?} {sew}: {e}"))?;
+                points.push((target, kernel, sew));
+            }
+        }
+    }
+    Ok(points)
 }
 
 fn write_reports(reports: &[Report], out: Option<&str>) {
@@ -101,6 +227,9 @@ fn main() {
     };
     let out = cli.out.as_deref();
     let jobs = cli.jobs.unwrap_or_else(executor::default_jobs);
+    // One memoizing session per invocation: every subcommand that
+    // simulates drains through it.
+    let session = SweepSession::new();
 
     match cli.cmd.as_str() {
         "all" => {
@@ -110,24 +239,31 @@ fn main() {
         "table4" => write_reports(&[harness::table4()], out),
         "fig7" => write_reports(&[harness::fig7()], out),
         "table5" | "fig11" => {
-            let rows = harness::run_table5(cli.quick);
+            let rows = harness::run_table5(&session, cli.quick);
             let reps = vec![harness::table5(&rows), harness::fig11(&rows)];
             write_reports(&reps, out);
         }
-        "fig12" => write_reports(&[harness::fig12(cli.quick)], out),
-        "fig13" => write_reports(&[harness::fig13()], out),
-        "table6" => write_reports(&[harness::table6()], out),
+        "fig12" => write_reports(&[harness::fig12(&session, cli.quick)], out),
+        "fig13" => write_reports(&[harness::fig13(&session)], out),
+        "table6" => write_reports(&[harness::table6(&session)], out),
         "table7" => write_reports(&[harness::table7()], out),
         "table8" => write_reports(&[harness::table8()], out),
-        "ablations" => write_reports(&harness::ablations::all(), out),
+        "ablations" => write_reports(&harness::ablations::all(&session), out),
+        "sweep" => {
+            let points = match sweep_points(&cli) {
+                Ok(p) => p,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    std::process::exit(2);
+                }
+            };
+            let rep = harness::sweep_report(&session, &points, cli.seed.unwrap_or(1));
+            write_reports(&[rep], out);
+        }
         "ad" => {
-            let m = nmc::apps::anomaly::model(2);
-            let golden = nmc::apps::anomaly::golden_forward(&m);
-            for res in [
-                nmc::apps::anomaly::run_cpu(&m),
-                nmc::apps::anomaly::run_caesar(&m),
-                nmc::apps::anomaly::run_carus(&m),
-            ] {
+            let golden = nmc::apps::anomaly::golden_forward(&nmc::apps::anomaly::model(2));
+            for target in Target::ALL {
+                let res = session.anomaly(target, 2);
                 let ok = res.output == golden;
                 println!(
                     "{:<22} {:>9} cycles  {:>8.2} uJ  output {}",
@@ -140,8 +276,10 @@ fn main() {
         }
         _ => {
             let mut o = std::io::stdout();
-            writeln!(o, "usage: heeperator <all|table4|fig7|table5|fig11|fig12|fig13|table6|table7|table8|ablations|ad> [--quick] [--out DIR]").unwrap();
+            writeln!(o, "usage: heeperator <all|table4|fig7|table5|fig11|fig12|fig13|table6|table7|table8|ablations|ad|sweep> [--quick] [--out DIR]").unwrap();
             writeln!(o, "       `all` additionally accepts --jobs N (worker pool bound; 1 = sequential)").unwrap();
+            writeln!(o, "       `sweep` selects scenarios: --target cpu|caesar|carus|all --family xor|add|mul|matmul|gemm|conv2d|relu|leakyrelu|maxpool|all").unwrap();
+            writeln!(o, "               --sew 8|16|32|all, free dims --n N --p P --f F (default: paper Table V shapes), --seed S").unwrap();
         }
     }
 }
@@ -213,10 +351,70 @@ mod tests {
     #[test]
     fn combined_flags_any_order() {
         let cli = p(&["--jobs", "2", "all", "--quick", "--out", "r"]);
-        assert_eq!(
-            cli,
-            Cli { cmd: "all".into(), quick: true, out: Some("r".into()), jobs: Some(2) }
-        );
+        assert_eq!(cli.cmd, "all");
+        assert!(cli.quick);
+        assert_eq!(cli.out.as_deref(), Some("r"));
+        assert_eq!(cli.jobs, Some(2));
+    }
+
+    #[test]
+    fn sweep_flags_parse() {
+        let cli = p(&[
+            "sweep", "--target", "carus", "--family", "matmul", "--sew", "8", "--p", "96",
+            "--seed", "7",
+        ]);
+        assert_eq!(cli.cmd, "sweep");
+        assert_eq!(cli.target.as_deref(), Some("carus"));
+        assert_eq!(cli.family.as_deref(), Some("matmul"));
+        assert_eq!(cli.sew.as_deref(), Some("8"));
+        assert_eq!(cli.p, Some(96));
+        assert_eq!(cli.n, None);
+        assert_eq!(cli.f, None);
+        assert_eq!(cli.seed, Some(7));
+    }
+
+    #[test]
+    fn garbage_dim_value_is_an_error() {
+        let err = parse_args(&argv(&["sweep", "--n", "many"])).unwrap_err();
+        assert!(err.contains("--n"), "{err}");
+        assert!(err.contains("many"), "{err}");
+    }
+
+    #[test]
+    fn sweep_points_expand_and_validate() {
+        // Single explicit point.
+        let cli = p(&["sweep", "--target", "carus", "--family", "matmul", "--sew", "8", "--p", "96"]);
+        let pts = sweep_points(&cli).unwrap();
+        assert_eq!(pts, vec![(Target::Carus, Kernel::Matmul { p: 96 }, Sew::E8)]);
+        // `all` selectors expand the full cross product.
+        let cli = p(&["sweep"]);
+        let pts = sweep_points(&cli).unwrap();
+        assert_eq!(pts.len(), 3 * 9 * 3);
+        // Unknown names are reported, not ignored.
+        let cli = p(&["sweep", "--family", "fft"]);
+        let err = sweep_points(&cli).unwrap_err();
+        assert!(err.contains("fft"), "{err}");
+        // Paper-default dimensions apply when no dim flag is given.
+        let cli = p(&["sweep", "--target", "cpu", "--family", "add", "--sew", "8"]);
+        let pts = sweep_points(&cli).unwrap();
+        assert_eq!(pts, vec![(Target::Cpu, Kernel::Add { n: 5120 }, Sew::E8)]);
+        // The parse functions' aliases work here too (one source of truth).
+        let cli = p(&["sweep", "--target", "nm-carus", "--family", "conv", "--sew", "e8"]);
+        let pts = sweep_points(&cli).unwrap();
+        assert_eq!(pts, vec![(Target::Carus, Kernel::Conv2d { n: 1024, f: 3 }, Sew::E8)]);
+    }
+
+    #[test]
+    fn sweep_points_reject_impossible_shapes() {
+        // A filter larger than the 8-row image would underflow `8-f+1`
+        // inside the engines; the CLI reports it instead.
+        let cli = p(&["sweep", "--family", "conv2d", "--f", "12"]);
+        let err = sweep_points(&cli).unwrap_err();
+        assert!(err.contains("f ≤ 8") || err.contains("f = 12"), "{err}");
+        // An NM-Carus B row must fit one 1 KiB logical register.
+        let cli = p(&["sweep", "--target", "carus", "--family", "matmul", "--sew", "32", "--p", "1024"]);
+        let err = sweep_points(&cli).unwrap_err();
+        assert!(err.contains("NM-Carus"), "{err}");
     }
 
     #[test]

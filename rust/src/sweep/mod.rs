@@ -1,0 +1,133 @@
+//! Cached sweep sessions: one simulation per workload point.
+//!
+//! A [`SweepSession`] memoizes completed [`RunResult`]s behind a
+//! thread-safe cache keyed by the full workload identity
+//! `(target, kernel, sew, seed)`. Every consumer — the `harness` reports,
+//! the ablations, the `heeperator sweep` CLI, the examples — asks the
+//! session instead of [`kernels::run`] directly, so a grid point that
+//! several reports share (Table V and Fig. 11 read the same 81 points;
+//! `heeperator all` fans both out as independent jobs) is simulated
+//! exactly once per invocation no matter how many threads consume it.
+//!
+//! Two contracts, locked by `rust/tests/sweep_session.rs`:
+//!
+//! 1. **Transparency** — a session result is byte-identical to an uncached
+//!    [`kernels::run`] of the same point (the cache stores, it never
+//!    alters).
+//! 2. **At-most-once** — concurrent consumers of one point block on a
+//!    per-point [`OnceLock`] rather than racing duplicate simulations;
+//!    [`SweepSession::simulations`] counts real runs for the tests.
+//!
+//! The session caches *results* per invocation; the assembled programs
+//! underneath are cached process-wide by [`kernels::prepared`], so even
+//! cache-miss points skip firmware reassembly.
+
+use crate::apps::anomaly::{self, AdResult};
+use crate::isa::Sew;
+use crate::kernels::{self, Kernel, RunResult, Target};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Full identity of one kernel-grid simulation.
+pub type Point = (Target, Kernel, Sew, u64);
+
+type Slot<T> = Arc<OnceLock<Arc<T>>>;
+
+/// A memoizing simulation session shared by every report of one
+/// invocation. Cheap to construct; share via `Arc` across worker threads.
+#[derive(Default)]
+pub struct SweepSession {
+    kernel_slots: Mutex<HashMap<Point, Slot<RunResult>>>,
+    /// Anomaly-Detection app runs, keyed by (target system, model seed).
+    ad_slots: Mutex<HashMap<(Target, u64), Slot<AdResult>>>,
+    simulations: AtomicU64,
+}
+
+impl SweepSession {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Memoized [`kernels::run`]: the first consumer of a point simulates
+    /// it, every later (or concurrently blocked) consumer shares the same
+    /// `Arc`'d result.
+    pub fn run(&self, target: Target, kernel: Kernel, sew: Sew, seed: u64) -> Arc<RunResult> {
+        let slot = Arc::clone(
+            self.kernel_slots
+                .lock()
+                .expect("sweep cache poisoned")
+                .entry((target, kernel, sew, seed))
+                .or_default(),
+        );
+        // Simulate outside the map lock: only consumers of *this* point
+        // wait, the rest of the grid proceeds in parallel.
+        Arc::clone(slot.get_or_init(|| {
+            self.simulations.fetch_add(1, Ordering::Relaxed);
+            Arc::new(kernels::run(target, kernel, sew, seed))
+        }))
+    }
+
+    /// Memoized Anomaly-Detection run (Table VI systems): `target` selects
+    /// the CV32E40P baseline, NM-Caesar + CV32E20, or NM-Carus + CV32E20
+    /// configuration; the multicore rows are derived projections and need
+    /// no cache of their own (see [`anomaly::scale_multicore`]).
+    pub fn anomaly(&self, target: Target, model_seed: u64) -> Arc<AdResult> {
+        let slot = Arc::clone(
+            self.ad_slots
+                .lock()
+                .expect("sweep cache poisoned")
+                .entry((target, model_seed))
+                .or_default(),
+        );
+        Arc::clone(slot.get_or_init(|| {
+            self.simulations.fetch_add(1, Ordering::Relaxed);
+            let m = anomaly::model(model_seed);
+            Arc::new(anomaly::run_target(&m, target))
+        }))
+    }
+
+    /// Number of simulations actually executed (cache misses) so far —
+    /// the observable behind the at-most-once contract.
+    pub fn simulations(&self) -> u64 {
+        self.simulations.load(Ordering::Relaxed)
+    }
+
+    /// Number of distinct points the session has been asked for.
+    pub fn len(&self) -> usize {
+        self.kernel_slots.lock().expect("sweep cache poisoned").len()
+            + self.ad_slots.lock().expect("sweep cache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repeated_points_share_one_simulation() {
+        let s = SweepSession::new();
+        let a = s.run(Target::Cpu, Kernel::Mul { n: 64 }, Sew::E32, 1);
+        let b = s.run(Target::Cpu, Kernel::Mul { n: 64 }, Sew::E32, 1);
+        assert!(Arc::ptr_eq(&a, &b), "second consumer must share the first result");
+        assert_eq!(s.simulations(), 1);
+        assert_eq!(s.len(), 1);
+        // A different seed is a different workload, not a cache hit.
+        let c = s.run(Target::Cpu, Kernel::Mul { n: 64 }, Sew::E32, 2);
+        assert_eq!(s.simulations(), 2);
+        assert_ne!(c.output, a.output, "seeded inputs differ");
+    }
+
+    #[test]
+    fn results_carry_the_requested_identity() {
+        let s = SweepSession::new();
+        let r = s.run(Target::Caesar, Kernel::Relu { n: 128 }, Sew::E16, 9);
+        assert_eq!(r.target, Target::Caesar);
+        assert_eq!(r.kernel, Kernel::Relu { n: 128 });
+        assert_eq!(r.sew, Sew::E16);
+    }
+}

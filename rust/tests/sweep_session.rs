@@ -1,0 +1,91 @@
+//! Cache-transparency and at-most-once contracts of `sweep::SweepSession`
+//! (ISSUE 4 acceptance criteria):
+//!
+//! 1. session results are byte-identical to direct, uncached
+//!    `kernels::run` calls — the cache stores, it never alters;
+//! 2. each `(target, kernel, sew, seed)` point is simulated at most once
+//!    per session, even under concurrent consumers;
+//! 3. `heeperator all --jobs N` output is byte-identical to `--jobs 1`
+//!    through the shared cache.
+
+use nmc::harness;
+use nmc::isa::Sew;
+use nmc::kernels::{self, Kernel, Target};
+use nmc::sweep::SweepSession;
+use std::sync::Arc;
+
+#[test]
+fn session_results_byte_identical_to_uncached_runs() {
+    let session = SweepSession::new();
+    for (target, kernel, sew, seed) in [
+        (Target::Cpu, Kernel::Add { n: 128 }, Sew::E16, 5),
+        (Target::Caesar, Kernel::Relu { n: 256 }, Sew::E8, 5),
+        (Target::Carus, Kernel::Xor { n: 512 }, Sew::E8, 7),
+        (Target::Carus, Kernel::Matmul { p: 64 }, Sew::E32, 6),
+    ] {
+        let cached = session.run(target, kernel, sew, seed);
+        let direct = kernels::run(target, kernel, sew, seed);
+        assert_eq!(cached.output, direct.output, "{target:?} {kernel:?} {sew} output");
+        assert_eq!(cached.cycles, direct.cycles, "{target:?} {kernel:?} {sew} cycles");
+        assert_eq!(cached.outputs, direct.outputs);
+        assert_eq!(cached.target, direct.target);
+        assert_eq!(cached.energy.total(), direct.energy.total(), "{target:?} {kernel:?} energy");
+        // Re-asking the session returns the identical result without
+        // another simulation.
+        let again = session.run(target, kernel, sew, seed);
+        assert!(Arc::ptr_eq(&cached, &again));
+    }
+    assert_eq!(session.simulations(), 4);
+}
+
+#[test]
+fn concurrent_consumers_simulate_each_point_once() {
+    let session = Arc::new(SweepSession::new());
+    // 8 threads hammer the same two points; the per-point OnceLock must
+    // serialize initialization, not duplicate it.
+    let handles: Vec<_> = (0..8)
+        .map(|i| {
+            let s = Arc::clone(&session);
+            std::thread::spawn(move || {
+                let kernel = if i % 2 == 0 { Kernel::Relu { n: 256 } } else { Kernel::Mul { n: 64 } };
+                s.run(Target::Cpu, kernel, Sew::E8, 3).cycles
+            })
+        })
+        .collect();
+    let cycles: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert_eq!(session.simulations(), 2, "two distinct points, two simulations");
+    // Every consumer of the same point observed the same result
+    // (even-index threads share one point, odd-index the other).
+    let evens: Vec<u64> = cycles.iter().step_by(2).copied().collect();
+    let odds: Vec<u64> = cycles.iter().skip(1).step_by(2).copied().collect();
+    assert!(evens.windows(2).all(|w| w[0] == w[1]), "{evens:?}");
+    assert!(odds.windows(2).all(|w| w[0] == w[1]), "{odds:?}");
+}
+
+#[test]
+fn anomaly_runs_are_cached_per_target() {
+    let session = SweepSession::new();
+    let a = session.anomaly(Target::Cpu, 2);
+    let b = session.anomaly(Target::Cpu, 2);
+    assert!(Arc::ptr_eq(&a, &b));
+    assert_eq!(session.simulations(), 1);
+    // A different model seed is a different workload.
+    let c = session.anomaly(Target::Cpu, 3);
+    assert_eq!(session.simulations(), 2);
+    assert_eq!(a.cycles, c.cycles, "cycle count is data-independent for the AD net");
+}
+
+#[test]
+fn all_quick_output_byte_identical_across_job_counts() {
+    // The `heeperator all` acceptance contract: the parallel report set,
+    // drained through a shared session, renders byte-identically to the
+    // sequential baseline (same report ids, same text, same CSVs).
+    let seq = harness::all_with_jobs(true, 1);
+    let par = harness::all_with_jobs(true, 4);
+    assert_eq!(seq.len(), par.len());
+    for (s, p) in seq.iter().zip(&par) {
+        assert_eq!(s.id, p.id);
+        assert_eq!(s.text, p.text, "{} text diverged between --jobs 1 and --jobs 4", s.id);
+        assert_eq!(s.csv, p.csv, "{} csv diverged between --jobs 1 and --jobs 4", s.id);
+    }
+}
