@@ -1,0 +1,128 @@
+#!/usr/bin/env python3
+"""Fold the perf-smoke measurements into BENCH_5.json and gate regressions.
+
+Inputs:
+  --scale scale.json         `heeperator scale --json` output: deterministic
+                             simulated cycles + wall time per tile count.
+  --bench-lines FILE.jsonl   benchlib JSON lines (one {"id", "median_ns",
+                             "runs"} object per line) from the e2e bench
+                             binaries run with BENCHLIB_JSON set.
+  --baseline FILE.json       committed baseline. Gating compares the
+                             *simulated* aggregate cycles (deterministic);
+                             wall times are recorded but never gated.
+  --out BENCH_5.json         merged machine-readable summary (uploaded as a
+                             CI artifact; copy it over the baseline to
+                             ratchet).
+
+Gates (exit 1 on violation):
+  * aggregate simulated cycles regress more than --max-regress (default
+    10%) vs the baseline's aggregate_cycles;
+  * the speedup at the largest tile count falls below --min-speedup, when
+    given (the scale-out acceptance bar).
+
+A missing baseline, or one marked {"bootstrap": true}, records the run
+without gating — commit the uploaded BENCH_5.json as bench-baseline.json
+to arm the gate.
+"""
+
+import argparse
+import json
+import sys
+
+
+def read_json(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def read_jsonl(path):
+    # An explicitly-passed bench file that does not exist means the bench
+    # plumbing broke (wrong cwd, renamed bench, crash before first write);
+    # failing loudly beats a green run with silently-missing data.
+    out = []
+    try:
+        f = open(path)
+    except FileNotFoundError:
+        raise SystemExit(f"FAIL: bench-lines file {path} not found (bench step broken?)")
+    with f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    if not out:
+        raise SystemExit(f"FAIL: bench-lines file {path} is empty — no measurements recorded")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", required=True)
+    ap.add_argument("--bench-lines", default=None)
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--max-regress", type=float, default=0.10)
+    ap.add_argument("--min-speedup", type=float, default=None)
+    args = ap.parse_args()
+
+    scale = read_json(args.scale)
+    reports = list(scale.get("reports", []))
+    aggregate = scale.get("aggregate_cycles")
+    if aggregate is None:
+        aggregate = sum(r.get("cycles", 0) for r in reports)
+
+    for m in read_jsonl(args.bench_lines) if args.bench_lines else []:
+        reports.append(
+            {
+                "id": m["id"],
+                "cycles": None,  # wall-clock benchmark, no simulated cycles
+                "wall_ms": round(m["median_ns"] / 1e6, 3),
+                "runs": m.get("runs"),
+            }
+        )
+
+    merged = {
+        "schema": "heeperator-bench-v1",
+        "reports": reports,
+        "aggregate_cycles": aggregate,
+    }
+    with open(args.out, "w") as f:
+        json.dump(merged, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}: {len(reports)} reports, aggregate {aggregate} simulated cycles")
+
+    failures = []
+
+    if args.min_speedup is not None:
+        tiled = [r for r in reports if r.get("tiles") and r.get("speedup") is not None]
+        if tiled:
+            top = max(tiled, key=lambda r: r["tiles"])
+            print(f"speedup at {top['tiles']} tiles: {top['speedup']:.2f}x (floor {args.min_speedup}x)")
+            if top["speedup"] < args.min_speedup:
+                failures.append(
+                    f"speedup at {top['tiles']} tiles is {top['speedup']:.2f}x < {args.min_speedup}x"
+                )
+
+    try:
+        baseline = read_json(args.baseline)
+    except FileNotFoundError:
+        baseline = None
+    base_cycles = None if baseline is None else baseline.get("aggregate_cycles")
+    if baseline is None or baseline.get("bootstrap") or not base_cycles:
+        print("no armed baseline: recording only (commit BENCH_5.json as the baseline to gate)")
+    else:
+        delta = (aggregate - base_cycles) / base_cycles
+        print(f"aggregate cycles: {aggregate} vs baseline {base_cycles} ({delta:+.1%})")
+        if delta > args.max_regress:
+            failures.append(
+                f"aggregate simulated cycles regressed {delta:.1%} > {args.max_regress:.0%}"
+            )
+        elif delta < -args.max_regress:
+            print("note: large improvement — consider ratcheting the committed baseline")
+
+    for f in failures:
+        print(f"FAIL: {f}", file=sys.stderr)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -85,8 +85,8 @@ fn with_caesar(signal: &[i16]) -> (u64, Vec<usize>) {
     let bytes: Vec<u8> = signal.iter().flat_map(|v| v.to_le_bytes()).collect();
     // Halves staged in opposite banks for cross-bank MAX folding.
     let words = bytes.len() as u32 / 4;
-    soc.caesar.load(0, &bytes[..bytes.len() / 2]);
-    soc.caesar.load(16 * 1024, &bytes[bytes.len() / 2..]);
+    soc.caesar_mut().load(0, &bytes[..bytes.len() / 2]);
+    soc.caesar_mut().load(16 * 1024, &bytes[bytes.len() / 2..]);
     // The same data also sits in system RAM for the candidate scan (the
     // signal is memory-mapped either way; Caesar *is* a RAM bank).
     soc.load_data(BANK_SIZE, &bytes);

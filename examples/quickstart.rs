@@ -19,8 +19,8 @@ fn main() {
     //    (Logical vector registers are vl·4 bytes; v0 and v1 here.)
     let vl = 64u32;
     for j in 0..vl {
-        soc.carus.vrf.set_elem(0, j, vl, Sew::E32, 3 * j);
-        soc.carus.vrf.set_elem(1, j, vl, Sew::E32, 1000 + j);
+        soc.carus_mut().vrf.set_elem(0, j, vl, Sew::E32, 3 * j);
+        soc.carus_mut().vrf.set_elem(1, j, vl, Sew::E32, 1000 + j);
     }
 
     // 2. The xvnmc kernel: v2 = v0 + v1. Three instructions + ebreak.
@@ -29,7 +29,7 @@ fn main() {
         .vsetvli(T0, A0, Sew::E32)
         .vadd_vv(2, 0, 1)
         .ebreak();
-    soc.carus.load_kernel(&k.assemble().unwrap().words);
+    soc.carus_mut().load_kernel(&k.assemble().unwrap().words);
 
     // 3. Host firmware: configuration mode → start → wfi → ack.
     use nmc::bus::{periph, CARUS_BASE, PERIPH_BASE};
@@ -52,7 +52,7 @@ fn main() {
     println!("halt = {halt:?} after {cycles} cycles");
     let mut ok = true;
     for j in 0..vl {
-        let got = soc.carus.vrf.elem_unsigned(2, j, vl, Sew::E32);
+        let got = soc.carus().vrf.elem_unsigned(2, j, vl, Sew::E32);
         ok &= got == 1000 + 4 * j;
     }
     println!("v2 = v0 + v1: {}", if ok { "correct" } else { "WRONG" });

@@ -280,9 +280,9 @@ pub fn run_caesar(m: &Model) -> AdResult {
         tiles_per_layer.push(tiles);
     }
     soc.set_rom(rom);
-    soc.caesar.sew = Sew::E8;
-    soc.caesar.load(cl::X * 4, &m.input.iter().map(|&v| v as u8).collect::<Vec<_>>());
-    soc.caesar.splat_word(cl::ZERO, 0);
+    soc.caesar_mut().sew = Sew::E8;
+    soc.caesar_mut().load(cl::X * 4, &m.input.iter().map(|&v| v as u8).collect::<Vec<_>>());
+    soc.caesar_mut().splat_word(cl::ZERO, 0);
 
     let mut a = Asm::new(0);
     let imc_reg = (PERIPH_BASE + periph::CAESAR_IMC) as i32;

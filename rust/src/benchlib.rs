@@ -43,7 +43,38 @@ pub fn bench(name: &str, mut f: impl FnMut()) -> Measurement {
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let median_ns = samples[samples.len() / 2];
     println!("BENCH {name} median_ns={median_ns:.0} runs={runs}");
-    Measurement { name: name.to_string(), median_ns, runs }
+    let m = Measurement { name: name.to_string(), median_ns, runs };
+    json_sink(&m);
+    m
+}
+
+/// Machine-readable feed for CI perf tracking: when `BENCHLIB_JSON`
+/// names a file, every measurement appends one JSON line
+/// (`{"id": ..., "median_ns": ..., "runs": ...}`) that the perf-smoke
+/// job folds into `BENCH_5.json`.
+fn json_sink(m: &Measurement) {
+    let Ok(path) = std::env::var("BENCHLIB_JSON") else { return };
+    if path.is_empty() {
+        return;
+    }
+    append_json_line(&path, m);
+}
+
+/// One measurement as a JSON object (the `BENCHLIB_JSON` line format).
+fn json_line(m: &Measurement) -> String {
+    format!(
+        "{{\"id\": \"{}\", \"median_ns\": {:.0}, \"runs\": {}}}",
+        m.name, m.median_ns, m.runs
+    )
+}
+
+/// Append a measurement line to `path` (best effort — a benchmark must
+/// never fail because the summary file is unwritable).
+fn append_json_line(path: &str, m: &Measurement) {
+    use std::io::Write as _;
+    if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(path) {
+        let _ = writeln!(f, "{}", json_line(m));
+    }
 }
 
 /// Report a throughput figure derived from a measurement.
@@ -60,4 +91,32 @@ pub fn throughput(m: &Measurement, units: f64, unit_name: &str) {
 #[inline]
 pub fn sink<T>(v: T) -> T {
     std::hint::black_box(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measurements_render_and_append_as_json_lines() {
+        // No env mutation here: `bench()` reads BENCHLIB_JSON once and
+        // delegates to `append_json_line`, which is what we exercise
+        // (set_var would race concurrently-running tests' getenv calls).
+        let m = Measurement { name: "unit_test_probe".into(), median_ns: 1234.0, runs: 7 };
+        let line = json_line(&m);
+        assert!(line.starts_with('{') && line.ends_with('}'), "{line}");
+        assert!(line.contains("\"id\": \"unit_test_probe\""), "{line}");
+        assert!(line.contains("\"median_ns\": 1234"), "{line}");
+        assert!(line.contains("\"runs\": 7"), "{line}");
+
+        let path = std::env::temp_dir().join(format!("benchlib_json_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let p = path.to_str().expect("utf-8 temp path");
+        append_json_line(p, &m);
+        append_json_line(p, &m);
+        let text = std::fs::read_to_string(&path).expect("json lines written");
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(text.lines().count(), 2, "append, not truncate");
+        assert_eq!(text.lines().next().unwrap(), json_line(&m));
+    }
 }

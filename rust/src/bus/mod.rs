@@ -9,16 +9,21 @@
 //! (they still count fetch energy; see `crate::cpu`).
 //!
 //! Memory map (32 KiB granularity for the RAM slots, mirroring the paper's
-//! Fig. 1 where two of the eight X-HEEP banks are replaced by the NMC
-//! macros):
+//! Fig. 1 where banks of the X-HEEP SRAM space are replaced by NMC
+//! macros — the "drop-in memory tile" property the paper's scalability
+//! claim rests on). Bank slots 6 and up are **NMC tile windows**: the
+//! default HEEPerator instantiates one NM-Caesar (slot 6) and one
+//! NM-Carus (slot 7), and a scale-out configuration may populate up to
+//! [`MAX_TILES`] windows with any mix of the two macros:
 //!
-//! | Range                      | Slave                            |
-//! |----------------------------|----------------------------------|
-//! | `0x0000_0000..0x0003_0000` | SRAM banks 0..5 (6 × 32 KiB)     |
-//! | `0x0003_0000..0x0003_8000` | **NM-Caesar** (bank slot 6)      |
-//! | `0x0003_8000..0x0004_0000` | **NM-Carus**  (bank slot 7)      |
-//! | `0x2000_0000..0x2000_1000` | Peripheral registers             |
-//! | `0x4000_0000..`            | Flash/ROM (AD weights)           |
+//! | Range                      | Slave                              |
+//! |----------------------------|------------------------------------|
+//! | `0x0000_0000..0x0003_0000` | SRAM banks 0..5 (6 × 32 KiB)       |
+//! | `0x0003_0000..0x0003_8000` | NMC tile 0 (default: **NM-Caesar**)|
+//! | `0x0003_8000..0x0004_0000` | NMC tile 1 (default: **NM-Carus**) |
+//! | `0x0004_0000..0x000b_0000` | NMC tiles 2..15 (scale-out)        |
+//! | `0x2000_0000..0x2000_1000` | Peripheral registers               |
+//! | `0x4000_0000..`            | Flash/ROM (AD weights)             |
 
 /// Base of the SRAM bank region.
 pub const SRAM_BASE: u32 = 0x0000_0000;
@@ -26,10 +31,19 @@ pub const SRAM_BASE: u32 = 0x0000_0000;
 pub const BANK_SIZE: u32 = 0x8000;
 /// Number of conventional SRAM banks (slots 0..5).
 pub const NUM_SRAM_BANKS: usize = 6;
-/// NM-Caesar base address (bank slot 6).
-pub const CAESAR_BASE: u32 = SRAM_BASE + 6 * BANK_SIZE;
-/// NM-Carus base address (bank slot 7).
-pub const CARUS_BASE: u32 = SRAM_BASE + 7 * BANK_SIZE;
+/// Base of the NMC tile windows (bank slot 6 onward).
+pub const NMC_TILE_BASE: u32 = SRAM_BASE + NUM_SRAM_BANKS as u32 * BANK_SIZE;
+/// Maximum number of decodable NMC tile windows.
+pub const MAX_TILES: usize = 16;
+/// Bus window of tile `i` (one bank slot per tile).
+pub fn tile_base(i: usize) -> u32 {
+    assert!(i < MAX_TILES, "tile {i} beyond the decoded window range");
+    NMC_TILE_BASE + i as u32 * BANK_SIZE
+}
+/// NM-Caesar base address in the default HEEPerator config (tile 0).
+pub const CAESAR_BASE: u32 = NMC_TILE_BASE;
+/// NM-Carus base address in the default HEEPerator config (tile 1).
+pub const CARUS_BASE: u32 = NMC_TILE_BASE + BANK_SIZE;
 /// Peripheral register file base.
 pub const PERIPH_BASE: u32 = 0x2000_0000;
 /// Peripheral region size.
@@ -57,6 +71,26 @@ pub mod periph {
     pub const DMA_STATUS: u32 = 0x20;
     /// Cycle counter (read-only, for firmware-side timing).
     pub const MCYCLE: u32 = 0x30;
+    /// Per-tile mode registers (bit 0): `TILE_MODE_BASE + 4*i` drives tile
+    /// `i`'s mode pin — `imc` for an NM-Caesar tile, configuration mode
+    /// for an NM-Carus tile. [`CAESAR_IMC`] / [`CARUS_MODE`] remain as
+    /// aliases for the *first* tile of each kind (the single-tile
+    /// firmware contract).
+    pub const TILE_MODE_BASE: u32 = 0x100;
+    /// Per-tile status registers (read-only, bit 0 = busy):
+    /// `TILE_STATUS_BASE + 4*i`. This is the scale-out polling interface:
+    /// the host watches tile completion without mode-switching the tile's
+    /// bus window.
+    pub const TILE_STATUS_BASE: u32 = 0x200;
+
+    /// Mode register offset of tile `i`.
+    pub fn tile_mode(i: usize) -> u32 {
+        TILE_MODE_BASE + 4 * i as u32
+    }
+    /// Status register offset of tile `i`.
+    pub fn tile_status(i: usize) -> u32 {
+        TILE_STATUS_BASE + 4 * i as u32
+    }
 }
 
 /// Decoded bus target.
@@ -64,10 +98,9 @@ pub mod periph {
 pub enum Slave {
     /// Conventional SRAM bank `0..NUM_SRAM_BANKS`.
     Sram(usize),
-    /// NM-Caesar macro.
-    Caesar,
-    /// NM-Carus macro.
-    Carus,
+    /// NMC tile window `0..MAX_TILES` (NM-Caesar or NM-Carus; whether the
+    /// window is populated is the SoC's business, not the decoder's).
+    Tile(usize),
     /// Peripheral registers.
     Periph,
     /// Flash/ROM.
@@ -79,15 +112,13 @@ pub enum Slave {
 /// Returns `None` for unmapped addresses (a bus error in hardware; the
 /// simulator treats it as a fatal modeling bug).
 pub fn decode(addr: u32) -> Option<(Slave, u32)> {
-    if addr < CAESAR_BASE {
+    if addr < NMC_TILE_BASE {
         let bank = (addr / BANK_SIZE) as usize;
         return Some((Slave::Sram(bank), addr % BANK_SIZE));
     }
-    if addr < CARUS_BASE {
-        return Some((Slave::Caesar, addr - CAESAR_BASE));
-    }
-    if addr < CARUS_BASE + BANK_SIZE {
-        return Some((Slave::Carus, addr - CARUS_BASE));
+    if addr < NMC_TILE_BASE + MAX_TILES as u32 * BANK_SIZE {
+        let off = addr - NMC_TILE_BASE;
+        return Some((Slave::Tile((off / BANK_SIZE) as usize), off % BANK_SIZE));
     }
     if (PERIPH_BASE..PERIPH_BASE + PERIPH_SIZE).contains(&addr) {
         return Some((Slave::Periph, addr - PERIPH_BASE));
@@ -147,9 +178,9 @@ mod tests {
         assert_eq!(decode(0x0000_7fff), Some((Slave::Sram(0), 0x7fff)));
         assert_eq!(decode(0x0000_8000), Some((Slave::Sram(1), 0)));
         assert_eq!(decode(0x0002_ffff), Some((Slave::Sram(5), 0x7fff)));
-        assert_eq!(decode(CAESAR_BASE), Some((Slave::Caesar, 0)));
-        assert_eq!(decode(CAESAR_BASE + 0x7fff), Some((Slave::Caesar, 0x7fff)));
-        assert_eq!(decode(CARUS_BASE), Some((Slave::Carus, 0)));
+        assert_eq!(decode(CAESAR_BASE), Some((Slave::Tile(0), 0)));
+        assert_eq!(decode(CAESAR_BASE + 0x7fff), Some((Slave::Tile(0), 0x7fff)));
+        assert_eq!(decode(CARUS_BASE), Some((Slave::Tile(1), 0)));
         assert_eq!(decode(PERIPH_BASE + periph::DMA_CTL), Some((Slave::Periph, periph::DMA_CTL)));
         assert_eq!(decode(ROM_BASE + 16), Some((Slave::Rom, 16)));
         assert_eq!(decode(0x1000_0000), None);
@@ -157,9 +188,35 @@ mod tests {
 
     #[test]
     fn nmc_macros_sit_in_bank_slots() {
-        // The drop-in property: Caesar and Carus occupy slots 6 and 7 of
-        // what would otherwise be an 8-bank SRAM space.
+        // The drop-in property: the default Caesar and Carus occupy slots
+        // 6 and 7 of what would otherwise be an 8-bank SRAM space.
         assert_eq!(CAESAR_BASE, 6 * BANK_SIZE);
         assert_eq!(CARUS_BASE, 7 * BANK_SIZE);
+        assert_eq!(tile_base(0), CAESAR_BASE);
+        assert_eq!(tile_base(1), CARUS_BASE);
+    }
+
+    #[test]
+    fn tile_windows_decode_up_to_max() {
+        // Scale-out windows: one 32 KiB slot per tile, contiguous above
+        // the conventional banks, below the peripheral space.
+        for i in 0..MAX_TILES {
+            assert_eq!(decode(tile_base(i)), Some((Slave::Tile(i), 0)));
+            assert_eq!(decode(tile_base(i) + 0x1234), Some((Slave::Tile(i), 0x1234)));
+        }
+        assert!(tile_base(MAX_TILES - 1) + BANK_SIZE <= PERIPH_BASE);
+        // Beyond the last window: unmapped.
+        assert_eq!(decode(NMC_TILE_BASE + MAX_TILES as u32 * BANK_SIZE), None);
+    }
+
+    #[test]
+    fn per_tile_periph_offsets() {
+        assert_eq!(periph::tile_mode(0), periph::TILE_MODE_BASE);
+        assert_eq!(periph::tile_mode(3), periph::TILE_MODE_BASE + 12);
+        assert_eq!(periph::tile_status(7), periph::TILE_STATUS_BASE + 28);
+        // The register blocks must not collide with each other or the
+        // legacy registers.
+        assert!(periph::tile_mode(MAX_TILES - 1) < periph::TILE_STATUS_BASE);
+        assert!(periph::tile_status(MAX_TILES - 1) < PERIPH_SIZE);
     }
 }

@@ -33,6 +33,9 @@ pub struct DmaStats {
     pub words_read: u64,
     pub words_written: u64,
     pub active_cycles: u64,
+    /// Transfers programmed since the last stats reset (the batch
+    /// scheduler reports staging-transfer counts per run).
+    pub transfers: u64,
 }
 
 /// Write-port action the DMA wants to perform this cycle.
@@ -97,6 +100,7 @@ impl Dma {
         if mode == DmaMode::CaesarStream {
             assert!(len % 8 == 0, "CaesarStream length must be a whole number of pairs");
         }
+        self.stats.transfers += 1;
         self.mode = mode;
         self.src = src;
         self.dst = dst;

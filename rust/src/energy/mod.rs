@@ -54,6 +54,11 @@ pub struct Activity {
     pub carus_alu_light: u64,
     pub carus_alu_add: u64,
     pub carus_alu_mul: u64,
+    /// Populated NMC tile windows. The paper's HEEPerator has two (one
+    /// NM-Caesar + one NM-Carus), which the baseline static residue
+    /// already covers; each tile beyond two adds its own clock-tree +
+    /// leakage share per cycle ([`params::E_TILE_STATIC_CYCLE`]).
+    pub nmc_tiles: u32,
     /// Which CPU is the host (scales core energy/cycle).
     pub host_kind: HostKind,
 }
@@ -160,8 +165,11 @@ pub fn energy(act: &Activity) -> Breakdown {
     b.interconnect =
         act.bus_txns as f64 * E_BUS_TXN + act.dma_active as f64 * E_DMA_CYCLE;
 
-    // Always-on residue.
-    b.other = act.cycles as f64 * E_STATIC_CYCLE;
+    // Always-on residue. The baseline covers the paper's two-tile MCU;
+    // scale-out tiles each add their own always-on share (dynamic idle
+    // power is already event-counted per tile above).
+    let extra_tiles = act.nmc_tiles.saturating_sub(2) as f64;
+    b.other = act.cycles as f64 * (E_STATIC_CYCLE + extra_tiles * E_TILE_STATIC_CYCLE);
     b
 }
 
@@ -216,6 +224,18 @@ mod tests {
         };
         let s = energy(&act).shares();
         assert!((s.iter().sum::<f64>() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn extra_tiles_add_static_power() {
+        let base = Activity { cycles: 1000, nmc_tiles: 2, ..Default::default() };
+        let four = Activity { cycles: 1000, nmc_tiles: 4, ..Default::default() };
+        let d = energy(&four).other - energy(&base).other;
+        assert!((d - 2.0 * 1000.0 * E_TILE_STATIC_CYCLE).abs() < 1e-9);
+        // Pre-scale-out records (tiles unset) cost the same as the
+        // paper's two-tile baseline — the calibration anchors hold.
+        let zero = Activity { cycles: 1000, ..Default::default() };
+        assert_eq!(energy(&zero).other, energy(&base).other);
     }
 
     #[test]

@@ -73,5 +73,10 @@ pub const E_BUS_TXN: f64 = 1.5;
 pub const E_DMA_CYCLE: f64 = 2.0;
 
 // --- Always-on residue (pJ per cycle) ----------------------------------------
-/// Peripheral subsystem + clock tree + leakage of the whole MCU.
+/// Peripheral subsystem + clock tree + leakage of the whole MCU (the
+/// paper's two-tile HEEPerator).
 pub const E_STATIC_CYCLE: f64 = 4.0;
+/// Clock-tree + leakage share of one additional NMC tile beyond the
+/// baseline two (scale-out configurations). A 32 KiB-class macro plus its
+/// window of the crossbar is a fraction of the whole-MCU residue.
+pub const E_TILE_STATIC_CYCLE: f64 = 0.8;

@@ -92,11 +92,11 @@ fn run_carus_with_lanes(
     let row_bytes = p * sew.bytes();
     let av = crate::kernels::golden::unpack(&data.a, sew);
     for r in 0..8u32 {
-        soc.carus.vrf.load(r * row_bytes, &data.b[(r * row_bytes) as usize..((r + 1) * row_bytes) as usize]);
+        soc.carus_mut().vrf.load(r * row_bytes, &data.b[(r * row_bytes) as usize..((r + 1) * row_bytes) as usize]);
     }
     for k in 0..8u32 {
         for i in 0..8u32 {
-            soc.carus.vrf.set_elem((16 + k) as u8, i, p, sew, av[(i * 8 + k) as usize] as u32);
+            soc.carus_mut().vrf.set_elem((16 + k) as u8, i, p, sew, av[(i * 8 + k) as usize] as u32);
         }
     }
     let mut a = crate::asm::Asm::new(0);
@@ -110,13 +110,16 @@ fn run_carus_with_lanes(
         a.v_opr(VOp::Macc, S1, crate::isa::xvnmc::VSrc::X(A2));
     }
     a.addi(S0, S0, 1).li(T2, 8).bne(S0, T2, "iloop").ebreak();
-    soc.carus.load_kernel(&a.assemble().unwrap().words);
-    soc.carus.config_mode = true;
-    soc.carus.bus_write(crate::carus::CTL_OFFSET, 4, crate::carus::CTL_START);
-    soc.carus.config_mode = false;
+    // One accessor lookup, then drive the device directly — the loop
+    // below is the ablation's hot path.
+    let carus = soc.carus_mut();
+    carus.load_kernel(&a.assemble().unwrap().words);
+    carus.config_mode = true;
+    carus.bus_write(crate::carus::CTL_OFFSET, 4, crate::carus::CTL_START);
+    carus.config_mode = false;
     let mut cycles = 0u64;
-    while soc.carus.busy() {
-        soc.carus.step();
+    while carus.busy() {
+        carus.step();
         cycles += 1;
         assert!(cycles < 50_000_000);
     }
@@ -132,8 +135,8 @@ pub fn issue_strategy() -> Report {
     let build_soc = || {
         let mut soc = Soc::heeperator();
         for i in 0..words {
-            soc.caesar.poke_word(i, i);
-            soc.caesar.poke_word(4096 + i, 0x5555_5555);
+            soc.caesar_mut().poke_word(i, i);
+            soc.caesar_mut().poke_word(4096 + i, 0x5555_5555);
         }
         soc
     };

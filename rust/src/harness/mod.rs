@@ -650,6 +650,154 @@ pub fn sweep_report(
     r
 }
 
+// ---------------------------------------------------------------------------
+// `heeperator scale` — multi-tile scaling curves
+// ---------------------------------------------------------------------------
+
+/// One machine-readable point of a scaling curve (the `BENCH_5.json`
+/// schema of the CI perf-smoke job: simulated cycles + wall time).
+#[derive(Debug, Clone)]
+pub struct ScalePoint {
+    pub tiles: u32,
+    pub cycles: u64,
+    pub wall_ms: f64,
+    pub speedup: f64,
+    pub mean_utilization: f64,
+    pub contention_cycles: u64,
+    pub energy_uj: f64,
+}
+
+/// Sweep a [`crate::sched::BatchSpec`] over `tile_counts` (fanned out over
+/// `jobs` workers, deduplicated through `session`) and render the
+/// scaling-curve report: aggregate speedup and energy vs tile count,
+/// per-tile utilization, amortized DMA staging, and bus contention.
+///
+/// Every tile count is asserted byte-identical to the first (single-tile
+/// reference) run before the report renders — the scheduler cannot trade
+/// correctness for speedup.
+pub fn scale_report(
+    session: &Arc<SweepSession>,
+    spec: crate::sched::BatchSpec,
+    tile_counts: &[u32],
+    jobs: usize,
+) -> Result<(Report, Vec<ScalePoint>), String> {
+    type ScaleJobOut = (u32, Result<(Arc<crate::sched::BatchRunResult>, f64), String>);
+    if tile_counts.is_empty() {
+        return Err("no tile counts given (use --tiles 1,2,4)".to_string());
+    }
+    let mut jlist: Vec<executor::Job<ScaleJobOut>> = Vec::new();
+    for &t in tile_counts {
+        let session = Arc::clone(session);
+        jlist.push(Box::new(move || {
+            let t0 = std::time::Instant::now();
+            let r = session
+                .scale(&spec, t)
+                .map(|res| (res, t0.elapsed().as_secs_f64() * 1e3));
+            (t, r)
+        }));
+    }
+    let mut runs = Vec::with_capacity(tile_counts.len());
+    for (t, r) in executor::run_ordered(jlist, jobs) {
+        let (res, wall) = r.map_err(|e| format!("scale x{t}: {e}"))?;
+        runs.push((t, res, wall));
+    }
+    // Byte-identity across the whole curve (outputs of cached points were
+    // already asserted against the golden reference at run time).
+    let (first, rest) = runs.split_first().expect("at least one tile count");
+    for (t, res, _) in rest {
+        assert_eq!(
+            res.outputs, first.1.outputs,
+            "{t}-tile schedule output diverged from the {}-tile reference",
+            first.0
+        );
+    }
+    // Speedups are reported against the 1-tile run when present, else the
+    // first listed count.
+    let base = runs
+        .iter()
+        .find(|(t, ..)| *t == 1)
+        .map(|(_, r, _)| Arc::clone(r))
+        .unwrap_or_else(|| Arc::clone(&runs[0].1));
+
+    let mut r = Report::new("scale", "Multi-tile batch scaling");
+    let mode = if spec.shard { "shard" } else { "batch" };
+    writeln!(
+        r.text,
+        "{:?} {:?} {} — {} mode, {} workload(s), seed {}",
+        spec.target,
+        spec.kernel,
+        spec.sew,
+        mode,
+        first.1.outputs.len(),
+        spec.seed
+    )
+    .unwrap();
+    writeln!(
+        r.text,
+        "{:<6} {:>12} {:>8} {:>7} {:>22} {:>10} {:>8} {:>11} {:>10}",
+        "tiles", "cycles", "speedup", "util", "per-tile util", "dma-act", "dma-tx", "contention", "uJ"
+    )
+    .unwrap();
+    // No wall-clock column: report text and CSV stay byte-identical for
+    // every `--jobs` value (wall times live in the JSON summary only).
+    let mut csv = String::from(
+        "tiles,cycles,speedup,mean_utilization,dma_active_cycles,dma_transfers,bus_txns,contention_cycles,energy_pj\n",
+    );
+    let mut points = Vec::with_capacity(runs.len());
+    for (t, res, wall) in &runs {
+        let speedup = res.speedup_vs(&base);
+        let utils: Vec<String> = (0..res.per_tile.len())
+            .map(|i| format!("{:.0}%", 100.0 * res.utilization(i)))
+            .collect();
+        let energy_uj = res.energy.total() / 1e6;
+        writeln!(
+            r.text,
+            "{:<6} {:>12} {:>7.2}x {:>6.0}% {:>22} {:>10} {:>8} {:>11} {:>10.2}",
+            t,
+            res.cycles,
+            speedup,
+            100.0 * res.mean_utilization(),
+            utils.join(" "),
+            res.dma_active_cycles,
+            res.dma_transfers,
+            res.contention_cycles,
+            energy_uj
+        )
+        .unwrap();
+        writeln!(
+            csv,
+            "{},{},{:.4},{:.4},{},{},{},{},{:.1}",
+            t,
+            res.cycles,
+            speedup,
+            res.mean_utilization(),
+            res.dma_active_cycles,
+            res.dma_transfers,
+            res.bus_txns,
+            res.contention_cycles,
+            res.energy.total()
+        )
+        .unwrap();
+        points.push(ScalePoint {
+            tiles: *t,
+            cycles: res.cycles,
+            wall_ms: *wall,
+            speedup,
+            mean_utilization: res.mean_utilization(),
+            contention_cycles: res.contention_cycles,
+            energy_uj,
+        });
+    }
+    writeln!(
+        r.text,
+        "(outputs byte-identical across all {} tile configurations)",
+        runs.len()
+    )
+    .unwrap();
+    r.csv.push(("scale.csv".into(), csv));
+    Ok((r, points))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -686,6 +834,30 @@ mod tests {
         assert_eq!(name, "sweep.csv");
         assert_eq!(csv.lines().count(), 4, "header + three rows");
         assert!(csv.starts_with("target,family,sew,seed,n,p,f,"));
+    }
+
+    #[test]
+    fn scale_report_renders_curve_and_json_points() {
+        let session = Arc::new(SweepSession::new());
+        let spec = crate::sched::BatchSpec {
+            target: Target::Carus,
+            kernel: Kernel::Add { n: 256 },
+            sew: Sew::E32,
+            seed: 3,
+            batch: 4,
+            shard: false,
+        };
+        let (rep, points) = scale_report(&session, spec, &[1, 2], 2).unwrap();
+        assert_eq!(points.len(), 2);
+        assert!((points[0].speedup - 1.0).abs() < 1e-9, "1-tile run is the baseline");
+        assert!(points[1].cycles > 0 && points[1].speedup > 0.8);
+        assert!(rep.text.contains("tiles"));
+        assert!(rep.text.contains("byte-identical"));
+        assert_eq!(rep.csv[0].0, "scale.csv");
+        assert_eq!(session.simulations(), 2);
+        // Unknown tile targets surface as errors, not panics.
+        let bad = crate::sched::BatchSpec { target: Target::Cpu, ..spec };
+        assert!(scale_report(&session, bad, &[1], 1).is_err());
     }
 
     #[test]

@@ -122,7 +122,7 @@ impl Engine for CaesarEngine {
         stage_data(&mut soc, kernel, sew, data);
 
         // Stage the micro-op stream in system SRAM (may span banks).
-        load_region(&mut soc, STREAM_BASE, &prepared.stream);
+        soc.load_region(STREAM_BASE, &prepared.stream);
 
         soc.load_firmware(&prepared.driver, 0);
         soc.reset_stats();
@@ -131,23 +131,111 @@ impl Engine for CaesarEngine {
         res.output = extract(&soc, kernel, sew);
         res
     }
+
+    // --- Tiled execute path (see `crate::sched`) --------------------------
+
+    fn tile_program(&self, kernel: Kernel, sew: Sew) -> Option<super::TileProgram> {
+        if matches!(kernel, Kernel::Maxpool { .. }) {
+            // Horizontal pooling needs the host CPU phase — there is no
+            // self-contained tile execution to schedule.
+            return None;
+        }
+        Some(super::TileProgram {
+            setup_image: Vec::new(),
+            args: Vec::new(),
+            exec: super::TileExec::Stream(build_program(kernel, sew)),
+        })
+    }
+
+    fn tile_io(&self, kernel: Kernel, sew: Sew, data: &WorkloadData) -> Option<super::TileIo> {
+        let sb = sew.bytes();
+        let splat_bytes = |v: u32| elem::splat(v, sew).to_le_bytes().to_vec();
+        let mut inputs: Vec<(u32, Vec<u8>)> = Vec::new();
+        let output = match kernel {
+            Kernel::Xor { n } | Kernel::Add { n } | Kernel::Mul { n } => {
+                inputs.push((layout::EW_SRC1 * 4, data.a.clone()));
+                inputs.push((layout::EW_SRC2 * 4, data.b.clone()));
+                (layout::EW_OUT * 4, n * sb)
+            }
+            Kernel::Relu { n } | Kernel::LeakyRelu { n } => {
+                inputs.push((layout::RELU_SRC * 4, data.a.clone()));
+                let c = if matches!(kernel, Kernel::LeakyRelu { .. }) { LEAKY_SHIFT } else { 0 };
+                inputs.push((layout::RELU_CONST * 4, splat_bytes(c)));
+                (layout::RELU_SRC * 4, n * sb)
+            }
+            Kernel::Matmul { p } | Kernel::Gemm { p } => {
+                let av = unpack(&data.a, sew);
+                let mut asplat = Vec::with_capacity(64 * 4);
+                for &v in &av {
+                    asplat.extend(splat_bytes(v as u32));
+                }
+                inputs.push((layout::MM_ASPLAT * 4, asplat));
+                inputs.push((layout::MM_B * 4, data.b.clone()));
+                if matches!(kernel, Kernel::Gemm { .. }) {
+                    inputs.push((layout::MM_C * 4, data.c.clone()));
+                    inputs.push((layout::MM_SPLAT2 * 4, splat_bytes(2)));
+                    inputs.push((layout::MM_SPLAT3 * 4, splat_bytes(3)));
+                }
+                (layout::MM_OUT * 4, 8 * p * sb)
+            }
+            Kernel::Conv2d { n, f } => {
+                let lanes = sew.lanes();
+                let img = unpack(&data.a, sew);
+                let filt = unpack(&data.b, sew);
+                // Element-shifted image copies (see `stage_data`), as one
+                // zero-padded byte image including the per-row guard words.
+                let row_words = (n * sb).div_ceil(4) + 1;
+                let copy_words = 8 * row_words;
+                let mut copies = vec![0u8; (lanes * copy_words * 4) as usize];
+                for s in 0..lanes {
+                    for r in 0..8u32 {
+                        let vals: Vec<i64> = (0..n)
+                            .map(|c| {
+                                let cc = c + s;
+                                if cc < n { img[(r * n + cc) as usize] } else { 0 }
+                            })
+                            .collect();
+                        let at = ((s * copy_words + r * row_words) * 4) as usize;
+                        let bytes = pack(&vals, sew);
+                        copies[at..at + bytes.len()].copy_from_slice(&bytes);
+                    }
+                }
+                inputs.push((layout::CV_COPIES * 4, copies));
+                let mut fsplat = Vec::with_capacity(filt.len() * 4);
+                for &w in &filt {
+                    fsplat.extend(splat_bytes(w as u32));
+                }
+                inputs.push((layout::CV_FSPLAT * 4, fsplat));
+                let (orows, ocols) = (8 - f + 1, n - f + 1);
+                let out_row_words = (ocols * sb).div_ceil(4) + 1;
+                (layout::CV_OUT * 4, orows * out_row_words * 4)
+            }
+            Kernel::Maxpool { .. } => return None,
+        };
+        Some(super::TileIo { inputs, output })
+    }
+
+    fn tile_extract(&self, kernel: Kernel, sew: Sew, span: &[u8]) -> Vec<u8> {
+        match kernel {
+            Kernel::Conv2d { n, f } => {
+                // Strip the per-row guard padding.
+                let sb = sew.bytes();
+                let (orows, ocols) = ((8 - f + 1) as usize, ((n - f + 1) * sb) as usize);
+                let stride = (((n - f + 1) * sb).div_ceil(4) + 1) as usize * 4;
+                let mut out = Vec::with_capacity(orows * ocols);
+                for r in 0..orows {
+                    out.extend_from_slice(&span[r * stride..r * stride + ocols]);
+                }
+                out
+            }
+            _ => span.to_vec(),
+        }
+    }
 }
 
 /// Build + run an NM-Caesar kernel (uncached prepare + execute).
 pub fn run(kernel: Kernel, sew: Sew, data: &WorkloadData) -> RunResult {
     CaesarEngine.execute(&CaesarEngine.prepare(kernel, sew), data)
-}
-
-/// Load a byte region that may span multiple SRAM banks.
-fn load_region(soc: &mut Soc, addr: u32, bytes: &[u8]) {
-    let mut off = 0usize;
-    while off < bytes.len() {
-        let a = addr + off as u32;
-        let room = (BANK_SIZE - a % BANK_SIZE) as usize;
-        let chunk = room.min(bytes.len() - off);
-        soc.load_data(a, &bytes[off..off + chunk]);
-        off += chunk;
-    }
 }
 
 /// Compile the micro-op stream — a pure function of the workload *shape*
@@ -256,40 +344,41 @@ fn build_program(kernel: Kernel, sew: Sew) -> CaesarProgram {
 /// Stage one concrete workload into the macro's banks per the [`layout`]
 /// contract the compiled stream expects.
 fn stage_data(soc: &mut Soc, kernel: Kernel, sew: Sew, data: &WorkloadData) {
+    let caesar = soc.caesar_mut();
     match kernel {
         Kernel::Xor { .. } | Kernel::Add { .. } | Kernel::Mul { .. } => {
-            soc.caesar.load(layout::EW_SRC1 * 4, &data.a);
-            soc.caesar.load(layout::EW_SRC2 * 4, &data.b);
+            caesar.load(layout::EW_SRC1 * 4, &data.a);
+            caesar.load(layout::EW_SRC2 * 4, &data.b);
         }
         Kernel::Relu { .. } | Kernel::LeakyRelu { .. } => {
-            soc.caesar.load(layout::RELU_SRC * 4, &data.a);
-            soc.caesar.sew = sew;
+            caesar.load(layout::RELU_SRC * 4, &data.a);
+            caesar.sew = sew;
             if matches!(kernel, Kernel::LeakyRelu { .. }) {
                 // const word = splat(shift amount); scratch at CONST+1.
-                soc.caesar.splat_word(layout::RELU_CONST, LEAKY_SHIFT);
+                caesar.splat_word(layout::RELU_CONST, LEAKY_SHIFT);
             } else {
-                soc.caesar.splat_word(layout::RELU_CONST, 0);
+                caesar.splat_word(layout::RELU_CONST, 0);
             }
         }
         Kernel::Matmul { .. } | Kernel::Gemm { .. } => {
             // Stage splat(A[i][k]) words.
             let av = unpack(&data.a, sew);
-            soc.caesar.sew = sew;
+            caesar.sew = sew;
             for (i, &v) in av.iter().enumerate() {
-                soc.caesar.poke_word(layout::MM_ASPLAT + i as u32, elem::splat(v as u32, sew));
+                caesar.poke_word(layout::MM_ASPLAT + i as u32, elem::splat(v as u32, sew));
             }
-            soc.caesar.load(layout::MM_B * 4, &data.b); // row-major B
+            caesar.load(layout::MM_B * 4, &data.b); // row-major B
             if matches!(kernel, Kernel::Gemm { .. }) {
-                soc.caesar.load(layout::MM_C * 4, &data.c);
-                soc.caesar.splat_word(layout::MM_SPLAT2, 2);
-                soc.caesar.splat_word(layout::MM_SPLAT3, 3);
+                caesar.load(layout::MM_C * 4, &data.c);
+                caesar.splat_word(layout::MM_SPLAT2, 2);
+                caesar.splat_word(layout::MM_SPLAT3, 3);
             }
         }
         Kernel::Conv2d { n, f: _ } => {
             let lanes = sew.lanes();
             let img = unpack(&data.a, sew);
             let filt = unpack(&data.b, sew);
-            soc.caesar.sew = sew;
+            caesar.sew = sew;
             // Shifted copies: copy s has img[row][col + s], one guard word
             // per row against chunk overreach.
             let row_words = (n * sew.bytes()).div_ceil(4) + 1;
@@ -307,12 +396,12 @@ fn stage_data(soc: &mut Soc, kernel: Kernel, sew: Sew, data: &WorkloadData) {
                         })
                         .collect();
                     let base = (layout::CV_COPIES + s * copy_words + r * row_words) * 4;
-                    soc.caesar.load(base, &pack(&vals, sew));
+                    caesar.load(base, &pack(&vals, sew));
                 }
             }
             // Filter splats.
             for (i, &w) in filt.iter().enumerate() {
-                soc.caesar.poke_word(layout::CV_FSPLAT + i as u32, elem::splat(w as u32, sew));
+                caesar.poke_word(layout::CV_FSPLAT + i as u32, elem::splat(w as u32, sew));
             }
         }
         Kernel::Maxpool { n } => {
@@ -326,7 +415,7 @@ fn stage_data(soc: &mut Soc, kernel: Kernel, sew: Sew, data: &WorkloadData) {
                 } else {
                     layout::MP_ODD + (r / 2) * row_words
                 };
-                soc.caesar.load(base * 4, src);
+                caesar.load(base * 4, src);
             }
         }
     }
@@ -456,6 +545,43 @@ mod tests {
         for sew in Sew::ALL {
             check(Kernel::Maxpool { n: 64 / sew.bytes() }, sew);
         }
+    }
+
+    #[test]
+    fn tile_io_image_matches_direct_staging() {
+        // The tiled execute path stages byte images over DMA; they must
+        // land exactly where `stage_data` places the operands.
+        let cases = [
+            (Kernel::Add { n: 256 }, Sew::E16),
+            (Kernel::LeakyRelu { n: 256 }, Sew::E8),
+            (Kernel::Gemm { p: 16 }, Sew::E32),
+            (Kernel::Conv2d { n: 32, f: 3 }, Sew::E16),
+        ];
+        for (kernel, sew) in cases {
+            let data = golden::generate(kernel, sew, 99);
+            let mut direct = Soc::heeperator();
+            stage_data(&mut direct, kernel, sew, &data);
+            let mut tiled = Soc::heeperator();
+            let io = CaesarEngine.tile_io(kernel, sew, &data).unwrap();
+            for (off, bytes) in &io.inputs {
+                assert_eq!(*off % 4, 0, "word-aligned staging offset");
+                assert_eq!(bytes.len() % 4, 0, "word-aligned staging length");
+                tiled.caesar_mut().load(*off, bytes);
+            }
+            assert_eq!(
+                direct.dump(CAESAR_BASE, 32 * 1024),
+                tiled.dump(CAESAR_BASE, 32 * 1024),
+                "{kernel:?} {sew}"
+            );
+        }
+    }
+
+    #[test]
+    fn maxpool_is_not_tileable() {
+        // The CPU horizontal phase pins maxpool to the host.
+        assert!(CaesarEngine.tile_program(Kernel::Maxpool { n: 64 }, Sew::E8).is_none());
+        let data = golden::generate(Kernel::Maxpool { n: 64 }, Sew::E8, 1);
+        assert!(CaesarEngine.tile_io(Kernel::Maxpool { n: 64 }, Sew::E8, &data).is_none());
     }
 
     #[test]

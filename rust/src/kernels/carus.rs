@@ -122,6 +122,92 @@ impl Engine for CarusEngine {
         res.output = extract(&soc, kernel, sew);
         res
     }
+
+    // --- Tiled execute path (see `crate::sched`) --------------------------
+
+    fn tile_program(&self, kernel: Kernel, sew: Sew) -> Option<super::TileProgram> {
+        let (kprog, args) = build_kernel(kernel, sew);
+        let setup_image: Vec<u8> = kprog.words.iter().flat_map(|w| w.to_le_bytes()).collect();
+        Some(super::TileProgram { setup_image, args, exec: super::TileExec::Autonomous })
+    }
+
+    fn tile_io(&self, kernel: Kernel, sew: Sew, data: &WorkloadData) -> Option<super::TileIo> {
+        let sb = sew.bytes();
+        let mut inputs: Vec<(u32, Vec<u8>)> = Vec::new();
+        let output = match kernel {
+            Kernel::Xor { n } | Kernel::Add { n } | Kernel::Mul { n } => {
+                inputs.push((0, data.a.clone())); // v0..
+                inputs.push((10 * REG_BYTES, data.b.clone())); // v10..
+                (20 * REG_BYTES, n * sb)
+            }
+            Kernel::Relu { n } | Kernel::LeakyRelu { n } => {
+                inputs.push((0, data.a.clone())); // in place
+                (0, n * sb)
+            }
+            Kernel::Matmul { p } | Kernel::Gemm { p } => {
+                let rb = p * sb;
+                inputs.push((0, data.b.clone())); // B rows v0–7
+                // A *columns* image (v16–23): element i of column register
+                // 16+k is A[i][k] — the byte-image twin of the
+                // `vrf.set_elem` staging in `stage_data`.
+                let av = unpack(&data.a, sew);
+                let mut cols = vec![0u8; (8 * rb) as usize];
+                for k in 0..8u32 {
+                    for i in 0..8u32 {
+                        let at = (k * rb + i * sb) as usize;
+                        let bytes = super::golden::pack(&[av[(i * 8 + k) as usize]], sew);
+                        cols[at..at + sb as usize].copy_from_slice(&bytes);
+                    }
+                }
+                inputs.push((16 * rb, cols));
+                if matches!(kernel, Kernel::Gemm { .. }) {
+                    inputs.push((24 * rb, data.c.clone())); // C rows v24–31
+                }
+                (8 * rb, 8 * rb)
+            }
+            Kernel::Conv2d { n, f } => {
+                let rb = n * sb;
+                inputs.push((0, data.a.clone())); // image rows v0–7
+                let mut filt = data.b.clone(); // filter flat in v14
+                while filt.len() % 4 != 0 {
+                    filt.push(0); // word-pad (spills into unused v14 tail)
+                }
+                inputs.push((14 * rb, filt));
+                (8 * rb, (8 - f + 1) * rb)
+            }
+            Kernel::Maxpool { n } => {
+                let rb = n * sb;
+                inputs.push((0, data.a.clone())); // rows v0–15
+                (0, 8 * rb) // packed output rows v0–7
+            }
+        };
+        Some(super::TileIo { inputs, output })
+    }
+
+    fn tile_extract(&self, kernel: Kernel, sew: Sew, span: &[u8]) -> Vec<u8> {
+        let sb = sew.bytes();
+        match kernel {
+            Kernel::Conv2d { n, f } => {
+                let rb = (n * sb) as usize;
+                let (orows, ocols) = ((8 - f + 1) as usize, ((n - f + 1) * sb) as usize);
+                let mut out = Vec::with_capacity(orows * ocols);
+                for r in 0..orows {
+                    out.extend_from_slice(&span[r * rb..r * rb + ocols]);
+                }
+                out
+            }
+            Kernel::Maxpool { n } => {
+                let rb = (n * sb) as usize;
+                let half = ((n / 2) * sb) as usize;
+                let mut out = Vec::with_capacity(8 * half);
+                for r in 0..8usize {
+                    out.extend_from_slice(&span[r * rb..r * rb + half]);
+                }
+                out
+            }
+            _ => span.to_vec(),
+        }
+    }
 }
 
 /// Build + run an NM-Carus kernel (uncached prepare + execute).
@@ -345,26 +431,27 @@ fn build_kernel(kernel: Kernel, sew: Sew) -> (Program, Vec<u32>) {
 /// Stage one concrete workload into the VRF per the layout the kernel
 /// expects.
 fn stage_data(soc: &mut Soc, kernel: Kernel, sew: Sew, data: &WorkloadData) {
+    let vrf = &mut soc.carus_mut().vrf;
     match kernel {
         Kernel::Xor { .. } | Kernel::Add { .. } | Kernel::Mul { .. } => {
-            soc.carus.vrf.load(0, &data.a); // v0..
-            soc.carus.vrf.load(10 * REG_BYTES, &data.b); // v10..
+            vrf.load(0, &data.a); // v0..
+            vrf.load(10 * REG_BYTES, &data.b); // v10..
         }
         Kernel::Relu { .. } | Kernel::LeakyRelu { .. } => {
-            soc.carus.vrf.load(0, &data.a);
+            vrf.load(0, &data.a);
         }
         Kernel::Matmul { p } | Kernel::Gemm { p } => {
             let row_bytes = p * sew.bytes();
             let av = unpack(&data.a, sew);
             for r in 0..8u32 {
-                soc.carus.vrf.load(
+                vrf.load(
                     r * row_bytes,
                     &data.b[(r * row_bytes) as usize..((r + 1) * row_bytes) as usize],
                 );
             }
             for k in 0..8u32 {
                 for i in 0..8u32 {
-                    soc.carus.vrf.set_elem(
+                    vrf.set_elem(
                         (16 + k) as u8,
                         i,
                         p,
@@ -375,7 +462,7 @@ fn stage_data(soc: &mut Soc, kernel: Kernel, sew: Sew, data: &WorkloadData) {
             }
             if matches!(kernel, Kernel::Gemm { .. }) {
                 for r in 0..8u32 {
-                    soc.carus.vrf.load(
+                    vrf.load(
                         (24 + r) * row_bytes,
                         &data.c[(r * row_bytes) as usize..((r + 1) * row_bytes) as usize],
                     );
@@ -385,17 +472,17 @@ fn stage_data(soc: &mut Soc, kernel: Kernel, sew: Sew, data: &WorkloadData) {
         Kernel::Conv2d { n, .. } => {
             let row_bytes = n * sew.bytes();
             for r in 0..8u32 {
-                soc.carus.vrf.load(
+                vrf.load(
                     r * row_bytes,
                     &data.a[(r * row_bytes) as usize..((r + 1) * row_bytes) as usize],
                 );
             }
-            soc.carus.vrf.load(14 * row_bytes, &data.b); // filter flat in v14
+            vrf.load(14 * row_bytes, &data.b); // filter flat in v14
         }
         Kernel::Maxpool { n } => {
             let row_bytes = n * sew.bytes();
             for r in 0..16u32 {
-                soc.carus.vrf.load(
+                vrf.load(
                     r * row_bytes,
                     &data.a[(r * row_bytes) as usize..((r + 1) * row_bytes) as usize],
                 );
@@ -497,6 +584,37 @@ mod tests {
     fn maxpool() {
         for sew in Sew::ALL {
             check(Kernel::Maxpool { n: 256 / sew.bytes() }, sew);
+        }
+    }
+
+    #[test]
+    fn tile_io_image_matches_direct_staging() {
+        // The tiled execute path stages byte images over DMA; they must
+        // place every operand exactly where `stage_data` does.
+        let cases = [
+            (Kernel::Matmul { p: 64 }, Sew::E8),
+            (Kernel::Gemm { p: 32 }, Sew::E16),
+            (Kernel::Conv2d { n: 64, f: 3 }, Sew::E16),
+            (Kernel::Add { n: 512 }, Sew::E32),
+            (Kernel::Maxpool { n: 64 }, Sew::E8),
+        ];
+        for (kernel, sew) in cases {
+            let data = golden::generate(kernel, sew, 42);
+            let mut direct = Soc::heeperator();
+            stage_data(&mut direct, kernel, sew, &data);
+            let mut tiled = Soc::heeperator();
+            let io = CarusEngine.tile_io(kernel, sew, &data).unwrap();
+            for (off, bytes) in &io.inputs {
+                assert_eq!(*off % 4, 0, "word-aligned staging offset");
+                assert_eq!(bytes.len() % 4, 0, "word-aligned staging length");
+                tiled.carus_mut().vrf.load(*off, bytes);
+            }
+            assert_eq!(io.output.1 % 4, 0, "word-aligned output span");
+            assert_eq!(
+                direct.carus().vrf.dump(0, 32 * 1024),
+                tiled.carus().vrf.dump(0, 32 * 1024),
+                "{kernel:?} {sew}"
+            );
         }
     }
 

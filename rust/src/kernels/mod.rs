@@ -458,12 +458,56 @@ impl EngineProgram {
     }
 }
 
+/// How an NMC tile executes a staged workload (the scale-out seam used by
+/// [`crate::sched`]).
+pub enum TileExec {
+    /// The tile computes autonomously after `CTL_START` (NM-Carus): the
+    /// host starts the kernel through the tile's control register and
+    /// polls the tile's status peripheral register, free to stage the
+    /// next tile meanwhile.
+    Autonomous,
+    /// Execution *is* a DMA micro-op stream (NM-Caesar): the compiled
+    /// program is rendered against each tile's bus window
+    /// ([`crate::caesar::compiler::CaesarProgram::to_stream`]) and issued
+    /// in `CaesarStream` mode while the tile's mode pin is high — which
+    /// occupies the single DMA for the whole execution.
+    Stream(crate::caesar::compiler::CaesarProgram),
+}
+
+/// Data-independent tile recipe for one `(kernel, sew)`: what the batch
+/// scheduler uploads once per tile, and how the tile then executes.
+pub struct TileProgram {
+    /// Setup image DMA'd to the tile window in configuration mode (the
+    /// NM-Carus eCPU kernel binary; empty for NM-Caesar).
+    pub setup_image: Vec<u8>,
+    /// Argument words written to the tile's eMEM ABI slots (NM-Carus).
+    pub args: Vec<u32>,
+    pub exec: TileExec,
+}
+
+/// Per-workload staging descriptor: input byte images DMA'd into the tile
+/// window before execution, and the raw output span DMA'd back after.
+/// All offsets and lengths are word-aligned (DMA granularity).
+pub struct TileIo {
+    /// (window offset, bytes) input regions.
+    pub inputs: Vec<(u32, Vec<u8>)>,
+    /// (window offset, byte length) of the raw output span; canonicalized
+    /// by [`Engine::tile_extract`].
+    pub output: (u32, u32),
+}
+
 /// An execution backend: one simulated system that can run the kernel
 /// grid. `prepare` assembles everything that depends only on the workload
 /// *shape*; `execute` stages one concrete [`WorkloadData`], simulates, and
 /// extracts the canonical output. The split is what makes program caching
 /// ([`prepared`]) and result memoization ([`crate::sweep::SweepSession`])
 /// possible — and it is the seam new near-memory targets plug into.
+///
+/// The `tile_*` methods are the **tiled execute path**: instead of owning
+/// a whole fresh SoC, the engine describes how its kernel runs behind one
+/// tile window of a multi-tile system, and [`crate::sched`] drives any
+/// number of such tiles from one host. Backends that cannot sit behind a
+/// tile window (the CPU engine *is* the host) keep the `None` defaults.
 pub trait Engine: Send + Sync {
     /// The target identity this engine simulates (carried into every
     /// [`RunResult`] it produces).
@@ -472,6 +516,22 @@ pub trait Engine: Send + Sync {
     fn prepare(&self, kernel: Kernel, sew: Sew) -> EngineProgram;
     /// Build a fresh SoC, stage `data`, run `prog`, extract the output.
     fn execute(&self, prog: &EngineProgram, data: &WorkloadData) -> RunResult;
+    /// Tile recipe for `(kernel, sew)`, or `None` if this backend (or
+    /// this kernel — e.g. NM-Caesar maxpool needs a host CPU phase)
+    /// cannot run behind a tile window.
+    fn tile_program(&self, _kernel: Kernel, _sew: Sew) -> Option<TileProgram> {
+        None
+    }
+    /// Per-workload staging descriptor; `Some` exactly when
+    /// [`Engine::tile_program`] is.
+    fn tile_io(&self, _kernel: Kernel, _sew: Sew, _data: &WorkloadData) -> Option<TileIo> {
+        None
+    }
+    /// Canonicalize the raw output span dumped from a tile window (strip
+    /// row padding, pick packed sub-rows, …). Identity by default.
+    fn tile_extract(&self, _kernel: Kernel, _sew: Sew, span: &[u8]) -> Vec<u8> {
+        span.to_vec()
+    }
 }
 
 /// The engine registry: every built-in execution backend.

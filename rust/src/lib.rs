@@ -26,9 +26,13 @@
 //! - [`kernels::Engine`]: the execution-backend seam — firmware assembly
 //!   (`prepare`) separated from simulation (`execute`), with assembled
 //!   programs cached per `(target, kernel, sew)`.
+//! - [`sched`]: the multi-tile batch scheduler — [`soc::Soc`] scaled out
+//!   to N NMC tiles, workloads sharded/batched across them with DMA
+//!   staging overlapped against tile execution (`heeperator scale`).
 //! - [`sweep`]: memoizing [`sweep::SweepSession`] — one simulation per
-//!   `(target, kernel, sew, seed)` point per invocation, shared by every
-//!   report, the CLI `sweep` subcommand, benches, and examples.
+//!   `(target, kernel, sew, seed)` point (and one co-simulation per
+//!   `(scale spec, tiles)` point) per invocation, shared by every
+//!   report, the CLI `sweep`/`scale` subcommands, benches, and examples.
 //! - [`harness`]: regenerates every table and figure of §V, fanning the
 //!   independent reports over the [`harness::executor`] thread pool and
 //!   deduplicating their simulations through one shared session.
@@ -49,6 +53,7 @@ pub mod mem;
 pub mod runtime;
 pub mod caesar;
 pub mod carus;
+pub mod sched;
 pub mod simd;
 pub mod soc;
 pub mod sweep;

@@ -8,6 +8,8 @@
 //! heeperator ablations [--out DIR]                  # the four ablation studies
 //! heeperator ad                                     # Anomaly-Detection end-to-end summary
 //! heeperator sweep --target T --family F --sew W [--n N] [--p P] [--f F] [--seed S] [--out DIR]
+//! heeperator scale --tiles 1,2,4 [--batch B] [--shard] [--target caesar|carus] [--family F]
+//!                  [--sew W] [--n/--p/--f dims] [--quick] [--json FILE] [--out DIR] [--jobs N]
 //! ```
 //!
 //! `all` fans the independent reports out over a `std::thread` worker
@@ -22,13 +24,20 @@
 //! dimensions (anything omitted falls back to the paper's Table V shape
 //! for that target/width).
 //!
+//! `scale` co-simulates a batched (or `--shard`ed) workload across every
+//! tile count in `--tiles` and reports the scaling curve (speedup,
+//! per-tile utilization, DMA/bus contention, energy); `--json FILE`
+//! additionally emits the machine-readable cycles + wall-time summary
+//! the CI perf-smoke job diffs against `bench-baseline.json`.
+//!
 //! (Hand-rolled argument parsing: clap is not in the offline vendor set.)
 
-use nmc::harness::{self, executor, Report};
+use nmc::harness::{self, executor, Report, ScalePoint};
 use nmc::isa::Sew;
 use nmc::kernels::{Family, Kernel, Target};
+use nmc::sched::BatchSpec;
 use nmc::sweep::SweepSession;
-use std::io::Write;
+use std::sync::Arc;
 
 /// Parsed command line. Kept dumb (no behavior) so tests can assert on
 /// exactly what the hand-rolled parser extracted.
@@ -47,6 +56,12 @@ struct Cli {
     p: Option<u32>,
     f: Option<u32>,
     seed: Option<u64>,
+    /// `scale` selectors: tile-count list, batch size, shard mode, and
+    /// the machine-readable bench-summary path.
+    tiles: Option<String>,
+    batch: Option<u32>,
+    shard: bool,
+    json: Option<String>,
 }
 
 impl Cli {
@@ -63,6 +78,10 @@ impl Cli {
             p: None,
             f: None,
             seed: None,
+            tiles: None,
+            batch: None,
+            shard: false,
+            json: None,
         }
     }
 }
@@ -136,6 +155,18 @@ fn parse_args(args: &[String]) -> Result<Cli, String> {
             "--p" => cli.p = parse_num::<u32>(args, &mut i, "--p")?,
             "--f" => cli.f = parse_num::<u32>(args, &mut i, "--f")?,
             "--seed" => cli.seed = parse_num::<u64>(args, &mut i, "--seed")?,
+            "--tiles" => {
+                if let Some(v) = parse_str(args, &mut i) {
+                    cli.tiles = Some(v);
+                }
+            }
+            "--batch" => cli.batch = parse_num::<u32>(args, &mut i, "--batch")?,
+            "--shard" => cli.shard = true,
+            "--json" => {
+                if let Some(v) = parse_str(args, &mut i) {
+                    cli.json = Some(v);
+                }
+            }
             a if !a.starts_with("--") => {
                 // First free-standing word is the subcommand.
                 if cmd.is_none() {
@@ -197,6 +228,102 @@ fn sweep_points(cli: &Cli) -> Result<Vec<(Target, Kernel, Sew)>, String> {
     Ok(points)
 }
 
+/// Scale-friendly default free dimensions per family: sized in *bytes*
+/// (element counts shrink with wider elements) so the default batch of a
+/// documented invocation fits the SRAM staging pool at every `--sew`,
+/// while tile execution still dominates its own staging. Explicit
+/// `--n/--p/--f` win.
+fn default_scale_dims(family: Family, sew: Sew) -> (Option<u32>, Option<u32>, Option<u32>) {
+    let sb = sew.bytes();
+    match family {
+        // 256 B rows: B + A-columns + output ≈ 6 KiB staged per workload.
+        Family::Matmul | Family::Gemm => (None, Some(256 / sb), None),
+        Family::Conv2d => (Some(256 / sb), None, Some(3)),
+        // 16 input rows + packed output rows ≈ 6 KiB per workload.
+        Family::Maxpool => (Some(256 / sb), None, None),
+        // 2 KiB per operand.
+        _ => (Some(2048 / sb), None, None),
+    }
+}
+
+/// Parse `--tiles 1,2,4` into a tile-count list.
+fn parse_tiles(spec: &str) -> Result<Vec<u32>, String> {
+    let mut tiles = Vec::new();
+    for part in spec.split(',') {
+        let t: u32 = part
+            .trim()
+            .parse()
+            .map_err(|_| format!("--tiles expects comma-separated counts, got `{part}`"))?;
+        if t == 0 || t as usize > nmc::bus::MAX_TILES {
+            return Err(format!("tile count {t} out of range 1..={}", nmc::bus::MAX_TILES));
+        }
+        tiles.push(t);
+    }
+    if tiles.is_empty() {
+        return Err("--tiles list is empty".to_string());
+    }
+    Ok(tiles)
+}
+
+/// Resolve the `scale` selectors into a batch spec + tile-count list.
+fn scale_spec(cli: &Cli) -> Result<(BatchSpec, Vec<u32>), String> {
+    let target = match cli.target.as_deref() {
+        None => Target::Carus,
+        Some(s) => Target::parse(s)
+            .ok_or_else(|| format!("unknown --target `{s}` (tile targets: caesar|carus)"))?,
+    };
+    let family = match cli.family.as_deref() {
+        None => Family::Matmul,
+        Some(s) => Family::parse(s).ok_or_else(|| format!("unknown --family `{s}`"))?,
+    };
+    let sew = match cli.sew.as_deref() {
+        None => Sew::E8,
+        Some(s) => Sew::parse(s).ok_or_else(|| format!("unknown --sew `{s}` (8|16|32)"))?,
+    };
+    let (dn, dp, df) = default_scale_dims(family, sew);
+    let kernel = Kernel::with_shape(family, target, sew, cli.n.or(dn), cli.p.or(dp), cli.f.or(df));
+    let tiles = parse_tiles(cli.tiles.as_deref().unwrap_or("1,2,4"))?;
+    let max_t = *tiles.iter().max().expect("non-empty tile list");
+    // Default batch: a few rounds per tile at the largest count (quick
+    // halves it), capped so default shapes stay within the staging pool.
+    let mult = if cli.quick { 2 } else { 4 };
+    let batch = cli.batch.unwrap_or_else(|| (mult * max_t).clamp(max_t, 16));
+    let spec = BatchSpec {
+        target,
+        kernel,
+        sew,
+        seed: cli.seed.unwrap_or(1),
+        batch,
+        shard: cli.shard,
+    };
+    Ok((spec, tiles))
+}
+
+/// Render the machine-readable bench summary (`BENCH_5.json` schema):
+/// deterministic simulated cycles plus informational wall time per point.
+fn scale_json(points: &[ScalePoint]) -> String {
+    let mut s = String::from("{\n  \"schema\": \"heeperator-bench-v1\",\n  \"reports\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"id\": \"scale_t{}\", \"tiles\": {}, \"cycles\": {}, \"wall_ms\": {:.3}, \
+             \"speedup\": {:.4}, \"mean_utilization\": {:.4}, \"contention_cycles\": {}, \
+             \"energy_uj\": {:.3}}}{}\n",
+            p.tiles,
+            p.tiles,
+            p.cycles,
+            p.wall_ms,
+            p.speedup,
+            p.mean_utilization,
+            p.contention_cycles,
+            p.energy_uj,
+            if i + 1 < points.len() { "," } else { "" }
+        ));
+    }
+    let agg: u64 = points.iter().map(|p| p.cycles).sum();
+    s.push_str(&format!("  ],\n  \"aggregate_cycles\": {agg}\n}}\n"));
+    s
+}
+
 fn write_reports(reports: &[Report], out: Option<&str>) {
     for r in reports {
         println!("== {} — {} ==", r.id, r.title);
@@ -228,8 +355,9 @@ fn main() {
     let out = cli.out.as_deref();
     let jobs = cli.jobs.unwrap_or_else(executor::default_jobs);
     // One memoizing session per invocation: every subcommand that
-    // simulates drains through it.
-    let session = SweepSession::new();
+    // simulates drains through it (`Arc` so `scale` can fan tile counts
+    // over worker threads).
+    let session = Arc::new(SweepSession::new());
 
     match cli.cmd.as_str() {
         "all" => {
@@ -260,6 +388,28 @@ fn main() {
             let rep = harness::sweep_report(&session, &points, cli.seed.unwrap_or(1));
             write_reports(&[rep], out);
         }
+        "scale" => {
+            let (spec, tiles) = match scale_spec(&cli) {
+                Ok(v) => v,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    std::process::exit(2);
+                }
+            };
+            match harness::scale_report(&session, spec, &tiles, jobs) {
+                Ok((rep, points)) => {
+                    write_reports(&[rep], out);
+                    if let Some(path) = &cli.json {
+                        std::fs::write(path, scale_json(&points)).expect("write bench json");
+                        println!("(bench summary written to {path})");
+                    }
+                }
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    std::process::exit(2);
+                }
+            }
+        }
         "ad" => {
             let golden = nmc::apps::anomaly::golden_forward(&nmc::apps::anomaly::model(2));
             for target in Target::ALL {
@@ -274,14 +424,32 @@ fn main() {
                 );
             }
         }
-        _ => {
-            let mut o = std::io::stdout();
-            writeln!(o, "usage: heeperator <all|table4|fig7|table5|fig11|fig12|fig13|table6|table7|table8|ablations|ad|sweep> [--quick] [--out DIR]").unwrap();
-            writeln!(o, "       `all` additionally accepts --jobs N (worker pool bound; 1 = sequential)").unwrap();
-            writeln!(o, "       `sweep` selects scenarios: --target cpu|caesar|carus|all --family xor|add|mul|matmul|gemm|conv2d|relu|leakyrelu|maxpool|all").unwrap();
-            writeln!(o, "               --sew 8|16|32|all, free dims --n N --p P --f F (default: paper Table V shapes), --seed S").unwrap();
+        "help" => {
+            print!("{}", usage());
+        }
+        other => {
+            // Unknown subcommand: usage goes to stderr and the exit code
+            // is non-zero so scripts (and CI) can't silently no-op.
+            eprint!("{}", usage());
+            eprintln!("error: unknown subcommand `{other}`");
+            std::process::exit(2);
         }
     }
+}
+
+/// The usage text (stdout for `help`, stderr for unknown subcommands).
+fn usage() -> String {
+    let mut o = String::new();
+    let w = &mut o;
+    use std::fmt::Write as _;
+    writeln!(w, "usage: heeperator <all|table4|fig7|table5|fig11|fig12|fig13|table6|table7|table8|ablations|ad|sweep|scale> [--quick] [--out DIR]").unwrap();
+    writeln!(w, "       `all` additionally accepts --jobs N (worker pool bound; 1 = sequential)").unwrap();
+    writeln!(w, "       `sweep` selects scenarios: --target cpu|caesar|carus|all --family xor|add|mul|matmul|gemm|conv2d|relu|leakyrelu|maxpool|all").unwrap();
+    writeln!(w, "               --sew 8|16|32|all, free dims --n N --p P --f F (default: paper Table V shapes), --seed S").unwrap();
+    writeln!(w, "       `scale` sweeps a batched workload across NMC tile counts: --tiles 1,2,4 --batch B [--shard]").unwrap();
+    writeln!(w, "               --target caesar|carus (default carus), --family/--sew/--n/--p/--f as in sweep,").unwrap();
+    writeln!(w, "               --json FILE writes the machine-readable cycles+wall-time summary (CI perf tracking)").unwrap();
+    o
 }
 
 #[cfg(test)]
@@ -415,6 +583,111 @@ mod tests {
         let cli = p(&["sweep", "--target", "carus", "--family", "matmul", "--sew", "32", "--p", "1024"]);
         let err = sweep_points(&cli).unwrap_err();
         assert!(err.contains("NM-Carus"), "{err}");
+    }
+
+    #[test]
+    fn scale_flags_parse() {
+        let cli = p(&["scale", "--tiles", "1,2,4", "--batch", "8", "--shard", "--json", "B.json"]);
+        assert_eq!(cli.cmd, "scale");
+        assert_eq!(cli.tiles.as_deref(), Some("1,2,4"));
+        assert_eq!(cli.batch, Some(8));
+        assert!(cli.shard);
+        assert_eq!(cli.json.as_deref(), Some("B.json"));
+        // Defaults stay unset without the flags.
+        let cli = p(&["scale"]);
+        assert_eq!(cli.tiles, None);
+        assert_eq!(cli.batch, None);
+        assert!(!cli.shard);
+        assert_eq!(cli.json, None);
+    }
+
+    #[test]
+    fn scale_spec_defaults_and_overrides() {
+        let (spec, tiles) = scale_spec(&p(&["scale"])).unwrap();
+        assert_eq!(spec.target, Target::Carus);
+        assert_eq!(spec.kernel, Kernel::Matmul { p: 256 });
+        assert_eq!(spec.sew, Sew::E8);
+        assert_eq!(tiles, vec![1, 2, 4]);
+        assert_eq!(spec.batch, 16, "4 rounds at the largest tile count");
+        assert!(!spec.shard);
+        // --quick halves the default batch.
+        let (spec, _) = scale_spec(&p(&["scale", "--quick"])).unwrap();
+        assert_eq!(spec.batch, 8);
+        // Explicit dimensions and batch win over the scale defaults.
+        let (spec, _) = scale_spec(&p(&["scale", "--p", "64", "--batch", "3"])).unwrap();
+        assert_eq!(spec.kernel, Kernel::Matmul { p: 64 });
+        assert_eq!(spec.batch, 3);
+        let cli = p(&["scale", "--family", "relu", "--tiles", "2,8"]);
+        let (spec, tiles) = scale_spec(&cli).unwrap();
+        assert_eq!(spec.kernel, Kernel::Relu { n: 2048 });
+        assert_eq!(tiles, vec![2, 8]);
+    }
+
+    #[test]
+    fn scale_default_shapes_fit_the_staging_pool() {
+        // The documented default invocations must plan cleanly at every
+        // element width — wider elements shrink the default element
+        // counts so the byte footprint stays pool-sized.
+        for args in [
+            vec!["scale", "--target", "caesar", "--family", "add", "--sew", "32"],
+            vec!["scale", "--family", "maxpool"],
+            vec!["scale", "--family", "add", "--sew", "16"],
+            vec!["scale", "--sew", "16"],
+        ] {
+            let (spec, tiles) = scale_spec(&p(&args)).unwrap();
+            let t = *tiles.iter().max().unwrap() as usize;
+            let r = nmc::sched::plan(&spec, t);
+            assert!(r.is_ok(), "{args:?}: {}", r.err().unwrap());
+        }
+    }
+
+    #[test]
+    fn scale_spec_rejects_bad_selectors() {
+        assert!(scale_spec(&p(&["scale", "--tiles", "0"])).is_err());
+        assert!(scale_spec(&p(&["scale", "--tiles", "1,x"])).is_err());
+        assert!(scale_spec(&p(&["scale", "--tiles", "99"])).is_err());
+        assert!(scale_spec(&p(&["scale", "--target", "tpu"])).is_err());
+        assert!(scale_spec(&p(&["scale", "--family", "fft"])).is_err());
+    }
+
+    #[test]
+    fn usage_covers_every_subcommand() {
+        let u = usage();
+        for cmd in ["all", "table4", "fig11", "ablations", "ad", "sweep", "scale"] {
+            assert!(u.contains(cmd), "usage must mention `{cmd}`");
+        }
+        assert!(u.contains("--json"));
+        assert!(u.contains("--tiles"));
+    }
+
+    #[test]
+    fn scale_json_is_well_formed() {
+        let points = vec![
+            ScalePoint {
+                tiles: 1,
+                cycles: 100,
+                wall_ms: 1.0,
+                speedup: 1.0,
+                mean_utilization: 0.5,
+                contention_cycles: 3,
+                energy_uj: 2.0,
+            },
+            ScalePoint {
+                tiles: 4,
+                cycles: 40,
+                wall_ms: 0.5,
+                speedup: 2.5,
+                mean_utilization: 0.9,
+                contention_cycles: 5,
+                energy_uj: 2.5,
+            },
+        ];
+        let s = scale_json(&points);
+        assert!(s.contains("\"schema\": \"heeperator-bench-v1\""));
+        assert!(s.contains("\"aggregate_cycles\": 140"));
+        assert!(s.contains("\"id\": \"scale_t1\""));
+        assert!(s.contains("\"id\": \"scale_t4\""));
+        assert_eq!(s.matches("\"id\"").count(), 2);
     }
 
     #[test]

@@ -1,16 +1,23 @@
-//! The HEEPerator system: X-HEEP host MCU with NM-Caesar and NM-Carus in
-//! its memory subsystem (Fig. 1 / Fig. 10), co-simulated cycle by cycle.
+//! The HEEPerator system: X-HEEP host MCU with NMC **tiles** in its
+//! memory subsystem (Fig. 1 / Fig. 10), co-simulated cycle by cycle.
 //!
 //! Topology: one host CPU (CV32E40P-class, configurable), six conventional
-//! 32 KiB SRAM banks, the two NMC macros in bank slots 6/7, a DMA engine
-//! with independent read/write crossbar ports, a flash/ROM for large
-//! constant data (AD weights), and the peripheral registers that drive the
-//! `imc`/mode pins and the DMA.
+//! 32 KiB SRAM banks, `tiles.len()` NMC macros in bank slots 6 and up
+//! (each an NM-Caesar or NM-Carus instance behind its own 32 KiB bus
+//! window — the paper's drop-in memory-tile property, scaled out), a DMA
+//! engine with independent read/write crossbar ports, a flash/ROM for
+//! large constant data (AD weights), and the peripheral registers that
+//! drive the per-tile mode pins and the DMA.
+//!
+//! The default [`Soc::heeperator`] configuration is the paper's: tile 0 =
+//! NM-Caesar, tile 1 = NM-Carus. [`Soc::with_tiles`] instantiates any mix
+//! of up to [`bus::MAX_TILES`] macros — the substrate for the batch
+//! scheduler in [`crate::sched`].
 //!
 //! Per-cycle protocol (the crossbar grants at most one transaction per
 //! slave per cycle; DMA ports first, then the CPU data port):
 //! 1. internal devices advance ([`crate::caesar::Caesar::step`],
-//!    [`crate::carus::Carus::step`]);
+//!    [`crate::carus::Carus::step`] — every tile, every cycle);
 //! 2. the DMA write port retires one staged word (NM-Caesar exerts
 //!    backpressure through [`crate::caesar::Caesar::ready`]);
 //! 3. the DMA read port fetches one stream word;
@@ -18,8 +25,8 @@
 //!    (counted for energy, never arbitrated); data accesses wait while the
 //!    target slave was used by the DMA this cycle.
 //!
-//! Firmware conventions: programs end with `ebreak`; `wfi` sleeps until the
-//! NM-Carus done interrupt or DMA completion.
+//! Firmware conventions: programs end with `ebreak`; `wfi` sleeps until
+//! any NM-Carus done interrupt or DMA completion.
 
 use crate::bus::{self, periph, Master, Slave};
 use crate::caesar::Caesar;
@@ -54,6 +61,113 @@ enum CpuState {
     Halted,
 }
 
+/// The kind of NMC macro populating a tile window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TileKind {
+    Caesar,
+    Carus,
+}
+
+impl TileKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            TileKind::Caesar => "NM-Caesar",
+            TileKind::Carus => "NM-Carus",
+        }
+    }
+}
+
+/// One populated NMC tile window: an NM-Caesar or NM-Carus instance.
+pub enum Tile {
+    Caesar(Caesar),
+    Carus(Carus),
+}
+
+impl Tile {
+    pub fn kind(&self) -> TileKind {
+        match self {
+            Tile::Caesar(_) => TileKind::Caesar,
+            Tile::Carus(_) => TileKind::Carus,
+        }
+    }
+
+    /// Advance the macro's internal state by one cycle.
+    pub fn step(&mut self) {
+        match self {
+            Tile::Caesar(c) => c.step(),
+            Tile::Carus(c) => c.step(),
+        }
+    }
+
+    /// The tile is doing work this cycle (utilization accounting).
+    pub fn busy(&self) -> bool {
+        match self {
+            Tile::Caesar(c) => !c.ready(),
+            Tile::Carus(c) => c.busy(),
+        }
+    }
+
+    /// An *autonomous* computation is in flight: the simulation must not
+    /// halt while this holds. NM-Caesar is passive (its 2-cycle pipeline
+    /// drains in-line with the issuing transfer), so only NM-Carus
+    /// kernels keep the system alive past the host's `ebreak`.
+    pub fn autonomous_busy(&self) -> bool {
+        match self {
+            Tile::Caesar(_) => false,
+            Tile::Carus(c) => c.busy(),
+        }
+    }
+
+    /// Interrupt pin (NM-Carus completion; NM-Caesar has none).
+    pub fn irq(&self) -> bool {
+        match self {
+            Tile::Caesar(_) => false,
+            Tile::Carus(c) => c.irq(),
+        }
+    }
+
+    /// The tile's mode pin: `imc` (NM-Caesar) / configuration mode
+    /// (NM-Carus).
+    pub fn mode(&self) -> bool {
+        match self {
+            Tile::Caesar(c) => c.imc,
+            Tile::Carus(c) => c.config_mode,
+        }
+    }
+
+    pub fn set_mode(&mut self, on: bool) {
+        match self {
+            Tile::Caesar(c) => c.imc = on,
+            Tile::Carus(c) => c.config_mode = on,
+        }
+    }
+
+    /// Load raw bytes into the tile's storage (initialization; uncounted).
+    pub fn load(&mut self, off: u32, bytes: &[u8]) {
+        match self {
+            Tile::Caesar(c) => c.load(off, bytes),
+            Tile::Carus(c) => c.vrf.load(off, bytes),
+        }
+    }
+
+    /// Read back a byte range for verification (uncounted).
+    pub fn dump(&self, off: u32, len: u32) -> Vec<u8> {
+        match self {
+            Tile::Caesar(c) => (0..len)
+                .map(|i| c.banks[((off + i) / 16384) as usize].peek((off + i) % 16384, 1) as u8)
+                .collect(),
+            Tile::Carus(c) => c.vrf.dump(off, len),
+        }
+    }
+
+    pub fn reset_stats(&mut self) {
+        match self {
+            Tile::Caesar(c) => c.reset_stats(),
+            Tile::Carus(c) => c.reset_stats(),
+        }
+    }
+}
+
 /// Host-side cycle/energy counters (rolled into [`Activity`]).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct SocCounters {
@@ -71,8 +185,11 @@ pub struct Soc {
     pub cpu: CpuCore,
     pub srams: Vec<Bank>,
     pub rom: Bank,
-    pub caesar: Caesar,
-    pub carus: Carus,
+    /// Populated NMC tile windows (bank slots 6 onward).
+    pub tiles: Vec<Tile>,
+    /// Per-tile busy cycles since the last [`Soc::reset_stats`]
+    /// (utilization accounting for the scale-out reports).
+    pub tile_busy: Vec<u64>,
     pub dma: Dma,
     pub counters: SocCounters,
     state: CpuState,
@@ -89,16 +206,39 @@ pub struct Soc {
 }
 
 impl Soc {
-    /// Build a HEEPerator instance. `host` selects the CPU (Table V uses
-    /// CV32E40P; Table VI NMC rows use CV32E20). `lanes` configures NM-Carus.
+    /// Build a HEEPerator instance with the paper's tile set (tile 0 =
+    /// NM-Caesar, tile 1 = NM-Carus). `host` selects the CPU (Table V uses
+    /// CV32E40P; Table VI NMC rows use CV32E20). `lanes` configures
+    /// NM-Carus.
     pub fn new(host: CpuConfig, lanes: u32) -> Self {
+        Self::with_tiles(host, lanes, &[TileKind::Caesar, TileKind::Carus])
+    }
+
+    /// Build a system with an arbitrary tile mix: `kinds[i]` populates
+    /// bus window `i` ([`bus::tile_base`]). This is the scale-out
+    /// constructor behind `heeperator scale`.
+    pub fn with_tiles(host: CpuConfig, lanes: u32, kinds: &[TileKind]) -> Self {
+        assert!(
+            !kinds.is_empty() && kinds.len() <= bus::MAX_TILES,
+            "1..={} tiles, got {}",
+            bus::MAX_TILES,
+            kinds.len()
+        );
+        let tiles: Vec<Tile> = kinds
+            .iter()
+            .map(|k| match k {
+                TileKind::Caesar => Tile::Caesar(Caesar::new()),
+                TileKind::Carus => Tile::Carus(Carus::new(lanes)),
+            })
+            .collect();
+        let tile_busy = vec![0; tiles.len()];
         Soc {
             cycle: 0,
             cpu: CpuCore::new(host, 0),
             srams: (0..bus::NUM_SRAM_BANKS).map(|_| Bank::new(MacroKind::Sram32k)).collect(),
             rom: Bank::rom(Vec::new()),
-            caesar: Caesar::new(),
-            carus: Carus::new(lanes),
+            tiles,
+            tile_busy,
             dma: Dma::new(),
             counters: SocCounters::default(),
             state: CpuState::Ready,
@@ -114,6 +254,60 @@ impl Soc {
     /// Default paper configuration: CV32E40P host, 4-lane NM-Carus.
     pub fn heeperator() -> Self {
         Self::new(CpuConfig::CV32E40P, 4)
+    }
+
+    /// Homogeneous scale-out configuration: `count` tiles of one kind
+    /// behind the CV32E40P host.
+    pub fn scale_out(kind: TileKind, count: usize, lanes: u32) -> Self {
+        Self::with_tiles(CpuConfig::CV32E40P, lanes, &vec![kind; count])
+    }
+
+    /// First tile of `kind`, if any.
+    pub fn first_tile(&self, kind: TileKind) -> Option<usize> {
+        self.tiles.iter().position(|t| t.kind() == kind)
+    }
+
+    /// The first NM-Caesar tile (panics if the config has none — callers
+    /// of the legacy single-tile API run on [`Soc::heeperator`]).
+    pub fn caesar(&self) -> &Caesar {
+        self.tiles
+            .iter()
+            .find_map(|t| match t {
+                Tile::Caesar(c) => Some(c),
+                _ => None,
+            })
+            .expect("no NM-Caesar tile in this configuration")
+    }
+
+    pub fn caesar_mut(&mut self) -> &mut Caesar {
+        self.tiles
+            .iter_mut()
+            .find_map(|t| match t {
+                Tile::Caesar(c) => Some(c),
+                _ => None,
+            })
+            .expect("no NM-Caesar tile in this configuration")
+    }
+
+    /// The first NM-Carus tile (panics if the config has none).
+    pub fn carus(&self) -> &Carus {
+        self.tiles
+            .iter()
+            .find_map(|t| match t {
+                Tile::Carus(c) => Some(c),
+                _ => None,
+            })
+            .expect("no NM-Carus tile in this configuration")
+    }
+
+    pub fn carus_mut(&mut self) -> &mut Carus {
+        self.tiles
+            .iter_mut()
+            .find_map(|t| match t {
+                Tile::Carus(c) => Some(c),
+                _ => None,
+            })
+            .expect("no NM-Carus tile in this configuration")
     }
 
     /// Load the host firmware into SRAM bank `bank` and point the CPU at it.
@@ -133,14 +327,32 @@ impl Soc {
     pub fn load_data(&mut self, addr: u32, bytes: &[u8]) {
         match bus::decode(addr).expect("mapped address") {
             (Slave::Sram(b), off) => self.srams[b].load(off, bytes),
-            (Slave::Caesar, off) => self.caesar.load(off, bytes),
-            (Slave::Carus, off) => self.carus.vrf.load(off, bytes),
+            (Slave::Tile(i), off) => {
+                let n = self.tiles.len();
+                self.tiles
+                    .get_mut(i)
+                    .unwrap_or_else(|| panic!("tile window {i} unpopulated ({n} tiles)"))
+                    .load(off, bytes)
+            }
             (Slave::Rom, off) => {
                 // ROM contents are set via `set_rom`; allow appending here.
                 let _ = off;
                 panic!("load ROM via set_rom()");
             }
             (Slave::Periph, _) => panic!("cannot load data into peripherals"),
+        }
+    }
+
+    /// Load a byte region that may span multiple banks / tile windows
+    /// (initialization; uncounted).
+    pub fn load_region(&mut self, addr: u32, bytes: &[u8]) {
+        let mut off = 0usize;
+        while off < bytes.len() {
+            let a = addr + off as u32;
+            let room = (bus::BANK_SIZE - a % bus::BANK_SIZE) as usize;
+            let chunk = room.min(bytes.len() - off);
+            self.load_data(a, &bytes[off..off + chunk]);
+            off += chunk;
         }
     }
 
@@ -153,20 +365,40 @@ impl Soc {
     pub fn dump(&self, addr: u32, len: u32) -> Vec<u8> {
         match bus::decode(addr).expect("mapped address") {
             (Slave::Sram(b), off) => self.srams[b].dump(off, len),
-            (Slave::Caesar, off) => {
-                (0..len).map(|i| self.caesar.banks[((off + i) / 16384) as usize].peek((off + i) % 16384, 1) as u8).collect()
+            (Slave::Tile(i), off) => {
+                let n = self.tiles.len();
+                self.tiles
+                    .get(i)
+                    .unwrap_or_else(|| panic!("tile window {i} unpopulated ({n} tiles)"))
+                    .dump(off, len)
             }
-            (Slave::Carus, off) => self.carus.vrf.dump(off, len),
             (Slave::Rom, off) => self.rom.dump(off, len),
             (Slave::Periph, _) => panic!("cannot dump peripherals"),
         }
+    }
+
+    /// [`Soc::dump`] across bank boundaries (verification; uncounted).
+    pub fn dump_region(&self, addr: u32, len: u32) -> Vec<u8> {
+        let mut out = Vec::with_capacity(len as usize);
+        let mut off = 0u32;
+        while off < len {
+            let a = addr + off;
+            let room = bus::BANK_SIZE - a % bus::BANK_SIZE;
+            let chunk = room.min(len - off);
+            out.extend(self.dump(a, chunk));
+            off += chunk;
+        }
+        out
     }
 
     /// Run until the firmware halts. Returns (halt reason, cycles run).
     pub fn run(&mut self, max_cycles: u64) -> (Halt, u64) {
         let start = self.cycle;
         loop {
-            if self.state == CpuState::Halted && !self.dma.busy() && !self.carus.busy() {
+            if self.state == CpuState::Halted
+                && !self.dma.busy()
+                && !self.tiles.iter().any(Tile::autonomous_busy)
+            {
                 return (Halt::Done, self.cycle - start);
             }
             if self.cycle - start >= max_cycles {
@@ -181,8 +413,12 @@ impl Soc {
     /// One system cycle. Returns true on a CPU trap (modeling bug).
     pub fn step(&mut self) -> bool {
         self.cycle += 1;
-        self.caesar.step();
-        self.carus.step();
+        for (i, t) in self.tiles.iter_mut().enumerate() {
+            t.step();
+            if t.busy() {
+                self.tile_busy[i] += 1;
+            }
+        }
         self.dma_rd_slave = None;
         self.dma_wr_slave = None;
         if self.dma.busy() {
@@ -201,25 +437,28 @@ impl Soc {
         if let Some(w) = self.dma.want_write() {
             if let Some((slave, off)) = bus::decode(w.addr) {
                 let ok = match slave {
-                    Slave::Caesar if self.caesar.imc => {
-                        if self.caesar.ready() {
-                            self.caesar.issue(off / 4, w.data);
-                            true
-                        } else {
-                            self.counters.slave_stall_cycles += 1;
-                            false
+                    Slave::Tile(i) => match self.tiles.get_mut(i) {
+                        Some(Tile::Caesar(c)) if c.imc => {
+                            if c.ready() {
+                                c.issue(off / 4, w.data);
+                                true
+                            } else {
+                                self.counters.slave_stall_cycles += 1;
+                                false
+                            }
                         }
-                    }
-                    Slave::Caesar => {
-                        self.caesar.mem_write(off, 4, w.data);
-                        true
-                    }
+                        Some(Tile::Caesar(c)) => {
+                            c.mem_write(off, 4, w.data);
+                            true
+                        }
+                        Some(Tile::Carus(c)) => {
+                            c.bus_write(off, 4, w.data);
+                            true
+                        }
+                        None => true, // unpopulated window: dropped
+                    },
                     Slave::Sram(b) => {
                         self.srams[b].write(off, 4, w.data);
-                        true
-                    }
-                    Slave::Carus => {
-                        self.carus.bus_write(off, 4, w.data);
                         true
                     }
                     Slave::Periph | Slave::Rom => true, // dropped
@@ -243,8 +482,11 @@ impl Soc {
                     let data = match slave {
                         Slave::Sram(b) => self.srams[b].read(off, 4),
                         Slave::Rom => self.rom.read(off, 4),
-                        Slave::Caesar => self.caesar.mem_read(off, 4),
-                        Slave::Carus => self.carus.bus_read(off, 4).0,
+                        Slave::Tile(i) => match self.tiles.get_mut(i) {
+                            Some(Tile::Caesar(c)) => c.mem_read(off, 4),
+                            Some(Tile::Carus(c)) => c.bus_read(off, 4).0,
+                            None => 0,
+                        },
                         Slave::Periph => 0,
                     };
                     self.dma.complete_read(data);
@@ -265,7 +507,7 @@ impl Soc {
                 false
             }
             CpuState::Wfi => {
-                if self.carus.irq() || self.dma_irq {
+                if self.dma_irq || self.tiles.iter().any(Tile::irq) {
                     self.state = CpuState::Ready;
                     self.counters.cpu_active += 1;
                 } else {
@@ -298,10 +540,16 @@ impl Soc {
             let addr = self.cpu.regs[(rs1 & 31) as usize].wrapping_add(off as u32);
             if let Some((slave, soff)) = bus::decode(addr) {
                 let dma_holds = Some(slave) == self.dma_rd_slave || Some(slave) == self.dma_wr_slave;
-                let caesar_busy = slave == Slave::Caesar
-                    && self.caesar.imc
-                    && matches!(instr, Instr::Store { .. })
-                    && !self.caesar.ready();
+                // A computing NM-Caesar tile backpressures host stores the
+                // same way it backpressures the DMA write port.
+                let caesar_busy = match slave {
+                    Slave::Tile(i) => matches!(
+                        self.tiles.get(i),
+                        Some(Tile::Caesar(c))
+                            if c.imc && matches!(instr, Instr::Store { .. }) && !c.ready()
+                    ),
+                    _ => false,
+                };
                 if dma_holds || caesar_busy {
                     self.counters.cpu_wait_cycles += 1;
                     self.state = CpuState::WaitBus;
@@ -342,8 +590,7 @@ impl Soc {
         let mut port = HostPort {
             srams: &mut self.srams,
             rom: &mut self.rom,
-            caesar: &mut self.caesar,
-            carus: &mut self.carus,
+            tiles: &mut self.tiles,
             dma: &mut self.dma,
             dma_irq: &mut self.dma_irq,
             cycle: self.cycle,
@@ -376,13 +623,18 @@ impl Soc {
             b.reset_stats();
         }
         self.rom.reset_stats();
-        self.caesar.reset_stats();
-        self.carus.reset_stats();
+        for t in &mut self.tiles {
+            t.reset_stats();
+        }
+        for b in &mut self.tile_busy {
+            *b = 0;
+        }
         self.dma.stats = Default::default();
         self.cycle = 0;
     }
 
-    /// Roll up the activity record for the energy model.
+    /// Roll up the activity record for the energy model, summing
+    /// same-kind event counts across every tile.
     pub fn activity(&self) -> Activity {
         let mut mem_reads: Vec<(MacroKind, u64)> = Vec::new();
         let mut mem_writes: Vec<(MacroKind, u64)> = Vec::new();
@@ -400,38 +652,54 @@ impl Soc {
         add(&mut mem_reads, MacroKind::Sram32k, sram_r);
         add(&mut mem_writes, MacroKind::Sram32k, sram_w);
         add(&mut mem_reads, MacroKind::Rom, self.rom.stats.reads);
-        // NM-Caesar internal banks.
-        let cs = &self.caesar.banks;
-        add(&mut mem_reads, MacroKind::Sram16k, cs[0].stats.reads + cs[1].stats.reads);
-        add(&mut mem_writes, MacroKind::Sram16k, cs[0].stats.writes + cs[1].stats.writes);
-        // NM-Carus VRF: host accesses (bank counters) + VPU word accesses.
-        let (vr, vw) = self.carus.vrf.host_accesses();
-        add(&mut mem_reads, MacroKind::Sram8k, vr + self.carus.vpu.stats.vrf_reads);
-        add(&mut mem_writes, MacroKind::Sram8k, vw + self.carus.vpu.stats.vrf_writes);
 
-        Activity {
+        let mut act = Activity {
             cycles: self.cycle,
             cpu_active: self.counters.cpu_active,
             cpu_sleep: self.counters.cpu_sleep,
             cpu_fetches: self.counters.cpu_fetches,
-            mem_reads,
-            mem_writes,
             bus_txns: self.counters.bus_txns,
             dma_active: self.dma.stats.active_cycles,
-            caesar_busy: self.caesar.stats.busy_cycles,
-            caesar_alu_light: self.caesar.stats.alu_light_elems,
-            caesar_alu_add: self.caesar.stats.alu_add_elems,
-            caesar_alu_mul: self.caesar.stats.alu_mul_elems,
-            carus_ecpu_active: self.carus.stats.ecpu_active_cycles,
-            carus_ecpu_sleep: self.carus.stats.ecpu_sleep_cycles,
-            carus_emem_accesses: self.carus.stats.emem_accesses,
-            carus_vpu_busy: self.carus.vpu.stats.busy_cycles,
-            carus_vpu_idle: self.carus.vpu.stats.idle_cycles,
-            carus_alu_light: self.carus.vpu.stats.alu_light_elems,
-            carus_alu_add: self.carus.vpu.stats.alu_add_elems,
-            carus_alu_mul: self.carus.vpu.stats.alu_mul_elems,
+            nmc_tiles: self.tiles.len() as u32,
             host_kind: if self.cpu.cfg.rv32e { HostKind::Cv32e20 } else { HostKind::Cv32e40p },
+            ..Activity::default()
+        };
+        let (mut c16_r, mut c16_w, mut v8_r, mut v8_w) = (0u64, 0u64, 0u64, 0u64);
+        for t in &self.tiles {
+            match t {
+                Tile::Caesar(c) => {
+                    // NM-Caesar internal banks.
+                    c16_r += c.banks[0].stats.reads + c.banks[1].stats.reads;
+                    c16_w += c.banks[0].stats.writes + c.banks[1].stats.writes;
+                    act.caesar_busy += c.stats.busy_cycles;
+                    act.caesar_alu_light += c.stats.alu_light_elems;
+                    act.caesar_alu_add += c.stats.alu_add_elems;
+                    act.caesar_alu_mul += c.stats.alu_mul_elems;
+                }
+                Tile::Carus(c) => {
+                    // NM-Carus VRF: host accesses (bank counters) + VPU
+                    // word accesses.
+                    let (vr, vw) = c.vrf.host_accesses();
+                    v8_r += vr + c.vpu.stats.vrf_reads;
+                    v8_w += vw + c.vpu.stats.vrf_writes;
+                    act.carus_ecpu_active += c.stats.ecpu_active_cycles;
+                    act.carus_ecpu_sleep += c.stats.ecpu_sleep_cycles;
+                    act.carus_emem_accesses += c.stats.emem_accesses;
+                    act.carus_vpu_busy += c.vpu.stats.busy_cycles;
+                    act.carus_vpu_idle += c.vpu.stats.idle_cycles;
+                    act.carus_alu_light += c.vpu.stats.alu_light_elems;
+                    act.carus_alu_add += c.vpu.stats.alu_add_elems;
+                    act.carus_alu_mul += c.vpu.stats.alu_mul_elems;
+                }
+            }
         }
+        add(&mut mem_reads, MacroKind::Sram16k, c16_r);
+        add(&mut mem_writes, MacroKind::Sram16k, c16_w);
+        add(&mut mem_reads, MacroKind::Sram8k, v8_r);
+        add(&mut mem_writes, MacroKind::Sram8k, v8_w);
+        act.mem_reads = mem_reads;
+        act.mem_writes = mem_writes;
+        act
     }
 
     /// Energy breakdown of the run so far.
@@ -444,8 +712,7 @@ impl Soc {
 struct HostPort<'a> {
     srams: &'a mut Vec<Bank>,
     rom: &'a mut Bank,
-    caesar: &'a mut Caesar,
-    carus: &'a mut Carus,
+    tiles: &'a mut Vec<Tile>,
     dma: &'a mut Dma,
     dma_irq: &'a mut bool,
     cycle: u64,
@@ -454,24 +721,48 @@ struct HostPort<'a> {
 }
 
 impl HostPort<'_> {
+    fn first_mut(&mut self, kind: TileKind) -> Option<&mut Tile> {
+        self.tiles.iter_mut().find(|t| t.kind() == kind)
+    }
+
     fn periph_read(&mut self, off: u32) -> u32 {
         match off {
-            periph::CAESAR_IMC => self.caesar.imc as u32,
-            periph::CARUS_MODE => self.carus.config_mode as u32,
+            periph::CAESAR_IMC => {
+                self.first_mut(TileKind::Caesar).map_or(0, |t| t.mode() as u32)
+            }
+            periph::CARUS_MODE => {
+                self.first_mut(TileKind::Carus).map_or(0, |t| t.mode() as u32)
+            }
             periph::DMA_STATUS => {
                 let v = self.dma.busy() as u32;
                 *self.dma_irq = false; // reading status acknowledges
                 v
             }
             periph::MCYCLE => self.cycle as u32,
+            _ if (periph::TILE_MODE_BASE..periph::tile_mode(bus::MAX_TILES)).contains(&off) => {
+                let i = ((off - periph::TILE_MODE_BASE) / 4) as usize;
+                self.tiles.get(i).map_or(0, |t| t.mode() as u32)
+            }
+            _ if (periph::TILE_STATUS_BASE..periph::tile_status(bus::MAX_TILES)).contains(&off) => {
+                let i = ((off - periph::TILE_STATUS_BASE) / 4) as usize;
+                self.tiles.get(i).map_or(0, |t| t.busy() as u32)
+            }
             _ => 0,
         }
     }
 
     fn periph_write(&mut self, off: u32, val: u32) {
         match off {
-            periph::CAESAR_IMC => self.caesar.imc = val & 1 != 0,
-            periph::CARUS_MODE => self.carus.config_mode = val & 1 != 0,
+            periph::CAESAR_IMC => {
+                if let Some(t) = self.first_mut(TileKind::Caesar) {
+                    t.set_mode(val & 1 != 0);
+                }
+            }
+            periph::CARUS_MODE => {
+                if let Some(t) = self.first_mut(TileKind::Carus) {
+                    t.set_mode(val & 1 != 0);
+                }
+            }
             periph::DMA_SRC => self.dma.staging.0 = val,
             periph::DMA_DST => self.dma.staging.1 = val,
             periph::DMA_LEN => self.dma.staging.2 = val,
@@ -480,6 +771,12 @@ impl HostPort<'_> {
                 let (s, d, l) = self.dma.staging;
                 self.dma.start(mode, s, d, l);
                 *self.dma_irq = false;
+            }
+            _ if (periph::TILE_MODE_BASE..periph::tile_mode(bus::MAX_TILES)).contains(&off) => {
+                let i = ((off - periph::TILE_MODE_BASE) / 4) as usize;
+                if let Some(t) = self.tiles.get_mut(i) {
+                    t.set_mode(val & 1 != 0);
+                }
             }
             _ => {}
         }
@@ -491,12 +788,15 @@ impl MemIf for HostPort<'_> {
         match bus::decode(addr) {
             Some((Slave::Sram(b), off)) => self.srams[b].read(off, size),
             Some((Slave::Rom, off)) => self.rom.read(off, size),
-            Some((Slave::Caesar, off)) => self.caesar.mem_read(off, size),
-            Some((Slave::Carus, off)) => {
-                let (v, p) = self.carus.bus_read(off, size);
-                self.extra_cycles += p;
-                v
-            }
+            Some((Slave::Tile(i), off)) => match self.tiles.get_mut(i) {
+                Some(Tile::Caesar(c)) => c.mem_read(off, size),
+                Some(Tile::Carus(c)) => {
+                    let (v, p) = c.bus_read(off, size);
+                    self.extra_cycles += p;
+                    v
+                }
+                None => 0,
+            },
             Some((Slave::Periph, off)) => self.periph_read(off),
             None => 0,
         }
@@ -506,19 +806,22 @@ impl MemIf for HostPort<'_> {
         match bus::decode(addr) {
             Some((Slave::Sram(b), off)) => self.srams[b].write(off, size, val),
             Some((Slave::Rom, _)) => {}
-            Some((Slave::Caesar, off)) => {
-                if self.caesar.imc {
-                    // Host-driven compute: the online `*(BASE+DEST<<2)=op`
-                    // pattern. Readiness was checked before exec.
-                    self.caesar.issue(off / 4, val);
-                } else {
-                    self.caesar.mem_write(off, size, val);
+            Some((Slave::Tile(i), off)) => match self.tiles.get_mut(i) {
+                Some(Tile::Caesar(c)) => {
+                    if c.imc {
+                        // Host-driven compute: the online `*(BASE+DEST<<2)=op`
+                        // pattern. Readiness was checked before exec.
+                        c.issue(off / 4, val);
+                    } else {
+                        c.mem_write(off, size, val);
+                    }
                 }
-            }
-            Some((Slave::Carus, off)) => {
-                let p = self.carus.bus_write(off, size, val);
-                self.extra_cycles += p;
-            }
+                Some(Tile::Carus(c)) => {
+                    let p = c.bus_write(off, size, val);
+                    self.extra_cycles += p;
+                }
+                None => {}
+            },
             Some((Slave::Periph, off)) => self.periph_write(off, val),
             None => {}
         }
@@ -574,8 +877,8 @@ mod tests {
         use crate::caesar::isa as cisa;
         let mut soc = Soc::heeperator();
         // Data: word 0 = 5 (bank 0), word 4096 = 7 (bank 1).
-        soc.caesar.poke_word(0, 5);
-        soc.caesar.poke_word(4096, 7);
+        soc.caesar_mut().poke_word(0, 5);
+        soc.caesar_mut().poke_word(4096, 7);
         let add_word = cisa::encode(&cisa::MicroOp { op: cisa::Op::Add, src1: 0, src2: 4096 });
         let fw = firmware(|a| {
             a.li(T0, (PERIPH_BASE + periph::CAESAR_IMC) as i32)
@@ -601,8 +904,8 @@ mod tests {
         let mut soc = Soc::heeperator();
         // 64 element-wise ADDs on 32-bit data.
         for i in 0..64 {
-            soc.caesar.poke_word(i, i);
-            soc.caesar.poke_word(4096 + i, 1000);
+            soc.caesar_mut().poke_word(i, i);
+            soc.caesar_mut().poke_word(4096 + i, 1000);
         }
         let mut p = CaesarProgram::new();
         p.csrw(Sew::E32);
@@ -638,11 +941,11 @@ mod tests {
         let (halt, cycles) = soc.run(100_000);
         assert_eq!(halt, Halt::Done);
         for i in 0..64 {
-            assert_eq!(soc.caesar.peek_word(2048 + i), 1000 + i, "word {i}");
+            assert_eq!(soc.caesar().peek_word(2048 + i), 1000 + i, "word {i}");
         }
         // 65 micro-ops at 2 cycles sustained ≈ 130 cycles + setup.
         assert!(cycles < 230, "cycles = {cycles}");
-        assert_eq!(soc.caesar.stats.instrs, 65);
+        assert_eq!(soc.caesar().stats.instrs, 65);
     }
 
     #[test]
@@ -651,14 +954,14 @@ mod tests {
         // Inputs in the Carus VRF (as the host would have placed them).
         let vl = 64u32;
         for j in 0..vl {
-            soc.carus.vrf.set_elem(0, j, vl, Sew::E32, j);
-            soc.carus.vrf.set_elem(1, j, vl, Sew::E32, 2 * j);
+            soc.carus_mut().vrf.set_elem(0, j, vl, Sew::E32, j);
+            soc.carus_mut().vrf.set_elem(1, j, vl, Sew::E32, 2 * j);
         }
         // Carus kernel: v2 = v0 + v1.
         let mut k = Asm::new(0);
         k.li(A0, vl as i32).vsetvli(T0, A0, Sew::E32).vadd_vv(2, 0, 1).ebreak();
         let kprog = k.assemble().unwrap();
-        soc.carus.load_kernel(&kprog.words);
+        soc.carus_mut().load_kernel(&kprog.words);
         // Host: config mode → start → wfi → check done → ack.
         let fw = firmware(|a| {
             a.li(T0, (PERIPH_BASE + periph::CARUS_MODE) as i32)
@@ -679,7 +982,7 @@ mod tests {
         assert_eq!(halt, Halt::Done);
         assert_eq!(soc.cpu.regs[A1 as usize] & crate::carus::STATUS_DONE, crate::carus::STATUS_DONE);
         for j in 0..vl {
-            assert_eq!(soc.carus.vrf.elem_unsigned(2, j, vl, Sew::E32), 3 * j);
+            assert_eq!(soc.carus().vrf.elem_unsigned(2, j, vl, Sew::E32), 3 * j);
         }
         // The host slept during the kernel.
         assert!(soc.counters.cpu_sleep > 10);
@@ -717,11 +1020,103 @@ mod tests {
         soc.run(10_000);
         let act = soc.activity();
         assert_eq!(act.cycles, soc.cycle);
+        assert_eq!(act.nmc_tiles, 2);
         let e = soc.energy();
         assert!(e.total() > 0.0);
         assert!(e.cpu > 0.0);
         assert!(e.memory > 0.0, "fetch energy counted");
         let shares = e.shares();
         assert!((shares.iter().sum::<f64>() - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn two_carus_tiles_compute_concurrently() {
+        // The scale-out property in one test: two NM-Carus tiles behind
+        // their own bus windows run kernels at the same time, driven by
+        // the generic per-tile mode/status peripheral registers.
+        let mut soc = Soc::with_tiles(CpuConfig::CV32E40P, 4, &[TileKind::Carus, TileKind::Carus]);
+        let vl = 256u32;
+        // Distinct data per tile so cross-wiring would be caught.
+        for (ti, bias) in [(0u32, 0u32), (1, 1000)] {
+            for j in 0..vl {
+                let c = match &mut soc.tiles[ti as usize] {
+                    Tile::Carus(c) => c,
+                    _ => unreachable!(),
+                };
+                c.vrf.set_elem(0, j, vl, Sew::E32, bias + j);
+                c.vrf.set_elem(1, j, vl, Sew::E32, 2 * j);
+            }
+        }
+        // Same kernel on both tiles: v2 = v0 + v1.
+        let mut k = Asm::new(0);
+        k.li(A0, vl as i32).vsetvli(T0, A0, Sew::E32).vadd_vv(2, 0, 1).ebreak();
+        let kprog = k.assemble().unwrap();
+        for t in &mut soc.tiles {
+            match t {
+                Tile::Carus(c) => c.load_kernel(&kprog.words),
+                _ => unreachable!(),
+            }
+        }
+        // Host: start tile 0, start tile 1, then poll both status regs.
+        let fw = firmware(|a| {
+            for t in 0..2usize {
+                a.li(T0, (PERIPH_BASE + periph::tile_mode(t)) as i32)
+                    .li(T1, 1)
+                    .sw(T1, 0, T0) // config mode
+                    .li(A0, (bus::tile_base(t) + crate::carus::CTL_OFFSET) as i32)
+                    .li(T1, crate::carus::CTL_START as i32)
+                    .sw(T1, 0, A0) // start
+                    .sw(ZERO, 0, T0); // back to memory mode
+            }
+            for t in 0..2usize {
+                let lbl = format!("wait{t}");
+                a.li(T0, (PERIPH_BASE + periph::tile_status(t)) as i32)
+                    .label(&lbl)
+                    .lw(T1, 0, T0)
+                    .bne(T1, ZERO, &lbl);
+            }
+            a.ebreak();
+        });
+        soc.load_firmware(&fw, 0);
+        soc.reset_stats();
+        let (halt, cycles) = soc.run(1_000_000);
+        assert_eq!(halt, Halt::Done);
+        for (ti, bias) in [(0u32, 0u32), (1, 1000)] {
+            let c = match &soc.tiles[ti as usize] {
+                Tile::Carus(c) => c,
+                _ => unreachable!(),
+            };
+            for j in 0..vl {
+                assert_eq!(c.vrf.elem_unsigned(2, j, vl, Sew::E32), bias + 3 * j, "tile {ti} j {j}");
+            }
+        }
+        // Both tiles were busy, and their busy windows overlapped (the
+        // sum of busy cycles exceeds the wall clock).
+        assert!(soc.tile_busy[0] > 0 && soc.tile_busy[1] > 0);
+        assert!(
+            soc.tile_busy[0] + soc.tile_busy[1] > cycles,
+            "no overlap: busy = {:?}, cycles = {cycles}",
+            soc.tile_busy
+        );
+    }
+
+    #[test]
+    fn unpopulated_tile_windows_read_zero() {
+        // Only two tiles populated; window 5 decodes but is empty.
+        let mut soc = Soc::heeperator();
+        let hole = bus::tile_base(5);
+        let fw = firmware(|a| {
+            a.li(T0, hole as i32)
+                .lw(A0, 0, T0) // reads 0
+                .li(T1, 42)
+                .sw(T1, 0, T0) // dropped
+                .lw(A1, 0, T0) // still 0
+                .ebreak();
+        });
+        soc.load_firmware(&fw, 0);
+        let (halt, _) = soc.run(10_000);
+        assert_eq!(halt, Halt::Done);
+        assert_eq!(soc.cpu.regs[A0 as usize], 0);
+        assert_eq!(soc.cpu.regs[A1 as usize], 0);
     }
 }

@@ -25,6 +25,7 @@
 use crate::apps::anomaly::{self, AdResult};
 use crate::isa::Sew;
 use crate::kernels::{self, Kernel, RunResult, Target};
+use crate::sched::{self, BatchRunResult, BatchSpec};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
@@ -41,6 +42,8 @@ pub struct SweepSession {
     kernel_slots: Mutex<HashMap<Point, Slot<RunResult>>>,
     /// Anomaly-Detection app runs, keyed by (target system, model seed).
     ad_slots: Mutex<HashMap<(Target, u64), Slot<AdResult>>>,
+    /// Multi-tile schedule co-simulations, keyed by (spec, tile count).
+    scale_slots: Mutex<HashMap<(BatchSpec, u32), Slot<BatchRunResult>>>,
     simulations: AtomicU64,
 }
 
@@ -87,6 +90,31 @@ impl SweepSession {
         }))
     }
 
+    /// Memoized multi-tile schedule run (`heeperator scale`): one
+    /// co-simulation per `(spec, tiles)` point per invocation, no matter
+    /// how many report threads sweep overlapping tile lists. Planning
+    /// errors (untileable kernel, capacity, bad shard) surface as `Err`
+    /// without occupying a slot.
+    pub fn scale(&self, spec: &BatchSpec, tiles: u32) -> Result<Arc<BatchRunResult>, String> {
+        let slot = Arc::clone(
+            self.scale_slots
+                .lock()
+                .expect("sweep cache poisoned")
+                .entry((*spec, tiles))
+                .or_default(),
+        );
+        if let Some(r) = slot.get() {
+            return Ok(Arc::clone(r));
+        }
+        // Plan outside the slot so a planning error never wedges it; a
+        // racing thread may plan once more, the first init wins.
+        let plan = sched::plan(spec, tiles as usize)?;
+        Ok(Arc::clone(slot.get_or_init(|| {
+            self.simulations.fetch_add(1, Ordering::Relaxed);
+            Arc::new(sched::run_planned(&plan))
+        })))
+    }
+
     /// Number of simulations actually executed (cache misses) so far —
     /// the observable behind the at-most-once contract.
     pub fn simulations(&self) -> u64 {
@@ -97,6 +125,7 @@ impl SweepSession {
     pub fn len(&self) -> usize {
         self.kernel_slots.lock().expect("sweep cache poisoned").len()
             + self.ad_slots.lock().expect("sweep cache poisoned").len()
+            + self.scale_slots.lock().expect("sweep cache poisoned").len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -120,6 +149,31 @@ mod tests {
         let c = s.run(Target::Cpu, Kernel::Mul { n: 64 }, Sew::E32, 2);
         assert_eq!(s.simulations(), 2);
         assert_ne!(c.output, a.output, "seeded inputs differ");
+    }
+
+    #[test]
+    fn scale_points_are_memoized() {
+        let s = SweepSession::new();
+        let spec = BatchSpec {
+            target: Target::Carus,
+            kernel: Kernel::Add { n: 128 },
+            sew: Sew::E32,
+            seed: 1,
+            batch: 2,
+            shard: false,
+        };
+        let a = s.scale(&spec, 2).unwrap();
+        let b = s.scale(&spec, 2).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second consumer shares the first co-simulation");
+        assert_eq!(s.simulations(), 1);
+        assert_eq!(s.len(), 1);
+        // A different tile count is a different point.
+        let c = s.scale(&spec, 1).unwrap();
+        assert_eq!(c.tiles, 1);
+        assert_eq!(s.simulations(), 2);
+        // Planning errors surface without occupying a slot.
+        assert!(s.scale(&BatchSpec { target: Target::Cpu, ..spec }, 2).is_err());
+        assert_eq!(s.simulations(), 2);
     }
 
     #[test]

@@ -1,0 +1,49 @@
+//! CLI contract tests against the real `heeperator` binary: exit codes
+//! and stream discipline for the help/unknown-subcommand paths (a wrong
+//! exit code lets CI scripts silently no-op).
+
+use std::process::Command;
+
+fn heeperator(args: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_heeperator"))
+        .args(args)
+        .output()
+        .expect("spawn heeperator")
+}
+
+#[test]
+fn no_arguments_prints_usage_and_exits_zero() {
+    let out = heeperator(&[]);
+    assert!(out.status.success(), "bare invocation is help, not an error");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("usage: heeperator"), "{stdout}");
+    assert!(stdout.contains("scale"), "usage lists the scale subcommand");
+}
+
+#[test]
+fn unknown_subcommand_exits_nonzero_with_usage_on_stderr() {
+    let out = heeperator(&["frobnicate"]);
+    assert!(!out.status.success(), "unknown subcommands must fail");
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("usage: heeperator"), "{stderr}");
+    assert!(stderr.contains("frobnicate"), "names the offending word: {stderr}");
+}
+
+#[test]
+fn bad_flag_value_exits_nonzero() {
+    let out = heeperator(&["all", "--jobs", "lots"]);
+    assert!(!out.status.success());
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--jobs"), "{stderr}");
+}
+
+#[test]
+fn scale_rejects_bad_tile_lists_without_simulating() {
+    let out = heeperator(&["scale", "--tiles", "0"]);
+    assert!(!out.status.success());
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("tile"), "{stderr}");
+}

@@ -197,7 +197,7 @@ fn caesar_backpressure_stalls_host_issue() {
     let (halt, _) = soc.run(100_000);
     assert_eq!(halt, Halt::Done);
     assert!(soc.counters.cpu_wait_cycles > 30, "stall cycles = {}", soc.counters.cpu_wait_cycles);
-    assert_eq!(soc.caesar.stats.instrs, 128);
+    assert_eq!(soc.caesar().stats.instrs, 128);
 }
 
 #[test]
