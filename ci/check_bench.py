@@ -1,28 +1,40 @@
 #!/usr/bin/env python3
-"""Fold the perf-smoke measurements into BENCH_5.json and gate regressions.
+"""Fold the perf-smoke measurements into BENCH_6.json and gate regressions.
 
 Inputs:
   --scale scale.json         `heeperator scale --json` output: deterministic
-                             simulated cycles + wall time per tile count.
-  --bench-lines FILE.jsonl   benchlib JSON lines (one {"id", "median_ns",
-                             "runs"} object per line) from the e2e bench
-                             binaries run with BENCHLIB_JSON set.
-  --baseline FILE.json       committed baseline. Gating compares the
+                             simulated cycles + wall time + simulator
+                             throughput per tile count.
+  --diff scale-cycle.json    a second scale summary from the *other* timing
+                             mode (`--timing cycle`). Every shared point must
+                             report identical simulated cycles — the
+                             cheap CI edition of tests/timing_equivalence.rs.
+                             The wall-time ratio of the shared points is the
+                             measured event-vs-cycle sim speedup.
+  --bench-lines FILE.jsonl   benchlib JSON lines from the bench binaries run
+                             with BENCHLIB_JSON set. Wall-time lines carry
+                             {"id", "median_ns", "runs"}; rate lines carry
+                             {"id", "throughput_per_s", "unit"} instead.
+  --baseline FILE.json       baseline to gate against. Gating compares the
                              *simulated* aggregate cycles (deterministic);
                              wall times are recorded but never gated.
-  --out BENCH_5.json         merged machine-readable summary (uploaded as a
-                             CI artifact; copy it over the baseline to
-                             ratchet).
+  --out BENCH_6.json         merged machine-readable summary (uploaded as a
+                             CI artifact and cached as the armed baseline).
 
 Gates (exit 1 on violation):
   * aggregate simulated cycles regress more than --max-regress (default
     10%) vs the baseline's aggregate_cycles;
   * the speedup at the largest tile count falls below --min-speedup, when
-    given (the scale-out acceptance bar).
+    given (the scale-out acceptance bar);
+  * any --diff point disagrees on simulated cycles (timing-mode drift);
+  * the event-vs-cycle sim speedup falls below --min-sim-speedup, when
+    given (the event-driven timing core's acceptance bar).
 
-A missing baseline, or one marked {"bootstrap": true}, records the run
-without gating — commit the uploaded BENCH_5.json as bench-baseline.json
-to arm the gate.
+Baseline arming: simulated cycles are deterministic and machine-
+independent, so the first CI run's BENCH_6.json is a valid baseline for
+every later run. The workflow caches it under an immutable key; a
+committed bench-baseline.json without {"bootstrap": true} takes
+precedence. A missing/bootstrap baseline records without gating.
 """
 
 import argparse
@@ -54,14 +66,43 @@ def read_jsonl(path):
     return out
 
 
+def diff_timing_modes(reports, other, failures):
+    """Point-wise cycle identity between the two timing modes, plus the
+    wall-time ratio (the measured skip-ahead speedup). Returns the
+    speedup, or None if no shared point has usable wall times."""
+    theirs = {r["id"]: r for r in other.get("reports", []) if r.get("cycles") is not None}
+    shared = [r for r in reports if r.get("cycles") is not None and r["id"] in theirs]
+    if not shared:
+        failures.append("--diff given but the summaries share no cycle-reporting points")
+        return None
+    wall_event = wall_cycle = 0.0
+    for r in shared:
+        o = theirs[r["id"]]
+        if r["cycles"] != o["cycles"]:
+            failures.append(
+                f"timing modes disagree on {r['id']}: "
+                f"{r['cycles']} vs {o['cycles']} simulated cycles"
+            )
+        wall_event += r.get("wall_ms") or 0.0
+        wall_cycle += o.get("wall_ms") or 0.0
+    print(f"timing diff: {len(shared)} shared points compared against {other.get('timing', '?')} mode")
+    if wall_event <= 0.0 or wall_cycle <= 0.0:
+        return None
+    speedup = wall_cycle / wall_event
+    print(f"event-vs-cycle sim speedup: {speedup:.1f}x ({wall_cycle:.1f} ms -> {wall_event:.1f} ms)")
+    return speedup
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", required=True)
+    ap.add_argument("--diff", default=None)
     ap.add_argument("--bench-lines", default=None)
     ap.add_argument("--baseline", required=True)
     ap.add_argument("--out", required=True)
     ap.add_argument("--max-regress", type=float, default=0.10)
     ap.add_argument("--min-speedup", type=float, default=None)
+    ap.add_argument("--min-sim-speedup", type=float, default=None)
     args = ap.parse_args()
 
     scale = read_json(args.scale)
@@ -71,26 +112,50 @@ def main():
         aggregate = sum(r.get("cycles", 0) for r in reports)
 
     for m in read_jsonl(args.bench_lines) if args.bench_lines else []:
-        reports.append(
-            {
-                "id": m["id"],
-                "cycles": None,  # wall-clock benchmark, no simulated cycles
-                "wall_ms": round(m["median_ns"] / 1e6, 3),
-                "runs": m.get("runs"),
-            }
-        )
+        if "median_ns" in m:
+            reports.append(
+                {
+                    "id": m["id"],
+                    "cycles": None,  # wall-clock benchmark, no simulated cycles
+                    "wall_ms": round(m["median_ns"] / 1e6, 3),
+                    "runs": m.get("runs"),
+                }
+            )
+        else:  # rate line (e.g. simulated cycles per host second)
+            reports.append(
+                {
+                    "id": m["id"],
+                    "cycles": None,
+                    "throughput_per_s": m.get("throughput_per_s"),
+                    "unit": m.get("unit"),
+                    "runs": m.get("runs"),
+                }
+            )
+
+    failures = []
+    sim_speedup = None
+    if args.diff:
+        sim_speedup = diff_timing_modes(reports, read_json(args.diff), failures)
+        if args.min_sim_speedup is not None:
+            if sim_speedup is None:
+                failures.append("--min-sim-speedup given but no sim speedup could be measured")
+            elif sim_speedup < args.min_sim_speedup:
+                failures.append(
+                    f"event-vs-cycle sim speedup {sim_speedup:.1f}x < {args.min_sim_speedup}x"
+                )
 
     merged = {
         "schema": "heeperator-bench-v1",
+        "timing": scale.get("timing"),
         "reports": reports,
         "aggregate_cycles": aggregate,
     }
+    if sim_speedup is not None:
+        merged["sim_speedup_event_vs_cycle"] = round(sim_speedup, 2)
     with open(args.out, "w") as f:
         json.dump(merged, f, indent=2)
         f.write("\n")
     print(f"wrote {args.out}: {len(reports)} reports, aggregate {aggregate} simulated cycles")
-
-    failures = []
 
     if args.min_speedup is not None:
         tiled = [r for r in reports if r.get("tiles") and r.get("speedup") is not None]
@@ -108,7 +173,8 @@ def main():
         baseline = None
     base_cycles = None if baseline is None else baseline.get("aggregate_cycles")
     if baseline is None or baseline.get("bootstrap") or not base_cycles:
-        print("no armed baseline: recording only (commit BENCH_5.json as the baseline to gate)")
+        print("no armed baseline: recording only (the workflow caches this run's "
+              "BENCH_6.json as the baseline; commit one to pin it instead)")
     else:
         delta = (aggregate - base_cycles) / base_cycles
         print(f"aggregate cycles: {aggregate} vs baseline {base_cycles} ({delta:+.1%})")

@@ -228,8 +228,14 @@ pub fn run_cpu(m: &Model) -> AdResult {
     let prog = a.assemble().expect("AD cpu firmware");
     soc.load_firmware(&prog, 0);
     soc.reset_stats();
-    let (halt, _) = soc.run(50_000_000);
-    assert_eq!(halt, Halt::Done);
+    let budget = crate::kernels::run_timeout_or(50_000_000);
+    let (halt, cycles) = soc.run(budget);
+    assert_eq!(
+        halt,
+        Halt::Done,
+        "AD firmware did not complete: {halt:?} after {cycles} cycles (budget {budget}; raise \
+         SOC_RUN_TIMEOUT to extend)"
+    );
     let out = soc.dump(xb, 640).iter().map(|&b| b as i8).collect();
     finish("CV32E40P (1 core)", &soc, out)
 }
@@ -382,8 +388,14 @@ pub fn run_caesar(m: &Model) -> AdResult {
     let prog = a.assemble().expect("AD caesar firmware");
     soc.load_firmware(&prog, 0);
     soc.reset_stats();
-    let (halt, _) = soc.run(50_000_000);
-    assert_eq!(halt, Halt::Done);
+    let budget = crate::kernels::run_timeout_or(50_000_000);
+    let (halt, cycles) = soc.run(budget);
+    assert_eq!(
+        halt,
+        Halt::Done,
+        "AD firmware did not complete: {halt:?} after {cycles} cycles (budget {budget}; raise \
+         SOC_RUN_TIMEOUT to extend)"
+    );
     let out = soc.dump(CAESAR_BASE + x_w * 4, 640).iter().map(|&b| b as i8).collect();
     finish("NM-Caesar + CV32E20", &soc, out)
 }
@@ -479,8 +491,14 @@ pub fn run_carus(m: &Model) -> AdResult {
     let prog = a.assemble().expect("AD carus firmware");
     soc.load_firmware(&prog, 0);
     soc.reset_stats();
-    let (halt, _) = soc.run(50_000_000);
-    assert_eq!(halt, Halt::Done);
+    let budget = crate::kernels::run_timeout_or(50_000_000);
+    let (halt, cycles) = soc.run(budget);
+    assert_eq!(
+        halt,
+        Halt::Done,
+        "AD firmware did not complete: {halt:?} after {cycles} cycles (budget {budget}; raise \
+         SOC_RUN_TIMEOUT to extend)"
+    );
     let out = soc.dump(X_BUF, 640).iter().map(|&b| b as i8).collect();
     finish("NM-Carus + CV32E20", &soc, out)
 }

@@ -51,13 +51,13 @@ pub fn bench(name: &str, mut f: impl FnMut()) -> Measurement {
 /// Machine-readable feed for CI perf tracking: when `BENCHLIB_JSON`
 /// names a file, every measurement appends one JSON line
 /// (`{"id": ..., "median_ns": ..., "runs": ...}`) that the perf-smoke
-/// job folds into `BENCH_5.json`.
+/// job folds into `BENCH_6.json`.
 fn json_sink(m: &Measurement) {
     let Ok(path) = std::env::var("BENCHLIB_JSON") else { return };
     if path.is_empty() {
         return;
     }
-    append_json_line(&path, m);
+    append_line(&path, &json_line(m));
 }
 
 /// One measurement as a JSON object (the `BENCHLIB_JSON` line format).
@@ -68,16 +68,29 @@ fn json_line(m: &Measurement) -> String {
     )
 }
 
-/// Append a measurement line to `path` (best effort — a benchmark must
-/// never fail because the summary file is unwritable).
-fn append_json_line(path: &str, m: &Measurement) {
+/// A throughput report as a JSON object. `median_ns` is deliberately
+/// absent — consumers (ci/check_bench.py) treat such lines as rate
+/// reports, not wall-time measurements.
+fn throughput_line(m: &Measurement, per_sec: f64, unit_name: &str) -> String {
+    format!(
+        "{{\"id\": \"{}_throughput\", \"throughput_per_s\": {:.0}, \"unit\": \"{}/s\", \"runs\": {}}}",
+        m.name, per_sec, unit_name, m.runs
+    )
+}
+
+/// Append one line to `path` (best effort — a benchmark must never fail
+/// because the summary file is unwritable).
+fn append_line(path: &str, line: &str) {
     use std::io::Write as _;
     if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(path) {
-        let _ = writeln!(f, "{}", json_line(m));
+        let _ = writeln!(f, "{line}");
     }
 }
 
-/// Report a throughput figure derived from a measurement.
+/// Report a throughput figure derived from a measurement — printed, and
+/// (like [`bench`]) appended to the `BENCHLIB_JSON` feed, so CI perf
+/// tracking records rates such as simulated cycles per host second next
+/// to the raw wall times.
 pub fn throughput(m: &Measurement, units: f64, unit_name: &str) {
     let per_sec = units / (m.median_ns / 1e9);
     println!(
@@ -85,6 +98,11 @@ pub fn throughput(m: &Measurement, units: f64, unit_name: &str) {
         m.name,
         per_sec / 1e6
     );
+    if let Ok(path) = std::env::var("BENCHLIB_JSON") {
+        if !path.is_empty() {
+            append_line(&path, &throughput_line(m, per_sec, unit_name));
+        }
+    }
 }
 
 /// Prevent the optimizer from discarding a value.
@@ -112,11 +130,22 @@ mod tests {
         let path = std::env::temp_dir().join(format!("benchlib_json_{}.jsonl", std::process::id()));
         let _ = std::fs::remove_file(&path);
         let p = path.to_str().expect("utf-8 temp path");
-        append_json_line(p, &m);
-        append_json_line(p, &m);
+        append_line(p, &json_line(&m));
+        append_line(p, &json_line(&m));
         let text = std::fs::read_to_string(&path).expect("json lines written");
         let _ = std::fs::remove_file(&path);
         assert_eq!(text.lines().count(), 2, "append, not truncate");
         assert_eq!(text.lines().next().unwrap(), json_line(&m));
+    }
+
+    #[test]
+    fn throughput_lines_are_rate_reports_without_median_ns() {
+        let m = Measurement { name: "e2e_probe".into(), median_ns: 2e9, runs: 5 };
+        // 10 M units over a 2 s median → 5 M units/s.
+        let line = throughput_line(&m, 10.0e6 / 2.0, "sim-cycles");
+        assert!(line.contains("\"id\": \"e2e_probe_throughput\""), "{line}");
+        assert!(line.contains("\"throughput_per_s\": 5000000"), "{line}");
+        assert!(line.contains("\"unit\": \"sim-cycles/s\""), "{line}");
+        assert!(!line.contains("median_ns"), "rate lines must not look like wall-time lines");
     }
 }

@@ -71,6 +71,12 @@ pub mod periph {
     pub const DMA_STATUS: u32 = 0x20;
     /// Cycle counter (read-only, for firmware-side timing).
     pub const MCYCLE: u32 = 0x30;
+    /// Tile interrupt-enable mask: bit `i` lets tile `i`'s completion
+    /// IRQ wake a `wfi`-sleeping host (the DMA IRQ always wakes). Resets
+    /// to all-ones so single-tile firmware never has to program it; the
+    /// batch scheduler narrows it per wait so a *done-but-not-yet-
+    /// drained* tile cannot turn later `wfi` sleeps into spins.
+    pub const IRQ_MASK: u32 = 0x34;
     /// Per-tile mode registers (bit 0): `TILE_MODE_BASE + 4*i` drives tile
     /// `i`'s mode pin — `imc` for an NM-Caesar tile, configuration mode
     /// for an NM-Carus tile. [`CAESAR_IMC`] / [`CARUS_MODE`] remain as
@@ -218,5 +224,10 @@ mod tests {
         // legacy registers.
         assert!(periph::tile_mode(MAX_TILES - 1) < periph::TILE_STATUS_BASE);
         assert!(periph::tile_status(MAX_TILES - 1) < PERIPH_SIZE);
+        // IRQ mask sits in the legacy block, clear of both tile ranges.
+        assert!(periph::IRQ_MASK > periph::MCYCLE);
+        assert!(periph::IRQ_MASK < periph::TILE_MODE_BASE);
+        // One mask bit per possible tile.
+        assert!(MAX_TILES <= 32);
     }
 }

@@ -95,6 +95,20 @@ impl Caesar {
         self.now >= self.busy_until
     }
 
+    /// Skip-ahead support (`--timing=event`): advance local time by `k`
+    /// cycles in closed form — exactly equivalent to `k` [`Caesar::step`]
+    /// calls for *any* `k` (the pipeline countdown is pure counter work;
+    /// NM-Caesar raises no interrupts and schedules no events of its
+    /// own). Returns the number of those cycles on which the macro was
+    /// still busy *after* stepping, i.e. the per-cycle `!ready()`
+    /// observations the SoC sums into its utilization counters.
+    pub fn skip(&mut self, k: u64) -> u64 {
+        self.stats.busy_cycles += self.busy_until.saturating_sub(self.now).min(k);
+        let busy_after = self.busy_until.saturating_sub(self.now + 1).min(k);
+        self.now += k;
+        busy_after
+    }
+
     #[inline]
     fn bank_of(word: u32) -> usize {
         (word >= BANK_WORDS) as usize

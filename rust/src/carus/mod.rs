@@ -233,8 +233,60 @@ impl Carus {
         self.maybe_complete();
     }
 
-    fn step_ecpu(&mut self) {
+    /// Skip-ahead support (`--timing=event`): number of upcoming cycles
+    /// that are strictly quiet for this macro — every one of them would
+    /// only decrement countdowns ([`Vpu::skip`](vpu::Vpu), `ecpu_stall`)
+    /// and bump cycle counters. `u64::MAX` means no self-scheduled event
+    /// (fully idle; only the host can change our state). The boundary
+    /// cycle (VPU retire, stall release, completion handshake, any eCPU
+    /// fetch) always runs through [`Carus::step`].
+    pub fn quiet_horizon(&self) -> u64 {
+        if !self.running {
+            if self.ecpu_halted {
+                // Draining: once the pipeline is empty the completion
+                // handshake (`maybe_complete`) must run in `step`.
+                if self.vpu.empty() {
+                    0
+                } else {
+                    self.vpu.quiet_horizon()
+                }
+            } else if self.vpu.busy() {
+                self.vpu.quiet_horizon()
+            } else {
+                u64::MAX
+            }
+        } else if self.pending.is_some() {
+            // A stalled vector instruction retries every cycle, but every
+            // dispatch-failure condition (queue slot, pipeline-empty,
+            // scoreboard hazard) is constant until the executing
+            // instruction retires — which the VPU horizon excludes.
+            self.vpu.quiet_horizon()
+        } else if self.ecpu_stall > 0 {
+            (u64::from(self.ecpu_stall) - 1).min(self.vpu.quiet_horizon())
+        } else {
+            // Ready to fetch: the next cycle executes an instruction.
+            0
+        }
+    }
 
+    /// Advance `k` cycles in closed form; exactly equivalent to `k`
+    /// calls of [`Carus::step`] provided `k <= self.quiet_horizon()`.
+    pub fn skip(&mut self, k: u64) {
+        debug_assert!(k <= self.quiet_horizon(), "skip past a Carus state transition");
+        self.vpu.skip(k);
+        if self.running {
+            self.stats.ecpu_active_cycles += k;
+            if self.pending.is_some() {
+                self.stats.ecpu_vpu_stall_cycles += k;
+            } else {
+                self.ecpu_stall -= k as u32;
+            }
+        } else {
+            self.stats.ecpu_sleep_cycles += k;
+        }
+    }
+
+    fn step_ecpu(&mut self) {
         // Retry a stalled vector instruction first.
         if let Some(v) = self.pending {
             if self.try_dispatch(&v) {
@@ -583,7 +635,7 @@ mod tests {
     }
 
     #[test]
-    fn scalar_vector_overlap_hides_index_update(){
+    fn scalar_vector_overlap_hides_index_update() {
         // Fig. 5: scalar instructions execute while the VPU runs. A loop of
         // vmacc + index updates must cost ≈ the vector time alone.
         let mut c = Carus::new(4);

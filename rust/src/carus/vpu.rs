@@ -189,6 +189,34 @@ impl Vpu {
         }
     }
 
+    /// Skip-ahead support (`--timing=event`): number of upcoming cycles
+    /// that are *strictly quiet* — pure countdown decrements with no
+    /// state transition. An executing instruction with `r` cycles left
+    /// yields `r - 1`: the retire cycle itself (scoreboard clear, queued
+    /// promotion) must run through [`Vpu::step`]. An idle pipeline has
+    /// no self-scheduled event (`u64::MAX`); the queue invariant
+    /// (`queued` implies `exec_remaining > 0`) means an idle VPU stays
+    /// idle until the eCPU acts.
+    pub fn quiet_horizon(&self) -> u64 {
+        if self.exec_remaining > 0 {
+            u64::from(self.exec_remaining) - 1
+        } else {
+            u64::MAX
+        }
+    }
+
+    /// Advance `k` cycles in closed form; exactly equivalent to `k`
+    /// calls of [`Vpu::step`] provided `k <= self.quiet_horizon()`.
+    pub fn skip(&mut self, k: u64) {
+        debug_assert!(k <= self.quiet_horizon(), "skip past a VPU retire");
+        if self.exec_remaining > 0 {
+            self.stats.busy_cycles += k;
+            self.exec_remaining -= k as u32;
+        } else {
+            self.stats.idle_cycles += k;
+        }
+    }
+
     /// Set vtype/vl (CSR unit; caller enforces pipeline-empty).
     /// Returns the granted `vl`.
     pub fn set_vtype(&mut self, avl: u32, sew: Sew) -> u32 {

@@ -1,0 +1,214 @@
+//! Event-driven timing control: the simulation clock's skip-ahead layer.
+//!
+//! The SoC supports two timing disciplines, selected by [`TimingMode`]:
+//!
+//! * **`Cycle`** — the legacy reference: `Soc::run` calls `Soc::step`
+//!   once per simulated cycle, no matter how quiet the cycle is.
+//! * **`Event`** — skip-ahead: between steps the SoC derives, from
+//!   component state alone, a *monotonic event queue* of the next
+//!   "interesting" cycles ([`EventKind`]) and jumps simulated time to
+//!   one cycle before the earliest of them, updating cycle / energy /
+//!   utilization counters in closed form for the skipped quiet span.
+//!
+//! The contract that makes the two modes interchangeable (and is locked
+//! by `rust/tests/timing_equivalence.rs`) is **strict quietness**: a
+//! cycle may only be skipped if it is provably linear — pure countdown
+//! decrements with no state transition and no externally visible
+//! change. Every transition (an instruction retiring, a stall
+//! releasing, a DMA completion edge, a CPU fetch) still executes
+//! through the *same* per-cycle `step` code at the span boundary, so
+//! event mode produces byte-identical outputs and identical
+//! cycle/energy/activity counters by construction.
+//!
+//! Mode selection, outermost first:
+//!
+//! 1. a scoped thread-local override ([`with_mode`]) — used by the
+//!    differential tests to pin each half of a comparison;
+//! 2. the process-wide default ([`set_global`]) — set once by the CLI's
+//!    `--timing cycle|event` flag;
+//! 3. the `SOC_TIMING` environment variable (`cycle` or `event`);
+//! 4. [`TimingMode::Event`] — skip-ahead is the default discipline.
+
+use std::cell::Cell;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::OnceLock;
+
+/// Timing discipline for `Soc::run`. See the module docs for the
+/// equivalence contract between the two.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TimingMode {
+    /// Legacy per-cycle stepping: the differential reference.
+    Cycle,
+    /// Skip-ahead over strictly quiet spans (default).
+    Event,
+}
+
+impl TimingMode {
+    /// Parse a user-facing mode name (`"cycle"` / `"event"`).
+    pub fn parse(s: &str) -> Option<TimingMode> {
+        match s {
+            "cycle" => Some(TimingMode::Cycle),
+            "event" => Some(TimingMode::Event),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TimingMode::Cycle => "cycle",
+            TimingMode::Event => "event",
+        }
+    }
+}
+
+impl std::fmt::Display for TimingMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+static GLOBAL: OnceLock<TimingMode> = OnceLock::new();
+
+thread_local! {
+    static OVERRIDE: Cell<Option<TimingMode>> = const { Cell::new(None) };
+}
+
+fn global() -> TimingMode {
+    *GLOBAL.get_or_init(|| {
+        std::env::var("SOC_TIMING")
+            .ok()
+            .and_then(|v| TimingMode::parse(&v))
+            .unwrap_or(TimingMode::Event)
+    })
+}
+
+/// Install the process-wide default mode (first caller wins; later calls
+/// are ignored, as is the `SOC_TIMING` env var once a default is set).
+/// Used by the CLI's `--timing` flag before any simulation starts.
+pub fn set_global(mode: TimingMode) {
+    let _ = GLOBAL.set(mode);
+}
+
+/// The mode new `Soc` instances adopt on this thread right now.
+pub fn mode() -> TimingMode {
+    OVERRIDE.with(|o| o.get()).unwrap_or_else(global)
+}
+
+/// Run `f` with `mode` pinned for `Soc`s constructed on this thread —
+/// scoped and re-entrant, so differential tests can run both timing
+/// disciplines side by side without touching process state.
+pub fn with_mode<R>(mode: TimingMode, f: impl FnOnce() -> R) -> R {
+    let prev = OVERRIDE.with(|o| o.replace(Some(mode)));
+    let r = f();
+    OVERRIDE.with(|o| o.set(prev));
+    r
+}
+
+/// Why a simulated cycle is "interesting" — i.e. must run through the
+/// per-cycle `step` code instead of being skipped in closed form.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum EventKind {
+    /// The DMA is moving data (or its completion edge is pending): every
+    /// such cycle does real per-word work and must be stepped.
+    DmaDone,
+    /// Tile `i`'s internal countdown (VPU instruction retire, eCPU stall
+    /// release, completion handshake) expires.
+    TileDone(usize),
+    /// The host CPU's multi-cycle instruction stall releases.
+    CpuStallRelease,
+    /// The host CPU is awake and executing (e.g. polling firmware): the
+    /// degenerate "next cycle" event.
+    PollRetry,
+}
+
+/// A scheduled wake-up: `at` is the first simulated cycle that must be
+/// stepped rather than skipped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Event {
+    pub at: u64,
+    pub kind: EventKind,
+}
+
+/// Monotonic min-queue of pending [`Event`]s. The SoC rebuilds it from
+/// component state at each skip decision (a stateless derivation — that
+/// is what keeps the equivalence proof local), pops the earliest event,
+/// and skips to one cycle before it.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<Event>>,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, at: u64, kind: EventKind) {
+        self.heap.push(Reverse(Event { at, kind }));
+    }
+
+    /// Earliest pending event, if any (ties broken by `EventKind` order).
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop().map(|Reverse(e)| e)
+    }
+
+    pub fn peek(&self) -> Option<&Event> {
+        self.heap.peek().map(|Reverse(e)| e)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_display_round_trip() {
+        assert_eq!(TimingMode::parse("cycle"), Some(TimingMode::Cycle));
+        assert_eq!(TimingMode::parse("event"), Some(TimingMode::Event));
+        assert_eq!(TimingMode::parse("EVENT"), None);
+        assert_eq!(TimingMode::parse(""), None);
+        assert_eq!(TimingMode::Cycle.to_string(), "cycle");
+        assert_eq!(TimingMode::Event.to_string(), "event");
+    }
+
+    #[test]
+    fn with_mode_is_scoped_and_nests() {
+        let outer = mode();
+        with_mode(TimingMode::Cycle, || {
+            assert_eq!(mode(), TimingMode::Cycle);
+            with_mode(TimingMode::Event, || assert_eq!(mode(), TimingMode::Event));
+            assert_eq!(mode(), TimingMode::Cycle);
+        });
+        assert_eq!(mode(), outer);
+    }
+
+    #[test]
+    fn queue_pops_in_monotonic_order() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        q.push(30, EventKind::TileDone(1));
+        q.push(10, EventKind::DmaDone);
+        q.push(20, EventKind::CpuStallRelease);
+        q.push(10, EventKind::PollRetry);
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.peek().map(|e| e.at), Some(10));
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|e| e.at).collect();
+        assert_eq!(order, [10, 10, 20, 30]);
+        q.push(5, EventKind::TileDone(0));
+        q.clear();
+        assert!(q.pop().is_none());
+    }
+}

@@ -26,7 +26,7 @@
 //! and simulates.
 
 use super::golden::{pack, unpack, WorkloadData, LEAKY_SHIFT};
-use super::{finish_run, Engine, EngineProgram, Kernel, RunResult, Target, SOC_RUN_TIMEOUT};
+use super::{finish_run, run_timeout, Engine, EngineProgram, Kernel, RunResult, Target};
 use crate::asm::{Asm, Program};
 use crate::bus::{periph, BANK_SIZE, CAESAR_BASE, PERIPH_BASE};
 use crate::caesar::compiler::CaesarProgram;
@@ -126,7 +126,7 @@ impl Engine for CaesarEngine {
 
         soc.load_firmware(&prepared.driver, 0);
         soc.reset_stats();
-        let (halt, _) = soc.run(SOC_RUN_TIMEOUT);
+        let (halt, _) = soc.run(run_timeout());
         let mut res = finish_run(&mut soc, halt, Target::Caesar, kernel, sew);
         res.output = extract(&soc, kernel, sew);
         res

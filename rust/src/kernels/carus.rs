@@ -31,7 +31,7 @@
 //! workload into the VRF and simulates.
 
 use super::golden::{unpack, WorkloadData, LEAKY_SHIFT};
-use super::{finish_run, Engine, EngineProgram, Kernel, RunResult, Target, SOC_RUN_TIMEOUT};
+use super::{finish_run, run_timeout, Engine, EngineProgram, Kernel, RunResult, Target};
 use crate::asm::{Asm, Program};
 use crate::bus::{periph, BANK_SIZE, CARUS_BASE, PERIPH_BASE};
 use crate::carus::{ARG_OFFSET, CTL_OFFSET, CTL_START};
@@ -117,7 +117,7 @@ impl Engine for CarusEngine {
 
         soc.load_firmware(&prepared.driver, 0);
         soc.reset_stats();
-        let (halt, _) = soc.run(SOC_RUN_TIMEOUT);
+        let (halt, _) = soc.run(run_timeout());
         let mut res = finish_run(&mut soc, halt, Target::Carus, kernel, sew);
         res.output = extract(&soc, kernel, sew);
         res

@@ -11,7 +11,7 @@
 //! Memory map: firmware in SRAM bank 0; A/B/C/OUT in banks 1/2/3/4.
 
 use super::golden::{WorkloadData, GEMM_BETA, LEAKY_SHIFT};
-use super::{finish_run, Engine, EngineProgram, Kernel, RunResult, Target, SOC_RUN_TIMEOUT};
+use super::{finish_run, run_timeout, Engine, EngineProgram, Kernel, RunResult, Target};
 use crate::asm::{Asm, Program};
 use crate::bus::BANK_SIZE;
 use crate::isa::reg::*;
@@ -56,7 +56,7 @@ impl Engine for CpuEngine {
         }
         soc.load_firmware(&prepared.firmware, 0);
         soc.reset_stats();
-        let (halt, _) = soc.run(SOC_RUN_TIMEOUT);
+        let (halt, _) = soc.run(run_timeout());
         let mut res = finish_run(&mut soc, halt, Target::Cpu, kernel, sew);
         res.output = soc.dump(OUT_BASE, (kernel.outputs() * sew.bytes() as u64) as u32);
         res

@@ -39,6 +39,20 @@ use std::sync::{Arc, Mutex, OnceLock};
 /// below this).
 pub const SOC_RUN_TIMEOUT: u64 = 200_000_000;
 
+/// The effective cycle budget: [`SOC_RUN_TIMEOUT`] unless overridden by
+/// the `SOC_RUN_TIMEOUT` environment variable (every CLI simulation
+/// path honors it — useful for deliberately huge workloads, or for
+/// tightening the leash when bisecting a hang).
+pub fn run_timeout() -> u64 {
+    run_timeout_or(SOC_RUN_TIMEOUT)
+}
+
+/// [`run_timeout`] with a caller-specific default for paths whose
+/// nominal budget is smaller (e.g. the AD application).
+pub fn run_timeout_or(default: u64) -> u64 {
+    std::env::var("SOC_RUN_TIMEOUT").ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
 /// Execution target.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Target {
@@ -601,7 +615,14 @@ pub(crate) fn finish_run(
     kernel: Kernel,
     sew: Sew,
 ) -> RunResult {
-    assert_eq!(halt, Halt::Done, "{target:?} {kernel:?} {sew} did not complete");
+    assert_eq!(
+        halt,
+        Halt::Done,
+        "{target:?} {kernel:?} {sew} did not complete: {halt:?} after {} cycles (budget {}; \
+         raise SOC_RUN_TIMEOUT to extend)",
+        soc.cycle,
+        run_timeout()
+    );
     RunResult {
         kernel,
         sew,

@@ -16,7 +16,11 @@
 //! - [`mem`], [`bus`], [`dma`]: memory subsystem substrates.
 //! - [`cpu`]: RV32 ISS with CV32E40P-class timing.
 //! - [`caesar`], [`carus`]: the paper's two NMC macros.
-//! - [`soc`]: the HEEPerator system (cycle-stepped co-simulation).
+//! - [`soc`]: the HEEPerator system (cycle-accurate co-simulation).
+//! - [`clock`]: timing discipline — the event-driven skip-ahead layer
+//!   (`--timing=event`, the default) and the per-cycle differential
+//!   reference (`--timing=cycle`), equivalence locked by
+//!   `rust/tests/timing_equivalence.rs`.
 //! - [`kernels`], [`apps`]: benchmark kernels (3 targets × 9 kernels ×
 //!   3 bitwidths) and the Anomaly-Detection application.
 //! - [`energy`], [`area`]: calibrated 65 nm power/area models.
@@ -42,6 +46,7 @@ pub mod area;
 pub mod asm;
 pub mod benchlib;
 pub mod bus;
+pub mod clock;
 pub mod compare;
 pub mod cpu;
 pub mod dma;

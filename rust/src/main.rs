@@ -30,6 +30,12 @@
 //! additionally emits the machine-readable cycles + wall-time summary
 //! the CI perf-smoke job diffs against `bench-baseline.json`.
 //!
+//! Every subcommand accepts `--timing cycle|event` (or `--timing=MODE`)
+//! to pick the simulation timing discipline: `event` (the default) runs
+//! the skip-ahead event-driven core, `cycle` forces the per-cycle
+//! reference loop. Both produce identical outputs and counters — see
+//! `tests/timing_equivalence.rs` — differing only in wall-clock speed.
+//!
 //! (Hand-rolled argument parsing: clap is not in the offline vendor set.)
 
 use nmc::harness::{self, executor, Report, ScalePoint};
@@ -62,6 +68,10 @@ struct Cli {
     batch: Option<u32>,
     shard: bool,
     json: Option<String>,
+    /// Timing discipline: `cycle` (per-cycle reference) or `event`
+    /// (skip-ahead, the default). Accepted as `--timing event` or
+    /// `--timing=event`; also settable via the `SOC_TIMING` env var.
+    timing: Option<String>,
 }
 
 impl Cli {
@@ -82,6 +92,7 @@ impl Cli {
             batch: None,
             shard: false,
             json: None,
+            timing: None,
         }
     }
 }
@@ -166,6 +177,14 @@ fn parse_args(args: &[String]) -> Result<Cli, String> {
                 if let Some(v) = parse_str(args, &mut i) {
                     cli.json = Some(v);
                 }
+            }
+            "--timing" => {
+                if let Some(v) = parse_str(args, &mut i) {
+                    cli.timing = Some(v);
+                }
+            }
+            a if a.starts_with("--timing=") => {
+                cli.timing = Some(a["--timing=".len()..].to_string());
             }
             a if !a.starts_with("--") => {
                 // First free-standing word is the subcommand.
@@ -299,19 +318,24 @@ fn scale_spec(cli: &Cli) -> Result<(BatchSpec, Vec<u32>), String> {
     Ok((spec, tiles))
 }
 
-/// Render the machine-readable bench summary (`BENCH_5.json` schema):
-/// deterministic simulated cycles plus informational wall time per point.
+/// Render the machine-readable bench summary (`BENCH_6.json` schema):
+/// deterministic simulated cycles plus informational wall time and
+/// simulator throughput (simulated cycles per host second) per point.
 fn scale_json(points: &[ScalePoint]) -> String {
-    let mut s = String::from("{\n  \"schema\": \"heeperator-bench-v1\",\n  \"reports\": [\n");
+    let timing = nmc::clock::mode();
+    let mut s = format!(
+        "{{\n  \"schema\": \"heeperator-bench-v1\",\n  \"timing\": \"{timing}\",\n  \"reports\": [\n"
+    );
     for (i, p) in points.iter().enumerate() {
         s.push_str(&format!(
             "    {{\"id\": \"scale_t{}\", \"tiles\": {}, \"cycles\": {}, \"wall_ms\": {:.3}, \
-             \"speedup\": {:.4}, \"mean_utilization\": {:.4}, \"contention_cycles\": {}, \
-             \"energy_uj\": {:.3}}}{}\n",
+             \"sim_cycles_per_s\": {:.0}, \"speedup\": {:.4}, \"mean_utilization\": {:.4}, \
+             \"contention_cycles\": {}, \"energy_uj\": {:.3}}}{}\n",
             p.tiles,
             p.tiles,
             p.cycles,
             p.wall_ms,
+            p.sim_cycles_per_s,
             p.speedup,
             p.mean_utilization,
             p.contention_cycles,
@@ -352,6 +376,15 @@ fn main() {
             std::process::exit(2);
         }
     };
+    if let Some(spec) = &cli.timing {
+        match nmc::clock::TimingMode::parse(spec) {
+            Some(mode) => nmc::clock::set_global(mode),
+            None => {
+                eprintln!("error: unknown --timing `{spec}` (use `cycle` or `event`)");
+                std::process::exit(2);
+            }
+        }
+    }
     let out = cli.out.as_deref();
     let jobs = cli.jobs.unwrap_or_else(executor::default_jobs);
     // One memoizing session per invocation: every subcommand that
@@ -449,6 +482,8 @@ fn usage() -> String {
     writeln!(w, "       `scale` sweeps a batched workload across NMC tile counts: --tiles 1,2,4 --batch B [--shard]").unwrap();
     writeln!(w, "               --target caesar|carus (default carus), --family/--sew/--n/--p/--f as in sweep,").unwrap();
     writeln!(w, "               --json FILE writes the machine-readable cycles+wall-time summary (CI perf tracking)").unwrap();
+    writeln!(w, "       every subcommand accepts --timing cycle|event (skip-ahead event timing is the default;").unwrap();
+    writeln!(w, "               `cycle` forces the per-cycle reference loop; SOC_TIMING env var works too)").unwrap();
     o
 }
 
@@ -651,6 +686,23 @@ mod tests {
     }
 
     #[test]
+    fn timing_flag_parses_in_both_spellings() {
+        assert_eq!(p(&["scale", "--timing", "cycle"]).timing.as_deref(), Some("cycle"));
+        assert_eq!(p(&["all", "--timing=event"]).timing.as_deref(), Some("event"));
+        // Default: unset (the library then consults SOC_TIMING / default).
+        assert_eq!(p(&["scale"]).timing, None);
+        // A following flag is not swallowed as the value.
+        let cli = p(&["scale", "--timing", "--quick"]);
+        assert_eq!(cli.timing, None);
+        assert!(cli.quick);
+        // The mode names round-trip through the library parser.
+        for name in ["cycle", "event"] {
+            assert!(nmc::clock::TimingMode::parse(name).is_some(), "{name}");
+        }
+        assert!(nmc::clock::TimingMode::parse("warp").is_none());
+    }
+
+    #[test]
     fn usage_covers_every_subcommand() {
         let u = usage();
         for cmd in ["all", "table4", "fig11", "ablations", "ad", "sweep", "scale"] {
@@ -658,6 +710,7 @@ mod tests {
         }
         assert!(u.contains("--json"));
         assert!(u.contains("--tiles"));
+        assert!(u.contains("--timing"));
     }
 
     #[test]
@@ -667,6 +720,7 @@ mod tests {
                 tiles: 1,
                 cycles: 100,
                 wall_ms: 1.0,
+                sim_cycles_per_s: 100_000.0,
                 speedup: 1.0,
                 mean_utilization: 0.5,
                 contention_cycles: 3,
@@ -676,6 +730,7 @@ mod tests {
                 tiles: 4,
                 cycles: 40,
                 wall_ms: 0.5,
+                sim_cycles_per_s: 80_000.0,
                 speedup: 2.5,
                 mean_utilization: 0.9,
                 contention_cycles: 5,
@@ -684,9 +739,11 @@ mod tests {
         ];
         let s = scale_json(&points);
         assert!(s.contains("\"schema\": \"heeperator-bench-v1\""));
+        assert!(s.contains("\"timing\": \""));
         assert!(s.contains("\"aggregate_cycles\": 140"));
         assert!(s.contains("\"id\": \"scale_t1\""));
         assert!(s.contains("\"id\": \"scale_t4\""));
+        assert!(s.contains("\"sim_cycles_per_s\": 100000"));
         assert_eq!(s.matches("\"id\"").count(), 2);
     }
 

@@ -13,10 +13,13 @@
 //!    the host firmware: a static round-robin schedule where workload
 //!    `w` runs on tile `w % tiles` in round `w / tiles`.
 //! 2. [`run_planned`] pre-stages every input image in system SRAM,
-//!    then simulates: the host **polls** tile status registers, DMA-stages
-//!    the next workload's operands into an idle tile (and its
-//!    predecessor's results out) *while the other tiles execute* —
-//!    staging serializes on the single DMA, execution overlaps. For
+//!    then simulates: the host **sleeps** (`wfi`) on DMA-completion and
+//!    tile-done interrupts — gated per wait through
+//!    [`periph::IRQ_MASK`] so a done-but-undrained tile cannot spin a
+//!    later sleep — while it DMA-stages the next workload's operands
+//!    into an idle tile (and its predecessor's results out) *while the
+//!    other tiles execute*; staging serializes on the single DMA,
+//!    execution overlaps. For
 //!    NM-Carus tiles execution is autonomous ([`TileExec::Autonomous`]);
 //!    for NM-Caesar the micro-op stream *is* the DMA transfer
 //!    ([`TileExec::Stream`]), so scale-out degenerates to serial
@@ -44,7 +47,7 @@ use crate::energy::Breakdown;
 use crate::isa::reg::*;
 use crate::isa::Sew;
 use crate::kernels::golden::{self, WorkloadData};
-use crate::kernels::{engine, Engine, Kernel, Target, TileExec, TileProgram, SOC_RUN_TIMEOUT};
+use crate::kernels::{engine, run_timeout, Engine, Kernel, Target, TileExec, TileProgram};
 use crate::soc::{Halt, Soc, TileKind};
 
 /// One batched/sharded scale-out scenario (the memoization key of
@@ -301,8 +304,20 @@ pub fn plan(spec: &BatchSpec, tiles: usize) -> Result<Plan, String> {
     Ok(Plan { spec: *spec, tiles, kind, workloads, setup, streams, firmware, whole })
 }
 
-/// Program one DMA transfer and poll it to completion. The poll loop is
-/// the host's idle time — tiles keep executing underneath it.
+/// Program the tile interrupt-enable mask. The scheduler narrows it per
+/// wait: `0` while sleeping on the DMA (a *done-but-not-yet-drained*
+/// tile's sticky IRQ must not turn the sleep into a spin), `1 << t`
+/// while sleeping on tile `t`.
+fn fw_irq_mask(a: &mut Asm, mask: u32) {
+    a.li(T0, (PERIPH_BASE + periph::IRQ_MASK) as i32)
+        .li(T1, mask as i32)
+        .sw(T1, 0, T0);
+}
+
+/// Program one DMA transfer and sleep (`wfi`) until its completion
+/// interrupt; the status read acknowledges it. Tiles keep executing
+/// underneath the sleep. Caller keeps [`periph::IRQ_MASK`] at 0 so only
+/// the DMA (always enabled) can wake the loop.
 fn fw_dma(a: &mut Asm, lbl: &str, src: u32, dst: u32, len: u32, stream: bool) {
     debug_assert!(src % 4 == 0 && dst % 4 == 0 && len % 4 == 0);
     a.li(T0, (PERIPH_BASE + periph::DMA_SRC) as i32)
@@ -319,6 +334,7 @@ fn fw_dma(a: &mut Asm, lbl: &str, src: u32, dst: u32, len: u32, stream: bool) {
         .sw(T1, 0, T0)
         .li(T0, (PERIPH_BASE + periph::DMA_STATUS) as i32)
         .label(lbl)
+        .wfi()
         .lw(T1, 0, T0)
         .bne(T1, ZERO, lbl);
 }
@@ -330,12 +346,29 @@ fn fw_tile_mode(a: &mut Asm, t: usize, on: bool) {
         .sw(T1, 0, T0);
 }
 
-/// Poll tile `t`'s status register until idle.
+/// Spin on tile `t`'s status register until idle. Only used for
+/// NM-Caesar tiles, which raise no interrupt: their residual pipeline
+/// drain after the stream DMA is ≤ a few cycles, so the spin is bounded.
 fn fw_poll_tile(a: &mut Asm, lbl: &str, t: usize) {
     a.li(T0, (PERIPH_BASE + periph::tile_status(t)) as i32)
         .label(lbl)
         .lw(T1, 0, T0)
         .bne(T1, ZERO, lbl);
+}
+
+/// Sleep until NM-Carus tile `t` completes. The done IRQ is sticky
+/// (level-triggered, cleared when the tile is next started), so the
+/// `wfi` falls straight through if the tile finished while the host was
+/// busy elsewhere — no lost wake-up. The mask is restored to 0 after
+/// the wait so the still-pending IRQ cannot spin later DMA sleeps.
+fn fw_wait_tile(a: &mut Asm, lbl: &str, t: usize) {
+    fw_irq_mask(a, 1 << t);
+    a.li(T0, (PERIPH_BASE + periph::tile_status(t)) as i32)
+        .label(lbl)
+        .wfi()
+        .lw(T1, 0, T0)
+        .bne(T1, ZERO, lbl);
+    fw_irq_mask(a, 0);
 }
 
 /// Compile the static round-robin schedule into host firmware.
@@ -348,6 +381,14 @@ fn build_firmware(
 ) -> Result<Program, String> {
     let mut a = Asm::new(0);
     let mut nl = 0u32; // unique poll-label counter
+
+    // Waits are interrupt-driven (`wfi`): only the DMA may wake the host
+    // until a specific tile is being waited on.
+    fw_irq_mask(&mut a, 0);
+    let fw_wait = |a: &mut Asm, lbl: &str, t: usize| match kind {
+        TileKind::Carus => fw_wait_tile(a, lbl, t),
+        TileKind::Caesar => fw_poll_tile(a, lbl, t),
+    };
 
     // One-time tile setup: upload the eCPU kernel image (config mode).
     if !setup.1.is_empty() {
@@ -366,7 +407,7 @@ fn build_firmware(
         if w >= tiles {
             // The tile still runs round r-1: wait, then drain its result.
             nl += 1;
-            fw_poll_tile(&mut a, &format!("p{nl}"), t);
+            fw_wait(&mut a, &format!("p{nl}"), t);
             let prev = &workloads[w - tiles];
             let (out_sram, out_off, out_len) = prev.output;
             nl += 1;
@@ -408,7 +449,7 @@ fn build_firmware(
     for (w, work) in workloads.iter().enumerate().skip(last_start) {
         let t = w % tiles;
         nl += 1;
-        fw_poll_tile(&mut a, &format!("f{nl}"), t);
+        fw_wait(&mut a, &format!("f{nl}"), t);
         let (out_sram, out_off, out_len) = work.output;
         nl += 1;
         fw_dma(&mut a, &format!("e{nl}"), bus::tile_base(t) + out_off, out_sram, out_len, false);
@@ -441,12 +482,15 @@ pub fn run_planned(plan: &Plan) -> BatchRunResult {
 
     soc.load_firmware(&plan.firmware, 0);
     soc.reset_stats();
-    let (halt, _) = soc.run(SOC_RUN_TIMEOUT);
+    let budget = run_timeout();
+    let (halt, cycles) = soc.run(budget);
     assert_eq!(
         halt,
         Halt::Done,
-        "{:?} x{} schedule did not complete",
+        "{:?} schedule ({} workloads on {} tiles) did not complete: {halt:?} after {cycles} \
+         cycles (budget {budget}; raise SOC_RUN_TIMEOUT to extend)",
         plan.spec,
+        plan.workloads.len(),
         plan.tiles
     );
 

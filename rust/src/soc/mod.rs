@@ -26,11 +26,21 @@
 //!    target slave was used by the DMA this cycle.
 //!
 //! Firmware conventions: programs end with `ebreak`; `wfi` sleeps until
-//! any NM-Carus done interrupt or DMA completion.
+//! an *enabled* NM-Carus done interrupt (the [`periph::IRQ_MASK`]
+//! register, reset all-ones) or DMA completion.
+//!
+//! Time advances under one of two disciplines ([`crate::clock`]): the
+//! per-cycle reference above, or the default event-driven mode in which
+//! [`Soc::run`] skips over strictly quiet spans — cycles that provably
+//! only decrement countdowns — updating every counter in closed form
+//! and executing all state transitions through the same per-cycle
+//! [`Soc::step`] at span boundaries. The two are counter-identical by
+//! construction (DESIGN.md §10).
 
 use crate::bus::{self, periph, Master, Slave};
 use crate::caesar::Caesar;
 use crate::carus::Carus;
+use crate::clock::{self, EventKind, EventQueue, TimingMode};
 use crate::cpu::{CpuConfig, CpuCore, MemIf};
 use crate::dma::{Dma, DmaMode};
 use crate::energy::{self, Activity, Breakdown, HostKind};
@@ -118,6 +128,39 @@ impl Tile {
         }
     }
 
+    /// Skip-ahead support: upcoming strictly-quiet cycles for this tile
+    /// (`u64::MAX` = no self-scheduled event). NM-Caesar is passive —
+    /// its pipeline countdown is pure counter work with no externally
+    /// visible event, so it never bounds the horizon; NM-Carus defers to
+    /// [`Carus::quiet_horizon`].
+    pub fn quiet_horizon(&self) -> u64 {
+        match self {
+            Tile::Caesar(_) => u64::MAX,
+            Tile::Carus(c) => c.quiet_horizon(),
+        }
+    }
+
+    /// Advance the tile by `k` quiet cycles in closed form; returns the
+    /// number of those cycles the tile counts as busy (the per-cycle
+    /// [`Tile::busy`] observations the SoC sums into `tile_busy`).
+    pub fn skip(&mut self, k: u64) -> u64 {
+        match self {
+            Tile::Caesar(c) => c.skip(k),
+            Tile::Carus(c) => {
+                // Within a quiet span `busy()` is constant: `running`
+                // cannot change and the VPU horizon keeps the pipeline
+                // state (busy/idle) fixed.
+                let busy = c.busy();
+                c.skip(k);
+                if busy {
+                    k
+                } else {
+                    0
+                }
+            }
+        }
+    }
+
     /// Interrupt pin (NM-Carus completion; NM-Caesar has none).
     pub fn irq(&self) -> bool {
         match self {
@@ -193,6 +236,11 @@ pub struct Soc {
     pub dma: Dma,
     pub counters: SocCounters,
     state: CpuState,
+    /// Timing discipline (see [`crate::clock`]); fixed at construction
+    /// from the thread's mode, overridable via [`Soc::set_timing`].
+    timing: TimingMode,
+    /// [`periph::IRQ_MASK`]: bit `i` lets tile `i`'s IRQ wake a `wfi`.
+    irq_mask: u32,
     /// Pre-decoded host program (indexed from `code_base`).
     code_base: u32,
     code: Vec<Instr>,
@@ -242,6 +290,8 @@ impl Soc {
             dma: Dma::new(),
             counters: SocCounters::default(),
             state: CpuState::Ready,
+            timing: clock::mode(),
+            irq_mask: u32::MAX,
             code_base: 0,
             code: Vec::new(),
             dma_irq: false,
@@ -391,14 +441,55 @@ impl Soc {
         out
     }
 
+    /// The active timing discipline.
+    pub fn timing(&self) -> TimingMode {
+        self.timing
+    }
+
+    /// Override the timing discipline (tests / differential harnesses).
+    pub fn set_timing(&mut self, mode: TimingMode) {
+        self.timing = mode;
+    }
+
+    /// Every halt condition is quiescent: firmware done, DMA drained,
+    /// no autonomous tile computation in flight.
+    fn halted(&self) -> bool {
+        self.state == CpuState::Halted
+            && !self.dma.busy()
+            && !self.tiles.iter().any(Tile::autonomous_busy)
+    }
+
+    /// An interrupt that would wake a `wfi`-sleeping CPU is pending:
+    /// DMA completion (always enabled) or a masked-in tile IRQ.
+    fn irq_pending(&self) -> bool {
+        self.dma_irq
+            || self
+                .tiles
+                .iter()
+                .enumerate()
+                .any(|(i, t)| self.irq_mask & (1 << i) != 0 && t.irq())
+    }
+
     /// Run until the firmware halts. Returns (halt reason, cycles run).
+    ///
+    /// How simulated time advances depends on the [`TimingMode`]: the
+    /// per-cycle reference steps every cycle; the default event-driven
+    /// mode skips strictly quiet spans in closed form. Outputs, halt
+    /// reason, cycle counts and every activity/energy counter are
+    /// identical between the two (locked by
+    /// `rust/tests/timing_equivalence.rs`).
     pub fn run(&mut self, max_cycles: u64) -> (Halt, u64) {
+        match self.timing {
+            TimingMode::Cycle => self.run_cycle(max_cycles),
+            TimingMode::Event => self.run_event(max_cycles),
+        }
+    }
+
+    /// Legacy per-cycle loop: the differential reference.
+    fn run_cycle(&mut self, max_cycles: u64) -> (Halt, u64) {
         let start = self.cycle;
         loop {
-            if self.state == CpuState::Halted
-                && !self.dma.busy()
-                && !self.tiles.iter().any(Tile::autonomous_busy)
-            {
+            if self.halted() {
                 return (Halt::Done, self.cycle - start);
             }
             if self.cycle - start >= max_cycles {
@@ -406,6 +497,91 @@ impl Soc {
             }
             if self.step() {
                 return (Halt::Trap, self.cycle - start);
+            }
+        }
+    }
+
+    /// Event-driven loop: between steps, derive the next interesting
+    /// cycle from component state and jump there in one closed-form
+    /// update. Clamping the jump to the remaining cycle budget keeps
+    /// even `Halt::Timeout` counter-identical to per-cycle stepping.
+    fn run_event(&mut self, max_cycles: u64) -> (Halt, u64) {
+        let start = self.cycle;
+        loop {
+            if self.halted() {
+                return (Halt::Done, self.cycle - start);
+            }
+            let elapsed = self.cycle - start;
+            if elapsed >= max_cycles {
+                return (Halt::Timeout, elapsed);
+            }
+            let k = self.quiet_horizon().min(max_cycles - elapsed);
+            if k == 0 {
+                if self.step() {
+                    return (Halt::Trap, self.cycle - start);
+                }
+            } else {
+                self.skip_quiet(k);
+            }
+        }
+    }
+
+    /// Number of upcoming cycles that are *strictly quiet* — every one
+    /// of them would only decrement countdowns (tile pipelines, the CPU
+    /// stall counter) and bump cycle counters, with no state transition
+    /// and no externally visible change. The earliest entry of the
+    /// derived event queue is the first cycle that must run through
+    /// [`Soc::step`]; `u64::MAX` means nothing is scheduled at all (the
+    /// run can only end by exhausting its cycle budget).
+    fn quiet_horizon(&self) -> u64 {
+        // Degenerate immediate events, checked without building a queue:
+        // an executing CPU ([`EventKind::PollRetry`]) and an active DMA
+        // or pending completion edge ([`EventKind::DmaDone`]) make the
+        // very next cycle interesting — as does a pending wake IRQ.
+        match self.state {
+            CpuState::Ready | CpuState::WaitBus => return 0,
+            CpuState::Wfi if self.irq_pending() => return 0,
+            _ => {}
+        }
+        if self.dma.busy() || self.dma_was_busy {
+            return 0;
+        }
+        let mut q = EventQueue::new();
+        if let CpuState::Stall(n) = self.state {
+            q.push(self.cycle + u64::from(n), EventKind::CpuStallRelease);
+        }
+        for (i, t) in self.tiles.iter().enumerate() {
+            let h = t.quiet_horizon();
+            if h != u64::MAX {
+                q.push(self.cycle + h + 1, EventKind::TileDone(i));
+            }
+        }
+        match q.pop() {
+            Some(ev) => ev.at - self.cycle - 1,
+            None => u64::MAX,
+        }
+    }
+
+    /// Advance `k` strictly quiet cycles in closed form; exactly
+    /// equivalent to `k` calls of [`Soc::step`] provided
+    /// `k <= self.quiet_horizon()`.
+    fn skip_quiet(&mut self, k: u64) {
+        self.cycle += k;
+        for (i, t) in self.tiles.iter_mut().enumerate() {
+            self.tile_busy[i] += t.skip(k);
+        }
+        // The DMA is idle in a quiet span; per-cycle stepping would
+        // clear the port-arbitration markers every cycle.
+        self.dma_rd_slave = None;
+        self.dma_wr_slave = None;
+        match self.state {
+            CpuState::Halted | CpuState::Wfi => self.counters.cpu_sleep += k,
+            CpuState::Stall(n) => {
+                self.counters.cpu_active += k;
+                self.state = CpuState::Stall(n - k as u32);
+            }
+            CpuState::Ready | CpuState::WaitBus => {
+                unreachable!("quiet span with an executing CPU")
             }
         }
     }
@@ -507,7 +683,7 @@ impl Soc {
                 false
             }
             CpuState::Wfi => {
-                if self.dma_irq || self.tiles.iter().any(Tile::irq) {
+                if self.irq_pending() {
                     self.state = CpuState::Ready;
                     self.counters.cpu_active += 1;
                 } else {
@@ -593,6 +769,7 @@ impl Soc {
             tiles: &mut self.tiles,
             dma: &mut self.dma,
             dma_irq: &mut self.dma_irq,
+            irq_mask: &mut self.irq_mask,
             cycle: self.cycle,
             extra_cycles: 0,
         };
@@ -715,6 +892,7 @@ struct HostPort<'a> {
     tiles: &'a mut Vec<Tile>,
     dma: &'a mut Dma,
     dma_irq: &'a mut bool,
+    irq_mask: &'a mut u32,
     cycle: u64,
     /// Slave-imposed extra cycles for this access (e.g. Carus bank conflict).
     extra_cycles: u32,
@@ -739,6 +917,7 @@ impl HostPort<'_> {
                 v
             }
             periph::MCYCLE => self.cycle as u32,
+            periph::IRQ_MASK => *self.irq_mask,
             _ if (periph::TILE_MODE_BASE..periph::tile_mode(bus::MAX_TILES)).contains(&off) => {
                 let i = ((off - periph::TILE_MODE_BASE) / 4) as usize;
                 self.tiles.get(i).map_or(0, |t| t.mode() as u32)
@@ -772,6 +951,7 @@ impl HostPort<'_> {
                 self.dma.start(mode, s, d, l);
                 *self.dma_irq = false;
             }
+            periph::IRQ_MASK => *self.irq_mask = val,
             _ if (periph::TILE_MODE_BASE..periph::tile_mode(bus::MAX_TILES)).contains(&off) => {
                 let i = ((off - periph::TILE_MODE_BASE) / 4) as usize;
                 if let Some(t) = self.tiles.get_mut(i) {

@@ -1,0 +1,166 @@
+//! Differential contract of the event-driven timing core: the skip-ahead
+//! `event` mode must be **indistinguishable** from the per-cycle `cycle`
+//! reference on everything the simulator reports — output bytes,
+//! simulated cycles, the full activity record (every counter the energy
+//! model reads), and the energy breakdown itself. Wall-clock speed is the
+//! only permitted difference.
+//!
+//! The grid here samples every target and element width plus the kernels
+//! with distinct timing structure (pure compute, DMA-heavy, eCPU-looping,
+//! multi-round), and the multi-tile scheduler in batch and shard mode.
+//! A full-grid sweep runs under `--ignored` (CI quick job runs the
+//! default set).
+//!
+//! Tests run the two modes on the *same thread* via `clock::with_mode` —
+//! deliberately below the `SweepSession` cache, so both runs really
+//! simulate.
+
+use nmc::clock::{self, TimingMode};
+use nmc::isa::Sew;
+use nmc::kernels::{self, Kernel, RunResult, Target};
+use nmc::sched::{self, BatchSpec};
+
+/// Run one kernel point under both timing modes and assert equivalence.
+fn assert_point_equivalent(target: Target, kernel: Kernel, sew: Sew, seed: u64) {
+    let ctx = format!("{target:?} {kernel:?} {sew} seed={seed}");
+    let cyc: RunResult =
+        clock::with_mode(TimingMode::Cycle, || kernels::run(target, kernel, sew, seed));
+    let evt: RunResult =
+        clock::with_mode(TimingMode::Event, || kernels::run(target, kernel, sew, seed));
+    assert_eq!(evt.output, cyc.output, "{ctx}: output bytes diverged");
+    assert_eq!(evt.cycles, cyc.cycles, "{ctx}: simulated cycles diverged");
+    assert_eq!(evt.outputs, cyc.outputs, "{ctx}: output count diverged");
+    // The activity record carries every counter the energy model reads
+    // (cpu active/sleep, fetches, per-macro accesses, DMA, tile
+    // busy/idle, ALU ops...): Debug-format equality pins all of them.
+    assert_eq!(
+        format!("{:?}", evt.activity),
+        format!("{:?}", cyc.activity),
+        "{ctx}: activity counters diverged"
+    );
+    assert_eq!(evt.energy, cyc.energy, "{ctx}: energy breakdown diverged");
+}
+
+/// Run one batch spec under both timing modes and assert equivalence.
+fn assert_batch_equivalent(spec: &BatchSpec, tiles: usize) {
+    let ctx = format!("{:?} x{tiles}", spec);
+    let cyc = clock::with_mode(TimingMode::Cycle, || sched::run_batch(spec, tiles))
+        .unwrap_or_else(|e| panic!("{ctx}: cycle-mode run failed: {e}"));
+    let evt = clock::with_mode(TimingMode::Event, || sched::run_batch(spec, tiles))
+        .unwrap_or_else(|e| panic!("{ctx}: event-mode run failed: {e}"));
+    assert_eq!(evt.outputs, cyc.outputs, "{ctx}: output bytes diverged");
+    assert_eq!(evt.cycles, cyc.cycles, "{ctx}: simulated cycles diverged");
+    assert_eq!(evt.dma_active_cycles, cyc.dma_active_cycles, "{ctx}: dma activity diverged");
+    assert_eq!(evt.dma_transfers, cyc.dma_transfers, "{ctx}: dma transfers diverged");
+    assert_eq!(evt.bus_txns, cyc.bus_txns, "{ctx}: bus transactions diverged");
+    assert_eq!(
+        evt.contention_cycles, cyc.contention_cycles,
+        "{ctx}: contention cycles diverged"
+    );
+    for (i, (e, c)) in evt.per_tile.iter().zip(cyc.per_tile.iter()).enumerate() {
+        assert_eq!(e.busy_cycles, c.busy_cycles, "{ctx}: tile {i} busy cycles diverged");
+        assert_eq!(e.workloads, c.workloads, "{ctx}: tile {i} workload count diverged");
+    }
+    assert_eq!(evt.energy, cyc.energy, "{ctx}: energy breakdown diverged");
+}
+
+/// Kernels with structurally distinct timing: element-wise (DMA-bound on
+/// NM-Caesar), matmul (multi-instruction eCPU loop on NM-Carus, µop
+/// stream on NM-Caesar), conv2d (strided staging), maxpool (packed
+/// output rows).
+fn sampled_kernels(sew: Sew) -> Vec<Kernel> {
+    let sb = sew.bytes();
+    vec![
+        Kernel::Add { n: 512 / sb },
+        Kernel::Matmul { p: 64 / sb },
+        Kernel::Conv2d { n: 128 / sb, f: 3 },
+        Kernel::Maxpool { n: 128 / sb },
+    ]
+}
+
+#[test]
+fn kernel_grid_is_timing_equivalent() {
+    for target in Target::ALL {
+        for sew in Sew::ALL {
+            for kernel in sampled_kernels(sew) {
+                if kernel.validate(target, sew).is_err() {
+                    continue;
+                }
+                assert_point_equivalent(target, kernel, sew, 7);
+            }
+        }
+    }
+}
+
+#[test]
+fn seeds_do_not_break_equivalence() {
+    // Data-dependent control flow would show up here (it must not: the
+    // timing model is data-independent, and skip-ahead preserves it).
+    for seed in [1, 2, 99] {
+        assert_point_equivalent(Target::Carus, Kernel::Matmul { p: 32 }, Sew::E8, seed);
+        assert_point_equivalent(Target::Caesar, Kernel::Add { n: 256 }, Sew::E8, seed);
+    }
+}
+
+#[test]
+fn batch_scheduler_is_timing_equivalent_across_tiles() {
+    let spec = BatchSpec {
+        target: Target::Carus,
+        kernel: Kernel::Matmul { p: 128 },
+        sew: Sew::E8,
+        seed: 3,
+        batch: 8,
+        shard: false,
+    };
+    for tiles in [1, 4] {
+        assert_batch_equivalent(&spec, tiles);
+    }
+}
+
+#[test]
+fn caesar_batch_is_timing_equivalent() {
+    // NM-Caesar tiles keep the bounded spin-poll wait (no completion IRQ
+    // line): the poll loop itself must skip identically.
+    let spec = BatchSpec {
+        target: Target::Caesar,
+        kernel: Kernel::Add { n: 512 },
+        sew: Sew::E8,
+        seed: 5,
+        batch: 6,
+        shard: false,
+    };
+    for tiles in [1, 3] {
+        assert_batch_equivalent(&spec, tiles);
+    }
+}
+
+#[test]
+fn sharded_batch_is_timing_equivalent() {
+    let spec = BatchSpec {
+        target: Target::Carus,
+        kernel: Kernel::Matmul { p: 128 },
+        sew: Sew::E8,
+        seed: 3,
+        batch: 4,
+        shard: true,
+    };
+    assert_batch_equivalent(&spec, 4);
+}
+
+/// Full paper-shaped grid — expensive; run with `cargo test -- --ignored`.
+#[test]
+#[ignore = "full grid: minutes of cycle-mode simulation; the sampled grid covers CI"]
+fn full_paper_grid_is_timing_equivalent() {
+    use nmc::kernels::Family;
+    for target in Target::ALL {
+        for family in Family::ALL {
+            for sew in Sew::ALL {
+                let kernel = Kernel::paper_default(family, target, sew);
+                if kernel.validate(target, sew).is_err() {
+                    continue;
+                }
+                assert_point_equivalent(target, kernel, sew, 5);
+            }
+        }
+    }
+}
