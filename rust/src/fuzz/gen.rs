@@ -1,0 +1,341 @@
+//! Seeded random generation: the splitmix64 generator plus the
+//! random-instruction and random-scenario builders shared by the
+//! differential fuzzer ([`crate::fuzz`]) and the property-based tests
+//! (`rust/tests/prop_invariants.rs`).
+//!
+//! Everything here is deterministic in the seed: the same `Rng` state
+//! produces the same instruction/scenario stream on every platform, which
+//! is what makes `fuzz-repro-<seed>.json` files replayable.
+
+use crate::caesar::isa as cisa;
+use crate::isa::rv32::{AluOp, BranchOp, Instr, LoadOp, MulOp, StoreOp};
+use crate::isa::xcv::{self, XcvInstr, XcvOp};
+use crate::isa::xvnmc::{VInstr, VOp, VSrc};
+use crate::isa::{Reg, Sew};
+use crate::kernels::{Family, Kernel, Target};
+use crate::sched::BatchSpec;
+
+/// Splitmix64: tiny, deterministic, good-enough generator for inputs.
+#[derive(Debug, Clone)]
+pub struct Rng(pub u64);
+
+impl Rng {
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+    pub fn next_u32(&mut self) -> u32 {
+        self.next_u64() as u32
+    }
+    /// Uniform value in `0..n` (n > 0).
+    pub fn below(&mut self, n: u32) -> u32 {
+        self.next_u32() % n
+    }
+    /// Random element value (full range of the SEW), sign-extended to i64.
+    pub fn elem(&mut self, sew: Sew) -> i64 {
+        match sew {
+            Sew::E8 => self.next_u32() as u8 as i8 as i64,
+            Sew::E16 => self.next_u32() as u16 as i16 as i64,
+            Sew::E32 => self.next_u32() as i32 as i64,
+        }
+    }
+}
+
+/// Random GPR index.
+pub fn rand_reg(rng: &mut Rng) -> Reg {
+    (rng.next_u32() % 32) as Reg
+}
+
+/// Random valid RV32IM instruction (every format the decoder accepts).
+pub fn rand_rv32_instr(rng: &mut Rng) -> Instr {
+    let rd = rand_reg(rng);
+    let rs1 = rand_reg(rng);
+    let rs2 = rand_reg(rng);
+    let imm12 = (rng.next_u32() as i32 % 2048).clamp(-2048, 2047);
+    match rng.next_u32() % 10 {
+        0 => Instr::Lui { rd, imm: ((rng.next_u32() & 0xfffff) << 12) as i32 },
+        1 => Instr::Auipc { rd, imm: ((rng.next_u32() & 0xfffff) << 12) as i32 },
+        2 => {
+            let ops = [
+                AluOp::Add,
+                AluOp::Sub,
+                AluOp::Sll,
+                AluOp::Slt,
+                AluOp::Sltu,
+                AluOp::Xor,
+                AluOp::Srl,
+                AluOp::Sra,
+                AluOp::Or,
+                AluOp::And,
+            ];
+            Instr::Alu { op: ops[(rng.next_u32() % 10) as usize], rd, rs1, rs2 }
+        }
+        3 => {
+            let ops = [AluOp::Add, AluOp::Slt, AluOp::Sltu, AluOp::Xor, AluOp::Or, AluOp::And];
+            Instr::AluImm { op: ops[(rng.next_u32() % 6) as usize], rd, rs1, imm: imm12 }
+        }
+        4 => {
+            let ops = [AluOp::Sll, AluOp::Srl, AluOp::Sra];
+            Instr::AluImm {
+                op: ops[(rng.next_u32() % 3) as usize],
+                rd,
+                rs1,
+                imm: (rng.next_u32() % 32) as i32,
+            }
+        }
+        5 => {
+            let ops = [
+                MulOp::Mul,
+                MulOp::Mulh,
+                MulOp::Mulhsu,
+                MulOp::Mulhu,
+                MulOp::Div,
+                MulOp::Divu,
+                MulOp::Rem,
+                MulOp::Remu,
+            ];
+            Instr::MulDiv { op: ops[(rng.next_u32() % 8) as usize], rd, rs1, rs2 }
+        }
+        6 => {
+            let ops = [LoadOp::Lb, LoadOp::Lh, LoadOp::Lw, LoadOp::Lbu, LoadOp::Lhu];
+            Instr::Load { op: ops[(rng.next_u32() % 5) as usize], rd, rs1, off: imm12 }
+        }
+        7 => {
+            let ops = [StoreOp::Sb, StoreOp::Sh, StoreOp::Sw];
+            Instr::Store { op: ops[(rng.next_u32() % 3) as usize], rs2, rs1, off: imm12 }
+        }
+        8 => {
+            let ops = [
+                BranchOp::Beq,
+                BranchOp::Bne,
+                BranchOp::Blt,
+                BranchOp::Bge,
+                BranchOp::Bltu,
+                BranchOp::Bgeu,
+            ];
+            Instr::Branch { op: ops[(rng.next_u32() % 6) as usize], rs1, rs2, off: (imm12 / 2) * 2 }
+        }
+        _ => Instr::Jal { rd, off: (imm12 / 2) * 2 },
+    }
+}
+
+/// Every xvnmc arithmetic/logic/permutation op (Table II order).
+pub const XVNMC_OPS: [VOp; 19] = [
+    VOp::Add,
+    VOp::Sub,
+    VOp::Mul,
+    VOp::Macc,
+    VOp::And,
+    VOp::Or,
+    VOp::Xor,
+    VOp::Min,
+    VOp::Minu,
+    VOp::Max,
+    VOp::Maxu,
+    VOp::Sll,
+    VOp::Srl,
+    VOp::Sra,
+    VOp::Mv,
+    VOp::SlideUp,
+    VOp::SlideDown,
+    VOp::Slide1Up,
+    VOp::Slide1Down,
+];
+
+/// Random valid xvnmc instruction: mostly arithmetic `VInstr::Op` (direct
+/// and indirect addressing, every source kind Table II allows), with a
+/// tail of element moves and vsetvl-family config instructions. All
+/// immediate fields are pre-masked to their encodable widths so
+/// `encode ∘ decode = id` is a true invariant of the generator's output.
+pub fn rand_xvnmc_instr(rng: &mut Rng) -> VInstr {
+    if rng.below(5) == 0 {
+        // Moves + config (the non-Op 20%).
+        return match rng.below(5) {
+            0 => VInstr::Emvv { vd: rng.below(32) as u8, idx: rand_reg(rng), rs1: rand_reg(rng) },
+            1 => VInstr::Emvx { rd: rand_reg(rng), vs2: rng.below(32) as u8, idx: rand_reg(rng) },
+            2 => VInstr::VsetVli {
+                rd: rand_reg(rng),
+                rs1: rand_reg(rng),
+                vtype: (rng.next_u32() & 0x7ff) as u16,
+            },
+            3 => VInstr::VsetIVli {
+                rd: rand_reg(rng),
+                avl: rng.below(32) as u8,
+                vtype: (rng.next_u32() & 0x3ff) as u16,
+            },
+            _ => VInstr::VsetVl { rd: rand_reg(rng), rs1: rand_reg(rng), rs2: rand_reg(rng) },
+        };
+    }
+    loop {
+        let op = XVNMC_OPS[rng.below(XVNMC_OPS.len() as u32) as usize];
+        let src = match rng.below(3) {
+            0 => VSrc::V(rng.below(32) as u8),
+            1 => VSrc::X(rand_reg(rng)),
+            _ => VSrc::I((rng.next_u32() as i32 % 16) as i8),
+        };
+        if !op.allows(src.kind()) {
+            continue;
+        }
+        let indirect = rng.below(2) == 1;
+        return VInstr::Op {
+            op,
+            vd: if indirect { 0 } else { rng.below(32) as u8 },
+            vs2: if indirect { 0 } else { rng.below(32) as u8 },
+            src,
+            indirect,
+            idx_gpr: if indirect { rand_reg(rng) } else { 0 },
+        };
+    }
+}
+
+/// Random valid Xcv instruction (resampled until `xcv::valid`).
+pub fn rand_xcv_instr(rng: &mut Rng) -> XcvInstr {
+    let ops = [XcvOp::SdotSp, XcvOp::Add, XcvOp::Sub, XcvOp::Min, XcvOp::Max, XcvOp::Sra];
+    loop {
+        let op = ops[rng.below(6) as usize];
+        let sew = Sew::ALL[rng.below(3) as usize];
+        if !xcv::valid(op, sew) {
+            continue;
+        }
+        return XcvInstr { op, sew, rd: rand_reg(rng), rs1: rand_reg(rng), rs2: rand_reg(rng) };
+    }
+}
+
+/// Random NM-Caesar micro-op (any op, any in-range bank addresses).
+pub fn rand_caesar_microop(rng: &mut Rng) -> cisa::MicroOp {
+    cisa::MicroOp {
+        op: cisa::Op::ALL[rng.below(cisa::Op::ALL.len() as u32) as usize],
+        src1: rng.below(8192) as u16,
+        src2: rng.below(8192) as u16,
+    }
+}
+
+/// Random small kernel shape for `family`, valid on **both** `target` and
+/// the CPU (the differential oracle runs every case on both). Shapes stay
+/// deliberately small — the fuzzer's value is in crossing many scenarios,
+/// not in giant workloads. `None` if no valid shape was found (does not
+/// happen for the built-in families, but keeps the contract honest).
+pub fn rand_kernel(rng: &mut Rng, family: Family, target: Target, sew: Sew) -> Option<Kernel> {
+    // Elements per 32-bit word: the alignment unit of every staging path.
+    let unit = 4 / sew.bytes();
+    for _ in 0..64 {
+        let k = match family {
+            Family::Xor => Kernel::Xor { n: unit * (1 + rng.below(64)) },
+            Family::Add => Kernel::Add { n: unit * (1 + rng.below(64)) },
+            Family::Mul => Kernel::Mul { n: unit * (1 + rng.below(64)) },
+            Family::Relu => Kernel::Relu { n: unit * (1 + rng.below(64)) },
+            Family::LeakyRelu => Kernel::LeakyRelu { n: unit * (1 + rng.below(64)) },
+            Family::Matmul => Kernel::Matmul { p: unit * (1 + rng.below(32)) },
+            Family::Gemm => Kernel::Gemm { p: unit * (1 + rng.below(32)) },
+            Family::Conv2d => {
+                let n = unit * (2 + rng.below(16));
+                Kernel::Conv2d { n, f: 1 + rng.below(4.min(n)) }
+            }
+            Family::Maxpool => Kernel::Maxpool { n: unit.max(2) * (1 + rng.below(16)) },
+        };
+        if k.validate(target, sew).is_ok() && k.validate(Target::Cpu, sew).is_ok() {
+            return Some(k);
+        }
+    }
+    None
+}
+
+/// True if the scheduler's column-sharding decomposition supports this
+/// family (2-D window kernels span the split and cannot shard).
+pub fn shardable(family: Family) -> bool {
+    !matches!(family, Family::Conv2d | Family::Maxpool)
+}
+
+/// Random batch scenario: an NMC target, a kernel family × SEW × small
+/// shape, a batch of 1–3 workloads (or a sharded single workload on the
+/// shardable families), and 1–16 tiles. Returns `(spec, tiles)`. The
+/// scenario is *plausible*, not guaranteed plannable — callers retry
+/// through [`crate::sched::plan`].
+pub fn rand_batch_scenario(rng: &mut Rng) -> (BatchSpec, u32) {
+    let target = if rng.below(2) == 0 { Target::Caesar } else { Target::Carus };
+    let family = Family::ALL[rng.below(Family::ALL.len() as u32) as usize];
+    let sew = Sew::ALL[rng.below(3) as usize];
+    let kernel = rand_kernel(rng, family, target, sew)
+        .unwrap_or(Kernel::Add { n: 64 / sew.bytes() });
+    let shard = shardable(family) && rng.below(3) == 0;
+    let spec = BatchSpec {
+        target,
+        kernel,
+        sew,
+        seed: rng.next_u64(),
+        batch: if shard { 1 } else { 1 + rng.below(3) },
+        shard,
+    };
+    (spec, 1 + rng.below(16))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::xvnmc;
+
+    #[test]
+    fn splitmix_is_deterministic_and_full_period_ish() {
+        let mut a = Rng(42);
+        let mut b = Rng(42);
+        let xs: Vec<u64> = (0..16).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..16).map(|_| b.next_u64()).collect();
+        assert_eq!(xs, ys);
+        // No immediate cycle.
+        assert_eq!(xs.iter().collect::<std::collections::HashSet<_>>().len(), 16);
+    }
+
+    #[test]
+    fn generated_instructions_are_always_encodable() {
+        let mut rng = Rng(0xfeed);
+        for _ in 0..500 {
+            let v = rand_xvnmc_instr(&mut rng);
+            assert_eq!(xvnmc::decode(xvnmc::encode(&v)), Some(v));
+            let x = rand_xcv_instr(&mut rng);
+            assert_eq!(xcv::decode(xcv::encode(&x)), Some(x));
+            let m = rand_caesar_microop(&mut rng);
+            assert_eq!(cisa::decode(cisa::encode(&m)), Some(m));
+        }
+    }
+
+    #[test]
+    fn random_kernels_validate_on_target_and_cpu() {
+        let mut rng = Rng(0xbeef);
+        for family in Family::ALL {
+            for target in [Target::Caesar, Target::Carus] {
+                for sew in Sew::ALL {
+                    let k = rand_kernel(&mut rng, family, target, sew)
+                        .unwrap_or_else(|| panic!("no shape for {family:?} {target:?} {sew}"));
+                    assert_eq!(k.validate(target, sew), Ok(()));
+                    assert_eq!(k.validate(Target::Cpu, sew), Ok(()));
+                    assert_eq!(k.family(), family);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scenarios_cover_both_targets_and_shard_modes() {
+        let mut rng = Rng(7);
+        let (mut caesar, mut carus, mut sharded) = (0, 0, 0);
+        for _ in 0..200 {
+            let (spec, tiles) = rand_batch_scenario(&mut rng);
+            assert!(tiles >= 1 && tiles <= 16);
+            assert!(spec.batch >= 1);
+            match spec.target {
+                Target::Caesar => caesar += 1,
+                Target::Carus => carus += 1,
+                Target::Cpu => panic!("the CPU is the host, never a scenario target"),
+            }
+            if spec.shard {
+                sharded += 1;
+                assert!(shardable(spec.kernel.family()));
+                assert_eq!(spec.batch, 1);
+            }
+        }
+        assert!(caesar > 0 && carus > 0 && sharded > 0);
+    }
+}

@@ -1,0 +1,974 @@
+//! Differential fuzzing of the NMC ISAs and the batch scheduler.
+//!
+//! A [`FuzzCase`] is entirely determined by `(seed, max_insns)`: seeded
+//! random programs over the three ISA surfaces (xvnmc, Xcv, NM-Caesar
+//! micro-ops) plus one random batch scenario ([`gen::rand_batch_scenario`]).
+//! The oracle ([`check`]) runs every case across four axes and demands
+//! byte-identical outputs plus the energy/activity invariants of §7:
+//!
+//! 1. **Isa** — `decode(encode(i)) == i` on every kept instruction.
+//! 2. **Engines** — the CPU engine and the scenario's NMC engine both
+//!    reproduce the golden reference bit-exactly.
+//! 3. **Tiles** — a multi-tile schedule (batched or sharded) produces the
+//!    same bytes as the single-tile schedule, and the batch counters obey
+//!    the activity invariants.
+//! 4. **Timing** — `--timing cycle` and `--timing event` agree exactly:
+//!    cycles, outputs, every counter, and bitwise-identical energies.
+//!
+//! A failing case is greedily [`shrink`]-minimized (drop instructions,
+//! shrink shapes, reduce tiles) and serialized to a replayable
+//! `fuzz-repro-<seed>.json` ([`to_json`] / [`from_json`]); `heeperator
+//! fuzz --replay FILE` re-runs exactly that case. The oracle is
+//! self-verified by `rust/tests/fuzz_oracle.rs`, which arms a test-only
+//! decode fault ([`arm_decode_fault`]) and asserts the fuzzer finds and
+//! shrinks it.
+
+pub mod gen;
+
+use crate::caesar::isa as cisa;
+use crate::clock::{self, TimingMode};
+use crate::energy::{Activity, Breakdown};
+use crate::isa::{xcv, xvnmc};
+use crate::kernels::{self, engine, golden, Family, Kernel, RunResult, Target};
+use crate::sched::{self, BatchRunResult, BatchSpec};
+use gen::Rng;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Salt separating the scenario stream from the per-case seed.
+const SCENARIO_SALT: u64 = 0x5eed_5ca1_ab1e_0001;
+/// Salt separating the instruction stream from the scenario stream.
+const ISA_STREAM_SALT: u64 = 0xf0cc_ac1a_b01d_0002;
+
+// ---------------------------------------------------------------------------
+// Cases
+// ---------------------------------------------------------------------------
+
+/// One fully-determined fuzz case. The instruction programs are *not*
+/// stored — they re-materialize from `seed ^ ISA_STREAM_SALT` on demand —
+/// only the keep-lists the shrinker filters them through.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FuzzCase {
+    /// Per-case seed (already mixed by the driver).
+    pub seed: u64,
+    /// Instructions generated per ISA surface before filtering.
+    pub max_insns: u32,
+    /// Indices of the xvnmc instructions still in the case.
+    pub xvnmc_keep: Vec<u32>,
+    /// Indices of the Xcv instructions still in the case.
+    pub xcv_keep: Vec<u32>,
+    /// Indices of the NM-Caesar micro-ops still in the case.
+    pub caesar_keep: Vec<u32>,
+    /// The batch scenario (target, kernel, sew, seed, batch, shard).
+    pub spec: BatchSpec,
+    /// Tile count for the multi-tile axis.
+    pub tiles: u32,
+}
+
+impl FuzzCase {
+    /// Build the case for `seed`: full keep-lists plus a random scenario,
+    /// resampled (planning is cheap — no simulation) until the scheduler
+    /// accepts it, with a known-good fallback so every seed yields a case.
+    pub fn from_seed(seed: u64, max_insns: u32) -> FuzzCase {
+        let keep: Vec<u32> = (0..max_insns).collect();
+        let mut rng = Rng(seed ^ SCENARIO_SALT);
+        let (spec, tiles) = (0..100)
+            .map(|_| gen::rand_batch_scenario(&mut rng))
+            .find(|(s, t)| sched::plan(s, *t as usize).is_ok())
+            .unwrap_or_else(|| {
+                let spec = BatchSpec {
+                    target: Target::Carus,
+                    kernel: Kernel::Add { n: 64 },
+                    sew: crate::isa::Sew::E32,
+                    seed,
+                    batch: 1,
+                    shard: false,
+                };
+                (spec, 1)
+            });
+        FuzzCase { seed, max_insns, xvnmc_keep: keep.clone(), xcv_keep: keep.clone(), caesar_keep: keep, spec, tiles }
+    }
+
+    /// Re-materialize the kept instructions of every surface, tagged with
+    /// their stream indices (deterministic in `seed` and `max_insns`).
+    fn programs(&self) -> Programs {
+        let mut rng = Rng(self.seed ^ ISA_STREAM_SALT);
+        let xv: Vec<xvnmc::VInstr> = (0..self.max_insns).map(|_| gen::rand_xvnmc_instr(&mut rng)).collect();
+        let xc: Vec<xcv::XcvInstr> = (0..self.max_insns).map(|_| gen::rand_xcv_instr(&mut rng)).collect();
+        let ca: Vec<cisa::MicroOp> = (0..self.max_insns).map(|_| gen::rand_caesar_microop(&mut rng)).collect();
+        let pick = |keep: &[u32]| {
+            keep.iter().copied().filter(|&i| i < self.max_insns).collect::<Vec<u32>>()
+        };
+        Programs {
+            xvnmc: pick(&self.xvnmc_keep).into_iter().map(|i| (i, xv[i as usize])).collect(),
+            xcv: pick(&self.xcv_keep).into_iter().map(|i| (i, xc[i as usize])).collect(),
+            caesar: pick(&self.caesar_keep).into_iter().map(|i| (i, ca[i as usize])).collect(),
+        }
+    }
+
+    /// Total instructions the case still carries (shrink metric).
+    pub fn kept_insns(&self) -> usize {
+        self.xvnmc_keep.len() + self.xcv_keep.len() + self.caesar_keep.len()
+    }
+}
+
+struct Programs {
+    xvnmc: Vec<(u32, xvnmc::VInstr)>,
+    xcv: Vec<(u32, xcv::XcvInstr)>,
+    caesar: Vec<(u32, cisa::MicroOp)>,
+}
+
+// ---------------------------------------------------------------------------
+// Divergences
+// ---------------------------------------------------------------------------
+
+/// The oracle's four differential axes. A [`Divergence`] names the stage
+/// it surfaced in; the shrinker re-checks only that stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    Isa,
+    Engines,
+    Tiles,
+    Timing,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 4] = [Stage::Isa, Stage::Engines, Stage::Tiles, Stage::Timing];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Isa => "isa",
+            Stage::Engines => "engines",
+            Stage::Tiles => "tiles",
+            Stage::Timing => "timing",
+        }
+    }
+}
+
+/// One observed disagreement between two executions that must agree (or a
+/// violated invariant within one execution).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Divergence {
+    /// `decode(encode(i)) != i` on one ISA surface.
+    IsaRoundtrip { surface: &'static str, index: u32, detail: String },
+    /// Two engines / schedules / timing modes produced different bytes.
+    OutputMismatch { stage: Stage, detail: String },
+    /// Negative, non-finite, or non-additive energy.
+    EnergyInvariant { stage: Stage, detail: String },
+    /// Activity counters that do not sum to the cycle count.
+    ActivityInvariant { stage: Stage, detail: String },
+    /// A simulation panicked (golden mismatch, internal assert).
+    Panic { stage: Stage, detail: String },
+    /// The scheduler rejected a case it had previously accepted.
+    Plan { detail: String },
+}
+
+impl Divergence {
+    pub fn stage(&self) -> Stage {
+        match self {
+            Divergence::IsaRoundtrip { .. } => Stage::Isa,
+            Divergence::OutputMismatch { stage, .. }
+            | Divergence::EnergyInvariant { stage, .. }
+            | Divergence::ActivityInvariant { stage, .. }
+            | Divergence::Panic { stage, .. } => *stage,
+            Divergence::Plan { .. } => Stage::Tiles,
+        }
+    }
+}
+
+impl std::fmt::Display for Divergence {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Divergence::IsaRoundtrip { surface, index, detail } => {
+                write!(f, "[isa] {surface} instruction #{index} does not roundtrip: {detail}")
+            }
+            Divergence::OutputMismatch { stage, detail } => {
+                write!(f, "[{}] output mismatch: {detail}", stage.name())
+            }
+            Divergence::EnergyInvariant { stage, detail } => {
+                write!(f, "[{}] energy invariant violated: {detail}", stage.name())
+            }
+            Divergence::ActivityInvariant { stage, detail } => {
+                write!(f, "[{}] activity invariant violated: {detail}", stage.name())
+            }
+            Divergence::Panic { stage, detail } => {
+                write!(f, "[{}] simulation panicked: {detail}", stage.name())
+            }
+            Divergence::Plan { detail } => write!(f, "[tiles] plan rejected: {detail}"),
+        }
+    }
+}
+
+/// A failing case plus what diverged.
+#[derive(Debug, Clone)]
+pub struct Failure {
+    pub case: FuzzCase,
+    pub divergence: Divergence,
+}
+
+// ---------------------------------------------------------------------------
+// Test-only fault injection
+// ---------------------------------------------------------------------------
+
+static DECODE_FAULT: AtomicBool = AtomicBool::new(false);
+
+/// Arm (or disarm) the test-only xvnmc decode fault: while armed, the
+/// oracle's decoder wrapper mis-decodes `VOp::Max` as `VOp::Min` —
+/// exactly the class of bug the roundtrip axis exists to catch. Used by
+/// `rust/tests/fuzz_oracle.rs` to prove the fuzzer detects and shrinks a
+/// seeded decode fault; never armed in production paths.
+#[doc(hidden)]
+pub fn arm_decode_fault(on: bool) {
+    DECODE_FAULT.store(on, Ordering::SeqCst);
+}
+
+/// The xvnmc decode the oracle actually calls: real decode, then the
+/// armed fault (if any) applied on top.
+fn oracle_xvnmc_decode(w: u32) -> Option<xvnmc::VInstr> {
+    let mut d = xvnmc::decode(w)?;
+    if DECODE_FAULT.load(Ordering::SeqCst) {
+        if let xvnmc::VInstr::Op { op, .. } = &mut d {
+            if *op == xvnmc::VOp::Max {
+                *op = xvnmc::VOp::Min;
+            }
+        }
+    }
+    Some(d)
+}
+
+// ---------------------------------------------------------------------------
+// The oracle
+// ---------------------------------------------------------------------------
+
+/// Run every stage of the oracle on one case.
+pub fn check(case: &FuzzCase) -> Result<(), Divergence> {
+    for stage in Stage::ALL {
+        check_stage(case, stage)?;
+    }
+    Ok(())
+}
+
+/// Run one stage of the oracle (the shrinker's predicate).
+pub fn check_stage(case: &FuzzCase, stage: Stage) -> Result<(), Divergence> {
+    match stage {
+        Stage::Isa => check_isa(case),
+        Stage::Engines => check_engines(case),
+        Stage::Tiles => check_tiles(case),
+        Stage::Timing => check_timing(case),
+    }
+}
+
+/// Stage 1: `decode ∘ encode = id` on every kept instruction of every
+/// surface (xvnmc through the faultable wrapper).
+fn check_isa(case: &FuzzCase) -> Result<(), Divergence> {
+    let p = case.programs();
+    for &(i, v) in &p.xvnmc {
+        let back = oracle_xvnmc_decode(xvnmc::encode(&v));
+        if back != Some(v) {
+            return Err(Divergence::IsaRoundtrip {
+                surface: "xvnmc",
+                index: i,
+                detail: format!("{v:?} -> {back:?}"),
+            });
+        }
+    }
+    for &(i, x) in &p.xcv {
+        let back = xcv::decode(xcv::encode(&x));
+        if back != Some(x) {
+            return Err(Divergence::IsaRoundtrip {
+                surface: "xcv",
+                index: i,
+                detail: format!("{x:?} -> {back:?}"),
+            });
+        }
+    }
+    for &(i, m) in &p.caesar {
+        let back = cisa::decode(cisa::encode(&m));
+        if back != Some(m) {
+            return Err(Divergence::IsaRoundtrip {
+                surface: "caesar",
+                index: i,
+                detail: format!("{m:?} -> {back:?}"),
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Stage 2: the CPU engine and the scenario's NMC engine both reproduce
+/// the golden reference, and each run obeys the energy/activity
+/// invariants.
+fn check_engines(case: &FuzzCase) -> Result<(), Divergence> {
+    let spec = &case.spec;
+    let data = golden::generate(spec.kernel, spec.sew, spec.seed);
+    for target in [Target::Cpu, spec.target] {
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            let prog = kernels::prepared(target, spec.kernel, spec.sew);
+            engine(target).execute(&prog, &data)
+        }))
+        .map_err(|p| Divergence::Panic {
+            stage: Stage::Engines,
+            detail: format!("{target:?} {:?} {}: {}", spec.kernel, spec.sew, panic_msg(&p)),
+        })?;
+        if res.output != data.expect {
+            return Err(Divergence::OutputMismatch {
+                stage: Stage::Engines,
+                detail: format!(
+                    "{target:?} {:?} {} differs from golden ({} vs {} bytes, first diff at {:?})",
+                    spec.kernel,
+                    spec.sew,
+                    res.output.len(),
+                    data.expect.len(),
+                    first_diff(&res.output, &data.expect),
+                ),
+            });
+        }
+        run_invariants(&res, Stage::Engines)?;
+    }
+    Ok(())
+}
+
+/// Stage 3: the multi-tile schedule agrees byte-for-byte with the
+/// single-tile schedule (and, for sharded cases, with the unsharded whole
+/// kernel), and the batch counters obey the invariants.
+fn check_tiles(case: &FuzzCase) -> Result<(), Divergence> {
+    let multi = run_batch_checked(&case.spec, case.tiles, Stage::Tiles)?;
+    batch_invariants(&multi, Stage::Tiles)?;
+    let single = run_batch_checked(&case.spec, 1, Stage::Tiles)?;
+    batch_invariants(&single, Stage::Tiles)?;
+    if multi.outputs != single.outputs {
+        return Err(Divergence::OutputMismatch {
+            stage: Stage::Tiles,
+            detail: format!(
+                "{} tiles vs 1 tile disagree for {:?} ({} vs {} outputs)",
+                case.tiles,
+                case.spec,
+                multi.outputs.len(),
+                single.outputs.len(),
+            ),
+        });
+    }
+    if case.spec.shard {
+        // The reassembled shard output must equal the whole, unsharded
+        // kernel computed on one tile.
+        let whole_spec = BatchSpec { shard: false, batch: 1, ..case.spec };
+        let whole = run_batch_checked(&whole_spec, 1, Stage::Tiles)?;
+        if multi.outputs.first() != whole.outputs.first() {
+            return Err(Divergence::OutputMismatch {
+                stage: Stage::Tiles,
+                detail: format!(
+                    "sharded {:?} across {} tiles differs from the unsharded whole",
+                    case.spec.kernel, case.tiles,
+                ),
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Stage 4: `--timing cycle` and `--timing event` are byte- and
+/// counter-identical — including bitwise-equal f64 energies.
+fn check_timing(case: &FuzzCase) -> Result<(), Divergence> {
+    let run = |mode: TimingMode| {
+        clock::with_mode(mode, || run_batch_checked(&case.spec, case.tiles, Stage::Timing))
+    };
+    let cyc = run(TimingMode::Cycle)?;
+    let evt = run(TimingMode::Event)?;
+    let mism = |what: &str, a: String, b: String| Divergence::OutputMismatch {
+        stage: Stage::Timing,
+        detail: format!("cycle vs event disagree on {what}: {a} vs {b} for {:?}", case.spec),
+    };
+    if cyc.cycles != evt.cycles {
+        return Err(mism("cycles", cyc.cycles.to_string(), evt.cycles.to_string()));
+    }
+    if cyc.outputs != evt.outputs {
+        return Err(mism("output bytes", format!("{} outputs", cyc.outputs.len()), format!("{} outputs", evt.outputs.len())));
+    }
+    let counters = |r: &BatchRunResult| {
+        let mut c = vec![r.dma_active_cycles, r.dma_transfers, r.bus_txns, r.contention_cycles];
+        c.extend(r.per_tile.iter().map(|t| t.busy_cycles));
+        c
+    };
+    if counters(&cyc) != counters(&evt) {
+        return Err(mism("activity counters", format!("{:?}", counters(&cyc)), format!("{:?}", counters(&evt))));
+    }
+    let bits = |b: &Breakdown| {
+        [b.cpu, b.memory, b.nmc_logic, b.interconnect, b.other].map(f64::to_bits)
+    };
+    if bits(&cyc.energy) != bits(&evt.energy) {
+        return Err(mism("energy breakdown", format!("{:?}", cyc.energy), format!("{:?}", evt.energy)));
+    }
+    Ok(())
+}
+
+/// `sched::run_batch` with panics and plan errors folded into divergences.
+fn run_batch_checked(spec: &BatchSpec, tiles: u32, stage: Stage) -> Result<BatchRunResult, Divergence> {
+    catch_unwind(AssertUnwindSafe(|| sched::run_batch(spec, tiles as usize)))
+        .map_err(|p| Divergence::Panic {
+            stage,
+            detail: format!("{spec:?} on {tiles} tiles: {}", panic_msg(&p)),
+        })?
+        .map_err(|e| Divergence::Plan { detail: format!("{spec:?} on {tiles} tiles: {e}") })
+}
+
+/// Energy + activity invariants of one single-kernel run (§7 anchors).
+fn run_invariants(res: &RunResult, stage: Stage) -> Result<(), Divergence> {
+    energy_invariants(&res.energy, stage, res.target)?;
+    activity_invariants(&res.activity, stage, res.target)
+}
+
+/// Invariants of one batch co-simulation.
+fn batch_invariants(r: &BatchRunResult, stage: Stage) -> Result<(), Divergence> {
+    energy_invariants(&r.energy, stage, r.spec.target)?;
+    if r.cycles == 0 {
+        return Err(Divergence::ActivityInvariant {
+            stage,
+            detail: format!("{:?}: zero-cycle schedule", r.spec),
+        });
+    }
+    if r.dma_active_cycles > r.cycles {
+        return Err(Divergence::ActivityInvariant {
+            stage,
+            detail: format!("dma_active {} > makespan {}", r.dma_active_cycles, r.cycles),
+        });
+    }
+    for (i, t) in r.per_tile.iter().enumerate() {
+        if t.busy_cycles > r.cycles {
+            return Err(Divergence::ActivityInvariant {
+                stage,
+                detail: format!("tile {i} busy {} > makespan {}", t.busy_cycles, r.cycles),
+            });
+        }
+    }
+    if r.outputs.is_empty() {
+        return Err(Divergence::OutputMismatch {
+            stage,
+            detail: format!("{:?}: schedule produced no outputs", r.spec),
+        });
+    }
+    Ok(())
+}
+
+fn energy_invariants(b: &Breakdown, stage: Stage, target: Target) -> Result<(), Divergence> {
+    let parts = [("cpu", b.cpu), ("memory", b.memory), ("nmc_logic", b.nmc_logic), ("interconnect", b.interconnect), ("other", b.other)];
+    for (name, v) in parts {
+        if !v.is_finite() || v < 0.0 {
+            return Err(Divergence::EnergyInvariant {
+                stage,
+                detail: format!("{target:?}: {name} = {v} (must be finite and ≥ 0)"),
+            });
+        }
+    }
+    let sum: f64 = parts.iter().map(|(_, v)| v).sum();
+    if b.total().to_bits() != sum.to_bits() {
+        return Err(Divergence::EnergyInvariant {
+            stage,
+            detail: format!("{target:?}: total {} ≠ Σ components {}", b.total(), sum),
+        });
+    }
+    Ok(())
+}
+
+fn activity_invariants(a: &Activity, stage: Stage, target: Target) -> Result<(), Divergence> {
+    if a.cycles == 0 {
+        return Err(Divergence::ActivityInvariant {
+            stage,
+            detail: format!("{target:?}: zero-cycle run"),
+        });
+    }
+    if a.cpu_active + a.cpu_sleep != a.cycles {
+        return Err(Divergence::ActivityInvariant {
+            stage,
+            detail: format!(
+                "{target:?}: cpu_active {} + cpu_sleep {} ≠ cycles {}",
+                a.cpu_active, a.cpu_sleep, a.cycles
+            ),
+        });
+    }
+    if a.dma_active > a.cycles {
+        return Err(Divergence::ActivityInvariant {
+            stage,
+            detail: format!("{target:?}: dma_active {} > cycles {}", a.dma_active, a.cycles),
+        });
+    }
+    Ok(())
+}
+
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn first_diff(a: &[u8], b: &[u8]) -> Option<usize> {
+    let at = a.iter().zip(b).position(|(x, y)| x != y);
+    at.or_else(|| (a.len() != b.len()).then(|| a.len().min(b.len())))
+}
+
+// ---------------------------------------------------------------------------
+// Shrinking
+// ---------------------------------------------------------------------------
+
+/// Greedily minimize a failing case to a fixpoint. The predicate is "the
+/// *original* failing stage still fails" — cheaper and more stable than
+/// re-running the whole oracle, and it keeps the shrunk case on the same
+/// bug. Moves: empty/delta-debug the instruction keep-lists, force
+/// `batch = 1` / `shard = false` / fewer tiles, and halve shape dims
+/// (guarded by `Kernel::validate` + `sched::plan` so every candidate is a
+/// case the generator could have produced).
+pub fn shrink(failure: Failure) -> Failure {
+    let _quiet = QuietPanics::install();
+    shrink_impl(failure)
+}
+
+fn shrink_impl(failure: Failure) -> Failure {
+    let stage = failure.divergence.stage();
+    let fails = |c: &FuzzCase| check_stage(c, stage).is_err();
+    let mut cur = failure.case;
+    debug_assert!(fails(&cur), "shrink must start from a failing case");
+
+    loop {
+        let before = (cur.kept_insns(), cur.spec, cur.tiles);
+
+        // The scenario axes are independent of the instruction lists, so
+        // try the cheapest big cuts first.
+        for surface in 0..3 {
+            let mut cand = cur.clone();
+            *keep_list_mut(&mut cand, surface) = Vec::new();
+            if fails(&cand) {
+                cur = cand;
+            }
+        }
+        for surface in 0..3 {
+            cur = minimize_list(cur, surface, &fails);
+        }
+
+        // Scenario shrinks: smaller batch, no sharding, fewer tiles.
+        for cand_spec in [
+            BatchSpec { batch: 1, ..cur.spec },
+            BatchSpec { shard: false, batch: 1, ..cur.spec },
+        ] {
+            let cand = FuzzCase { spec: cand_spec, ..cur.clone() };
+            if plannable(&cand) && fails(&cand) {
+                cur = cand;
+            }
+        }
+        for t in [1, cur.tiles / 2] {
+            if t >= 1 && t < cur.tiles {
+                let cand = FuzzCase { tiles: t, ..cur.clone() };
+                if plannable(&cand) && fails(&cand) {
+                    cur = cand;
+                }
+            }
+        }
+
+        // Shape shrinks: halve the free dimension while both targets
+        // still accept the kernel.
+        for k in shrunk_kernels(cur.spec.kernel) {
+            if k.validate(cur.spec.target, cur.spec.sew).is_err()
+                || k.validate(Target::Cpu, cur.spec.sew).is_err()
+            {
+                continue;
+            }
+            let cand = FuzzCase { spec: BatchSpec { kernel: k, ..cur.spec }, ..cur.clone() };
+            if plannable(&cand) && fails(&cand) {
+                cur = cand;
+            }
+        }
+
+        if (cur.kept_insns(), cur.spec, cur.tiles) == before {
+            break;
+        }
+    }
+
+    let divergence = check_stage(&cur, stage).expect_err("fixpoint case must still fail");
+    Failure { case: cur, divergence }
+}
+
+fn plannable(c: &FuzzCase) -> bool {
+    catch_unwind(AssertUnwindSafe(|| sched::plan(&c.spec, c.tiles as usize).is_ok())).unwrap_or(false)
+}
+
+fn keep_list_mut(c: &mut FuzzCase, surface: usize) -> &mut Vec<u32> {
+    match surface {
+        0 => &mut c.xvnmc_keep,
+        1 => &mut c.xcv_keep,
+        _ => &mut c.caesar_keep,
+    }
+}
+
+/// ddmin-style list minimization: repeatedly try removing contiguous
+/// chunks (halving the chunk size down to 1) while the case still fails.
+fn minimize_list(mut cur: FuzzCase, surface: usize, fails: &dyn Fn(&FuzzCase) -> bool) -> FuzzCase {
+    let mut chunk = keep_list_mut(&mut cur, surface).len() / 2;
+    while chunk >= 1 {
+        let mut start = 0;
+        while start < keep_list_mut(&mut cur, surface).len() {
+            let mut cand = cur.clone();
+            {
+                let list = keep_list_mut(&mut cand, surface);
+                let end = (start + chunk).min(list.len());
+                list.drain(start..end);
+            }
+            if fails(&cand) {
+                cur = cand; // keep the cut, retry the same start
+            } else {
+                start += chunk;
+            }
+        }
+        chunk /= 2;
+    }
+    cur
+}
+
+/// Candidate kernels with the free dimension halved (filter size stays —
+/// halving it changes the kernel family's contract, not just its size).
+/// Callers re-validate against both targets before trying a candidate.
+fn shrunk_kernels(k: Kernel) -> Vec<Kernel> {
+    match k {
+        Kernel::Xor { n } => vec![Kernel::Xor { n: n / 2 }],
+        Kernel::Add { n } => vec![Kernel::Add { n: n / 2 }],
+        Kernel::Mul { n } => vec![Kernel::Mul { n: n / 2 }],
+        Kernel::Matmul { p } => vec![Kernel::Matmul { p: p / 2 }],
+        Kernel::Gemm { p } => vec![Kernel::Gemm { p: p / 2 }],
+        Kernel::Conv2d { n, f } => vec![Kernel::Conv2d { n: n / 2, f }],
+        Kernel::Relu { n } => vec![Kernel::Relu { n: n / 2 }],
+        Kernel::LeakyRelu { n } => vec![Kernel::LeakyRelu { n: n / 2 }],
+        Kernel::Maxpool { n } => vec![Kernel::Maxpool { n: n / 2 }],
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Repro files
+// ---------------------------------------------------------------------------
+
+/// Schema tag of the repro JSON format.
+pub const REPRO_SCHEMA: &str = "heeperator-fuzz-repro-v1";
+
+fn family_slug(f: Family) -> &'static str {
+    match f {
+        Family::Xor => "xor",
+        Family::Add => "add",
+        Family::Mul => "mul",
+        Family::Matmul => "matmul",
+        Family::Gemm => "gemm",
+        Family::Conv2d => "conv2d",
+        Family::Relu => "relu",
+        Family::LeakyRelu => "leakyrelu",
+        Family::Maxpool => "maxpool",
+    }
+}
+
+fn target_slug(t: Target) -> &'static str {
+    match t {
+        Target::Cpu => "cpu",
+        Target::Caesar => "caesar",
+        Target::Carus => "carus",
+    }
+}
+
+/// Exact kernel reconstruction from (family, dims) — the inverse of
+/// [`shape_of`]. Unlike `Kernel::with_shape` this never falls back to
+/// paper defaults: a repro file reproduces *exactly* the failing shape.
+pub fn kernel_from(family: Family, n: u32, p: u32, f: u32) -> Kernel {
+    match family {
+        Family::Xor => Kernel::Xor { n },
+        Family::Add => Kernel::Add { n },
+        Family::Mul => Kernel::Mul { n },
+        Family::Matmul => Kernel::Matmul { p },
+        Family::Gemm => Kernel::Gemm { p },
+        Family::Conv2d => Kernel::Conv2d { n, f },
+        Family::Relu => Kernel::Relu { n },
+        Family::LeakyRelu => Kernel::LeakyRelu { n },
+        Family::Maxpool => Kernel::Maxpool { n },
+    }
+}
+
+/// `(n, p, f)` of a kernel, zeros for unused dims.
+pub fn shape_of(k: Kernel) -> (u32, u32, u32) {
+    match k {
+        Kernel::Xor { n } | Kernel::Add { n } | Kernel::Mul { n } | Kernel::Relu { n } | Kernel::LeakyRelu { n } | Kernel::Maxpool { n } => (n, 0, 0),
+        Kernel::Matmul { p } | Kernel::Gemm { p } => (0, p, 0),
+        Kernel::Conv2d { n, f } => (n, 0, f),
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_list(xs: &[u32]) -> String {
+    let items: Vec<String> = xs.iter().map(u32::to_string).collect();
+    format!("[{}]", items.join(","))
+}
+
+/// Serialize a failing case to the replayable repro format. `divergence`
+/// is informational — replay recomputes it from the case.
+pub fn to_json(case: &FuzzCase, divergence: &str) -> String {
+    let (n, p, f) = shape_of(case.spec.kernel);
+    format!(
+        "{{\n  \"schema\": \"{REPRO_SCHEMA}\",\n  \"seed\": {},\n  \"max_insns\": {},\n  \"xvnmc_keep\": {},\n  \"xcv_keep\": {},\n  \"caesar_keep\": {},\n  \"target\": \"{}\",\n  \"family\": \"{}\",\n  \"sew\": {},\n  \"n\": {n},\n  \"p\": {p},\n  \"f\": {f},\n  \"spec_seed\": {},\n  \"batch\": {},\n  \"shard\": {},\n  \"tiles\": {},\n  \"divergence\": \"{}\"\n}}\n",
+        case.seed,
+        case.max_insns,
+        json_list(&case.xvnmc_keep),
+        json_list(&case.xcv_keep),
+        json_list(&case.caesar_keep),
+        target_slug(case.spec.target),
+        family_slug(case.spec.kernel.family()),
+        case.spec.sew.bits(),
+        case.spec.seed,
+        case.spec.batch,
+        case.spec.shard,
+        case.tiles,
+        json_escape(divergence),
+    )
+}
+
+// -- Hand-rolled extraction (the repo is std-only: no serde) ---------------
+
+fn json_raw<'a>(s: &'a str, key: &str) -> Result<&'a str, String> {
+    let pat = format!("\"{key}\"");
+    let at = s.find(&pat).ok_or_else(|| format!("missing key {key:?}"))?;
+    let rest = &s[at + pat.len()..];
+    let rest = rest.trim_start();
+    let rest = rest.strip_prefix(':').ok_or_else(|| format!("malformed value for {key:?}"))?;
+    Ok(rest.trim_start())
+}
+
+fn json_u64(s: &str, key: &str) -> Result<u64, String> {
+    let raw = json_raw(s, key)?;
+    let end = raw.find(|c: char| !c.is_ascii_digit()).unwrap_or(raw.len());
+    raw[..end].parse::<u64>().map_err(|_| format!("{key:?} is not a number"))
+}
+
+fn json_str<'a>(s: &'a str, key: &str) -> Result<&'a str, String> {
+    let raw = json_raw(s, key)?;
+    let raw = raw.strip_prefix('"').ok_or_else(|| format!("{key:?} is not a string"))?;
+    let end = raw.find('"').ok_or_else(|| format!("unterminated string for {key:?}"))?;
+    Ok(&raw[..end])
+}
+
+fn json_bool(s: &str, key: &str) -> Result<bool, String> {
+    let raw = json_raw(s, key)?;
+    if raw.starts_with("true") {
+        Ok(true)
+    } else if raw.starts_with("false") {
+        Ok(false)
+    } else {
+        Err(format!("{key:?} is not a bool"))
+    }
+}
+
+fn json_u32_list(s: &str, key: &str) -> Result<Vec<u32>, String> {
+    let raw = json_raw(s, key)?;
+    let raw = raw.strip_prefix('[').ok_or_else(|| format!("{key:?} is not a list"))?;
+    let end = raw.find(']').ok_or_else(|| format!("unterminated list for {key:?}"))?;
+    let body = raw[..end].trim();
+    if body.is_empty() {
+        return Ok(Vec::new());
+    }
+    body.split(',')
+        .map(|x| x.trim().parse::<u32>().map_err(|_| format!("bad element in {key:?}")))
+        .collect()
+}
+
+/// Parse a repro file back into the exact case it serialized.
+pub fn from_json(s: &str) -> Result<FuzzCase, String> {
+    let schema = json_str(s, "schema")?;
+    if schema != REPRO_SCHEMA {
+        return Err(format!("unknown repro schema {schema:?} (expected {REPRO_SCHEMA:?})"));
+    }
+    let target = Target::parse(json_str(s, "target")?)
+        .ok_or_else(|| "unknown target".to_string())?;
+    let family = Family::parse(json_str(s, "family")?)
+        .ok_or_else(|| "unknown family".to_string())?;
+    let sew = match json_u64(s, "sew")? {
+        8 => crate::isa::Sew::E8,
+        16 => crate::isa::Sew::E16,
+        32 => crate::isa::Sew::E32,
+        b => return Err(format!("unknown sew {b}")),
+    };
+    let kernel = kernel_from(
+        family,
+        json_u64(s, "n")? as u32,
+        json_u64(s, "p")? as u32,
+        json_u64(s, "f")? as u32,
+    );
+    Ok(FuzzCase {
+        seed: json_u64(s, "seed")?,
+        max_insns: json_u64(s, "max_insns")? as u32,
+        xvnmc_keep: json_u32_list(s, "xvnmc_keep")?,
+        xcv_keep: json_u32_list(s, "xcv_keep")?,
+        caesar_keep: json_u32_list(s, "caesar_keep")?,
+        spec: BatchSpec {
+            target,
+            kernel,
+            sew,
+            seed: json_u64(s, "spec_seed")?,
+            batch: json_u64(s, "batch")? as u32,
+            shard: json_bool(s, "shard")?,
+        },
+        tiles: json_u64(s, "tiles")? as u32,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------------
+
+/// Outcome of one fuzzing run.
+#[derive(Debug)]
+pub struct FuzzReport {
+    /// Cases executed (including the failing one, if any).
+    pub cases: u32,
+    /// The first failure, already shrunk. `None` = divergence-free run.
+    pub failure: Option<Failure>,
+}
+
+/// Run `budget` cases derived from `seed`; on the first divergence,
+/// shrink it and stop. Panics raised inside simulations are caught (they
+/// *are* divergences) and their default stderr backtraces suppressed for
+/// the duration of the run.
+pub fn run(seed: u64, budget: u32, max_insns: u32) -> FuzzReport {
+    let _quiet = QuietPanics::install();
+    for i in 0..budget {
+        let case_seed = Rng(seed.wrapping_add(i as u64)).next_u64();
+        let case = FuzzCase::from_seed(case_seed, max_insns);
+        if let Err(divergence) = check(&case) {
+            return FuzzReport { cases: i + 1, failure: Some(shrink_impl(Failure { case, divergence })) };
+        }
+    }
+    FuzzReport { cases: budget, failure: None }
+}
+
+/// Re-check one previously-serialized case (the `--replay` path).
+pub fn replay(case: &FuzzCase) -> Result<(), Divergence> {
+    let _quiet = QuietPanics::install();
+    check(case)
+}
+
+/// Scoped suppression of the default panic hook: expected divergence
+/// panics (golden-mismatch asserts under `catch_unwind`) should not spray
+/// backtraces over fuzz progress output. Restores the previous hook on
+/// drop.
+struct QuietPanics {
+    prev: Option<Box<dyn Fn(&std::panic::PanicHookInfo<'_>) + Sync + Send>>,
+}
+
+impl QuietPanics {
+    fn install() -> QuietPanics {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        QuietPanics { prev: Some(prev) }
+    }
+}
+
+impl Drop for QuietPanics {
+    fn drop(&mut self) {
+        if let Some(prev) = self.prev.take() {
+            std::panic::set_hook(prev);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cases_are_deterministic_in_the_seed() {
+        let a = FuzzCase::from_seed(0xdead_beef, 16);
+        let b = FuzzCase::from_seed(0xdead_beef, 16);
+        assert_eq!(a, b);
+        assert_eq!(a.kept_insns(), 3 * 16);
+        // The scenario is always plannable.
+        assert!(sched::plan(&a.spec, a.tiles as usize).is_ok());
+    }
+
+    #[test]
+    fn small_fixed_seed_run_is_divergence_free() {
+        let report = run(11, 2, 24);
+        assert_eq!(report.cases, 2);
+        assert!(
+            report.failure.is_none(),
+            "unexpected divergence: {}",
+            report.failure.as_ref().unwrap().divergence
+        );
+    }
+
+    #[test]
+    fn repro_json_roundtrips() {
+        let case = FuzzCase {
+            seed: u64::MAX,
+            max_insns: 64,
+            xvnmc_keep: vec![0, 7, 63],
+            xcv_keep: vec![],
+            caesar_keep: vec![5],
+            spec: BatchSpec {
+                target: Target::Caesar,
+                kernel: Kernel::Conv2d { n: 16, f: 3 },
+                sew: crate::isa::Sew::E16,
+                seed: 42,
+                batch: 2,
+                shard: false,
+            },
+            tiles: 9,
+        };
+        let j = to_json(&case, "quote \" backslash \\ newline \n done");
+        let back = from_json(&j).expect("repro roundtrip");
+        assert_eq!(back, case);
+    }
+
+    #[test]
+    fn from_json_rejects_garbage() {
+        assert!(from_json("").is_err());
+        assert!(from_json("{\"schema\": \"something-else\"}").is_err());
+        assert!(from_json("{\"schema\": \"heeperator-fuzz-repro-v1\", \"seed\": true}").is_err());
+    }
+
+    #[test]
+    fn kernel_from_inverts_shape_of() {
+        let kernels = [
+            Kernel::Xor { n: 8 },
+            Kernel::Add { n: 12 },
+            Kernel::Mul { n: 4 },
+            Kernel::Matmul { p: 16 },
+            Kernel::Gemm { p: 8 },
+            Kernel::Conv2d { n: 16, f: 3 },
+            Kernel::Relu { n: 32 },
+            Kernel::LeakyRelu { n: 32 },
+            Kernel::Maxpool { n: 8 },
+        ];
+        for k in kernels {
+            let (n, p, f) = shape_of(k);
+            assert_eq!(kernel_from(k.family(), n, p, f), k);
+        }
+    }
+
+    #[test]
+    fn minimize_list_reaches_a_single_element() {
+        // Synthetic predicate: the case "fails" iff index 13 survives in
+        // the xvnmc list. ddmin must strip everything else.
+        let mut case = FuzzCase::from_seed(1, 32);
+        case.xvnmc_keep = (0..32).collect();
+        let fails = |c: &FuzzCase| c.xvnmc_keep.contains(&13);
+        let out = minimize_list(case, 0, &fails);
+        assert_eq!(out.xvnmc_keep, vec![13]);
+    }
+}

@@ -60,6 +60,18 @@ mod layout {
     pub const MP_EVEN: u32 = 0;
     pub const MP_VMAX: u32 = 2048;
     pub const MP_ODD: u32 = 4096;
+    /// Tiled maxpool (quadrant decomposition, no CPU phase): the four
+    /// 2×2-window corners as densely-packed 8×(n/2) quadrant images.
+    /// A/C/temp/out in bank 0; B/D/temp2 in bank 1, so every MAX is a
+    /// cross-bank (2-cycle) micro-op. Each region holds ≤ 1024 words
+    /// (`Kernel::validate` caps n·sew ≤ 1024 B ⇒ quadrant ≤ 1024 words).
+    pub const MPQ_A: u32 = 0;
+    pub const MPQ_C: u32 = 1024;
+    pub const MPQ_T: u32 = 2048;
+    pub const MPQ_OUT: u32 = 3072;
+    pub const MPQ_B: u32 = 4096;
+    pub const MPQ_D: u32 = 5120;
+    pub const MPQ_T2: u32 = 6144;
 }
 
 /// Stream staging address in system memory (bank 1 onward).
@@ -135,15 +147,18 @@ impl Engine for CaesarEngine {
     // --- Tiled execute path (see `crate::sched`) --------------------------
 
     fn tile_program(&self, kernel: Kernel, sew: Sew) -> Option<super::TileProgram> {
-        if matches!(kernel, Kernel::Maxpool { .. }) {
-            // Horizontal pooling needs the host CPU phase — there is no
-            // self-contained tile execution to schedule.
-            return None;
-        }
+        // Maxpool's single-engine path keeps the paper's host-CPU
+        // horizontal phase; behind a tile window there is no per-tile CPU,
+        // so the tiled path restages the image as four 2×2-corner
+        // quadrants and reduces them with three element-wise MAX streams.
+        let program = match kernel {
+            Kernel::Maxpool { n } => build_maxpool_tile_program(n, sew),
+            _ => build_program(kernel, sew),
+        };
         Some(super::TileProgram {
             setup_image: Vec::new(),
             args: Vec::new(),
-            exec: super::TileExec::Stream(build_program(kernel, sew)),
+            exec: super::TileExec::Stream(program),
         })
     }
 
@@ -210,7 +225,26 @@ impl Engine for CaesarEngine {
                 let out_row_words = (ocols * sb).div_ceil(4) + 1;
                 (layout::CV_OUT * 4, orows * out_row_words * 4)
             }
-            Kernel::Maxpool { .. } => return None,
+            Kernel::Maxpool { n } => {
+                // Four packed quadrant images; the stream's MAX reduction
+                // leaves the canonical 8×(n/2) output at MPQ_OUT.
+                let img = unpack(&data.a, sew);
+                let half = n / 2;
+                let quad = |dr: u32, dc: u32| -> Vec<u8> {
+                    let mut vals = Vec::with_capacity((8 * half) as usize);
+                    for r in 0..8u32 {
+                        for c in 0..half {
+                            vals.push(img[((2 * r + dr) * n + 2 * c + dc) as usize]);
+                        }
+                    }
+                    pack(&vals, sew)
+                };
+                inputs.push((layout::MPQ_A * 4, quad(0, 0)));
+                inputs.push((layout::MPQ_B * 4, quad(0, 1)));
+                inputs.push((layout::MPQ_C * 4, quad(1, 0)));
+                inputs.push((layout::MPQ_D * 4, quad(1, 1)));
+                (layout::MPQ_OUT * 4, 8 * half * sb)
+            }
         };
         Some(super::TileIo { inputs, output })
     }
@@ -337,6 +371,23 @@ fn build_program(kernel: Kernel, sew: Sew) -> CaesarProgram {
                 }
             }
         }
+    }
+    p
+}
+
+/// Tiled maxpool stream (quadrant decomposition): with the 2×2-window
+/// corners staged as four identically-packed quadrant images, the pooling
+/// reduction is three element-wise MAX passes — max(A,B), max(C,D), then
+/// the max of the two temporaries, landing the canonical output at
+/// `MPQ_OUT`. Sources of every micro-op sit in opposite banks (2 cycles).
+fn build_maxpool_tile_program(n: u32, sew: Sew) -> CaesarProgram {
+    let mut p = CaesarProgram::new();
+    p.csrw(sew);
+    let qwords = n * sew.bytes(); // 8·(n/2)·sew bytes = n·sew words
+    for w in 0..qwords {
+        p.max(layout::MPQ_T + w, layout::MPQ_A + w, layout::MPQ_B + w);
+        p.max(layout::MPQ_T2 + w, layout::MPQ_C + w, layout::MPQ_D + w);
+        p.max(layout::MPQ_OUT + w, layout::MPQ_T + w, layout::MPQ_T2 + w);
     }
     p
 }
@@ -577,11 +628,26 @@ mod tests {
     }
 
     #[test]
-    fn maxpool_is_not_tileable() {
-        // The CPU horizontal phase pins maxpool to the host.
-        assert!(CaesarEngine.tile_program(Kernel::Maxpool { n: 64 }, Sew::E8).is_none());
-        let data = golden::generate(Kernel::Maxpool { n: 64 }, Sew::E8, 1);
-        assert!(CaesarEngine.tile_io(Kernel::Maxpool { n: 64 }, Sew::E8, &data).is_none());
+    fn maxpool_tiles_via_quadrant_decomposition() {
+        // The single-engine path keeps the paper's host-CPU horizontal
+        // phase; the tiled path restages the image as four quadrants and
+        // needs no CPU at all. (End-to-end correctness is locked by the
+        // sched test `caesar_maxpool_tiles_and_matches_golden`.)
+        for sew in Sew::ALL {
+            let kernel = Kernel::Maxpool { n: 16 };
+            let prog = CaesarEngine.tile_program(kernel, sew).expect("tileable");
+            assert!(matches!(prog.exec, crate::kernels::TileExec::Stream(_)));
+            let data = golden::generate(kernel, sew, 1);
+            let io = CaesarEngine.tile_io(kernel, sew, &data).expect("tileable");
+            assert_eq!(io.inputs.len(), 4, "one image per 2x2 corner");
+            for (off, bytes) in &io.inputs {
+                assert_eq!(*off % 4, 0, "word-aligned staging offset");
+                assert_eq!(bytes.len() % 4, 0, "word-aligned staging length");
+            }
+            let (out_off, out_len) = io.output;
+            assert_eq!(out_off, 3072 * 4);
+            assert_eq!(out_len, data.expect.len() as u32, "output span is canonical");
+        }
     }
 
     #[test]

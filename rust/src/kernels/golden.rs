@@ -15,30 +15,10 @@
 use super::Kernel;
 use crate::isa::Sew;
 
-/// Splitmix64: tiny, deterministic, good-enough generator for inputs.
-#[derive(Debug, Clone)]
-pub struct Rng(pub u64);
-
-impl Rng {
-    pub fn next_u64(&mut self) -> u64 {
-        self.0 = self.0.wrapping_add(0x9e37_79b9_7f4a_7c15);
-        let mut z = self.0;
-        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
-        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
-        z ^ (z >> 31)
-    }
-    pub fn next_u32(&mut self) -> u32 {
-        self.next_u64() as u32
-    }
-    /// Random element value (full range of the SEW), sign-extended to i64.
-    pub fn elem(&mut self, sew: Sew) -> i64 {
-        match sew {
-            Sew::E8 => self.next_u32() as u8 as i8 as i64,
-            Sew::E16 => self.next_u32() as u16 as i16 as i64,
-            Sew::E32 => self.next_u32() as i32 as i64,
-        }
-    }
-}
+// The splitmix64 generator lives with the rest of the random-generation
+// machinery in `fuzz::gen`; re-exported here because every consumer of
+// golden data reaches for `golden::Rng`.
+pub use crate::fuzz::gen::Rng;
 
 /// Pack an element array (sign-agnostic, low bits) into little-endian bytes.
 pub fn pack(vals: &[i64], sew: Sew) -> Vec<u8> {

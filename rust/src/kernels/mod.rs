@@ -530,9 +530,9 @@ pub trait Engine: Send + Sync {
     fn prepare(&self, kernel: Kernel, sew: Sew) -> EngineProgram;
     /// Build a fresh SoC, stage `data`, run `prog`, extract the output.
     fn execute(&self, prog: &EngineProgram, data: &WorkloadData) -> RunResult;
-    /// Tile recipe for `(kernel, sew)`, or `None` if this backend (or
-    /// this kernel — e.g. NM-Caesar maxpool needs a host CPU phase)
-    /// cannot run behind a tile window.
+    /// Tile recipe for `(kernel, sew)`, or `None` if this backend cannot
+    /// run the kernel behind a tile window (both built-in NMC engines
+    /// tile every kernel; the CPU engine *is* the host).
     fn tile_program(&self, _kernel: Kernel, _sew: Sew) -> Option<TileProgram> {
         None
     }

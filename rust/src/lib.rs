@@ -40,6 +40,10 @@
 //! - [`harness`]: regenerates every table and figure of §V, fanning the
 //!   independent reports over the [`harness::executor`] thread pool and
 //!   deduplicating their simulations through one shared session.
+//! - [`fuzz`]: the differential fuzzer — seeded random programs over the
+//!   xvnmc/xcv/micro-op ISA surfaces and random batch scenarios, checked
+//!   across every execution axis (engine × tiles × shard × timing) with a
+//!   greedy shrinker and replayable repro files (`heeperator fuzz`).
 
 pub mod apps;
 pub mod area;
@@ -51,6 +55,7 @@ pub mod compare;
 pub mod cpu;
 pub mod dma;
 pub mod energy;
+pub mod fuzz;
 pub mod harness;
 pub mod isa;
 pub mod kernels;

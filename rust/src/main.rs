@@ -10,6 +10,7 @@
 //! heeperator sweep --target T --family F --sew W [--n N] [--p P] [--f F] [--seed S] [--out DIR]
 //! heeperator scale --tiles 1,2,4 [--batch B] [--shard] [--target caesar|carus] [--family F]
 //!                  [--sew W] [--n/--p/--f dims] [--quick] [--json FILE] [--out DIR] [--jobs N]
+//! heeperator fuzz [--seed S] [--budget N] [--max-insns K] [--replay FILE] [--out DIR]
 //! ```
 //!
 //! `all` fans the independent reports out over a `std::thread` worker
@@ -30,13 +31,21 @@
 //! additionally emits the machine-readable cycles + wall-time summary
 //! the CI perf-smoke job diffs against `bench-baseline.json`.
 //!
-//! Every subcommand accepts `--timing cycle|event` (or `--timing=MODE`)
-//! to pick the simulation timing discipline: `event` (the default) runs
-//! the skip-ahead event-driven core, `cycle` forces the per-cycle
-//! reference loop. Both produce identical outputs and counters — see
+//! `fuzz` runs the differential fuzzer (DESIGN.md §11): `--budget` seeded
+//! random cases checked across every execution axis; a divergence is
+//! shrunk and written to a replayable `fuzz-repro-<seed>.json`, and
+//! `--replay FILE` re-checks exactly that case. Exit code 0 = clean,
+//! 1 = divergence, 2 = bad invocation.
+//!
+//! Every subcommand accepts `--timing cycle|event` to pick the simulation
+//! timing discipline: `event` (the default) runs the skip-ahead
+//! event-driven core, `cycle` forces the per-cycle reference loop. Both
+//! produce identical outputs and counters — see
 //! `tests/timing_equivalence.rs` — differing only in wall-clock speed.
 //!
-//! (Hand-rolled argument parsing: clap is not in the offline vendor set.)
+//! (Hand-rolled argument parsing: clap is not in the offline vendor set.
+//! Every flag accepts both the `--flag value` and `--flag=value`
+//! spellings — a normalization pre-pass splits the latter.)
 
 use nmc::harness::{self, executor, Report, ScalePoint};
 use nmc::isa::Sew;
@@ -72,6 +81,11 @@ struct Cli {
     /// (skip-ahead, the default). Accepted as `--timing event` or
     /// `--timing=event`; also settable via the `SOC_TIMING` env var.
     timing: Option<String>,
+    /// `fuzz` selectors: case budget, instructions per ISA surface, and
+    /// the repro file to re-check instead of generating fresh cases.
+    budget: Option<u32>,
+    max_insns: Option<u32>,
+    replay: Option<String>,
 }
 
 impl Cli {
@@ -93,6 +107,9 @@ impl Cli {
             shard: false,
             json: None,
             timing: None,
+            budget: None,
+            max_insns: None,
+            replay: None,
         }
     }
 }
@@ -133,6 +150,16 @@ fn parse_num<T: std::str::FromStr>(
 /// present, unparsable numeric value is an error: silently falling back
 /// to a default would do the opposite of what the user asked for.
 fn parse_args(args: &[String]) -> Result<Cli, String> {
+    // Normalize `--flag=value` to `--flag value` so both spellings flow
+    // through the same arms below.
+    let args: Vec<String> = args
+        .iter()
+        .flat_map(|a| match a.strip_prefix("--").and_then(|rest| rest.split_once('=')) {
+            Some((flag, value)) => vec![format!("--{flag}"), value.to_string()],
+            None => vec![a.clone()],
+        })
+        .collect();
+    let args = args.as_slice();
     let mut cli = Cli::new("help");
     let mut cmd: Option<String> = None;
     let mut i = 0;
@@ -183,8 +210,12 @@ fn parse_args(args: &[String]) -> Result<Cli, String> {
                     cli.timing = Some(v);
                 }
             }
-            a if a.starts_with("--timing=") => {
-                cli.timing = Some(a["--timing=".len()..].to_string());
+            "--budget" => cli.budget = parse_num::<u32>(args, &mut i, "--budget")?,
+            "--max-insns" => cli.max_insns = parse_num::<u32>(args, &mut i, "--max-insns")?,
+            "--replay" => {
+                if let Some(v) = parse_str(args, &mut i) {
+                    cli.replay = Some(v);
+                }
             }
             a if !a.starts_with("--") => {
                 // First free-standing word is the subcommand.
@@ -443,6 +474,9 @@ fn main() {
                 }
             }
         }
+        "fuzz" => {
+            std::process::exit(run_fuzz(&cli));
+        }
         "ad" => {
             let golden = nmc::apps::anomaly::golden_forward(&nmc::apps::anomaly::model(2));
             for target in Target::ALL {
@@ -470,20 +504,97 @@ fn main() {
     }
 }
 
+/// The `fuzz` subcommand: run the differential fuzzer (or `--replay` one
+/// repro file) and map the outcome to an exit code — 0 clean, 1 divergence,
+/// 2 unusable invocation.
+fn run_fuzz(cli: &Cli) -> i32 {
+    use nmc::fuzz;
+    if let Some(path) = &cli.replay {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprint!("{}", usage());
+                eprintln!("error: cannot read --replay file `{path}`: {e}");
+                return 2;
+            }
+        };
+        let case = match fuzz::from_json(&text) {
+            Ok(c) => c,
+            Err(e) => {
+                eprint!("{}", usage());
+                eprintln!("error: `{path}` is not a fuzz repro file: {e}");
+                return 2;
+            }
+        };
+        return match fuzz::replay(&case) {
+            Ok(()) => {
+                println!("replay of {path}: no divergence (case seed {})", case.seed);
+                0
+            }
+            Err(d) => {
+                println!("replay of {path}: DIVERGENCE");
+                println!("  {d}");
+                1
+            }
+        };
+    }
+    let seed = cli.seed.unwrap_or(1);
+    let budget = cli.budget.unwrap_or(200);
+    let max_insns = cli.max_insns.unwrap_or(64);
+    println!(
+        "fuzz: seed {seed}, budget {budget} cases, {max_insns} instructions per ISA surface"
+    );
+    let report = fuzz::run(seed, budget, max_insns);
+    match report.failure {
+        None => {
+            println!("{} cases checked across engines × tiles × shard × timing: no divergence", report.cases);
+            0
+        }
+        Some(f) => {
+            let json = fuzz::to_json(&f.case, &f.divergence.to_string());
+            let name = format!("fuzz-repro-{}.json", f.case.seed);
+            let path = match cli.out.as_deref() {
+                Some(dir) => {
+                    std::fs::create_dir_all(dir).expect("create results dir");
+                    format!("{dir}/{name}")
+                }
+                None => name,
+            };
+            std::fs::write(&path, &json).expect("write fuzz repro");
+            println!("DIVERGENCE after {} cases:", report.cases);
+            println!("  {}", f.divergence);
+            println!(
+                "  shrunk to {} kept instructions, {:?} {:?} {} on {} tiles",
+                f.case.kept_insns(),
+                f.case.spec.target,
+                f.case.spec.kernel,
+                f.case.spec.sew,
+                f.case.tiles,
+            );
+            println!("  repro written to {path}");
+            println!("  replay locally with: heeperator fuzz --replay {path}");
+            1
+        }
+    }
+}
+
 /// The usage text (stdout for `help`, stderr for unknown subcommands).
 fn usage() -> String {
     let mut o = String::new();
     let w = &mut o;
     use std::fmt::Write as _;
-    writeln!(w, "usage: heeperator <all|table4|fig7|table5|fig11|fig12|fig13|table6|table7|table8|ablations|ad|sweep|scale> [--quick] [--out DIR]").unwrap();
+    writeln!(w, "usage: heeperator <all|table4|fig7|table5|fig11|fig12|fig13|table6|table7|table8|ablations|ad|sweep|scale|fuzz> [--quick] [--out DIR]").unwrap();
     writeln!(w, "       `all` additionally accepts --jobs N (worker pool bound; 1 = sequential)").unwrap();
     writeln!(w, "       `sweep` selects scenarios: --target cpu|caesar|carus|all --family xor|add|mul|matmul|gemm|conv2d|relu|leakyrelu|maxpool|all").unwrap();
     writeln!(w, "               --sew 8|16|32|all, free dims --n N --p P --f F (default: paper Table V shapes), --seed S").unwrap();
     writeln!(w, "       `scale` sweeps a batched workload across NMC tile counts: --tiles 1,2,4 --batch B [--shard]").unwrap();
     writeln!(w, "               --target caesar|carus (default carus), --family/--sew/--n/--p/--f as in sweep,").unwrap();
     writeln!(w, "               --json FILE writes the machine-readable cycles+wall-time summary (CI perf tracking)").unwrap();
+    writeln!(w, "       `fuzz` runs the differential fuzzer: --seed S --budget N (cases, default 200) --max-insns K (default 64);").unwrap();
+    writeln!(w, "               --replay FILE re-checks a fuzz-repro-<seed>.json; a divergence writes one (into --out DIR if given)").unwrap();
     writeln!(w, "       every subcommand accepts --timing cycle|event (skip-ahead event timing is the default;").unwrap();
     writeln!(w, "               `cycle` forces the per-cycle reference loop; SOC_TIMING env var works too)").unwrap();
+    writeln!(w, "       every --flag accepts both `--flag value` and `--flag=value`").unwrap();
     o
 }
 
@@ -703,14 +814,45 @@ mod tests {
     }
 
     #[test]
+    fn fuzz_flags_parse_in_both_spellings() {
+        let cli = p(&["fuzz", "--seed", "7", "--budget", "500", "--max-insns", "32"]);
+        assert_eq!(cli.cmd, "fuzz");
+        assert_eq!(cli.seed, Some(7));
+        assert_eq!(cli.budget, Some(500));
+        assert_eq!(cli.max_insns, Some(32));
+        // The `=` spelling normalizes to the same parse.
+        let eq = p(&["fuzz", "--seed=7", "--budget=500", "--max-insns=32", "--replay=r.json"]);
+        assert_eq!(eq.seed, Some(7));
+        assert_eq!(eq.budget, Some(500));
+        assert_eq!(eq.max_insns, Some(32));
+        assert_eq!(eq.replay.as_deref(), Some("r.json"));
+        // Defaults stay unset (the subcommand fills them in).
+        let cli = p(&["fuzz"]);
+        assert_eq!(cli.budget, None);
+        assert_eq!(cli.max_insns, None);
+        assert_eq!(cli.replay, None);
+    }
+
+    #[test]
+    fn garbage_budget_value_is_an_error_in_both_spellings() {
+        let err = parse_args(&argv(&["fuzz", "--budget", "tons"])).unwrap_err();
+        assert!(err.contains("--budget"), "{err}");
+        assert!(err.contains("tons"), "{err}");
+        let err = parse_args(&argv(&["fuzz", "--budget=tons"])).unwrap_err();
+        assert!(err.contains("--budget"), "{err}");
+    }
+
+    #[test]
     fn usage_covers_every_subcommand() {
         let u = usage();
-        for cmd in ["all", "table4", "fig11", "ablations", "ad", "sweep", "scale"] {
+        for cmd in ["all", "table4", "fig11", "ablations", "ad", "sweep", "scale", "fuzz"] {
             assert!(u.contains(cmd), "usage must mention `{cmd}`");
         }
         assert!(u.contains("--json"));
         assert!(u.contains("--tiles"));
         assert!(u.contains("--timing"));
+        assert!(u.contains("--replay"));
+        assert!(u.contains("--budget"));
     }
 
     #[test]

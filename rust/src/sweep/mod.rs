@@ -108,7 +108,7 @@ impl SweepSession {
         }
         // Plan outside the slot so a planning error never wedges it; a
         // racing thread may plan once more, the first init wins.
-        let plan = sched::plan(spec, tiles as usize)?;
+        let plan = sched::plan(spec, tiles as usize).map_err(|e| e.to_string())?;
         Ok(Arc::clone(slot.get_or_init(|| {
             self.simulations.fetch_add(1, Ordering::Relaxed);
             Arc::new(sched::run_planned(&plan))

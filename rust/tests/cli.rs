@@ -47,3 +47,46 @@ fn scale_rejects_bad_tile_lists_without_simulating() {
     let stderr = String::from_utf8_lossy(&out.stderr);
     assert!(stderr.contains("tile"), "{stderr}");
 }
+
+#[test]
+fn fuzz_tiny_clean_run_exits_zero_in_both_flag_spellings() {
+    let out = heeperator(&["fuzz", "--seed", "11", "--budget", "2", "--max-insns", "16"]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "clean fuzz run must exit 0: {stdout}");
+    assert!(stdout.contains("no divergence"), "{stdout}");
+    let out = heeperator(&["fuzz", "--seed=11", "--budget=2", "--max-insns=16"]);
+    assert!(out.status.success(), "--flag=value spelling must behave identically");
+    assert!(String::from_utf8_lossy(&out.stdout).contains("no divergence"));
+}
+
+#[test]
+fn fuzz_bad_budget_exits_two() {
+    let out = heeperator(&["fuzz", "--budget", "tons"]);
+    assert!(!out.status.success());
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--budget"), "{stderr}");
+}
+
+#[test]
+fn fuzz_replay_of_missing_file_exits_two_with_usage_on_stderr() {
+    let out = heeperator(&["fuzz", "--replay", "does-not-exist-fuzz-repro.json"]);
+    assert!(!out.status.success());
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("usage: heeperator"), "{stderr}");
+    assert!(stderr.contains("does-not-exist-fuzz-repro.json"), "{stderr}");
+}
+
+#[test]
+fn fuzz_replay_of_garbage_file_exits_two() {
+    let dir = std::env::temp_dir().join("heeperator-fuzz-cli-test");
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let path = dir.join("not-a-repro.json");
+    std::fs::write(&path, "{\"schema\": \"something-else\"}").expect("write garbage");
+    let out = heeperator(&["fuzz", "--replay", path.to_str().unwrap()]);
+    assert!(!out.status.success());
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("not a fuzz repro"), "{stderr}");
+}

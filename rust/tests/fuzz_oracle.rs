@@ -1,0 +1,88 @@
+//! Self-verification of the differential fuzzer (DESIGN.md §11): inject a
+//! known decode bug behind the test-only hook and assert the fuzzer
+//! *catches* it, *shrinks* it to a handful of instructions, and emits a
+//! repro file that replays to the same failure — plus a clean fixed-seed
+//! run proving the oracle is divergence-free on the real simulator.
+
+use nmc::fuzz;
+use std::sync::Mutex;
+
+/// The decode-fault hook is process-global; serialize the tests that
+/// touch it (and any clean run that must see it disarmed).
+static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+/// RAII arm/disarm so a failing assert can't leave the fault armed for
+/// the other tests.
+struct ArmedFault;
+
+impl ArmedFault {
+    fn new() -> ArmedFault {
+        fuzz::arm_decode_fault(true);
+        ArmedFault
+    }
+}
+
+impl Drop for ArmedFault {
+    fn drop(&mut self) {
+        fuzz::arm_decode_fault(false);
+    }
+}
+
+#[test]
+fn injected_decode_bug_is_caught_shrunk_and_replayable() {
+    let _serial = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let shrunk = {
+        let _armed = ArmedFault::new();
+        let report = fuzz::run(0xfa_017, 50, 64);
+        let failure = report
+            .failure
+            .expect("an armed Max→Min decode fault must diverge within 50 cases");
+
+        // The divergence is on the xvnmc roundtrip axis.
+        match &failure.divergence {
+            fuzz::Divergence::IsaRoundtrip { surface, detail, .. } => {
+                assert_eq!(*surface, "xvnmc", "the fault lives in the xvnmc decoder");
+                assert!(detail.contains("Max"), "names the mis-decoded op: {detail}");
+            }
+            other => panic!("expected an ISA roundtrip divergence, got: {other}"),
+        }
+
+        // Shrinking converged: a decode fault needs exactly one
+        // instruction to witness (acceptance bound: ≤ 8).
+        assert!(
+            failure.case.kept_insns() <= 8,
+            "shrunk case still carries {} instructions",
+            failure.case.kept_insns()
+        );
+        assert!(failure.case.xvnmc_keep.len() == 1, "one xvnmc witness survives");
+        assert!(failure.case.xcv_keep.is_empty(), "unrelated surfaces are emptied");
+        assert!(failure.case.caesar_keep.is_empty());
+
+        // The repro file reproduces the exact case…
+        let json = fuzz::to_json(&failure.case, &failure.divergence.to_string());
+        let back = fuzz::from_json(&json).expect("repro parses");
+        assert_eq!(back, failure.case);
+
+        // …and replaying it re-detects the fault while armed.
+        let replayed = fuzz::replay(&back).expect_err("armed replay must still diverge");
+        assert_eq!(replayed.stage(), fuzz::Stage::Isa);
+        failure.case
+    };
+
+    // Disarmed, the very same case is clean across every oracle axis —
+    // the divergence was the injected bug, not the case.
+    assert!(
+        fuzz::replay(&shrunk).is_ok(),
+        "disarmed replay of the shrunk case must pass"
+    );
+}
+
+#[test]
+fn fixed_seed_smoke_run_is_divergence_free() {
+    let _serial = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let report = fuzz::run(7, 3, 32);
+    assert_eq!(report.cases, 3);
+    if let Some(f) = &report.failure {
+        panic!("unexpected divergence: {} (case {:?})", f.divergence, f.case);
+    }
+}

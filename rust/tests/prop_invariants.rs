@@ -1,6 +1,7 @@
-//! Property-based invariants (hand-rolled splitmix64 generator — proptest
-//! is not in the offline vendor set; same methodology: randomized cases
-//! with fixed seeds for reproducibility, shrink-by-reading-the-seed).
+//! Property-based invariants (the shared splitmix64 generator of
+//! `nmc::fuzz::gen` — proptest is not in the offline vendor set; same
+//! methodology: randomized cases with fixed seeds for reproducibility,
+//! shrinking delegated to the differential fuzzer, `heeperator fuzz`).
 //!
 //! Invariants covered (DESIGN.md §7):
 //! 1. ISA encode ∘ decode = id for random valid instructions (RV32IM, Xcv,
@@ -15,63 +16,19 @@
 //!    the decoded-instruction path and a re-encoded round trip.
 
 use nmc::caesar::isa as cisa;
-use nmc::isa::rv32::{decode, encode, AluOp, BranchOp, Instr, LoadOp, MulOp, StoreOp};
+use nmc::fuzz::gen::{rand_reg, rand_rv32_instr, Rng};
+use nmc::isa::rv32::{decode, encode, Instr};
 use nmc::isa::xvnmc::{self, VInstr, VOp, VSrc};
-use nmc::isa::{Sew, Reg};
-use nmc::kernels::golden::Rng;
+use nmc::isa::Sew;
 use nmc::simd::{elem, swar};
 
 const CASES: usize = 2000;
-
-fn rand_reg(rng: &mut Rng) -> Reg {
-    (rng.next_u32() % 32) as Reg
-}
-
-fn rand_instr(rng: &mut Rng) -> Instr {
-    let rd = rand_reg(rng);
-    let rs1 = rand_reg(rng);
-    let rs2 = rand_reg(rng);
-    let imm12 = (rng.next_u32() as i32 % 2048).clamp(-2048, 2047);
-    match rng.next_u32() % 10 {
-        0 => Instr::Lui { rd, imm: ((rng.next_u32() & 0xfffff) << 12) as i32 },
-        1 => Instr::Auipc { rd, imm: ((rng.next_u32() & 0xfffff) << 12) as i32 },
-        2 => {
-            let ops = [AluOp::Add, AluOp::Sub, AluOp::Sll, AluOp::Slt, AluOp::Sltu, AluOp::Xor, AluOp::Srl, AluOp::Sra, AluOp::Or, AluOp::And];
-            Instr::Alu { op: ops[(rng.next_u32() % 10) as usize], rd, rs1, rs2 }
-        }
-        3 => {
-            let ops = [AluOp::Add, AluOp::Slt, AluOp::Sltu, AluOp::Xor, AluOp::Or, AluOp::And];
-            Instr::AluImm { op: ops[(rng.next_u32() % 6) as usize], rd, rs1, imm: imm12 }
-        }
-        4 => {
-            let ops = [AluOp::Sll, AluOp::Srl, AluOp::Sra];
-            Instr::AluImm { op: ops[(rng.next_u32() % 3) as usize], rd, rs1, imm: (rng.next_u32() % 32) as i32 }
-        }
-        5 => {
-            let ops = [MulOp::Mul, MulOp::Mulh, MulOp::Mulhsu, MulOp::Mulhu, MulOp::Div, MulOp::Divu, MulOp::Rem, MulOp::Remu];
-            Instr::MulDiv { op: ops[(rng.next_u32() % 8) as usize], rd, rs1, rs2 }
-        }
-        6 => {
-            let ops = [LoadOp::Lb, LoadOp::Lh, LoadOp::Lw, LoadOp::Lbu, LoadOp::Lhu];
-            Instr::Load { op: ops[(rng.next_u32() % 5) as usize], rd, rs1, off: imm12 }
-        }
-        7 => {
-            let ops = [StoreOp::Sb, StoreOp::Sh, StoreOp::Sw];
-            Instr::Store { op: ops[(rng.next_u32() % 3) as usize], rs2, rs1, off: imm12 }
-        }
-        8 => {
-            let ops = [BranchOp::Beq, BranchOp::Bne, BranchOp::Blt, BranchOp::Bge, BranchOp::Bltu, BranchOp::Bgeu];
-            Instr::Branch { op: ops[(rng.next_u32() % 6) as usize], rs1, rs2, off: (imm12 / 2) * 2 }
-        }
-        _ => Instr::Jal { rd, off: (imm12 / 2) * 2 },
-    }
-}
 
 #[test]
 fn prop_rv32_encode_decode_roundtrip() {
     let mut rng = Rng(0x1);
     for i in 0..CASES {
-        let instr = rand_instr(&mut rng);
+        let instr = rand_rv32_instr(&mut rng);
         let w = encode(&instr);
         let back = decode(w).unwrap_or_else(|e| panic!("case {i}: {e} for {instr:?}"));
         assert_eq!(back, instr, "case {i} word {w:#010x}");
@@ -248,7 +205,7 @@ fn prop_random_straight_line_programs_roundtrip_through_encoding() {
     for case in 0..200 {
         let prog: Vec<Instr> = (0..50)
             .map(|_| loop {
-                let i = rand_instr(&mut rng);
+                let i = rand_rv32_instr(&mut rng);
                 // Straight-line: no control flow.
                 match i {
                     Instr::Branch { .. } | Instr::Jal { .. } | Instr::Jalr { .. } => continue,

@@ -110,7 +110,8 @@ fn capacity_and_shard_rejections_are_errors_not_panics() {
         },
         2,
     )
-    .unwrap_err();
+    .unwrap_err()
+    .to_string();
     assert!(e.contains("staging"), "{e}");
     // Conv2d has no 1-D shard axis.
     let e = sched::run_batch(
@@ -124,7 +125,8 @@ fn capacity_and_shard_rejections_are_errors_not_panics() {
         },
         2,
     )
-    .unwrap_err();
+    .unwrap_err()
+    .to_string();
     assert!(e.contains("shard axis"), "{e}");
     // Shards that violate a tile's shape envelope (NM-Carus matmul needs
     // p >= 8 per shard).
@@ -139,6 +141,7 @@ fn capacity_and_shard_rejections_are_errors_not_panics() {
         },
         4,
     )
-    .unwrap_err();
+    .unwrap_err()
+    .to_string();
     assert!(e.contains("shard"), "{e}");
 }
