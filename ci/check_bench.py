@@ -5,6 +5,12 @@ Inputs:
   --scale scale.json         `heeperator scale --json` output: deterministic
                              simulated cycles + wall time + simulator
                              throughput per tile count.
+  --serve serve.json         `heeperator serve --selftest --json` output:
+                             deterministic latency percentiles / queue and
+                             batching stats from the virtual-time service
+                             replay. Folded under the "serve" key of --out
+                             and gated on p99 latency vs the baseline.
+                             At least one of --scale / --serve is required.
   --diff scale-cycle.json    a second scale summary from the *other* timing
                              mode (`--timing cycle`). Every shared point must
                              report identical simulated cycles — the
@@ -24,6 +30,10 @@ Inputs:
 Gates (exit 1 on violation):
   * aggregate simulated cycles regress more than --max-regress (default
     10%) vs the baseline's aggregate_cycles;
+  * the serve p99 latency regresses more than --max-latency-regress
+    (default 10%) vs the baseline's serve.p99_latency_cycles, and the
+    serve summary must be internally consistent (every request answered
+    exactly once — completed + rejected + errored == requests);
   * the speedup at the largest tile count falls below --min-speedup, when
     given (the scale-out acceptance bar);
   * any --diff point disagrees on simulated cycles (timing-mode drift);
@@ -93,23 +103,66 @@ def diff_timing_modes(reports, other, failures):
     return speedup
 
 
+def check_serve(serve, baseline, max_latency_regress, failures):
+    """Structural sanity of a serve summary + the p99 latency gate.
+    Latencies are simulated cycles from the virtual-time replay, so the
+    comparison is deterministic — no wall-clock noise to absorb."""
+    if serve.get("schema") != "heeperator-serve-v1":
+        failures.append(f"serve summary has schema {serve.get('schema')!r}, "
+                        "expected heeperator-serve-v1")
+        return
+    answered = serve.get("completed", 0) + serve.get("rejected", 0) + serve.get("errored", 0)
+    if answered != serve.get("requests"):
+        failures.append(
+            f"serve summary drops requests: completed+rejected+errored = {answered} "
+            f"but requests = {serve.get('requests')}"
+        )
+    if serve.get("errored", 0):
+        failures.append(
+            f"serve selftest errored on {serve['errored']} generated requests "
+            "(the load generator only emits valid shapes)"
+        )
+    p99 = serve.get("p99_latency_cycles")
+    base = None if baseline is None else baseline.get("serve", {}).get("p99_latency_cycles")
+    print(f"serve: {serve.get('requests')} requests, {serve.get('batches')} batches, "
+          f"p99 latency {p99} cycles")
+    if not base:
+        print("no armed serve baseline: recording p99 only")
+        return
+    delta = (p99 - base) / base
+    print(f"serve p99 latency: {p99} vs baseline {base} ({delta:+.1%})")
+    if delta > max_latency_regress:
+        failures.append(
+            f"serve p99 latency regressed {delta:.1%} > {max_latency_regress:.0%}"
+        )
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--scale", required=True)
+    ap.add_argument("--scale", default=None)
+    ap.add_argument("--serve", default=None)
     ap.add_argument("--diff", default=None)
     ap.add_argument("--bench-lines", default=None)
     ap.add_argument("--baseline", required=True)
     ap.add_argument("--out", required=True)
     ap.add_argument("--max-regress", type=float, default=0.10)
+    ap.add_argument("--max-latency-regress", type=float, default=0.10)
     ap.add_argument("--min-speedup", type=float, default=None)
     ap.add_argument("--min-sim-speedup", type=float, default=None)
     args = ap.parse_args()
+    if not args.scale and not args.serve:
+        ap.error("at least one of --scale / --serve is required")
 
-    scale = read_json(args.scale)
+    scale = read_json(args.scale) if args.scale else {}
+    serve = read_json(args.serve) if args.serve else None
     reports = list(scale.get("reports", []))
     aggregate = scale.get("aggregate_cycles")
     if aggregate is None:
         aggregate = sum(r.get("cycles", 0) for r in reports)
+    if not args.scale and serve is not None:
+        # Serve-only invocation: the deterministic simulated service
+        # window is the aggregate the baseline gate compares.
+        aggregate = serve.get("sim_cycles", 0)
 
     for m in read_jsonl(args.bench_lines) if args.bench_lines else []:
         if "median_ns" in m:
@@ -152,6 +205,8 @@ def main():
     }
     if sim_speedup is not None:
         merged["sim_speedup_event_vs_cycle"] = round(sim_speedup, 2)
+    if serve is not None:
+        merged["serve"] = serve
     with open(args.out, "w") as f:
         json.dump(merged, f, indent=2)
         f.write("\n")
@@ -171,6 +226,9 @@ def main():
         baseline = read_json(args.baseline)
     except FileNotFoundError:
         baseline = None
+    armed = baseline if baseline is not None and not baseline.get("bootstrap") else None
+    if serve is not None:
+        check_serve(serve, armed, args.max_latency_regress, failures)
     base_cycles = None if baseline is None else baseline.get("aggregate_cycles")
     if baseline is None or baseline.get("bootstrap") or not base_cycles:
         print("no armed baseline: recording only (the workflow caches this run's "

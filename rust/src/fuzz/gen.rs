@@ -272,6 +272,34 @@ pub fn rand_batch_scenario(rng: &mut Rng) -> (BatchSpec, u32) {
     (spec, 1 + rng.below(16))
 }
 
+/// Random **raw** coalesced-group scenario: unlike [`rand_batch_scenario`]
+/// nothing is pre-validated — dims are drawn from a skewed range that
+/// includes 0, sub-word odd sizes, and far-over-envelope values, the
+/// target may be the host CPU, families may mix within one group, and
+/// the tile count may be out of range. The planner's contract under
+/// test: *any* such input answers `Ok` or a typed `SchedError`, never a
+/// panic — the serve front-end feeds it request-supplied shapes.
+pub fn rand_raw_jobs(rng: &mut Rng) -> (Target, Sew, Vec<(Kernel, u64)>, usize) {
+    let target = Target::ALL[rng.below(3) as usize];
+    let sew = Sew::ALL[rng.below(3) as usize];
+    fn raw_dim(rng: &mut Rng) -> u32 {
+        match rng.below(4) {
+            0 => 0,
+            1 => rng.below(8),
+            2 => rng.below(512),
+            _ => 1 + rng.below(100_000),
+        }
+    }
+    let jobs = (0..rng.below(6))
+        .map(|_| {
+            let family = Family::ALL[rng.below(Family::ALL.len() as u32) as usize];
+            let k = crate::fuzz::kernel_from(family, raw_dim(rng), raw_dim(rng), raw_dim(rng));
+            (k, rng.next_u64())
+        })
+        .collect();
+    (target, sew, jobs, rng.below(20) as usize)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -313,6 +341,31 @@ mod tests {
                     assert_eq!(k.validate(Target::Cpu, sew), Ok(()));
                     assert_eq!(k.family(), family);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn planner_never_panics_on_raw_scenarios() {
+        // Satellite of the serve work: the staging paths that used to
+        // `expect`/`assert!` must degrade to typed errors on arbitrary
+        // request-supplied shapes. Raw scenarios deliberately include
+        // zero dims, sub-word sizes, host targets, mixed families, and
+        // out-of-range tile counts.
+        let mut rng = Rng(0x5eed);
+        for _ in 0..400 {
+            let (target, sew, jobs, tiles) = rand_raw_jobs(&mut rng);
+            let _ = crate::sched::plan_jobs(target, sew, &jobs, tiles);
+            if let Some(&(kernel, seed)) = jobs.first() {
+                let spec = BatchSpec {
+                    target,
+                    kernel,
+                    sew,
+                    seed,
+                    batch: jobs.len() as u32,
+                    shard: rng.below(2) == 1,
+                };
+                let _ = crate::sched::plan(&spec, tiles);
             }
         }
     }

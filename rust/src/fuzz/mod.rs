@@ -649,7 +649,7 @@ fn shrunk_kernels(k: Kernel) -> Vec<Kernel> {
 /// Schema tag of the repro JSON format.
 pub const REPRO_SCHEMA: &str = "heeperator-fuzz-repro-v1";
 
-fn family_slug(f: Family) -> &'static str {
+pub(crate) fn family_slug(f: Family) -> &'static str {
     match f {
         Family::Xor => "xor",
         Family::Add => "add",
@@ -663,7 +663,7 @@ fn family_slug(f: Family) -> &'static str {
     }
 }
 
-fn target_slug(t: Target) -> &'static str {
+pub(crate) fn target_slug(t: Target) -> &'static str {
     match t {
         Target::Cpu => "cpu",
         Target::Caesar => "caesar",
@@ -697,7 +697,7 @@ pub fn shape_of(k: Kernel) -> (u32, u32, u32) {
     }
 }
 
-fn json_escape(s: &str) -> String {
+pub(crate) fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
         match c {
@@ -742,7 +742,7 @@ pub fn to_json(case: &FuzzCase, divergence: &str) -> String {
 
 // -- Hand-rolled extraction (the repo is std-only: no serde) ---------------
 
-fn json_raw<'a>(s: &'a str, key: &str) -> Result<&'a str, String> {
+pub(crate) fn json_raw<'a>(s: &'a str, key: &str) -> Result<&'a str, String> {
     let pat = format!("\"{key}\"");
     let at = s.find(&pat).ok_or_else(|| format!("missing key {key:?}"))?;
     let rest = &s[at + pat.len()..];
@@ -751,13 +751,13 @@ fn json_raw<'a>(s: &'a str, key: &str) -> Result<&'a str, String> {
     Ok(rest.trim_start())
 }
 
-fn json_u64(s: &str, key: &str) -> Result<u64, String> {
+pub(crate) fn json_u64(s: &str, key: &str) -> Result<u64, String> {
     let raw = json_raw(s, key)?;
     let end = raw.find(|c: char| !c.is_ascii_digit()).unwrap_or(raw.len());
     raw[..end].parse::<u64>().map_err(|_| format!("{key:?} is not a number"))
 }
 
-fn json_str<'a>(s: &'a str, key: &str) -> Result<&'a str, String> {
+pub(crate) fn json_str<'a>(s: &'a str, key: &str) -> Result<&'a str, String> {
     let raw = json_raw(s, key)?;
     let raw = raw.strip_prefix('"').ok_or_else(|| format!("{key:?} is not a string"))?;
     let end = raw.find('"').ok_or_else(|| format!("unterminated string for {key:?}"))?;
@@ -867,12 +867,12 @@ pub fn replay(case: &FuzzCase) -> Result<(), Divergence> {
 /// panics (golden-mismatch asserts under `catch_unwind`) should not spray
 /// backtraces over fuzz progress output. Restores the previous hook on
 /// drop.
-struct QuietPanics {
+pub(crate) struct QuietPanics {
     prev: Option<Box<dyn Fn(&std::panic::PanicHookInfo<'_>) + Sync + Send>>,
 }
 
 impl QuietPanics {
-    fn install() -> QuietPanics {
+    pub(crate) fn install() -> QuietPanics {
         let prev = std::panic::take_hook();
         std::panic::set_hook(Box::new(|_| {}));
         QuietPanics { prev: Some(prev) }

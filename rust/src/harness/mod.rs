@@ -806,6 +806,88 @@ pub fn scale_report(
     Ok((r, points))
 }
 
+// ---------------------------------------------------------------------------
+// heeperator serve — service latency / utilization report
+// ---------------------------------------------------------------------------
+
+/// Render a serve run's statistics: latency percentiles, queue behavior,
+/// batch-size histogram, and per-tile utilization — the human-readable
+/// companion of [`crate::serve::summary_json`] (which carries the same
+/// numbers machine-readably for CI).
+pub fn serve_report(
+    stats: &crate::serve::ServeStats,
+    cfg: &crate::serve::ServeConfig,
+    trace: &str,
+    seed: u64,
+) -> Report {
+    let mut r = Report::new("serve", "Batch-inference service (seeded load selftest)");
+    let t = &mut r.text;
+    writeln!(
+        t,
+        "trace {trace}, seed {seed} — {} tile(s), queue cap {}, max batch {}, linger {} cycles",
+        cfg.tiles, cfg.queue_cap, cfg.max_batch, cfg.linger_cycles
+    )
+    .unwrap();
+    writeln!(
+        t,
+        "requests {:>6}   completed {:>6}   rejected {:>5}   errored {:>5}   batches {:>5}",
+        stats.requests, stats.completed, stats.rejected, stats.errored, stats.batches
+    )
+    .unwrap();
+    writeln!(
+        t,
+        "latency[cyc]   p50 {:>8}   p95 {:>8}   p99 {:>8}   max {:>8}",
+        fmt_si(stats.latency_percentile(0.50) as f64),
+        fmt_si(stats.latency_percentile(0.95) as f64),
+        fmt_si(stats.latency_percentile(0.99) as f64),
+        fmt_si(stats.latency_max() as f64)
+    )
+    .unwrap();
+    writeln!(
+        t,
+        "queue depth    max {:>8}   mean {:>7.2}   mean batch {:>5.2}   sim cycles {:>9}",
+        stats.queue_depth_max(),
+        stats.queue_depth_mean(),
+        stats.mean_batch_size(),
+        fmt_si(stats.sim_cycles as f64)
+    )
+    .unwrap();
+    let utils: Vec<String> =
+        (0..cfg.tiles).map(|i| format!("{:.0}%", 100.0 * stats.utilization(i))).collect();
+    writeln!(t, "per-tile util  {}", utils.join(" ")).unwrap();
+    let hist: Vec<String> = stats
+        .batch_size_histogram(cfg.max_batch)
+        .iter()
+        .enumerate()
+        .map(|(i, c)| format!("{}:{c}", i + 1))
+        .collect();
+    writeln!(t, "batch sizes    {}", hist.join(" ")).unwrap();
+
+    let mut csv = String::from("metric,value\n");
+    for (k, v) in [
+        ("requests", stats.requests as f64),
+        ("completed", stats.completed as f64),
+        ("rejected", stats.rejected as f64),
+        ("errored", stats.errored as f64),
+        ("batches", stats.batches as f64),
+        ("sim_cycles", stats.sim_cycles as f64),
+        ("p50_latency_cycles", stats.latency_percentile(0.50) as f64),
+        ("p95_latency_cycles", stats.latency_percentile(0.95) as f64),
+        ("p99_latency_cycles", stats.latency_percentile(0.99) as f64),
+        ("max_latency_cycles", stats.latency_max() as f64),
+        ("mean_batch_size", stats.mean_batch_size()),
+        ("queue_depth_max", stats.queue_depth_max() as f64),
+        ("queue_depth_mean", stats.queue_depth_mean()),
+    ] {
+        writeln!(csv, "{k},{v}").unwrap();
+    }
+    for i in 0..cfg.tiles {
+        writeln!(csv, "tile{i}_utilization,{:.6}", stats.utilization(i)).unwrap();
+    }
+    r.csv.push(("serve.csv".into(), csv));
+    r
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -44,6 +44,10 @@
 //!   xvnmc/xcv/micro-op ISA surfaces and random batch scenarios, checked
 //!   across every execution axis (engine × tiles × shard × timing) with a
 //!   greedy shrinker and replayable repro files (`heeperator fuzz`).
+//! - [`serve`]: the batch-inference service — JSONL requests over
+//!   stdin/TCP through admission control and a coalescing batcher onto
+//!   [`sched::plan_jobs`], with a deterministic seeded load generator
+//!   and latency/utilization reporting (`heeperator serve`).
 
 pub mod apps;
 pub mod area;
@@ -64,6 +68,7 @@ pub mod runtime;
 pub mod caesar;
 pub mod carus;
 pub mod sched;
+pub mod serve;
 pub mod simd;
 pub mod soc;
 pub mod sweep;

@@ -11,6 +11,8 @@
 //! heeperator scale --tiles 1,2,4 [--batch B] [--shard] [--target caesar|carus] [--family F]
 //!                  [--sew W] [--n/--p/--f dims] [--quick] [--json FILE] [--out DIR] [--jobs N]
 //! heeperator fuzz [--seed S] [--budget N] [--max-insns K] [--replay FILE] [--out DIR]
+//! heeperator serve [--listen stdin|PORT] [--tiles N] [--queue N] [--max-batch N] [--linger CYC]
+//!                  [--selftest [--trace poisson|bursty|mixed] [--requests N] [--seed S] [--json FILE]]
 //! ```
 //!
 //! `all` fans the independent reports out over a `std::thread` worker
@@ -36,6 +38,13 @@
 //! shrunk and written to a replayable `fuzz-repro-<seed>.json`, and
 //! `--replay FILE` re-checks exactly that case. Exit code 0 = clean,
 //! 1 = divergence, 2 = bad invocation.
+//!
+//! `serve` runs the long-running batch-inference service (DESIGN.md §12):
+//! JSONL requests over stdin or TCP through admission control and a
+//! coalescing batcher onto the multi-tile scheduler. `--selftest` replays
+//! a deterministic seeded load trace on a virtual clock instead and
+//! reports latency percentiles / queue depth / per-tile utilization;
+//! `--json FILE` writes the machine-readable summary CI gates on.
 //!
 //! Every subcommand accepts `--timing cycle|event` to pick the simulation
 //! timing discipline: `event` (the default) runs the skip-ahead
@@ -86,6 +95,16 @@ struct Cli {
     budget: Option<u32>,
     max_insns: Option<u32>,
     replay: Option<String>,
+    /// `serve` selectors: listen endpoint (`stdin` or a TCP port),
+    /// selftest mode with its trace kind and request count, and the
+    /// admission/batching policy knobs.
+    listen: Option<String>,
+    selftest: bool,
+    trace: Option<String>,
+    requests: Option<u32>,
+    queue: Option<usize>,
+    max_batch: Option<usize>,
+    linger: Option<u64>,
 }
 
 impl Cli {
@@ -110,6 +129,13 @@ impl Cli {
             budget: None,
             max_insns: None,
             replay: None,
+            listen: None,
+            selftest: false,
+            trace: None,
+            requests: None,
+            queue: None,
+            max_batch: None,
+            linger: None,
         }
     }
 }
@@ -217,6 +243,21 @@ fn parse_args(args: &[String]) -> Result<Cli, String> {
                     cli.replay = Some(v);
                 }
             }
+            "--listen" => {
+                if let Some(v) = parse_str(args, &mut i) {
+                    cli.listen = Some(v);
+                }
+            }
+            "--selftest" => cli.selftest = true,
+            "--trace" => {
+                if let Some(v) = parse_str(args, &mut i) {
+                    cli.trace = Some(v);
+                }
+            }
+            "--requests" => cli.requests = parse_num::<u32>(args, &mut i, "--requests")?,
+            "--queue" => cli.queue = parse_num::<usize>(args, &mut i, "--queue")?,
+            "--max-batch" => cli.max_batch = parse_num::<usize>(args, &mut i, "--max-batch")?,
+            "--linger" => cli.linger = parse_num::<u64>(args, &mut i, "--linger")?,
             a if !a.starts_with("--") => {
                 // First free-standing word is the subcommand.
                 if cmd.is_none() {
@@ -477,6 +518,9 @@ fn main() {
         "fuzz" => {
             std::process::exit(run_fuzz(&cli));
         }
+        "serve" => {
+            std::process::exit(run_serve(&cli));
+        }
         "ad" => {
             let golden = nmc::apps::anomaly::golden_forward(&nmc::apps::anomaly::model(2));
             for target in Target::ALL {
@@ -578,12 +622,102 @@ fn run_fuzz(cli: &Cli) -> i32 {
     }
 }
 
+/// The `serve` subcommand: either the deterministic seeded selftest
+/// (`--selftest`, a virtual-clock replay of a generated load trace — the
+/// CI-gated path) or the live service over stdin/TCP. Exit code 0 =
+/// served, 2 = unusable invocation.
+fn run_serve(cli: &Cli) -> i32 {
+    use nmc::serve::{self, load};
+    let tiles = match cli.tiles.as_deref() {
+        None => 4usize,
+        Some(s) => match s.parse::<usize>() {
+            Ok(t) if t >= 1 && t <= nmc::bus::MAX_TILES => t,
+            _ => {
+                eprint!("{}", usage());
+                eprintln!(
+                    "error: serve expects --tiles N in 1..={}, got `{s}`",
+                    nmc::bus::MAX_TILES
+                );
+                return 2;
+            }
+        },
+    };
+    let cfg = serve::ServeConfig {
+        tiles,
+        queue_cap: cli.queue.unwrap_or(64),
+        max_batch: cli.max_batch.unwrap_or(8),
+        linger_cycles: cli.linger.unwrap_or(100_000),
+    };
+    if cfg.queue_cap == 0 || cfg.max_batch == 0 {
+        eprintln!("error: --queue and --max-batch must be at least 1");
+        return 2;
+    }
+    let seed = cli.seed.unwrap_or(1);
+
+    if cli.selftest {
+        let trace = cli.trace.as_deref().unwrap_or("mixed");
+        let Some(kind) = load::TraceKind::parse(trace) else {
+            eprint!("{}", usage());
+            eprintln!("error: unknown --trace `{trace}` (poisson|bursty|mixed)");
+            return 2;
+        };
+        let requests = cli.requests.unwrap_or(if cli.quick { 64 } else { 256 });
+        let (stats, _) = serve::selftest(&cfg, kind, seed, requests);
+        let rep = harness::serve_report(&stats, &cfg, kind.slug(), seed);
+        write_reports(&[rep], cli.out.as_deref());
+        if let Some(path) = &cli.json {
+            std::fs::write(path, serve::summary_json(&stats, &cfg, kind.slug(), seed))
+                .expect("write serve json");
+            println!("(serve summary written to {path})");
+        }
+        return 0;
+    }
+
+    // Live service: responses stream to stdout, the session report to
+    // stderr so piped consumers see only JSONL.
+    match cli.listen.as_deref().unwrap_or("stdin") {
+        "stdin" => {
+            let stdin = std::io::stdin();
+            let stats = serve::serve_stream(&cfg, stdin.lock(), std::io::stdout());
+            eprint!("{}", harness::serve_report(&stats, &cfg, "stdin", seed).text);
+            0
+        }
+        port => {
+            let Ok(port) = port.parse::<u16>() else {
+                eprint!("{}", usage());
+                eprintln!("error: --listen expects `stdin` or a TCP port, got `{port}`");
+                return 2;
+            };
+            let listener = match std::net::TcpListener::bind(("127.0.0.1", port)) {
+                Ok(l) => l,
+                Err(e) => {
+                    eprintln!("error: cannot bind 127.0.0.1:{port}: {e}");
+                    return 2;
+                }
+            };
+            let addr = listener.local_addr().expect("bound socket has an address");
+            eprintln!("serving on {addr} (JSONL requests, one connection at a time)");
+            loop {
+                match serve::serve_one_tcp(&cfg, &listener) {
+                    Ok(stats) => {
+                        eprint!("{}", harness::serve_report(&stats, &cfg, "tcp", seed).text);
+                    }
+                    Err(e) => {
+                        eprintln!("error: accept failed: {e}");
+                        return 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// The usage text (stdout for `help`, stderr for unknown subcommands).
 fn usage() -> String {
     let mut o = String::new();
     let w = &mut o;
     use std::fmt::Write as _;
-    writeln!(w, "usage: heeperator <all|table4|fig7|table5|fig11|fig12|fig13|table6|table7|table8|ablations|ad|sweep|scale|fuzz> [--quick] [--out DIR]").unwrap();
+    writeln!(w, "usage: heeperator <all|table4|fig7|table5|fig11|fig12|fig13|table6|table7|table8|ablations|ad|sweep|scale|fuzz|serve> [--quick] [--out DIR]").unwrap();
     writeln!(w, "       `all` additionally accepts --jobs N (worker pool bound; 1 = sequential)").unwrap();
     writeln!(w, "       `sweep` selects scenarios: --target cpu|caesar|carus|all --family xor|add|mul|matmul|gemm|conv2d|relu|leakyrelu|maxpool|all").unwrap();
     writeln!(w, "               --sew 8|16|32|all, free dims --n N --p P --f F (default: paper Table V shapes), --seed S").unwrap();
@@ -592,6 +726,10 @@ fn usage() -> String {
     writeln!(w, "               --json FILE writes the machine-readable cycles+wall-time summary (CI perf tracking)").unwrap();
     writeln!(w, "       `fuzz` runs the differential fuzzer: --seed S --budget N (cases, default 200) --max-insns K (default 64);").unwrap();
     writeln!(w, "               --replay FILE re-checks a fuzz-repro-<seed>.json; a divergence writes one (into --out DIR if given)").unwrap();
+    writeln!(w, "       `serve` runs the batch-inference service: --listen stdin|PORT (default stdin), --tiles N (default 4),").unwrap();
+    writeln!(w, "               --queue N --max-batch N --linger CYC set the admission + batching policy;").unwrap();
+    writeln!(w, "               --selftest replays a seeded load trace on a virtual clock instead: --trace poisson|bursty|mixed,").unwrap();
+    writeln!(w, "               --requests N --seed S, --json FILE writes the summary the CI serve-smoke job gates on").unwrap();
     writeln!(w, "       every subcommand accepts --timing cycle|event (skip-ahead event timing is the default;").unwrap();
     writeln!(w, "               `cycle` forces the per-cycle reference loop; SOC_TIMING env var works too)").unwrap();
     writeln!(w, "       every --flag accepts both `--flag value` and `--flag=value`").unwrap();
@@ -845,7 +983,9 @@ mod tests {
     #[test]
     fn usage_covers_every_subcommand() {
         let u = usage();
-        for cmd in ["all", "table4", "fig11", "ablations", "ad", "sweep", "scale", "fuzz"] {
+        for cmd in
+            ["all", "table4", "fig11", "ablations", "ad", "sweep", "scale", "fuzz", "serve"]
+        {
             assert!(u.contains(cmd), "usage must mention `{cmd}`");
         }
         assert!(u.contains("--json"));
@@ -853,6 +993,50 @@ mod tests {
         assert!(u.contains("--timing"));
         assert!(u.contains("--replay"));
         assert!(u.contains("--budget"));
+        assert!(u.contains("--listen"));
+        assert!(u.contains("--selftest"));
+        assert!(u.contains("--trace"));
+        assert!(u.contains("--linger"));
+    }
+
+    #[test]
+    fn serve_flags_parse_in_both_spellings() {
+        let cli = p(&[
+            "serve", "--listen", "7777", "--tiles", "4", "--queue", "32", "--max-batch", "4",
+            "--linger", "50000",
+        ]);
+        assert_eq!(cli.cmd, "serve");
+        assert_eq!(cli.listen.as_deref(), Some("7777"));
+        assert_eq!(cli.tiles.as_deref(), Some("4"));
+        assert_eq!(cli.queue, Some(32));
+        assert_eq!(cli.max_batch, Some(4));
+        assert_eq!(cli.linger, Some(50_000));
+        assert!(!cli.selftest);
+        // The `=` spelling normalizes to the same parse.
+        let eq = p(&["serve", "--selftest", "--trace=bursty", "--requests=128", "--seed=9"]);
+        assert!(eq.selftest);
+        assert_eq!(eq.trace.as_deref(), Some("bursty"));
+        assert_eq!(eq.requests, Some(128));
+        assert_eq!(eq.seed, Some(9));
+        // Defaults stay unset (run_serve fills them in).
+        let cli = p(&["serve"]);
+        assert_eq!(cli.listen, None);
+        assert_eq!(cli.trace, None);
+        assert_eq!(cli.requests, None);
+        assert_eq!(cli.queue, None);
+        assert_eq!(cli.max_batch, None);
+        assert_eq!(cli.linger, None);
+    }
+
+    #[test]
+    fn garbage_serve_values_are_errors() {
+        let err = parse_args(&argv(&["serve", "--queue", "deep"])).unwrap_err();
+        assert!(err.contains("--queue"), "{err}");
+        assert!(err.contains("deep"), "{err}");
+        let err = parse_args(&argv(&["serve", "--requests=lots"])).unwrap_err();
+        assert!(err.contains("--requests"), "{err}");
+        let err = parse_args(&argv(&["serve", "--linger", "forever"])).unwrap_err();
+        assert!(err.contains("--linger"), "{err}");
     }
 
     #[test]

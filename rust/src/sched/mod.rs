@@ -73,6 +73,19 @@ pub enum SchedError {
     /// engine/kernel pair hits this today; the variant guards future
     /// backends behind the same `Err`-not-panic promise.
     NotTileable { target: Target, kernel: Kernel },
+    /// A tile staging region or output span is not 32-bit word-aligned.
+    /// The built-in engines only emit word-aligned IO for shapes that
+    /// pass [`Kernel::validate`]; the variant keeps the DMA staging
+    /// invariant an `Err` (not an `assert!`) for any future backend —
+    /// a request-supplied shape must never crash the serve front-end.
+    Misaligned { kernel: Kernel, what: &'static str },
+    /// A coalesced group ([`plan_jobs`]) mixes kernel families. The tile
+    /// setup image is shared across one batch, so one family per group.
+    MixedBatch { first: Kernel, other: Kernel },
+    /// A coalesced group places two different kernels on the same
+    /// stream-executed tile slot (NM-Caesar replays one rendered
+    /// micro-op stream per tile across rounds).
+    StreamMismatch { expected: Kernel, got: Kernel },
     /// Input/output staging exceeds the SRAM pool.
     StagingOverflow,
     /// The compiled host firmware exceeds the code bank.
@@ -102,6 +115,21 @@ impl std::fmt::Display for SchedError {
             SchedError::NotTileable { target, kernel } => write!(
                 f,
                 "{target:?} {kernel:?} has no tiled execute path (host-CPU phase required)"
+            ),
+            SchedError::Misaligned { kernel, what } => write!(
+                f,
+                "{kernel:?}: tile {what} is not word-aligned — the DMA staging path moves whole \
+                 32-bit words"
+            ),
+            SchedError::MixedBatch { first, other } => write!(
+                f,
+                "cannot coalesce {other:?} with {first:?}: one kernel family per batch (the tile \
+                 setup image is shared)"
+            ),
+            SchedError::StreamMismatch { expected, got } => write!(
+                f,
+                "cannot coalesce {got:?}: its tile slot already streams {expected:?} (stream \
+                 tiles replay one rendered micro-op stream per tile)"
             ),
             SchedError::StagingOverflow => write!(
                 f,
@@ -166,12 +194,16 @@ pub struct BatchRunResult {
 }
 
 impl BatchRunResult {
-    /// Fraction of the makespan tile `i` spent computing.
+    /// Fraction of the makespan tile `i` spent computing. An
+    /// out-of-range tile index answers 0.0 (a tile that does not exist
+    /// never computed — the serve report may probe up to the configured
+    /// tile count), and the zero-makespan denominator follows the same
+    /// `.max(1)` convention as [`Self::speedup_vs`] so the two
+    /// zero-cycle behaviors agree.
     pub fn utilization(&self, i: usize) -> f64 {
-        if self.cycles == 0 {
-            return 0.0;
-        }
-        self.per_tile[i].busy_cycles as f64 / self.cycles as f64
+        self.per_tile
+            .get(i)
+            .map_or(0.0, |t| t.busy_cycles as f64 / self.cycles.max(1) as f64)
     }
 
     /// Mean utilization across tiles.
@@ -222,6 +254,43 @@ pub struct Plan {
 const POOL_BASE: u32 = BANK_SIZE;
 const POOL_END: u32 = NMC_TILE_BASE;
 
+/// Test-only fault injection for the per-workload staging paths. The
+/// built-in engines tile every kernel and emit word-aligned IO, so the
+/// `NotTileable`/`Misaligned` guards inside [`plan`] are unreachable
+/// through public inputs today; regression tests arm a fault to prove
+/// each guard stays a typed `Err` — never a panic — for any future
+/// backend. Thread-local, so an armed test cannot perturb planning on
+/// concurrently-running test threads.
+#[doc(hidden)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TileFault {
+    /// The stream loop's per-tile program lookup answers `None`.
+    StreamProgram,
+    /// [`Engine::tile_io`] answers `None` for a planned workload.
+    Io,
+    /// The per-workload argument-words program lookup answers `None`.
+    ArgsProgram,
+    /// An input staging region presents as word-misaligned.
+    Misalign,
+    /// The output span presents as word-misaligned.
+    MisalignOut,
+}
+
+thread_local! {
+    static TILE_FAULT: std::cell::Cell<Option<TileFault>> =
+        const { std::cell::Cell::new(None) };
+}
+
+/// Arm (or clear, with `None`) a [`TileFault`] on the current thread.
+#[doc(hidden)]
+pub fn arm_tile_fault(fault: Option<TileFault>) {
+    TILE_FAULT.with(|f| f.set(fault));
+}
+
+fn tile_fault() -> Option<TileFault> {
+    TILE_FAULT.with(|f| f.get())
+}
+
 /// Index of `kernel`'s assembled [`TileProgram`] in `programs`,
 /// assembling and caching it on first use (one assembly per distinct
 /// kernel per plan). `None` if the engine has no tiled path for it.
@@ -239,17 +308,23 @@ fn program_idx(
     Some(programs.len() - 1)
 }
 
-/// Validate `spec` on `tiles` tiles and compile the schedule.
-pub fn plan(spec: &BatchSpec, tiles: usize) -> Result<Plan, SchedError> {
+/// Resolve the tile kind for a scheduling request, rejecting bad tile
+/// counts and the host target up front (shared by [`plan`] and
+/// [`plan_jobs`]).
+fn tile_kind(target: Target, tiles: usize) -> Result<TileKind, SchedError> {
     if tiles == 0 || tiles > bus::MAX_TILES {
         return Err(SchedError::TileCount { got: tiles });
     }
-    let kind = match spec.target {
-        Target::Caesar => TileKind::Caesar,
-        Target::Carus => TileKind::Carus,
-        Target::Cpu => return Err(SchedError::HostTarget),
-    };
-    let eng = engine(spec.target);
+    match target {
+        Target::Caesar => Ok(TileKind::Caesar),
+        Target::Carus => Ok(TileKind::Carus),
+        Target::Cpu => Err(SchedError::HostTarget),
+    }
+}
+
+/// Validate `spec` on `tiles` tiles and compile the schedule.
+pub fn plan(spec: &BatchSpec, tiles: usize) -> Result<Plan, SchedError> {
+    let kind = tile_kind(spec.target, tiles)?;
 
     // ---- Work decomposition ------------------------------------------------
     // Shape validation runs here, BEFORE any tile program is assembled:
@@ -282,6 +357,65 @@ pub fn plan(spec: &BatchSpec, tiles: usize) -> Result<Plan, SchedError> {
             (v, None)
         };
 
+    compile_plan(*spec, tiles, kind, kernels_and_data, whole)
+}
+
+/// Plan a *coalesced group* of same-family workloads with explicit
+/// per-workload seeds — the entry point of the serve front-end
+/// ([`crate::serve`]), whose coalescer batches queued requests that are
+/// mutually schedulable. Unlike batch mode ([`plan`], seeds
+/// `seed..seed+batch`), every job carries its own seed, and NM-Carus
+/// groups may mix *shapes* within one family (the shape parameters
+/// travel in the per-workload argument words, exactly as in shard
+/// mode). Stream-executed tiles (NM-Caesar) replay one rendered
+/// micro-op stream per tile, so their groups must keep one kernel per
+/// tile slot — violations surface as [`SchedError::StreamMismatch`].
+pub fn plan_jobs(
+    target: Target,
+    sew: Sew,
+    jobs: &[(Kernel, u64)],
+    tiles: usize,
+) -> Result<Plan, SchedError> {
+    let kind = tile_kind(target, tiles)?;
+    if jobs.is_empty() {
+        return Err(SchedError::EmptyBatch);
+    }
+    let first = jobs[0].0;
+    for &(k, _) in jobs {
+        if k.family() != first.family() {
+            return Err(SchedError::MixedBatch { first, other: k });
+        }
+        k.validate(target, sew)
+            .map_err(|e| SchedError::InvalidShape { kernel: k, reason: e })?;
+    }
+    let kernels_and_data: Vec<(Kernel, WorkloadData)> =
+        jobs.iter().map(|&(k, s)| (k, golden::generate(k, sew, s))).collect();
+    // The representative spec carried through results and error messages.
+    let spec = BatchSpec {
+        target,
+        kernel: first,
+        sew,
+        seed: jobs[0].1,
+        batch: jobs.len() as u32,
+        shard: false,
+    };
+    compile_plan(spec, tiles, kind, kernels_and_data, None)
+}
+
+/// Shared back half of [`plan`]/[`plan_jobs`]: SRAM staging allocation,
+/// tile-program assembly, per-workload IO derivation, and host-firmware
+/// compilation. Every failure is a typed [`SchedError`] — the staging
+/// paths were once `expect`/`assert!` sites, which a malformed service
+/// request must never be able to reach.
+fn compile_plan(
+    spec: BatchSpec,
+    tiles: usize,
+    kind: TileKind,
+    kernels_and_data: Vec<(Kernel, WorkloadData)>,
+    whole: Option<WorkloadData>,
+) -> Result<Plan, SchedError> {
+    let eng = engine(spec.target);
+
     // ---- SRAM staging allocation ------------------------------------------
     let mut cursor = POOL_BASE;
     let mut take = |len: u32| -> Result<u32, SchedError> {
@@ -313,12 +447,25 @@ pub fn plan(spec: &BatchSpec, tiles: usize) -> Result<Plan, SchedError> {
 
     // Per-tile micro-op streams (NM-Caesar): tile t streams the program
     // of its first assigned workload, rendered against its bus window.
-    // Batch mode places one shape on every tile, so later rounds reuse it.
+    // Later rounds reuse it, so every workload the round-robin places on
+    // tile t must carry tile t's kernel — batch and shard mode satisfy
+    // this by construction, a coalesced group ([`plan_jobs`]) may not.
     let mut streams: Vec<(u32, Vec<u8>)> = Vec::new();
     if matches!(programs[first].1.exec, TileExec::Stream(_)) {
+        for (w, (k, _)) in kernels_and_data.iter().enumerate() {
+            let expected = kernels_and_data[w % tiles].0;
+            if *k != expected {
+                return Err(SchedError::StreamMismatch { expected, got: *k });
+            }
+        }
         for t in 0..tiles.min(kernels_and_data.len()) {
-            let i = program_idx(&mut programs, eng, kernels_and_data[t].0, spec.sew)
-                .expect("same-family shards stay tileable");
+            let i = (tile_fault() != Some(TileFault::StreamProgram))
+                .then(|| program_idx(&mut programs, eng, kernels_and_data[t].0, spec.sew))
+                .flatten()
+                .ok_or(SchedError::NotTileable {
+                    target: spec.target,
+                    kernel: kernels_and_data[t].0,
+                })?;
             let TileExec::Stream(p) = &programs[i].1.exec else {
                 unreachable!("stream engines stay stream engines")
             };
@@ -328,21 +475,34 @@ pub fn plan(spec: &BatchSpec, tiles: usize) -> Result<Plan, SchedError> {
         }
     }
 
-    // Per-workload input/output staging.
+    // Per-workload input/output staging. The lookups below were panic
+    // sites (`expect`/`assert!`): a kernel that probes tileable for the
+    // first workload but fails IO derivation for a later one — or
+    // presents misaligned staging — now degrades to a typed `Err`.
     let mut workloads = Vec::with_capacity(kernels_and_data.len());
     for (kernel, data) in kernels_and_data {
-        let io = eng.tile_io(kernel, spec.sew, &data).expect("tileable");
-        let args = program_idx(&mut programs, eng, kernel, spec.sew)
+        let io = (tile_fault() != Some(TileFault::Io))
+            .then(|| eng.tile_io(kernel, spec.sew, &data))
+            .flatten()
+            .ok_or(SchedError::NotTileable { target: spec.target, kernel })?;
+        let args = (tile_fault() != Some(TileFault::ArgsProgram))
+            .then(|| program_idx(&mut programs, eng, kernel, spec.sew))
+            .flatten()
             .map(|i| programs[i].1.args.clone())
-            .expect("same-family shards stay tileable");
+            .ok_or(SchedError::NotTileable { target: spec.target, kernel })?;
         let mut inputs = Vec::with_capacity(io.inputs.len());
         for (off, bytes) in io.inputs {
-            assert!(off % 4 == 0 && bytes.len() % 4 == 0, "word-aligned tile staging");
+            if tile_fault() == Some(TileFault::Misalign) || off % 4 != 0 || bytes.len() % 4 != 0
+            {
+                return Err(SchedError::Misaligned { kernel, what: "input staging region" });
+            }
             let addr = take(bytes.len() as u32)?;
             inputs.push((addr, off, bytes));
         }
         let (out_off, out_len) = io.output;
-        assert!(out_off % 4 == 0 && out_len % 4 == 0, "word-aligned tile output span");
+        if tile_fault() == Some(TileFault::MisalignOut) || out_off % 4 != 0 || out_len % 4 != 0 {
+            return Err(SchedError::Misaligned { kernel, what: "output span" });
+        }
         let out_addr = take(out_len)?;
         workloads.push(PlannedWork {
             kernel,
@@ -359,7 +519,7 @@ pub fn plan(spec: &BatchSpec, tiles: usize) -> Result<Plan, SchedError> {
         return Err(SchedError::FirmwareTooLarge { bytes: firmware.size() });
     }
 
-    Ok(Plan { spec: *spec, tiles, kind, workloads, setup, streams, firmware, whole })
+    Ok(Plan { spec, tiles, kind, workloads, setup, streams, firmware, whole })
 }
 
 /// Program the tile interrupt-enable mask. The scheduler narrows it per
@@ -926,5 +1086,166 @@ mod tests {
         // the whole-kernel golden reference; spot-check shape here.
         assert_eq!(res.outputs.len(), 1);
         assert_eq!(res.outputs[0].len(), 8 * 96);
+    }
+
+    #[test]
+    fn utilization_is_bounds_safe_and_shares_the_zero_cycle_convention() {
+        // Synthetic result: no co-simulation needed to probe the
+        // accessor's bounds and zero-cycle behavior.
+        let mk = |cycles: u64| BatchRunResult {
+            spec: spec(Target::Carus, Kernel::Add { n: 64 }, Sew::E8, 1, false),
+            tiles: 1,
+            cycles,
+            energy: Breakdown::default(),
+            per_tile: vec![TileStats { kind: TileKind::Carus, busy_cycles: 50, workloads: 1 }],
+            dma_active_cycles: 0,
+            dma_transfers: 0,
+            bus_txns: 0,
+            contention_cycles: 0,
+            outputs: vec![],
+        };
+        let r = mk(100);
+        assert!((r.utilization(0) - 0.5).abs() < 1e-12);
+        // Out-of-range tile indices answer 0.0 instead of panicking —
+        // the serve report probes up to the *configured* tile count,
+        // which may exceed the tiles a small batch actually touched.
+        assert_eq!(r.utilization(1), 0.0);
+        assert_eq!(r.utilization(usize::MAX), 0.0);
+        assert!((r.mean_utilization() - 0.5).abs() < 1e-12);
+        // Zero-makespan results divide by `.max(1)`, the exact
+        // convention of `speedup_vs` — both stay finite and agree on
+        // the substituted denominator.
+        let z = mk(0);
+        assert!(z.utilization(0).is_finite());
+        assert_eq!(z.utilization(0), z.per_tile[0].busy_cycles as f64);
+        assert_eq!(z.speedup_vs(&r), r.cycles as f64);
+    }
+
+    #[test]
+    fn injected_tile_faults_surface_as_typed_errors_never_panics() {
+        // The three former panic sites (`expect("tileable")`,
+        // `expect("same-family shards stay tileable")`, and the two
+        // word-alignment `assert!`s) are unreachable with the built-in
+        // engines on validated shapes, so each is forced via the
+        // thread-local fault hook — exactly how the serve e2e test
+        // feeds them through the server.
+        let carus = spec(Target::Carus, Kernel::Add { n: 64 }, Sew::E32, 2, false);
+        let caesar = spec(Target::Caesar, Kernel::Add { n: 64 }, Sew::E32, 2, false);
+
+        // Per-tile stream rendering (NM-Caesar only — autonomous tiles
+        // have no stream loop).
+        arm_tile_fault(Some(TileFault::StreamProgram));
+        assert!(matches!(
+            plan(&caesar, 2).unwrap_err(),
+            SchedError::NotTileable { target: Target::Caesar, .. }
+        ));
+
+        // Per-workload IO derivation and args-program lookup.
+        arm_tile_fault(Some(TileFault::Io));
+        assert!(matches!(
+            plan(&carus, 2).unwrap_err(),
+            SchedError::NotTileable { target: Target::Carus, .. }
+        ));
+        arm_tile_fault(Some(TileFault::ArgsProgram));
+        assert!(matches!(
+            plan(&carus, 2).unwrap_err(),
+            SchedError::NotTileable { target: Target::Carus, .. }
+        ));
+
+        // Word-alignment of input staging regions and the output span.
+        arm_tile_fault(Some(TileFault::Misalign));
+        let e = plan(&carus, 2).unwrap_err();
+        assert!(matches!(e, SchedError::Misaligned { what: "input staging region", .. }));
+        assert!(e.to_string().contains("word-aligned"), "{e}");
+        arm_tile_fault(Some(TileFault::MisalignOut));
+        assert!(matches!(
+            plan(&carus, 2).unwrap_err(),
+            SchedError::Misaligned { what: "output span", .. }
+        ));
+
+        // Disarming restores plannability on this thread.
+        arm_tile_fault(None);
+        assert!(plan(&carus, 2).is_ok());
+        assert!(plan(&caesar, 2).is_ok());
+    }
+
+    #[test]
+    fn plan_jobs_coalesces_heterogeneous_carus_shapes_with_explicit_seeds() {
+        // A homogeneous coalesced group with consecutive seeds is
+        // indistinguishable from batch mode: same outputs, same makespan.
+        let jobs = [
+            (Kernel::Add { n: 64 }, 7u64),
+            (Kernel::Add { n: 64 }, 8),
+            (Kernel::Add { n: 64 }, 9),
+        ];
+        let coalesced = run_planned(&plan_jobs(Target::Carus, Sew::E32, &jobs, 2).unwrap());
+        let batch =
+            run_batch(&spec(Target::Carus, Kernel::Add { n: 64 }, Sew::E32, 3, false), 2).unwrap();
+        assert_eq!(coalesced.outputs, batch.outputs);
+        assert_eq!(coalesced.cycles, batch.cycles);
+
+        // NM-Carus groups may mix *shapes* within one family (the shape
+        // travels in the per-workload argument words) — `run_planned`
+        // asserts every output against its golden reference, so a
+        // successful run is the correctness check.
+        let mixed = [
+            (Kernel::Add { n: 64 }, 7u64),
+            (Kernel::Add { n: 32 }, 11),
+            (Kernel::Add { n: 64 }, 5),
+        ];
+        let res = run_planned(&plan_jobs(Target::Carus, Sew::E32, &mixed, 2).unwrap());
+        assert_eq!(res.outputs.len(), 3);
+        assert_eq!(res.outputs[0].len(), 64 * 4);
+        assert_eq!(res.outputs[1].len(), 32 * 4);
+        assert_eq!(res.outputs[2].len(), 64 * 4);
+    }
+
+    #[test]
+    fn plan_jobs_rejects_mixed_families_and_stream_kernel_mismatch() {
+        // One kernel family per coalesced group: the setup image is shared.
+        let e = plan_jobs(
+            Target::Carus,
+            Sew::E32,
+            &[(Kernel::Add { n: 64 }, 1), (Kernel::Relu { n: 64 }, 2)],
+            2,
+        )
+        .unwrap_err();
+        assert!(matches!(e, SchedError::MixedBatch { .. }));
+        assert!(e.to_string().contains("coalesce"), "{e}");
+
+        // Stream-executed tiles (NM-Caesar) replay one rendered stream
+        // per tile: workload 2 lands on tile 0 (round-robin), which
+        // streams Add{n:64} — a different shape is a mismatch...
+        let shapes = [
+            (Kernel::Add { n: 64 }, 1u64),
+            (Kernel::Add { n: 64 }, 2),
+            (Kernel::Add { n: 32 }, 3),
+        ];
+        assert_eq!(
+            plan_jobs(Target::Caesar, Sew::E32, &shapes, 2).unwrap_err(),
+            SchedError::StreamMismatch {
+                expected: Kernel::Add { n: 64 },
+                got: Kernel::Add { n: 32 },
+            }
+        );
+        // ...while the same group coalesces fine on autonomous NM-Carus,
+        assert!(plan_jobs(Target::Carus, Sew::E32, &shapes, 2).is_ok());
+        // and a shape alternation that *matches* the round-robin period
+        // is fine on NM-Caesar too.
+        let alternating = [
+            (Kernel::Add { n: 64 }, 1u64),
+            (Kernel::Add { n: 32 }, 2),
+            (Kernel::Add { n: 64 }, 3),
+            (Kernel::Add { n: 32 }, 4),
+        ];
+        let res = run_planned(&plan_jobs(Target::Caesar, Sew::E32, &alternating, 2).unwrap());
+        assert_eq!(res.outputs.len(), 4);
+
+        // Degenerate groups keep the existing typed errors.
+        assert_eq!(plan_jobs(Target::Carus, Sew::E32, &[], 2).unwrap_err(), SchedError::EmptyBatch);
+        assert_eq!(
+            plan_jobs(Target::Cpu, Sew::E32, &[(Kernel::Add { n: 64 }, 1)], 2).unwrap_err(),
+            SchedError::HostTarget
+        );
     }
 }

@@ -1,0 +1,208 @@
+//! Deterministic load generator for the serve path: seeded Poisson,
+//! bursty, and mixed arrival traces over randomized kernel mixes.
+//!
+//! Everything is a pure function of `(kind, seed, requests)`, built on
+//! the fuzzer's splitmix64 [`Rng`] — the same call produces the same
+//! trace on every run, which is what makes `serve --selftest` a CI
+//! determinism gate. Request "flavors" (target × family × SEW × shape)
+//! are **sticky** across a handful of consecutive requests (and across a
+//! whole burst), because a gateway's clients repeat themselves — and
+//! because without runs of mutually-coalescible requests the batching
+//! policy would degenerate to batch-of-one. NM-Carus flavors re-roll the
+//! *shape* per request within the family to exercise heterogeneous
+//! coalesced batches; NM-Caesar flavors keep the exact kernel (stream
+//! tiles replay one rendered micro-op stream per tile).
+
+use crate::fuzz::gen::{rand_kernel, Rng};
+use crate::isa::Sew;
+use crate::kernels::{Family, Kernel, Target};
+use crate::serve::Request;
+
+/// Mean Poisson inter-arrival gap in simulated cycles.
+pub const POISSON_MEAN_CYCLES: u64 = 40_000;
+/// Gap between burst starts.
+pub const BURST_GAP_CYCLES: u64 = 400_000;
+/// Requests per burst.
+pub const BURST_SIZE: u32 = 8;
+/// Intra-burst request spacing.
+pub const BURST_SPACING_CYCLES: u64 = 64;
+
+/// Arrival-process shape of a generated trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceKind {
+    /// Exponential inter-arrival gaps (mean [`POISSON_MEAN_CYCLES`]).
+    Poisson,
+    /// Bursts of [`BURST_SIZE`] back-to-back requests, widely spaced.
+    Bursty,
+    /// First half Poisson, second half bursty.
+    Mixed,
+}
+
+impl TraceKind {
+    pub fn parse(s: &str) -> Option<TraceKind> {
+        match s {
+            "poisson" => Some(TraceKind::Poisson),
+            "bursty" => Some(TraceKind::Bursty),
+            "mixed" => Some(TraceKind::Mixed),
+            _ => None,
+        }
+    }
+
+    pub fn slug(self) -> &'static str {
+        match self {
+            TraceKind::Poisson => "poisson",
+            TraceKind::Bursty => "bursty",
+            TraceKind::Mixed => "mixed",
+        }
+    }
+}
+
+/// A sticky request flavor: one client's repeated workload.
+#[derive(Debug, Clone, Copy)]
+struct Flavor {
+    target: Target,
+    family: Family,
+    sew: Sew,
+    kernel: Kernel,
+}
+
+fn rand_flavor(rng: &mut Rng) -> Flavor {
+    let target = if rng.below(2) == 0 { Target::Caesar } else { Target::Carus };
+    let family = Family::ALL[rng.below(Family::ALL.len() as u32) as usize];
+    let sew = Sew::ALL[rng.below(3) as usize];
+    let kernel =
+        rand_kernel(rng, family, target, sew).unwrap_or(Kernel::Add { n: 64 / sew.bytes() });
+    Flavor { target, family, sew, kernel }
+}
+
+fn request(rng: &mut Rng, id: u64, fl: &Flavor) -> Request {
+    // NM-Carus batches coalesce any shape of one family, so re-roll the
+    // shape per request; NM-Caesar keeps the flavor's exact kernel.
+    let kernel = if fl.target == Target::Carus {
+        rand_kernel(rng, fl.family, fl.target, fl.sew).unwrap_or(fl.kernel)
+    } else {
+        fl.kernel
+    };
+    Request { id, target: fl.target, kernel, sew: fl.sew, seed: rng.next_u64() }
+}
+
+/// Exponential inter-arrival gap by inverse CDF. `ln` goes through the
+/// platform libm, so cross-*platform* bit-identity is not promised — the
+/// CI determinism gate compares two runs of the same binary, which is.
+fn exp_interval(rng: &mut Rng, mean: u64) -> u64 {
+    let u = ((rng.next_u64() >> 11) as f64 + 1.0) / (1u64 << 53) as f64;
+    (-(mean as f64) * u.ln()).round() as u64 + 1
+}
+
+/// Generate a timestamped request trace, sorted by arrival cycle, ids
+/// `1..=requests` in arrival order. Deterministic in `(kind, seed,
+/// requests)`.
+pub fn gen_trace(kind: TraceKind, seed: u64, requests: u32) -> Vec<(u64, Request)> {
+    // Salted so `serve --seed 7` and `fuzz --seed 7` explore
+    // unrelated streams.
+    let mut rng = Rng(seed ^ 0x5e72_7e5a_11ab_1e5e);
+    match kind {
+        TraceKind::Poisson => poisson(&mut rng, 1, requests, 0),
+        TraceKind::Bursty => bursty(&mut rng, 1, requests, 0),
+        TraceKind::Mixed => {
+            let half = requests / 2;
+            let mut t = poisson(&mut rng, 1, half, 0);
+            let at = t.last().map_or(0, |&(c, _)| c) + BURST_GAP_CYCLES;
+            t.extend(bursty(&mut rng, half as u64 + 1, requests - half, at));
+            t
+        }
+    }
+}
+
+fn poisson(rng: &mut Rng, first_id: u64, n: u32, start: u64) -> Vec<(u64, Request)> {
+    let mut out = Vec::with_capacity(n as usize);
+    let mut now = start;
+    let mut flavor = rand_flavor(rng);
+    let mut left = 4 + rng.below(5); // sticky for 4–8 requests
+    for i in 0..n {
+        now += exp_interval(rng, POISSON_MEAN_CYCLES);
+        if left == 0 {
+            flavor = rand_flavor(rng);
+            left = 4 + rng.below(5);
+        }
+        left -= 1;
+        out.push((now, request(rng, first_id + i as u64, &flavor)));
+    }
+    out
+}
+
+fn bursty(rng: &mut Rng, first_id: u64, n: u32, start: u64) -> Vec<(u64, Request)> {
+    let mut out = Vec::with_capacity(n as usize);
+    let mut burst_at = start;
+    let mut id = first_id;
+    let mut done = 0u32;
+    while done < n {
+        let flavor = rand_flavor(rng); // one flavor per burst
+        let size = BURST_SIZE.min(n - done);
+        for j in 0..size {
+            out.push((burst_at + j as u64 * BURST_SPACING_CYCLES, request(rng, id, &flavor)));
+            id += 1;
+        }
+        done += size;
+        burst_at += BURST_GAP_CYCLES;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traces_are_deterministic_sorted_and_fully_idd() {
+        for kind in [TraceKind::Poisson, TraceKind::Bursty, TraceKind::Mixed] {
+            let a = gen_trace(kind, 7, 64);
+            let b = gen_trace(kind, 7, 64);
+            assert_eq!(a, b, "{kind:?}: same seed, same trace");
+            assert_ne!(a, gen_trace(kind, 8, 64), "{kind:?}: seed matters");
+            assert_eq!(a.len(), 64);
+            for w in a.windows(2) {
+                assert!(w[0].0 <= w[1].0, "{kind:?}: sorted by arrival");
+            }
+            let ids: Vec<u64> = a.iter().map(|&(_, r)| r.id).collect();
+            assert_eq!(ids, (1..=64).collect::<Vec<u64>>(), "{kind:?}");
+            for &(_, r) in &a {
+                assert_ne!(r.target, Target::Cpu);
+                assert_eq!(r.kernel.validate(r.target, r.sew), Ok(()), "{r:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn flavors_are_sticky_enough_to_coalesce_and_diverse_enough_to_mix() {
+        let trace = gen_trace(TraceKind::Mixed, 7, 256);
+        let mut coalescible_adjacent = 0;
+        let mut families = std::collections::HashSet::new();
+        let mut targets = std::collections::HashSet::new();
+        for w in trace.windows(2) {
+            if crate::serve::coalescible(&w[0].1, &w[1].1) {
+                coalescible_adjacent += 1;
+            }
+        }
+        for &(_, r) in &trace {
+            families.insert(r.kernel.family());
+            targets.insert(r.target);
+        }
+        // Sticky: most adjacent pairs can share a batch; diverse: the
+        // mix still crosses targets and several families.
+        assert!(coalescible_adjacent * 2 > trace.len(), "{coalescible_adjacent}/256");
+        assert!(families.len() >= 3, "{families:?}");
+        assert_eq!(targets.len(), 2, "{targets:?}");
+    }
+
+    #[test]
+    fn burst_timing_is_bursty() {
+        let trace = gen_trace(TraceKind::Bursty, 7, 32);
+        // 4 bursts of 8: intra-burst gaps are tiny, inter-burst huge.
+        let gaps: Vec<u64> = trace.windows(2).map(|w| w[1].0 - w[0].0).collect();
+        let big = gaps.iter().filter(|&&g| g >= BURST_GAP_CYCLES / 2).count();
+        let small = gaps.iter().filter(|&&g| g == BURST_SPACING_CYCLES).count();
+        assert_eq!(big, 3, "{gaps:?}");
+        assert_eq!(small, 28, "{gaps:?}");
+    }
+}

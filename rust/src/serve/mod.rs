@@ -1,0 +1,680 @@
+//! `heeperator serve`: a long-running batch-inference service over the
+//! multi-tile scheduler.
+//!
+//! The paper positions NM-Caesar/NM-Carus as *edge-node* accelerators,
+//! and edge gateways see continuous request streams, not one-shot kernel
+//! invocations. This module is the system-software layer that gap
+//! implies: requests arrive as JSONL (stdin or TCP), pass **admission
+//! control** against a bounded queue, are **coalesced** into
+//! same-family batches by a batching policy (max batch size + max
+//! linger), compiled through [`sched::plan_jobs`], co-simulated with
+//! [`sched::run_planned`] across the configured tile count, and answered
+//! with per-request JSONL responses.
+//!
+//! Two execution paths share the policy code:
+//!
+//! - [`run_trace`] — the **virtual-time** path: arrivals carry explicit
+//!   cycle timestamps (from [`load::gen_trace`] or a test), and the
+//!   service advances a simulated clock, so queueing + execution latency
+//!   is exact and **deterministic** — the same trace produces
+//!   byte-identical responses and summary JSON on every run. CI gates on
+//!   this path (`serve --selftest`).
+//! - [`serve_stream`] — the **live** path: a listener thread parses and
+//!   admits requests while a coalescer thread drains the queue
+//!   (`std::thread::scope`; the repo is std-only — no tokio). Wall-clock
+//!   arrival order is not deterministic, so live responses report the
+//!   simulated batch makespan as their latency and the summary omits
+//!   nothing else.
+//!
+//! A malformed or overload-rejected request must never take the service
+//! down: every planner failure is a typed [`sched::SchedError`] since the
+//! staging paths were hardened (see [`sched`]), and the executor
+//! additionally wraps the co-simulation in `catch_unwind` so even a
+//! modeling bug degrades to an error response.
+
+pub mod load;
+
+use std::collections::VecDeque;
+use std::io::{BufRead, Write};
+use std::net::TcpListener;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+use crate::fuzz::{
+    family_slug, json_escape, json_str, json_u64, kernel_from, shape_of, target_slug,
+};
+use crate::isa::Sew;
+use crate::kernels::{Family, Kernel, Target};
+use crate::sched::{self, plan_jobs, run_planned, BatchRunResult};
+
+/// Schema tag of the `--json` summary ([`summary_json`]).
+pub const SUMMARY_SCHEMA: &str = "heeperator-serve-v1";
+
+/// Service configuration: tile count, admission bound, batching policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServeConfig {
+    /// Simulated NMC tiles behind the service.
+    pub tiles: usize,
+    /// Admission control: requests arriving at a full queue are rejected
+    /// with a typed overload response, never dropped silently.
+    pub queue_cap: usize,
+    /// Close a batch as soon as this many requests are queued.
+    pub max_batch: usize,
+    /// Close a batch once its oldest request has waited this long
+    /// (virtual-time path; the live path lingers a few milliseconds).
+    pub linger_cycles: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { tiles: 4, queue_cap: 64, max_batch: 8, linger_cycles: 100_000 }
+    }
+}
+
+/// One admitted workload request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Request {
+    pub id: u64,
+    pub target: Target,
+    pub kernel: Kernel,
+    pub sew: Sew,
+    /// Golden-input seed (defaults to `id` when the line omits it).
+    pub seed: u64,
+}
+
+/// One per-request JSONL response.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Response {
+    /// The request's batch ran and its output matched the golden
+    /// reference. `latency_cycles` is arrival→completion on the
+    /// virtual-time path and the batch makespan on the live path.
+    Ok { id: u64, latency_cycles: u64, batch: u32, batch_cycles: u64 },
+    /// Admission control: the bounded queue was full on arrival.
+    Rejected { id: u64, queue_depth: usize },
+    /// The line did not parse, the shape failed validation, or the
+    /// planner returned a typed [`sched::SchedError`].
+    Error { id: u64, error: String },
+}
+
+impl Response {
+    pub fn id(&self) -> u64 {
+        match self {
+            Response::Ok { id, .. }
+            | Response::Rejected { id, .. }
+            | Response::Error { id, .. } => *id,
+        }
+    }
+
+    /// One JSONL line (no trailing newline).
+    pub fn render(&self) -> String {
+        match self {
+            Response::Ok { id, latency_cycles, batch, batch_cycles } => format!(
+                "{{\"id\":{id},\"status\":\"ok\",\"latency_cycles\":{latency_cycles},\
+                 \"batch\":{batch},\"batch_cycles\":{batch_cycles}}}"
+            ),
+            Response::Rejected { id, queue_depth } => format!(
+                "{{\"id\":{id},\"status\":\"rejected\",\"reason\":\"overload\",\
+                 \"queue_depth\":{queue_depth}}}"
+            ),
+            Response::Error { id, error } => {
+                format!("{{\"id\":{id},\"status\":\"error\",\"error\":\"{}\"}}", json_escape(error))
+            }
+        }
+    }
+}
+
+/// Parse one JSONL request line. Required keys: `id`, `target`,
+/// `family`, `sew`; optional: `n`/`p`/`f` (shape dims, default 0) and
+/// `seed` (default `id`). Shape validation runs here so an invalid
+/// request is answered immediately and can never poison a batch.
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let id = json_u64(line, "id")?;
+    let t = json_str(line, "target")?;
+    let target = Target::parse(t).ok_or_else(|| format!("unknown target {t:?}"))?;
+    if target == Target::Cpu {
+        return Err("the CPU is the host, never a serve target".to_string());
+    }
+    let fam = json_str(line, "family")?;
+    let family = Family::parse(fam).ok_or_else(|| format!("unknown family {fam:?}"))?;
+    let sew = match json_u64(line, "sew")? {
+        8 => Sew::E8,
+        16 => Sew::E16,
+        32 => Sew::E32,
+        b => return Err(format!("unknown sew {b} (expected 8, 16, or 32)")),
+    };
+    let dim = |key| json_u64(line, key).unwrap_or(0) as u32;
+    let kernel = kernel_from(family, dim("n"), dim("p"), dim("f"));
+    kernel.validate(target, sew).map_err(|e| format!("invalid shape: {e}"))?;
+    let seed = json_u64(line, "seed").unwrap_or(id);
+    Ok(Request { id, target, kernel, sew, seed })
+}
+
+/// Render a request back to its JSONL line (the exact inverse of
+/// [`parse_request`]) — the load generator and tests feed the live path
+/// through this.
+pub fn render_request(r: &Request) -> String {
+    let (n, p, f) = shape_of(r.kernel);
+    format!(
+        "{{\"id\":{},\"target\":\"{}\",\"family\":\"{}\",\"sew\":{},\"n\":{n},\"p\":{p},\
+         \"f\":{f},\"seed\":{}}}",
+        r.id,
+        target_slug(r.target),
+        family_slug(r.kernel.family()),
+        r.sew.bits(),
+        r.seed
+    )
+}
+
+/// Can `b` join a batch headed by `a`? One target and SEW per batch;
+/// autonomous NM-Carus tiles take any shape of one family (the shape
+/// travels in the per-workload argument words), stream-executed
+/// NM-Caesar tiles replay one rendered micro-op stream per tile, so they
+/// require the exact kernel.
+pub fn coalescible(a: &Request, b: &Request) -> bool {
+    if a.target != b.target || a.sew != b.sew {
+        return false;
+    }
+    match a.target {
+        Target::Caesar => a.kernel == b.kernel,
+        _ => a.kernel.family() == b.kernel.family(),
+    }
+}
+
+/// Compile and co-simulate one coalesced batch. Planner failures come
+/// back as the typed [`sched::SchedError`] message; a panic inside the
+/// co-simulation (a modeling bug — `run_planned` asserts golden
+/// byte-identity) is caught so the service answers instead of dying.
+fn execute(batch: &[Request], tiles: usize) -> Result<BatchRunResult, String> {
+    let jobs: Vec<(Kernel, u64)> = batch.iter().map(|r| (r.kernel, r.seed)).collect();
+    let plan = plan_jobs(batch[0].target, batch[0].sew, &jobs, tiles)
+        .map_err(|e: sched::SchedError| e.to_string())?;
+    std::panic::catch_unwind(AssertUnwindSafe(|| run_planned(&plan)))
+        .map_err(|_| "internal: co-simulation panicked (modeling bug)".to_string())
+}
+
+/// Accumulated service statistics — everything the summary reports.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub errored: u64,
+    pub batches: u64,
+    /// Virtual-time path: the simulated clock at drain; live path: the
+    /// sum of batch makespans.
+    pub sim_cycles: u64,
+    /// Per-completed-request latency in simulated cycles.
+    pub latencies: Vec<u64>,
+    pub batch_sizes: Vec<u32>,
+    /// Queue depth sampled at each batch close — "queue depth over time".
+    pub depth_samples: Vec<u32>,
+    /// Busy cycles per configured tile, summed over batches.
+    pub tile_busy: Vec<u64>,
+    /// Sum of batch makespans (the window tiles could have been busy).
+    pub busy_window: u64,
+}
+
+impl ServeStats {
+    /// Nearest-rank percentile of the completed-request latencies
+    /// (`q` in 0..=1); 0 when nothing completed.
+    pub fn latency_percentile(&self, q: f64) -> u64 {
+        if self.latencies.is_empty() {
+            return 0;
+        }
+        let mut xs = self.latencies.clone();
+        xs.sort_unstable();
+        let idx = ((q * xs.len() as f64).ceil() as usize).max(1) - 1;
+        xs[idx.min(xs.len() - 1)]
+    }
+
+    pub fn latency_max(&self) -> u64 {
+        self.latencies.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            return 0.0;
+        }
+        self.batch_sizes.iter().map(|&b| b as f64).sum::<f64>() / self.batch_sizes.len() as f64
+    }
+
+    pub fn queue_depth_max(&self) -> u32 {
+        self.depth_samples.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn queue_depth_mean(&self) -> f64 {
+        if self.depth_samples.is_empty() {
+            return 0.0;
+        }
+        self.depth_samples.iter().map(|&d| d as f64).sum::<f64>() / self.depth_samples.len() as f64
+    }
+
+    /// Fraction of the service window tile `i` spent computing.
+    /// Out-of-range indices answer 0.0, like
+    /// [`BatchRunResult::utilization`].
+    pub fn utilization(&self, i: usize) -> f64 {
+        self.tile_busy.get(i).map_or(0.0, |&b| b as f64 / self.sim_cycles.max(1) as f64)
+    }
+
+    /// `hist[k-1]` = number of closed batches of size `k`.
+    pub fn batch_size_histogram(&self, max_batch: usize) -> Vec<u32> {
+        let mut hist = vec![0u32; max_batch.max(1)];
+        for &b in &self.batch_sizes {
+            let slot = (b as usize).clamp(1, hist.len());
+            hist[slot - 1] += 1;
+        }
+        hist
+    }
+}
+
+/// The machine-readable summary CI gates on (`--json`). Deterministic
+/// key order and fixed float precision: the same stats render to the
+/// same bytes.
+pub fn summary_json(stats: &ServeStats, cfg: &ServeConfig, trace: &str, seed: u64) -> String {
+    let join_u32 = |xs: &[u32]| {
+        xs.iter().map(u32::to_string).collect::<Vec<_>>().join(",")
+    };
+    let util: Vec<String> =
+        (0..cfg.tiles).map(|i| format!("{:.6}", stats.utilization(i))).collect();
+    format!(
+        "{{\n  \"schema\": \"{SUMMARY_SCHEMA}\",\n  \"trace\": \"{}\",\n  \"seed\": {seed},\n  \
+         \"tiles\": {},\n  \"queue_cap\": {},\n  \"max_batch\": {},\n  \"linger_cycles\": {},\n  \
+         \"requests\": {},\n  \"completed\": {},\n  \"rejected\": {},\n  \"errored\": {},\n  \
+         \"batches\": {},\n  \"sim_cycles\": {},\n  \"p50_latency_cycles\": {},\n  \
+         \"p95_latency_cycles\": {},\n  \"p99_latency_cycles\": {},\n  \
+         \"max_latency_cycles\": {},\n  \"mean_batch_size\": {:.3},\n  \
+         \"queue_depth_max\": {},\n  \"queue_depth_mean\": {:.3},\n  \
+         \"per_tile_utilization\": [{}],\n  \"batch_size_histogram\": [{}],\n  \
+         \"queue_depth_samples\": [{}]\n}}\n",
+        json_escape(trace),
+        cfg.tiles,
+        cfg.queue_cap,
+        cfg.max_batch,
+        cfg.linger_cycles,
+        stats.requests,
+        stats.completed,
+        stats.rejected,
+        stats.errored,
+        stats.batches,
+        stats.sim_cycles,
+        stats.latency_percentile(0.50),
+        stats.latency_percentile(0.95),
+        stats.latency_percentile(0.99),
+        stats.latency_max(),
+        stats.mean_batch_size(),
+        stats.queue_depth_max(),
+        stats.queue_depth_mean(),
+        util.join(","),
+        join_u32(&stats.batch_size_histogram(cfg.max_batch)),
+        join_u32(&stats.depth_samples),
+    )
+}
+
+/// Run a timestamped trace through the service on a **virtual clock**:
+/// arrivals are admitted when the clock passes their cycle, batches
+/// close on the policy (full / lingered / input drained), execution
+/// advances the clock by the co-simulated makespan, and each completed
+/// request's latency is arrival→batch-completion in simulated cycles.
+/// Fully deterministic in the trace — the CI determinism gate and the
+/// e2e tests run here.
+pub fn run_trace(
+    cfg: &ServeConfig,
+    trace: &[(u64, Request)],
+    mut on_response: impl FnMut(&Response),
+) -> ServeStats {
+    let mut stats = ServeStats {
+        requests: trace.len() as u64,
+        tile_busy: vec![0; cfg.tiles],
+        ..Default::default()
+    };
+    let mut queue: VecDeque<(u64, Request)> = VecDeque::new();
+    let mut now: u64 = 0;
+    let mut next = 0usize;
+
+    loop {
+        // Admission: every arrival the clock has passed, in trace order.
+        while next < trace.len() && trace[next].0 <= now {
+            let (at, req) = trace[next];
+            next += 1;
+            if queue.len() >= cfg.queue_cap {
+                stats.rejected += 1;
+                on_response(&Response::Rejected { id: req.id, queue_depth: queue.len() });
+            } else {
+                queue.push_back((at, req));
+            }
+        }
+
+        if queue.is_empty() {
+            match trace.get(next) {
+                Some(&(at, _)) => {
+                    now = now.max(at);
+                    continue;
+                }
+                None => break,
+            }
+        }
+
+        // Batching policy: close when full, when the oldest request has
+        // lingered out, or when no further arrival can grow the batch.
+        let oldest = queue[0].0;
+        let drained = next == trace.len();
+        let full = queue.len() >= cfg.max_batch;
+        let lingered = now >= oldest.saturating_add(cfg.linger_cycles);
+        if !(full || lingered || drained) {
+            // Sleep until whichever comes first: the next arrival or the
+            // oldest request's linger deadline.
+            let deadline = oldest.saturating_add(cfg.linger_cycles);
+            now = deadline.min(trace[next].0).max(now + 1);
+            continue;
+        }
+
+        // Close the longest head-compatible prefix (FIFO: no reordering).
+        let head = queue[0].1;
+        let mut take = 1;
+        while take < queue.len().min(cfg.max_batch) && coalescible(&head, &queue[take].1) {
+            take += 1;
+        }
+        stats.depth_samples.push(queue.len() as u32);
+        let batch: Vec<(u64, Request)> = queue.drain(..take).collect();
+        let reqs: Vec<Request> = batch.iter().map(|&(_, r)| r).collect();
+        match execute(&reqs, cfg.tiles) {
+            Ok(res) => {
+                let end = now + res.cycles;
+                stats.batches += 1;
+                stats.batch_sizes.push(reqs.len() as u32);
+                stats.busy_window += res.cycles;
+                for (i, busy) in stats.tile_busy.iter_mut().enumerate() {
+                    *busy += res.per_tile.get(i).map_or(0, |t| t.busy_cycles);
+                }
+                for &(at, r) in &batch {
+                    let lat = end - at;
+                    stats.completed += 1;
+                    stats.latencies.push(lat);
+                    on_response(&Response::Ok {
+                        id: r.id,
+                        latency_cycles: lat,
+                        batch: reqs.len() as u32,
+                        batch_cycles: res.cycles,
+                    });
+                }
+                now = end;
+            }
+            Err(e) => {
+                // Planning is host-side and cheap; an errored batch
+                // consumes no simulated time, only its queue slots.
+                for &(_, r) in &batch {
+                    stats.errored += 1;
+                    on_response(&Response::Error { id: r.id, error: e.clone() });
+                }
+            }
+        }
+    }
+    stats.sim_cycles = now;
+    stats
+}
+
+/// Generate a seeded trace and run it on the virtual clock — the
+/// `serve --selftest` body, also used by the e2e tests.
+pub fn selftest(
+    cfg: &ServeConfig,
+    kind: load::TraceKind,
+    seed: u64,
+    requests: u32,
+) -> (ServeStats, Vec<Response>) {
+    let trace = load::gen_trace(kind, seed, requests);
+    let mut responses = Vec::new();
+    let stats = run_trace(cfg, &trace, |r| responses.push(r.clone()));
+    (stats, responses)
+}
+
+/// The live path: a **listener** thread parses JSONL request lines from
+/// `input` and admits them against the bounded queue (immediate
+/// `rejected`/`error` responses on overflow or parse failure), while the
+/// calling thread **coalesces** and executes batches, writing `ok`
+/// responses as batches complete. Returns when the input reaches EOF and
+/// the queue drains. Response *content* is deterministic; arrival
+/// interleaving (and hence batching) is wall-clock, so live responses
+/// report the batch makespan as their latency.
+pub fn serve_stream<R: BufRead + Send, W: Write + Send>(
+    cfg: &ServeConfig,
+    input: R,
+    output: W,
+) -> ServeStats {
+    let out = Mutex::new(output);
+    // (queue, input closed)
+    let state: Mutex<(VecDeque<Request>, bool)> = Mutex::new((VecDeque::new(), false));
+    let cv = Condvar::new();
+    let requests = AtomicU64::new(0);
+    let rejected = AtomicU64::new(0);
+    let parse_errors = AtomicU64::new(0);
+    let mut stats = ServeStats { tile_busy: vec![0; cfg.tiles], ..Default::default() };
+
+    std::thread::scope(|s| {
+        let (out, state, cv) = (&out, &state, &cv);
+        let (requests, rejected, parse_errors) = (&requests, &rejected, &parse_errors);
+        s.spawn(move || {
+            for line in input.lines() {
+                let Ok(line) = line else { break };
+                let line = line.trim();
+                if line.is_empty() {
+                    continue;
+                }
+                requests.fetch_add(1, Ordering::Relaxed);
+                match parse_request(line) {
+                    Err(e) => {
+                        parse_errors.fetch_add(1, Ordering::Relaxed);
+                        let id = json_u64(line, "id").unwrap_or(0);
+                        let resp = Response::Error { id, error: e };
+                        let _ = writeln!(out.lock().unwrap(), "{}", resp.render());
+                    }
+                    Ok(req) => {
+                        let mut st = state.lock().unwrap();
+                        if st.0.len() >= cfg.queue_cap {
+                            let depth = st.0.len();
+                            drop(st);
+                            rejected.fetch_add(1, Ordering::Relaxed);
+                            let resp = Response::Rejected { id: req.id, queue_depth: depth };
+                            let _ = writeln!(out.lock().unwrap(), "{}", resp.render());
+                        } else {
+                            st.0.push_back(req);
+                            drop(st);
+                            cv.notify_all();
+                        }
+                    }
+                }
+            }
+            state.lock().unwrap().1 = true;
+            cv.notify_all();
+        });
+
+        // Coalescer/executor: this thread.
+        loop {
+            let mut st = state.lock().unwrap();
+            while st.0.is_empty() && !st.1 {
+                st = cv.wait(st).unwrap();
+            }
+            if st.0.is_empty() && st.1 {
+                break;
+            }
+            if st.0.len() < cfg.max_batch && !st.1 {
+                // Linger briefly for a fuller batch while input is live.
+                let (g, _) = cv.wait_timeout(st, std::time::Duration::from_millis(20)).unwrap();
+                st = g;
+                if st.0.is_empty() {
+                    continue;
+                }
+            }
+            let head = st.0[0];
+            let mut take = 1;
+            while take < st.0.len().min(cfg.max_batch) && coalescible(&head, &st.0[take]) {
+                take += 1;
+            }
+            stats.depth_samples.push(st.0.len() as u32);
+            let batch: Vec<Request> = st.0.drain(..take).collect();
+            drop(st);
+            cv.notify_all();
+            match execute(&batch, cfg.tiles) {
+                Ok(res) => {
+                    stats.batches += 1;
+                    stats.batch_sizes.push(batch.len() as u32);
+                    stats.busy_window += res.cycles;
+                    stats.sim_cycles += res.cycles;
+                    for (i, busy) in stats.tile_busy.iter_mut().enumerate() {
+                        *busy += res.per_tile.get(i).map_or(0, |t| t.busy_cycles);
+                    }
+                    let mut w = out.lock().unwrap();
+                    for r in &batch {
+                        stats.completed += 1;
+                        stats.latencies.push(res.cycles);
+                        let resp = Response::Ok {
+                            id: r.id,
+                            latency_cycles: res.cycles,
+                            batch: batch.len() as u32,
+                            batch_cycles: res.cycles,
+                        };
+                        let _ = writeln!(w, "{}", resp.render());
+                    }
+                }
+                Err(e) => {
+                    let mut w = out.lock().unwrap();
+                    for r in &batch {
+                        stats.errored += 1;
+                        let resp = Response::Error { id: r.id, error: e.clone() };
+                        let _ = writeln!(w, "{}", resp.render());
+                    }
+                }
+            }
+        }
+    });
+
+    stats.requests = requests.load(Ordering::Relaxed);
+    stats.rejected = rejected.load(Ordering::Relaxed);
+    stats.errored += parse_errors.load(Ordering::Relaxed);
+    let _ = out.lock().unwrap().flush();
+    stats
+}
+
+/// Accept **one** TCP connection and serve it to completion (EOF on the
+/// read half ends the session). The CLI loops this for sequential
+/// connections; tests bind an ephemeral port and connect once.
+pub fn serve_one_tcp(cfg: &ServeConfig, listener: &TcpListener) -> std::io::Result<ServeStats> {
+    let (stream, _) = listener.accept()?;
+    let input = std::io::BufReader::new(stream.try_clone()?);
+    Ok(serve_stream(cfg, input, stream))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, target: Target, kernel: Kernel, sew: Sew) -> Request {
+        Request { id, target, kernel, sew, seed: id }
+    }
+
+    #[test]
+    fn request_lines_roundtrip_exactly() {
+        let cases = [
+            req(1, Target::Carus, Kernel::Add { n: 64 }, Sew::E32),
+            req(2, Target::Caesar, Kernel::Matmul { p: 16 }, Sew::E16),
+            req(9000, Target::Carus, Kernel::Conv2d { n: 16, f: 3 }, Sew::E8),
+        ];
+        for r in cases {
+            let line = render_request(&r);
+            assert_eq!(parse_request(&line), Ok(r), "{line}");
+        }
+        // Omitted seed defaults to the id; omitted dims default to 0.
+        let r = parse_request(r#"{"id":5,"target":"carus","family":"add","sew":8,"n":64}"#)
+            .unwrap();
+        assert_eq!(r.seed, 5);
+        assert_eq!(r.kernel, Kernel::Add { n: 64 });
+    }
+
+    #[test]
+    fn malformed_requests_are_typed_errors() {
+        let bad = [
+            (r#"{"target":"carus","family":"add","sew":8,"n":64}"#, "id"),
+            (r#"{"id":1,"target":"cpu","family":"add","sew":8,"n":64}"#, "host"),
+            (r#"{"id":1,"target":"carus","family":"frob","sew":8,"n":64}"#, "family"),
+            (r#"{"id":1,"target":"carus","family":"add","sew":7,"n":64}"#, "sew"),
+            (r#"{"id":1,"target":"carus","family":"add","sew":8,"n":0}"#, "invalid shape"),
+            ("not json at all", "id"),
+        ];
+        for (line, needle) in bad {
+            let e = parse_request(line).unwrap_err();
+            assert!(e.contains(needle), "{line} -> {e}");
+        }
+    }
+
+    #[test]
+    fn coalescing_rules_follow_the_execution_models() {
+        let a = req(1, Target::Carus, Kernel::Add { n: 64 }, Sew::E32);
+        // NM-Carus: any shape of one family.
+        assert!(coalescible(&a, &req(2, Target::Carus, Kernel::Add { n: 32 }, Sew::E32)));
+        assert!(!coalescible(&a, &req(2, Target::Carus, Kernel::Relu { n: 64 }, Sew::E32)));
+        // One SEW and one target per batch.
+        assert!(!coalescible(&a, &req(2, Target::Carus, Kernel::Add { n: 64 }, Sew::E8)));
+        assert!(!coalescible(&a, &req(2, Target::Caesar, Kernel::Add { n: 64 }, Sew::E32)));
+        // NM-Caesar: the exact kernel (one rendered stream per tile).
+        let c = req(1, Target::Caesar, Kernel::Add { n: 64 }, Sew::E32);
+        assert!(coalescible(&c, &req(2, Target::Caesar, Kernel::Add { n: 64 }, Sew::E32)));
+        assert!(!coalescible(&c, &req(2, Target::Caesar, Kernel::Add { n: 32 }, Sew::E32)));
+    }
+
+    #[test]
+    fn percentiles_are_nearest_rank_and_bounded() {
+        let mut s = ServeStats::default();
+        assert_eq!(s.latency_percentile(0.99), 0);
+        s.latencies = vec![50, 10, 40, 20, 30];
+        assert_eq!(s.latency_percentile(0.50), 30);
+        assert_eq!(s.latency_percentile(0.95), 50);
+        assert_eq!(s.latency_percentile(0.99), 50);
+        assert_eq!(s.latency_max(), 50);
+        assert!(s.latency_percentile(0.50) <= s.latency_percentile(0.95));
+        // Out-of-range utilization indices answer 0.0.
+        assert_eq!(s.utilization(usize::MAX), 0.0);
+    }
+
+    #[test]
+    fn run_trace_batches_and_answers_every_request() {
+        let cfg = ServeConfig { tiles: 2, ..Default::default() };
+        let a = req(1, Target::Carus, Kernel::Add { n: 64 }, Sew::E32);
+        let b = req(2, Target::Carus, Kernel::Add { n: 32 }, Sew::E32);
+        let mut responses = Vec::new();
+        let stats = run_trace(&cfg, &[(0, a), (0, b)], |r| responses.push(r.clone()));
+        assert_eq!(stats.requests, 2);
+        assert_eq!(stats.completed, 2);
+        assert_eq!(stats.batches, 1);
+        assert_eq!(stats.rejected + stats.errored, 0);
+        assert!(stats.sim_cycles > 0);
+        assert_eq!(responses.len(), 2);
+        for r in &responses {
+            assert!(matches!(r, Response::Ok { batch: 2, .. }), "{r:?}");
+            assert!(r.render().contains("\"status\":\"ok\""));
+        }
+        // Both tiles saw work (two workloads round-robin across two tiles).
+        assert!(stats.utilization(0) > 0.0 && stats.utilization(1) > 0.0);
+    }
+
+    #[test]
+    fn summary_json_is_deterministic_and_carries_the_gated_keys() {
+        let cfg = ServeConfig::default();
+        let (stats, _) = selftest(&cfg, load::TraceKind::Mixed, 7, 24);
+        let a = summary_json(&stats, &cfg, "mixed", 7);
+        let (stats2, _) = selftest(&cfg, load::TraceKind::Mixed, 7, 24);
+        let b = summary_json(&stats2, &cfg, "mixed", 7);
+        assert_eq!(a, b, "same seed, same bytes");
+        for key in [
+            "\"schema\": \"heeperator-serve-v1\"",
+            "\"p50_latency_cycles\"",
+            "\"p95_latency_cycles\"",
+            "\"p99_latency_cycles\"",
+            "\"per_tile_utilization\"",
+            "\"batch_size_histogram\"",
+            "\"queue_depth_samples\"",
+            "\"rejected\"",
+        ] {
+            assert!(a.contains(key), "missing {key} in {a}");
+        }
+    }
+}

@@ -79,6 +79,48 @@ fn fuzz_replay_of_missing_file_exits_two_with_usage_on_stderr() {
 }
 
 #[test]
+fn serve_selftest_json_is_byte_identical_across_runs() {
+    let dir = std::env::temp_dir().join("heeperator-serve-cli-test");
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let a = dir.join("serve-a.json");
+    let b = dir.join("serve-b.json");
+    for path in [&a, &b] {
+        let out = heeperator(&[
+            "serve",
+            "--selftest",
+            "--trace=mixed",
+            "--seed=7",
+            "--requests=8",
+            "--json",
+            path.to_str().unwrap(),
+        ]);
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    }
+    let ja = std::fs::read(&a).expect("first summary");
+    let jb = std::fs::read(&b).expect("second summary");
+    assert!(!ja.is_empty());
+    assert_eq!(ja, jb, "serve --selftest --json must be byte-deterministic");
+    let text = String::from_utf8(ja).unwrap();
+    assert!(text.contains("\"schema\": \"heeperator-serve-v1\""), "{text}");
+    assert!(text.contains("\"p99_latency_cycles\""), "{text}");
+}
+
+#[test]
+fn serve_rejects_bad_invocations_with_exit_two() {
+    for args in [
+        &["serve", "--listen", "not-a-port"][..],
+        &["serve", "--selftest", "--trace", "tsunami"][..],
+        &["serve", "--tiles", "99"][..],
+        &["serve", "--selftest", "--queue", "0"][..],
+    ] {
+        let out = heeperator(args);
+        assert_eq!(out.status.code(), Some(2), "{args:?}");
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(!stderr.is_empty(), "{args:?} must explain itself");
+    }
+}
+
+#[test]
 fn fuzz_replay_of_garbage_file_exits_two() {
     let dir = std::env::temp_dir().join("heeperator-fuzz-cli-test");
     std::fs::create_dir_all(&dir).expect("temp dir");

@@ -1,0 +1,210 @@
+//! End-to-end tests for `heeperator serve` (DESIGN.md §12): the
+//! virtual-time selftest path must be byte-deterministic and its
+//! percentiles sane; admission control must reject overload with typed
+//! responses instead of dropping or panicking; the three scheduler
+//! staging paths that used to panic must now surface as per-request
+//! error responses that the service survives; and the threaded live
+//! path (in-process pipes and a real TCP socket) must answer every
+//! request line exactly once.
+
+use nmc::isa::Sew;
+use nmc::kernels::{Kernel, Target};
+use nmc::sched::{arm_tile_fault, TileFault};
+use nmc::serve::{
+    self, load, parse_request, render_request, run_trace, selftest, summary_json, Request,
+    Response, ServeConfig,
+};
+
+fn req(id: u64, target: Target, kernel: Kernel, sew: Sew) -> Request {
+    Request { id, target, kernel, sew, seed: id }
+}
+
+fn render_all(responses: &[Response]) -> String {
+    let mut s = String::new();
+    for r in responses {
+        s.push_str(&r.render());
+        s.push('\n');
+    }
+    s
+}
+
+#[test]
+fn selftest_is_byte_deterministic_across_runs() {
+    let cfg = ServeConfig::default();
+    for kind in [load::TraceKind::Poisson, load::TraceKind::Bursty, load::TraceKind::Mixed] {
+        let (stats_a, resp_a) = selftest(&cfg, kind, 7, 48);
+        let (stats_b, resp_b) = selftest(&cfg, kind, 7, 48);
+        assert_eq!(render_all(&resp_a), render_all(&resp_b), "{kind:?}: response bytes");
+        assert_eq!(
+            summary_json(&stats_a, &cfg, kind.slug(), 7),
+            summary_json(&stats_b, &cfg, kind.slug(), 7),
+            "{kind:?}: summary bytes"
+        );
+    }
+}
+
+#[test]
+fn selftest_percentiles_are_monotonic_and_counts_add_up() {
+    let cfg = ServeConfig::default();
+    for kind in [load::TraceKind::Poisson, load::TraceKind::Bursty, load::TraceKind::Mixed] {
+        let (stats, responses) = selftest(&cfg, kind, 3, 48);
+        let p50 = stats.latency_percentile(0.50);
+        let p95 = stats.latency_percentile(0.95);
+        let p99 = stats.latency_percentile(0.99);
+        assert!(p50 <= p95 && p95 <= p99 && p99 <= stats.latency_max(), "{kind:?}");
+        assert_eq!(
+            stats.completed + stats.rejected + stats.errored,
+            stats.requests,
+            "{kind:?}: every request answered exactly once"
+        );
+        assert_eq!(responses.len() as u64, stats.requests, "{kind:?}");
+        // Every generated id comes back exactly once.
+        let mut ids: Vec<u64> = responses.iter().map(|r| r.id()).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (1..=48).collect::<Vec<u64>>(), "{kind:?}");
+        // The generated traces are all well-formed, so nothing errors.
+        assert_eq!(stats.errored, 0, "{kind:?}");
+        assert!(stats.mean_batch_size() >= 1.0, "{kind:?}");
+    }
+}
+
+#[test]
+fn no_rejections_when_the_queue_can_hold_the_whole_trace() {
+    // Admission control can only fire when arrivals outrun the queue;
+    // with capacity >= the request count a drop is impossible.
+    let cfg = ServeConfig { queue_cap: 256, ..Default::default() };
+    let (stats, responses) = selftest(&cfg, load::TraceKind::Bursty, 5, 64);
+    assert_eq!(stats.rejected, 0);
+    assert_eq!(stats.completed, 64);
+    assert!(responses.iter().all(|r| matches!(r, Response::Ok { .. })));
+}
+
+#[test]
+fn overload_yields_typed_rejections_never_panics() {
+    // 12 coalescible requests land on the same cycle with room for 4:
+    // exactly 8 must bounce with the overload response, and the 4
+    // admitted ones must still complete.
+    let cfg = ServeConfig { tiles: 2, queue_cap: 4, ..Default::default() };
+    let trace: Vec<(u64, Request)> = (1..=12)
+        .map(|id| (0, req(id, Target::Carus, Kernel::Add { n: 64 }, Sew::E32)))
+        .collect();
+    let mut responses = Vec::new();
+    let stats = run_trace(&cfg, &trace, |r| responses.push(r.clone()));
+    assert_eq!(stats.rejected, 8, "requests beyond the queue cap are rejected");
+    assert_eq!(stats.completed, 4);
+    assert_eq!(stats.errored, 0);
+    let rejects: Vec<&Response> =
+        responses.iter().filter(|r| matches!(r, Response::Rejected { .. })).collect();
+    assert_eq!(rejects.len(), 8);
+    for r in rejects {
+        let line = r.render();
+        assert!(line.contains("\"reason\":\"overload\""), "{line}");
+        assert!(line.contains("\"queue_depth\":4"), "{line}");
+    }
+}
+
+#[test]
+fn former_scheduler_panic_paths_surface_as_error_responses() {
+    // Each of these faults hits a staging path that used to `.expect` or
+    // `assert!` inside the planner; the service must answer with a typed
+    // error response and keep running. Faults are thread-local and
+    // `run_trace` executes on the calling thread, so the injection is
+    // visible and cannot leak into parallel tests.
+    let carus = [(0u64, req(1, Target::Carus, Kernel::Add { n: 64 }, Sew::E32))];
+    let caesar = [(0u64, req(1, Target::Caesar, Kernel::Add { n: 64 }, Sew::E32))];
+    let cases: [(&[(u64, Request)], TileFault, &str); 5] = [
+        (&caesar, TileFault::StreamProgram, "no tiled execute path"),
+        (&carus, TileFault::Io, "no tiled execute path"),
+        (&carus, TileFault::ArgsProgram, "no tiled execute path"),
+        (&carus, TileFault::Misalign, "not word-aligned"),
+        (&carus, TileFault::MisalignOut, "not word-aligned"),
+    ];
+    let cfg = ServeConfig { tiles: 2, ..Default::default() };
+    for (trace, fault, needle) in cases {
+        arm_tile_fault(Some(fault));
+        let mut responses = Vec::new();
+        let stats = run_trace(&cfg, trace, |r| responses.push(r.clone()));
+        arm_tile_fault(None);
+        assert_eq!(stats.errored, 1, "{fault:?}");
+        assert_eq!(stats.completed, 0, "{fault:?}");
+        assert_eq!(responses.len(), 1, "{fault:?}");
+        let line = responses[0].render();
+        assert!(line.contains("\"status\":\"error\""), "{fault:?}: {line}");
+        assert!(line.contains(needle), "{fault:?}: {line}");
+        // The service survives: the same trace runs clean once disarmed.
+        let clean = run_trace(&cfg, trace, |_| {});
+        assert_eq!(clean.completed, 1, "{fault:?}: service must recover");
+    }
+}
+
+#[test]
+fn serve_stream_answers_every_line_over_an_in_process_pipe() {
+    let cfg = ServeConfig { tiles: 2, queue_cap: 256, ..Default::default() };
+    let mut input = String::new();
+    for id in 1..=6u64 {
+        let r = req(id, Target::Carus, Kernel::Add { n: 32 * id as u32 }, Sew::E8);
+        input.push_str(&render_request(&r));
+        input.push('\n');
+    }
+    // A malformed line must come back as a typed error, not kill the
+    // listener (the CPU is never a serve target).
+    input.push_str("{\"id\":99,\"target\":\"cpu\",\"family\":\"add\",\"sew\":8,\"n\":64}\n");
+    let mut output: Vec<u8> = Vec::new();
+    let stats = serve::serve_stream(&cfg, std::io::Cursor::new(input.into_bytes()), &mut output);
+    assert_eq!(stats.requests, 7);
+    assert_eq!(stats.completed, 6);
+    assert_eq!(stats.errored, 1);
+    assert_eq!(stats.rejected, 0);
+    let text = String::from_utf8(output).expect("responses are UTF-8 JSONL");
+    assert_eq!(text.lines().count(), 7, "one response per line:\n{text}");
+    for id in 1..=6u64 {
+        assert!(
+            text.lines().any(|l| l.contains(&format!("\"id\":{id},\"status\":\"ok\""))),
+            "id {id} answered ok:\n{text}"
+        );
+    }
+    assert!(text.contains("\"id\":99,\"status\":\"error\""), "{text}");
+}
+
+#[test]
+fn serve_one_tcp_round_trips_a_real_socket() {
+    use std::io::{BufRead, BufReader, Write};
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind ephemeral port");
+    let addr = listener.local_addr().unwrap();
+    let cfg = ServeConfig { tiles: 2, ..Default::default() };
+    let server = std::thread::spawn(move || serve::serve_one_tcp(&cfg, &listener));
+
+    let mut client = std::net::TcpStream::connect(addr).expect("connect");
+    for id in 1..=3u64 {
+        let r = req(id, Target::Caesar, Kernel::Add { n: 64 }, Sew::E32);
+        writeln!(client, "{}", render_request(&r)).expect("send request");
+    }
+    client.shutdown(std::net::Shutdown::Write).expect("half-close");
+    let mut lines = Vec::new();
+    for line in BufReader::new(&client).lines() {
+        lines.push(line.expect("read response"));
+    }
+    let stats = server.join().expect("server thread").expect("tcp session");
+    assert_eq!(stats.requests, 3);
+    assert_eq!(stats.completed, 3);
+    assert_eq!(lines.len(), 3, "{lines:?}");
+    for id in 1..=3u64 {
+        assert!(
+            lines.iter().any(|l| l.contains(&format!("\"id\":{id},\"status\":\"ok\""))),
+            "id {id} answered: {lines:?}"
+        );
+    }
+}
+
+#[test]
+fn request_lines_round_trip_through_the_wire_format() {
+    // The load generator feeds the live path through render_request, so
+    // the inverse property is part of the serve contract, not just a
+    // unit detail.
+    for kind in [load::TraceKind::Poisson, load::TraceKind::Mixed] {
+        for (_, r) in load::gen_trace(kind, 11, 32) {
+            let line = render_request(&r);
+            assert_eq!(parse_request(&line), Ok(r), "{line}");
+        }
+    }
+}
