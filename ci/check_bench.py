@@ -11,6 +11,15 @@ Inputs:
                              replay. Folded under the "serve" key of --out
                              and gated on p99 latency vs the baseline.
                              At least one of --scale / --serve is required.
+  --live live.json           repeatable. `heeperator serve --throughput
+                             --json` output (heeperator-serve-live-v1):
+                             wall-clock req/s of the live multi-connection
+                             path at one worker count. All entries fold
+                             under the "serve_live" key of --out. Wall
+                             clock is machine-dependent, so entries are
+                             never compared against the baseline — only
+                             the within-run worker-scaling ratio is gated
+                             (--min-worker-speedup).
   --diff scale-cycle.json    a second scale summary from the *other* timing
                              mode (`--timing cycle`). Every shared point must
                              report identical simulated cycles — the
@@ -38,7 +47,12 @@ Gates (exit 1 on violation):
     given (the scale-out acceptance bar);
   * any --diff point disagrees on simulated cycles (timing-mode drift);
   * the event-vs-cycle sim speedup falls below --min-sim-speedup, when
-    given (the event-driven timing core's acceptance bar).
+    given (the event-driven timing core's acceptance bar);
+  * any --live entry drops a request (completed + rejected + errored !=
+    requests) or errors, and — when --min-worker-speedup is given — the
+    req/s ratio of the highest-worker entry over the workers == 1 entry
+    falls below the floor (the worker-pool acceptance bar; within-run,
+    so machine-consistent like --min-sim-speedup).
 
 Baseline arming: simulated cycles are deterministic and machine-
 independent, so the first CI run's BENCH_6.json is a valid baseline for
@@ -137,10 +151,51 @@ def check_serve(serve, baseline, max_latency_regress, failures):
         )
 
 
+def check_live(entries, min_worker_speedup, failures):
+    """Structural sanity of the live throughput entries + the worker-pool
+    scaling gate. Wall-clock req/s is machine-dependent, so only the
+    within-run ratio between worker counts is ever gated."""
+    for e in entries:
+        if e.get("schema") != "heeperator-serve-live-v1":
+            failures.append(f"live summary has schema {e.get('schema')!r}, "
+                            "expected heeperator-serve-live-v1")
+            return
+        answered = e.get("completed", 0) + e.get("rejected", 0) + e.get("errored", 0)
+        if answered != e.get("requests"):
+            failures.append(
+                f"live run (workers={e.get('workers')}) drops requests: "
+                f"completed+rejected+errored = {answered} but requests = {e.get('requests')}"
+            )
+        if e.get("errored", 0):
+            failures.append(
+                f"live run (workers={e.get('workers')}) errored on {e['errored']} requests"
+            )
+        print(f"serve live: workers={e.get('workers')} conns={e.get('conns')} "
+              f"req/s={e.get('req_per_s')} ({e.get('completed')}/{e.get('requests')} completed)")
+    if min_worker_speedup is None:
+        return
+    usable = [e for e in entries if e.get("req_per_s")]
+    base = next((e for e in usable if e.get("workers") == 1), None)
+    if base is None or len(usable) < 2:
+        failures.append("--min-worker-speedup given but the --live entries lack a "
+                        "workers == 1 run plus a multi-worker run")
+        return
+    top = max(usable, key=lambda e: e["workers"])
+    speedup = top["req_per_s"] / base["req_per_s"]
+    print(f"worker-pool speedup: {speedup:.2f}x at {top['workers']} workers "
+          f"({base['req_per_s']:.1f} -> {top['req_per_s']:.1f} req/s, floor {min_worker_speedup}x)")
+    if speedup < min_worker_speedup:
+        failures.append(
+            f"req/s with {top['workers']} workers is {speedup:.2f}x the 1-worker rate "
+            f"< {min_worker_speedup}x"
+        )
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", default=None)
     ap.add_argument("--serve", default=None)
+    ap.add_argument("--live", action="append", default=[])
     ap.add_argument("--diff", default=None)
     ap.add_argument("--bench-lines", default=None)
     ap.add_argument("--baseline", required=True)
@@ -149,6 +204,7 @@ def main():
     ap.add_argument("--max-latency-regress", type=float, default=0.10)
     ap.add_argument("--min-speedup", type=float, default=None)
     ap.add_argument("--min-sim-speedup", type=float, default=None)
+    ap.add_argument("--min-worker-speedup", type=float, default=None)
     args = ap.parse_args()
     if not args.scale and not args.serve:
         ap.error("at least one of --scale / --serve is required")
@@ -207,6 +263,9 @@ def main():
         merged["sim_speedup_event_vs_cycle"] = round(sim_speedup, 2)
     if serve is not None:
         merged["serve"] = serve
+    live = [read_json(p) for p in args.live]
+    if live:
+        merged["serve_live"] = live
     with open(args.out, "w") as f:
         json.dump(merged, f, indent=2)
         f.write("\n")
@@ -229,6 +288,8 @@ def main():
     armed = baseline if baseline is not None and not baseline.get("bootstrap") else None
     if serve is not None:
         check_serve(serve, armed, args.max_latency_regress, failures)
+    if live or args.min_worker_speedup is not None:
+        check_live(live, args.min_worker_speedup, failures)
     base_cycles = None if baseline is None else baseline.get("aggregate_cycles")
     if baseline is None or baseline.get("bootstrap") or not base_cycles:
         print("no armed baseline: recording only (the workflow caches this run's "

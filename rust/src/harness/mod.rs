@@ -862,6 +862,19 @@ pub fn serve_report(
         .map(|(i, c)| format!("{}:{c}", i + 1))
         .collect();
     writeln!(t, "batch sizes    {}", hist.join(" ")).unwrap();
+    // Wall-clock throughput exists only on the live path; the
+    // virtual-clock paths measure simulated cycles instead.
+    if stats.wall_ms > 0.0 {
+        writeln!(
+            t,
+            "throughput     {:>8.1} req/s over {:>8.1} ms wall  ({} worker(s), conn cap {})",
+            stats.req_per_s(),
+            stats.wall_ms,
+            cfg.workers,
+            cfg.conns
+        )
+        .unwrap();
+    }
 
     let mut csv = String::from("metric,value\n");
     for (k, v) in [
@@ -878,6 +891,8 @@ pub fn serve_report(
         ("mean_batch_size", stats.mean_batch_size()),
         ("queue_depth_max", stats.queue_depth_max() as f64),
         ("queue_depth_mean", stats.queue_depth_mean()),
+        ("wall_ms", stats.wall_ms),
+        ("req_per_s", stats.req_per_s()),
     ] {
         writeln!(csv, "{k},{v}").unwrap();
     }

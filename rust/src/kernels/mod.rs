@@ -32,7 +32,7 @@ use crate::soc::{Halt, Soc};
 use self::golden::WorkloadData;
 use std::any::Any;
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, OnceLock, RwLock};
 
 /// SoC cycle budget for one kernel run; exceeding it is a hang, not a
 /// slow workload (the largest Table V point is two orders of magnitude
@@ -564,25 +564,29 @@ pub fn engine(target: Target) -> &'static dyn Engine {
 
 type ProgramKey = (Target, Kernel, Sew);
 
-fn program_cache() -> &'static Mutex<HashMap<ProgramKey, Arc<EngineProgram>>> {
-    static CACHE: OnceLock<Mutex<HashMap<ProgramKey, Arc<EngineProgram>>>> = OnceLock::new();
+/// The prepared-program cache is read-mostly: after warm-up, the serve
+/// worker pool hits it from every worker on every batch, so warm hits
+/// take a shared `read` lock and run concurrently — only a cold miss
+/// takes the `write` lock, briefly, to insert.
+fn program_cache() -> &'static RwLock<HashMap<ProgramKey, Arc<EngineProgram>>> {
+    static CACHE: OnceLock<RwLock<HashMap<ProgramKey, Arc<EngineProgram>>>> = OnceLock::new();
     CACHE.get_or_init(Default::default)
 }
 
 /// Memoized [`Engine::prepare`]: each `(target, family, shape, sew)`
 /// program is assembled exactly once per process, no matter how many
-/// sweep points or report threads consume it.
+/// sweep points, report threads, or serve workers consume it.
 pub fn prepared(target: Target, kernel: Kernel, sew: Sew) -> Arc<EngineProgram> {
     let key = (target, kernel, sew);
-    if let Some(p) = program_cache().lock().expect("program cache poisoned").get(&key) {
+    if let Some(p) = program_cache().read().expect("program cache poisoned").get(&key) {
         return Arc::clone(p);
     }
-    // Assemble outside the lock (it is pure); a racing thread may do the
+    // Assemble outside any lock (it is pure); a racing thread may do the
     // same work once more, but the first insert wins and both share it.
     let prog = Arc::new(engine(target).prepare(kernel, sew));
     Arc::clone(
         program_cache()
-            .lock()
+            .write()
             .expect("program cache poisoned")
             .entry(key)
             .or_insert(prog),
@@ -638,6 +642,64 @@ pub(crate) fn finish_run(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn warm_cache_hits_do_not_serialize_concurrent_readers() {
+        // The serve worker pool hits `prepared` from every worker on
+        // every batch; a warm hit must be a shared `read` lock, not an
+        // exclusive one. Each thread holds its cache read guard open at a
+        // rendezvous until every thread has arrived — possible only if
+        // all the guards coexist. Under the old `Mutex` cache the readers
+        // would serialize, at most one could reach the rendezvous at a
+        // time, and no attempt could ever succeed. A cold miss from an
+        // unrelated concurrently-running test can queue a writer and
+        // legitimately stall one attempt, so the rendezvous is retried.
+        use std::sync::{Condvar, Mutex};
+        use std::time::Duration;
+        const READERS: usize = 4;
+        prepared(Target::Cpu, Kernel::Add { n: 64 }, Sew::E32); // warm the key
+        let attempt = || {
+            let arrived = Mutex::new(0usize);
+            let cv = Condvar::new();
+            std::thread::scope(|s| {
+                let (arrived, cv) = (&arrived, &cv);
+                let handles: Vec<_> = (0..READERS)
+                    .map(|_| {
+                        s.spawn(move || {
+                            let cache = program_cache().read().expect("cache poisoned");
+                            assert!(cache.contains_key(&(
+                                Target::Cpu,
+                                Kernel::Add { n: 64 },
+                                Sew::E32
+                            )));
+                            let mut n = arrived.lock().unwrap();
+                            *n += 1;
+                            cv.notify_all();
+                            let mut timed_out = false;
+                            while *n < READERS && !timed_out {
+                                let (g, t) =
+                                    cv.wait_timeout(n, Duration::from_millis(200)).unwrap();
+                                n = g;
+                                timed_out = t.timed_out();
+                            }
+                            // The cache read guard is still held here;
+                            // seeing every other reader arrive proves the
+                            // guards overlapped.
+                            let all_overlapped = *n == READERS;
+                            drop(n);
+                            drop(cache);
+                            all_overlapped
+                        })
+                    })
+                    .collect();
+                handles.into_iter().all(|h| h.join().expect("reader thread"))
+            })
+        };
+        assert!(
+            (0..20).any(|_| attempt()),
+            "concurrent warm-cache readers serialized (cache lock is exclusive?)"
+        );
+    }
 
     #[test]
     fn paper_default_sizes() {

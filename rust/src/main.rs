@@ -105,6 +105,12 @@ struct Cli {
     queue: Option<usize>,
     max_batch: Option<usize>,
     linger: Option<u64>,
+    /// `serve` concurrency: worker pool size, simultaneous-connection
+    /// cap, load-generator mode, and the self-contained throughput smoke.
+    workers: Option<usize>,
+    conns: Option<usize>,
+    load: Option<String>,
+    throughput: bool,
 }
 
 impl Cli {
@@ -136,6 +142,10 @@ impl Cli {
             queue: None,
             max_batch: None,
             linger: None,
+            workers: None,
+            conns: None,
+            load: None,
+            throughput: false,
         }
     }
 }
@@ -258,6 +268,14 @@ fn parse_args(args: &[String]) -> Result<Cli, String> {
             "--queue" => cli.queue = parse_num::<usize>(args, &mut i, "--queue")?,
             "--max-batch" => cli.max_batch = parse_num::<usize>(args, &mut i, "--max-batch")?,
             "--linger" => cli.linger = parse_num::<u64>(args, &mut i, "--linger")?,
+            "--workers" => cli.workers = parse_num::<usize>(args, &mut i, "--workers")?,
+            "--conns" => cli.conns = parse_num::<usize>(args, &mut i, "--conns")?,
+            "--load" => {
+                if let Some(v) = parse_str(args, &mut i) {
+                    cli.load = Some(v);
+                }
+            }
+            "--throughput" => cli.throughput = true,
             a if !a.starts_with("--") => {
                 // First free-standing word is the subcommand.
                 if cmd.is_none() {
@@ -622,10 +640,13 @@ fn run_fuzz(cli: &Cli) -> i32 {
     }
 }
 
-/// The `serve` subcommand: either the deterministic seeded selftest
-/// (`--selftest`, a virtual-clock replay of a generated load trace — the
-/// CI-gated path) or the live service over stdin/TCP. Exit code 0 =
-/// served, 2 = unusable invocation.
+/// The `serve` subcommand: the deterministic seeded selftest
+/// (`--selftest`, a virtual-clock replay of a generated load trace, or —
+/// with `--load closed` — a closed-loop client fleet reacting to its own
+/// rejections; both CI-gated), the self-contained live throughput smoke
+/// (`--throughput`), or the live service over stdin/TCP with `--workers`
+/// parallel SoC replicas and up to `--conns` simultaneous connections.
+/// Exit code 0 = served, 2 = unusable invocation.
 fn run_serve(cli: &Cli) -> i32 {
     use nmc::serve::{self, load};
     let tiles = match cli.tiles.as_deref() {
@@ -644,29 +665,73 @@ fn run_serve(cli: &Cli) -> i32 {
     };
     let cfg = serve::ServeConfig {
         tiles,
-        queue_cap: cli.queue.unwrap_or(64),
+        // The throughput smoke measures execution scaling, not admission
+        // policy: a small default queue would make req/s depend on
+        // timing-sensitive rejections, so it defaults deep.
+        queue_cap: cli.queue.unwrap_or(if cli.throughput { 4096 } else { 64 }),
         max_batch: cli.max_batch.unwrap_or(8),
         linger_cycles: cli.linger.unwrap_or(100_000),
+        workers: cli.workers.unwrap_or(1),
+        conns: cli.conns.unwrap_or(4),
     };
-    if cfg.queue_cap == 0 || cfg.max_batch == 0 {
-        eprintln!("error: --queue and --max-batch must be at least 1");
+    if cfg.queue_cap == 0 || cfg.max_batch == 0 || cfg.workers == 0 || cfg.conns == 0 {
+        eprintln!("error: --queue, --max-batch, --workers and --conns must be at least 1");
+        return 2;
+    }
+    let load_mode = cli.load.as_deref().unwrap_or("open");
+    if !matches!(load_mode, "open" | "closed") {
+        eprint!("{}", usage());
+        eprintln!("error: unknown --load `{load_mode}` (open|closed)");
         return 2;
     }
     let seed = cli.seed.unwrap_or(1);
 
-    if cli.selftest {
-        let trace = cli.trace.as_deref().unwrap_or("mixed");
-        let Some(kind) = load::TraceKind::parse(trace) else {
-            eprint!("{}", usage());
-            eprintln!("error: unknown --trace `{trace}` (poisson|bursty|mixed)");
-            return 2;
+    if cli.throughput {
+        // Self-contained live smoke: ephemeral TCP listener + worker
+        // pool, driven by `conns` real client threads.
+        let per_client = cli.requests.unwrap_or(48);
+        return match serve::throughput(&cfg, per_client, seed) {
+            Ok(run) => {
+                eprint!("{}", harness::serve_report(&run.stats, &cfg, "throughput", seed).text);
+                if let Some(path) = &cli.json {
+                    std::fs::write(path, serve::throughput_json(&run, &cfg, seed))
+                        .expect("write serve throughput json");
+                    println!("(serve throughput summary written to {path})");
+                }
+                0
+            }
+            Err(e) => {
+                eprintln!("error: throughput run failed: {e}");
+                1
+            }
         };
+    }
+
+    if load_mode == "closed" && !cli.selftest {
+        eprint!("{}", usage());
+        eprintln!("error: --load closed is a virtual-clock mode; it requires --selftest");
+        return 2;
+    }
+
+    if cli.selftest {
         let requests = cli.requests.unwrap_or(if cli.quick { 64 } else { 256 });
-        let (stats, _) = serve::selftest(&cfg, kind, seed, requests);
-        let rep = harness::serve_report(&stats, &cfg, kind.slug(), seed);
+        let (stats, slug) = if load_mode == "closed" {
+            let (stats, _) = serve::run_closed(&cfg, seed, requests);
+            (stats, "closed")
+        } else {
+            let trace = cli.trace.as_deref().unwrap_or("mixed");
+            let Some(kind) = load::TraceKind::parse(trace) else {
+                eprint!("{}", usage());
+                eprintln!("error: unknown --trace `{trace}` (poisson|bursty|mixed)");
+                return 2;
+            };
+            let (stats, _) = serve::selftest(&cfg, kind, seed, requests);
+            (stats, kind.slug())
+        };
+        let rep = harness::serve_report(&stats, &cfg, slug, seed);
         write_reports(&[rep], cli.out.as_deref());
         if let Some(path) = &cli.json {
-            std::fs::write(path, serve::summary_json(&stats, &cfg, kind.slug(), seed))
+            std::fs::write(path, serve::summary_json(&stats, &cfg, slug, seed))
                 .expect("write serve json");
             println!("(serve summary written to {path})");
         }
@@ -696,16 +761,18 @@ fn run_serve(cli: &Cli) -> i32 {
                 }
             };
             let addr = listener.local_addr().expect("bound socket has an address");
-            eprintln!("serving on {addr} (JSONL requests, one connection at a time)");
-            loop {
-                match serve::serve_one_tcp(&cfg, &listener) {
-                    Ok(stats) => {
-                        eprint!("{}", harness::serve_report(&stats, &cfg, "tcp", seed).text);
-                    }
-                    Err(e) => {
-                        eprintln!("error: accept failed: {e}");
-                        return 1;
-                    }
+            eprintln!(
+                "serving on {addr} (JSONL requests, up to {} connections, {} workers)",
+                cfg.conns, cfg.workers
+            );
+            match serve::serve_tcp(&cfg, &listener, None) {
+                Ok(stats) => {
+                    eprint!("{}", harness::serve_report(&stats, &cfg, "tcp", seed).text);
+                    0
+                }
+                Err(e) => {
+                    eprintln!("error: accept failed: {e}");
+                    1
                 }
             }
         }
@@ -728,8 +795,12 @@ fn usage() -> String {
     writeln!(w, "               --replay FILE re-checks a fuzz-repro-<seed>.json; a divergence writes one (into --out DIR if given)").unwrap();
     writeln!(w, "       `serve` runs the batch-inference service: --listen stdin|PORT (default stdin), --tiles N (default 4),").unwrap();
     writeln!(w, "               --queue N --max-batch N --linger CYC set the admission + batching policy;").unwrap();
+    writeln!(w, "               --workers N runs N parallel SoC worker replicas, --conns N caps simultaneous TCP connections (both default small);").unwrap();
     writeln!(w, "               --selftest replays a seeded load trace on a virtual clock instead: --trace poisson|bursty|mixed,").unwrap();
-    writeln!(w, "               --requests N --seed S, --json FILE writes the summary the CI serve-smoke job gates on").unwrap();
+    writeln!(w, "               --requests N --seed S, --json FILE writes the summary the CI serve-smoke job gates on;").unwrap();
+    writeln!(w, "               --selftest --load closed runs a closed-loop client fleet (backoff+retry on rejection) on the virtual clock;").unwrap();
+    writeln!(w, "               --throughput runs a self-contained live TCP smoke (--conns clients x --requests each) and").unwrap();
+    writeln!(w, "               reports wall-clock req/s (--json FILE writes the heeperator-serve-live-v1 summary)").unwrap();
     writeln!(w, "       every subcommand accepts --timing cycle|event (skip-ahead event timing is the default;").unwrap();
     writeln!(w, "               `cycle` forces the per-cycle reference loop; SOC_TIMING env var works too)").unwrap();
     writeln!(w, "       every --flag accepts both `--flag value` and `--flag=value`").unwrap();
@@ -997,6 +1068,10 @@ mod tests {
         assert!(u.contains("--selftest"));
         assert!(u.contains("--trace"));
         assert!(u.contains("--linger"));
+        assert!(u.contains("--workers"));
+        assert!(u.contains("--conns"));
+        assert!(u.contains("--load closed"));
+        assert!(u.contains("--throughput"));
     }
 
     #[test]
@@ -1026,6 +1101,23 @@ mod tests {
         assert_eq!(cli.queue, None);
         assert_eq!(cli.max_batch, None);
         assert_eq!(cli.linger, None);
+        assert_eq!(cli.workers, None);
+        assert_eq!(cli.conns, None);
+        assert_eq!(cli.load, None);
+        assert!(!cli.throughput);
+    }
+
+    #[test]
+    fn serve_concurrency_flags_parse_in_both_spellings() {
+        let cli = p(&["serve", "--workers", "4", "--conns", "8", "--load", "closed"]);
+        assert_eq!(cli.workers, Some(4));
+        assert_eq!(cli.conns, Some(8));
+        assert_eq!(cli.load.as_deref(), Some("closed"));
+        let eq = p(&["serve", "--workers=4", "--conns=8", "--load=closed", "--throughput"]);
+        assert_eq!(eq.workers, Some(4));
+        assert_eq!(eq.conns, Some(8));
+        assert_eq!(eq.load.as_deref(), Some("closed"));
+        assert!(eq.throughput);
     }
 
     #[test]
@@ -1037,6 +1129,10 @@ mod tests {
         assert!(err.contains("--requests"), "{err}");
         let err = parse_args(&argv(&["serve", "--linger", "forever"])).unwrap_err();
         assert!(err.contains("--linger"), "{err}");
+        let err = parse_args(&argv(&["serve", "--workers", "many"])).unwrap_err();
+        assert!(err.contains("--workers"), "{err}");
+        let err = parse_args(&argv(&["serve", "--conns=lots"])).unwrap_err();
+        assert!(err.contains("--conns"), "{err}");
     }
 
     #[test]

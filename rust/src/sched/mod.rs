@@ -250,6 +250,15 @@ pub struct Plan {
     whole: Option<WorkloadData>,
 }
 
+impl Plan {
+    /// The tile kind this plan schedules onto — what a worker needs to
+    /// know to pre-warm a matching [`Soc`] replica for
+    /// [`run_planned_on`].
+    pub fn kind(&self) -> TileKind {
+        self.kind
+    }
+}
+
 /// Staging pool: SRAM banks 1..6 (bank 0 holds the scheduler firmware).
 const POOL_BASE: u32 = BANK_SIZE;
 const POOL_END: u32 = NMC_TILE_BASE;
@@ -680,8 +689,27 @@ fn build_firmware(
 /// trap, output mismatch against the golden reference) — planning errors
 /// were already surfaced as `Err` by [`plan`].
 pub fn run_planned(plan: &Plan) -> BatchRunResult {
-    let eng = engine(plan.spec.target);
     let mut soc = Soc::scale_out(plan.kind, plan.tiles, 4);
+    run_planned_on(&mut soc, plan)
+}
+
+/// Simulate a compiled [`Plan`] on a caller-owned [`Soc`] replica — the
+/// serve worker pool's entry point. The SoC is [`Soc::recycle`]d first,
+/// so the result is bit-identical to [`run_planned`]'s fresh-construction
+/// path no matter what ran on the replica before; the borrow is
+/// `Send`-clean (plain data on both sides), so independent workers can
+/// execute independent plans on independent replicas in parallel.
+/// Panics if `soc`'s tile configuration does not match the plan.
+pub fn run_planned_on(soc: &mut Soc, plan: &Plan) -> BatchRunResult {
+    soc.recycle();
+    assert!(
+        soc.tiles.len() == plan.tiles && soc.tiles.iter().all(|t| t.kind() == plan.kind),
+        "worker SoC ({} tiles) does not match the plan ({} {:?} tiles)",
+        soc.tiles.len(),
+        plan.tiles,
+        plan.kind
+    );
+    let eng = engine(plan.spec.target);
 
     // Host-side pre-staging of every image in system SRAM (uncounted, like
     // the single-tile engines' `stage_data`): what *is* measured is the
@@ -956,6 +984,46 @@ mod tests {
             .unwrap_err();
         assert_eq!(e, SchedError::StagingOverflow);
         assert!(e.to_string().contains("staging"), "{e}");
+    }
+
+    #[test]
+    fn recycled_soc_results_are_bit_identical_to_fresh_construction() {
+        // The serve worker pool reuses one SoC replica across batches via
+        // `run_planned_on`; the whole determinism story rests on a
+        // recycled SoC being indistinguishable from a fresh one. Run two
+        // different plans back-to-back on one replica and compare every
+        // observable against the fresh-construction path — bitwise, f64
+        // energies included.
+        let plans = [
+            plan(&spec(Target::Carus, Kernel::Add { n: 64 }, Sew::E32, 3, false), 2).unwrap(),
+            plan(&spec(Target::Carus, Kernel::Mul { n: 32 }, Sew::E16, 2, false), 2).unwrap(),
+            plan(&spec(Target::Caesar, Kernel::Add { n: 64 }, Sew::E8, 2, false), 2).unwrap(),
+        ];
+        let mut carus_replica = Soc::scale_out(TileKind::Carus, 2, 4);
+        let mut caesar_replica = Soc::scale_out(TileKind::Caesar, 2, 4);
+        for p in &plans {
+            let replica = match p.kind() {
+                TileKind::Carus => &mut carus_replica,
+                TileKind::Caesar => &mut caesar_replica,
+            };
+            let reused = run_planned_on(replica, p);
+            let fresh = run_planned(p);
+            assert_eq!(reused.cycles, fresh.cycles, "{:?}", p.spec);
+            assert_eq!(reused.outputs, fresh.outputs, "{:?}", p.spec);
+            assert_eq!(
+                reused.energy.total().to_bits(),
+                fresh.energy.total().to_bits(),
+                "{:?}: energy must match bitwise",
+                p.spec
+            );
+            assert_eq!(reused.dma_transfers, fresh.dma_transfers, "{:?}", p.spec);
+            assert_eq!(reused.bus_txns, fresh.bus_txns, "{:?}", p.spec);
+            assert_eq!(reused.contention_cycles, fresh.contention_cycles, "{:?}", p.spec);
+            let busy = |r: &BatchRunResult| -> Vec<u64> {
+                r.per_tile.iter().map(|t| t.busy_cycles).collect()
+            };
+            assert_eq!(busy(&reused), busy(&fresh), "{:?}", p.spec);
+        }
     }
 
     #[test]

@@ -20,6 +20,11 @@ use crate::serve::Request;
 
 /// Mean Poisson inter-arrival gap in simulated cycles.
 pub const POISSON_MEAN_CYCLES: u64 = 40_000;
+/// First retry delay of a closed-loop client after a `rejected`
+/// response; doubles per consecutive rejection.
+pub const BACKOFF_BASE_CYCLES: u64 = 50_000;
+/// Retry delays stop doubling here (capped exponential backoff).
+pub const BACKOFF_CAP_CYCLES: u64 = 1_600_000;
 /// Gap between burst starts.
 pub const BURST_GAP_CYCLES: u64 = 400_000;
 /// Requests per burst.
@@ -114,6 +119,68 @@ pub fn gen_trace(kind: TraceKind, seed: u64, requests: u32) -> Vec<(u64, Request
     }
 }
 
+/// One closed-loop client (`--load closed`): a sticky flavor that
+/// drifts like the open-loop generator's, at most one outstanding
+/// request, exponential think time between completions, and **capped
+/// exponential backoff with seeded jitter** after a `rejected` response
+/// — the reactive half of the serve contract that an open-loop trace
+/// cannot exercise. Everything is a pure function of `(seed, client)`,
+/// so the closed-loop selftest stays a byte-determinism gate.
+pub struct ClosedClient {
+    rng: Rng,
+    flavor: Flavor,
+    /// Requests left before the flavor re-rolls.
+    flavor_left: u32,
+    /// Current backoff step; doubles per consecutive rejection.
+    backoff: u64,
+}
+
+impl ClosedClient {
+    /// Client `client` of a fleet seeded with `seed`. Per-client salt on
+    /// top of the fleet seed, so the clients explore distinct request
+    /// streams while the fleet as a whole stays reproducible.
+    pub fn new(seed: u64, client: u32) -> ClosedClient {
+        let mut rng = Rng(seed ^ 0xc105_ed00_c11e_4700 ^ ((client as u64) << 32));
+        let flavor = rand_flavor(&mut rng);
+        let flavor_left = 4 + rng.below(5);
+        ClosedClient { rng, flavor, flavor_left, backoff: BACKOFF_BASE_CYCLES }
+    }
+
+    /// The next request this client submits; the service loop assigns
+    /// the globally-unique `id` (a retry is a *new* request, so every id
+    /// is still answered exactly once).
+    pub fn next_request(&mut self, id: u64) -> Request {
+        if self.flavor_left == 0 {
+            self.flavor = rand_flavor(&mut self.rng);
+            self.flavor_left = 4 + self.rng.below(5);
+        }
+        self.flavor_left -= 1;
+        request(&mut self.rng, id, &self.flavor)
+    }
+
+    /// Think-time gap before this client's next first-attempt
+    /// submission (exponential, mean [`POISSON_MEAN_CYCLES`]).
+    pub fn think(&mut self) -> u64 {
+        exp_interval(&mut self.rng, POISSON_MEAN_CYCLES)
+    }
+
+    /// Rejected: the retry delay — the current backoff step plus seeded
+    /// jitter of up to half the step (so a rejected burst does not
+    /// retry in lockstep) — and the step doubles toward
+    /// [`BACKOFF_CAP_CYCLES`].
+    pub fn backoff(&mut self) -> u64 {
+        let step = self.backoff;
+        let jitter = self.rng.next_u64() % (step / 2 + 1);
+        self.backoff = (step * 2).min(BACKOFF_CAP_CYCLES);
+        step + jitter
+    }
+
+    /// Any terminal response (`ok` or `error`) resets the backoff.
+    pub fn reset(&mut self) {
+        self.backoff = BACKOFF_BASE_CYCLES;
+    }
+}
+
 fn poisson(rng: &mut Rng, first_id: u64, n: u32, start: u64) -> Vec<(u64, Request)> {
     let mut out = Vec::with_capacity(n as usize);
     let mut now = start;
@@ -193,6 +260,50 @@ mod tests {
         assert!(coalescible_adjacent * 2 > trace.len(), "{coalescible_adjacent}/256");
         assert!(families.len() >= 3, "{families:?}");
         assert_eq!(targets.len(), 2, "{targets:?}");
+    }
+
+    #[test]
+    fn closed_clients_are_deterministic_and_emit_valid_requests() {
+        let mut a = ClosedClient::new(7, 3);
+        let mut b = ClosedClient::new(7, 3);
+        for id in 1..=32u64 {
+            assert_eq!(a.next_request(id), b.next_request(id), "same (seed, client), same stream");
+            assert_eq!(a.think(), b.think());
+        }
+        // Distinct clients of one fleet explore distinct streams.
+        let mut c = ClosedClient::new(7, 4);
+        let r3 = ClosedClient::new(7, 3).next_request(1);
+        assert_ne!(c.next_request(1), r3);
+        // Every emitted request is servable.
+        let mut cl = ClosedClient::new(11, 0);
+        for id in 1..=64u64 {
+            let r = cl.next_request(id);
+            assert_eq!(r.id, id);
+            assert_ne!(r.target, Target::Cpu);
+            assert_eq!(r.kernel.validate(r.target, r.sew), Ok(()), "{r:?}");
+        }
+    }
+
+    #[test]
+    fn backoff_doubles_with_jitter_caps_and_resets() {
+        let mut c = ClosedClient::new(7, 0);
+        let mut step = BACKOFF_BASE_CYCLES;
+        for i in 0..8 {
+            let delay = c.backoff();
+            // Delay = current step + jitter in 0..=step/2.
+            assert!(delay >= step && delay <= step + step / 2, "attempt {i}: {delay} vs {step}");
+            step = (step * 2).min(BACKOFF_CAP_CYCLES);
+        }
+        assert_eq!(step, BACKOFF_CAP_CYCLES, "the step must have hit the cap");
+        let capped = c.backoff();
+        assert!(capped >= BACKOFF_CAP_CYCLES && capped <= BACKOFF_CAP_CYCLES * 3 / 2);
+        // A terminal response resets the ladder.
+        c.reset();
+        let fresh = c.backoff();
+        assert!(
+            fresh >= BACKOFF_BASE_CYCLES && fresh <= BACKOFF_BASE_CYCLES * 3 / 2,
+            "{fresh}"
+        );
     }
 
     #[test]

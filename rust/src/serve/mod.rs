@@ -11,7 +11,7 @@
 //! [`sched::run_planned`] across the configured tile count, and answered
 //! with per-request JSONL responses.
 //!
-//! Two execution paths share the policy code:
+//! The execution paths share the policy code:
 //!
 //! - [`run_trace`] — the **virtual-time** path: arrivals carry explicit
 //!   cycle timestamps (from [`load::gen_trace`] or a test), and the
@@ -19,12 +19,27 @@
 //!   is exact and **deterministic** — the same trace produces
 //!   byte-identical responses and summary JSON on every run. CI gates on
 //!   this path (`serve --selftest`).
-//! - [`serve_stream`] — the **live** path: a listener thread parses and
-//!   admits requests while a coalescer thread drains the queue
-//!   (`std::thread::scope`; the repo is std-only — no tokio). Wall-clock
-//!   arrival order is not deterministic, so live responses report the
-//!   simulated batch makespan as their latency and the summary omits
-//!   nothing else.
+//! - [`run_closed`] — the virtual-time **closed-loop** path (`--load
+//!   closed`): instead of replaying a pre-generated trace, a fleet of
+//!   [`load::ClosedClient`]s reacts to its own responses — at most one
+//!   outstanding request each, exponential think time, and capped
+//!   exponential backoff with seeded jitter after a `rejected` answer.
+//!   Equally deterministic, equally CI-gated.
+//! - [`serve_stream`] / [`serve_tcp`] — the **live** path
+//!   (`std::thread::scope`; the repo is std-only — no tokio). A reader
+//!   thread per connection parses and admits requests against the one
+//!   shared bounded queue (up to `conns` simultaneous TCP connections;
+//!   one past the cap gets a typed busy rejection), and a pool of
+//!   `workers` worker threads — each owning pre-warmed, recyclable
+//!   [`Soc`] replicas — claims coalesced batches and executes them **in
+//!   parallel**, so wall-clock throughput scales with host cores.
+//!   Responses are routed back to the originating connection and
+//!   delivered in that connection's request order; the per-batch
+//!   *simulated* timing/energy stays bit-identical to the serial path
+//!   ([`sched::run_planned_on`] recycles the replica to the
+//!   fresh-construction state before every batch). Wall-clock arrival
+//!   order is not deterministic, so live responses report the simulated
+//!   batch makespan as their latency.
 //!
 //! A malformed or overload-rejected request must never take the service
 //! down: every planner failure is a typed [`sched::SchedError`] since the
@@ -34,27 +49,29 @@
 
 pub mod load;
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::io::{BufRead, Write};
 use std::net::TcpListener;
 use std::panic::AssertUnwindSafe;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::fuzz::{
     family_slug, json_escape, json_str, json_u64, kernel_from, shape_of, target_slug,
 };
 use crate::isa::Sew;
 use crate::kernels::{Family, Kernel, Target};
-use crate::sched::{self, plan_jobs, run_planned, BatchRunResult};
+use crate::sched::{self, plan_jobs, run_planned, run_planned_on, BatchRunResult};
+use crate::soc::{Soc, TileKind};
 
 /// Schema tag of the `--json` summary ([`summary_json`]).
 pub const SUMMARY_SCHEMA: &str = "heeperator-serve-v1";
 
-/// Service configuration: tile count, admission bound, batching policy.
+/// Service configuration: tile count, admission bound, batching policy,
+/// and the live path's parallelism (worker pool + connection cap).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ServeConfig {
-    /// Simulated NMC tiles behind the service.
+    /// Simulated NMC tiles behind the service (per worker replica).
     pub tiles: usize,
     /// Admission control: requests arriving at a full queue are rejected
     /// with a typed overload response, never dropped silently.
@@ -64,11 +81,25 @@ pub struct ServeConfig {
     /// Close a batch once its oldest request has waited this long
     /// (virtual-time path; the live path lingers a few milliseconds).
     pub linger_cycles: u64,
+    /// Live path: parallel worker threads, each owning independent
+    /// pre-warmed [`Soc`] replicas. The virtual-time paths ignore this —
+    /// their whole point is a deterministic serial clock.
+    pub workers: usize,
+    /// Live TCP path: maximum simultaneous connections; one more gets a
+    /// typed busy rejection. Doubles as the closed-loop client count.
+    pub conns: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { tiles: 4, queue_cap: 64, max_batch: 8, linger_cycles: 100_000 }
+        ServeConfig {
+            tiles: 4,
+            queue_cap: 64,
+            max_batch: 8,
+            linger_cycles: 100_000,
+            workers: 1,
+            conns: 4,
+        }
     }
 }
 
@@ -92,6 +123,10 @@ pub enum Response {
     Ok { id: u64, latency_cycles: u64, batch: u32, batch_cycles: u64 },
     /// Admission control: the bounded queue was full on arrival.
     Rejected { id: u64, queue_depth: usize },
+    /// Connection-level admission (TCP): the `--conns` cap was reached,
+    /// so this connection gets one typed line and is closed. No request
+    /// was read yet, so the line carries id 0.
+    Busy { conns: usize },
     /// The line did not parse, the shape failed validation, or the
     /// planner returned a typed [`sched::SchedError`].
     Error { id: u64, error: String },
@@ -103,6 +138,7 @@ impl Response {
             Response::Ok { id, .. }
             | Response::Rejected { id, .. }
             | Response::Error { id, .. } => *id,
+            Response::Busy { .. } => 0,
         }
     }
 
@@ -116,6 +152,9 @@ impl Response {
             Response::Rejected { id, queue_depth } => format!(
                 "{{\"id\":{id},\"status\":\"rejected\",\"reason\":\"overload\",\
                  \"queue_depth\":{queue_depth}}}"
+            ),
+            Response::Busy { conns } => format!(
+                "{{\"id\":0,\"status\":\"rejected\",\"reason\":\"busy\",\"conns\":{conns}}}"
             ),
             Response::Error { id, error } => {
                 format!("{{\"id\":{id},\"status\":\"error\",\"error\":\"{}\"}}", json_escape(error))
@@ -213,6 +252,9 @@ pub struct ServeStats {
     pub tile_busy: Vec<u64>,
     /// Sum of batch makespans (the window tiles could have been busy).
     pub busy_window: u64,
+    /// Wall-clock span of the live service window in milliseconds; 0 on
+    /// the virtual-time paths, which measure simulated cycles instead.
+    pub wall_ms: f64,
 }
 
 impl ServeStats {
@@ -255,6 +297,16 @@ impl ServeStats {
     /// [`BatchRunResult::utilization`].
     pub fn utilization(&self, i: usize) -> f64 {
         self.tile_busy.get(i).map_or(0.0, |&b| b as f64 / self.sim_cycles.max(1) as f64)
+    }
+
+    /// Completed requests per wall-clock second — the live path's
+    /// throughput. 0 when no wall-clock window was measured (the
+    /// virtual-time paths).
+    pub fn req_per_s(&self) -> f64 {
+        if self.wall_ms <= 0.0 {
+            return 0.0;
+        }
+        self.completed as f64 / (self.wall_ms / 1e3)
     }
 
     /// `hist[k-1]` = number of closed batches of size `k`.
@@ -428,140 +480,572 @@ pub fn selftest(
     (stats, responses)
 }
 
-/// The live path: a **listener** thread parses JSONL request lines from
-/// `input` and admits them against the bounded queue (immediate
-/// `rejected`/`error` responses on overflow or parse failure), while the
-/// calling thread **coalesces** and executes batches, writing `ok`
-/// responses as batches complete. Returns when the input reaches EOF and
-/// the queue drains. Response *content* is deterministic; arrival
-/// interleaving (and hence batching) is wall-clock, so live responses
-/// report the batch makespan as their latency.
-pub fn serve_stream<R: BufRead + Send, W: Write + Send>(
-    cfg: &ServeConfig,
-    input: R,
-    output: W,
-) -> ServeStats {
-    let out = Mutex::new(output);
-    // (queue, input closed)
-    let state: Mutex<(VecDeque<Request>, bool)> = Mutex::new((VecDeque::new(), false));
-    let cv = Condvar::new();
-    let requests = AtomicU64::new(0);
-    let rejected = AtomicU64::new(0);
-    let parse_errors = AtomicU64::new(0);
+/// Closed-loop service replay on the **virtual clock** (`--load
+/// closed`): `cfg.conns` [`load::ClosedClient`]s submit with at most one
+/// outstanding request each, think between completions, and — the part
+/// an open-loop trace cannot exercise — react to a `rejected` response
+/// with capped exponential backoff plus seeded jitter, then retry as a
+/// **new** request id (so every id is still answered exactly once). The
+/// fleet issues `budget` attempts in total (first tries + retries);
+/// deterministic in `(cfg, seed, budget)`, so the closed-loop selftest
+/// is byte-gated in CI exactly like the open-loop one.
+pub fn run_closed(cfg: &ServeConfig, seed: u64, budget: u32) -> (ServeStats, Vec<Response>) {
     let mut stats = ServeStats { tile_busy: vec![0; cfg.tiles], ..Default::default() };
+    let mut responses: Vec<Response> = Vec::new();
+    let n_clients = cfg.conns.max(1);
+    let mut clients: Vec<load::ClosedClient> =
+        (0..n_clients).map(|i| load::ClosedClient::new(seed, i as u32)).collect();
+    // Per-client next submission cycle; `None` while a request is
+    // outstanding (queued or executing) or the budget is spent.
+    let mut next_at: Vec<Option<u64>> = clients.iter_mut().map(|c| Some(c.think())).collect();
+    // (arrival cycle, client, request)
+    let mut queue: VecDeque<(u64, usize, Request)> = VecDeque::new();
+    let mut issued = 0u32;
+    let mut next_id = 1u64;
+    let mut now = 0u64;
 
-    std::thread::scope(|s| {
-        let (out, state, cv) = (&out, &state, &cv);
-        let (requests, rejected, parse_errors) = (&requests, &rejected, &parse_errors);
-        s.spawn(move || {
-            for line in input.lines() {
-                let Ok(line) = line else { break };
-                let line = line.trim();
-                if line.is_empty() {
+    loop {
+        // Submissions the clock has passed, in (cycle, client) order —
+        // the deterministic tie-break.
+        while issued < budget {
+            let due = (0..n_clients)
+                .filter_map(|i| next_at[i].map(|t| (t, i)))
+                .filter(|&(t, _)| t <= now)
+                .min();
+            let Some((_, i)) = due else { break };
+            next_at[i] = None;
+            let id = next_id;
+            next_id += 1;
+            issued += 1;
+            let req = clients[i].next_request(id);
+            stats.requests += 1;
+            if queue.len() >= cfg.queue_cap {
+                stats.rejected += 1;
+                responses.push(Response::Rejected { id, queue_depth: queue.len() });
+                // The reactive half of the contract: back off, retry
+                // later as a fresh attempt — unless the budget is spent.
+                let delay = clients[i].backoff();
+                if issued < budget {
+                    next_at[i] = Some(now + delay);
+                }
+            } else {
+                queue.push_back((now, i, req));
+            }
+        }
+        if issued >= budget {
+            // No client may submit again; silence any scheduled retries.
+            next_at.iter_mut().for_each(|t| *t = None);
+        }
+
+        let next_sub = next_at.iter().flatten().copied().min();
+        if queue.is_empty() {
+            match next_sub {
+                Some(t) => {
+                    now = now.max(t);
                     continue;
                 }
-                requests.fetch_add(1, Ordering::Relaxed);
-                match parse_request(line) {
-                    Err(e) => {
-                        parse_errors.fetch_add(1, Ordering::Relaxed);
-                        let id = json_u64(line, "id").unwrap_or(0);
-                        let resp = Response::Error { id, error: e };
-                        let _ = writeln!(out.lock().unwrap(), "{}", resp.render());
+                None => break,
+            }
+        }
+
+        // Batching policy, as in `run_trace`: close when full, when the
+        // oldest request has lingered out, or when no further submission
+        // can ever arrive.
+        let oldest = queue[0].0;
+        let full = queue.len() >= cfg.max_batch;
+        let lingered = now >= oldest.saturating_add(cfg.linger_cycles);
+        if !(full || lingered || next_sub.is_none()) {
+            let deadline = oldest.saturating_add(cfg.linger_cycles);
+            now = deadline.min(next_sub.unwrap()).max(now + 1);
+            continue;
+        }
+
+        // Close the longest head-compatible prefix (FIFO: no reordering).
+        let head = queue[0].2;
+        let mut take = 1;
+        while take < queue.len().min(cfg.max_batch) && coalescible(&head, &queue[take].2) {
+            take += 1;
+        }
+        stats.depth_samples.push(queue.len() as u32);
+        let batch: Vec<(u64, usize, Request)> = queue.drain(..take).collect();
+        let reqs: Vec<Request> = batch.iter().map(|&(_, _, r)| r).collect();
+        match execute(&reqs, cfg.tiles) {
+            Ok(res) => {
+                let end = now + res.cycles;
+                stats.batches += 1;
+                stats.batch_sizes.push(reqs.len() as u32);
+                stats.busy_window += res.cycles;
+                for (i, busy) in stats.tile_busy.iter_mut().enumerate() {
+                    *busy += res.per_tile.get(i).map_or(0, |t| t.busy_cycles);
+                }
+                for &(at, i, r) in &batch {
+                    let lat = end - at;
+                    stats.completed += 1;
+                    stats.latencies.push(lat);
+                    responses.push(Response::Ok {
+                        id: r.id,
+                        latency_cycles: lat,
+                        batch: reqs.len() as u32,
+                        batch_cycles: res.cycles,
+                    });
+                    // The response releases the client: reset its
+                    // backoff, think, submit again (budget permitting).
+                    clients[i].reset();
+                    if issued < budget {
+                        next_at[i] = Some(end + clients[i].think());
                     }
-                    Ok(req) => {
-                        let mut st = state.lock().unwrap();
-                        if st.0.len() >= cfg.queue_cap {
-                            let depth = st.0.len();
-                            drop(st);
-                            rejected.fetch_add(1, Ordering::Relaxed);
-                            let resp = Response::Rejected { id: req.id, queue_depth: depth };
-                            let _ = writeln!(out.lock().unwrap(), "{}", resp.render());
-                        } else {
-                            st.0.push_back(req);
-                            drop(st);
-                            cv.notify_all();
-                        }
+                }
+                now = end;
+            }
+            Err(e) => {
+                // Planning is host-side and cheap; an errored batch
+                // consumes no simulated time, only its queue slots.
+                for &(_, i, r) in &batch {
+                    stats.errored += 1;
+                    responses.push(Response::Error { id: r.id, error: e.clone() });
+                    clients[i].reset();
+                    if issued < budget {
+                        next_at[i] = Some(now + clients[i].think());
                     }
                 }
             }
-            state.lock().unwrap().1 = true;
-            cv.notify_all();
-        });
+        }
+    }
+    stats.sim_cycles = now;
+    (stats, responses)
+}
 
-        // Coalescer/executor: this thread.
+// ---------------------------------------------------------------------
+// Live path: concurrent front-end + parallel worker pool
+// ---------------------------------------------------------------------
+
+/// One worker thread's pre-warmed [`Soc`] replicas — one per tile kind,
+/// built lazily on first use and **recycled** (rebuilt in place from the
+/// recorded construction parameters, see [`Soc::recycle`]) rather than
+/// reconstructed between batches. Each worker owns its replicas
+/// exclusively, so batch execution needs no lock at all.
+struct WorkerSocs {
+    tiles: usize,
+    caesar: Option<Soc>,
+    carus: Option<Soc>,
+}
+
+impl WorkerSocs {
+    fn new(tiles: usize) -> Self {
+        WorkerSocs { tiles, caesar: None, carus: None }
+    }
+
+    fn soc_for(&mut self, kind: TileKind) -> &mut Soc {
+        let (slot, tiles) = match kind {
+            TileKind::Caesar => (&mut self.caesar, self.tiles),
+            TileKind::Carus => (&mut self.carus, self.tiles),
+        };
+        slot.get_or_insert_with(|| Soc::scale_out(kind, tiles, 4))
+    }
+}
+
+/// [`execute`] against a worker's own replica instead of a fresh [`Soc`]:
+/// [`sched::run_planned_on`] recycles the replica first, so the simulated
+/// timing/energy is bit-identical to fresh construction (locked in by a
+/// [`sched`] unit test) — only the wall-clock cost of rebuilding the
+/// memory arrays per batch is saved, and workers run in parallel.
+fn execute_on(socs: &mut WorkerSocs, batch: &[Request]) -> Result<BatchRunResult, String> {
+    let jobs: Vec<(Kernel, u64)> = batch.iter().map(|r| (r.kernel, r.seed)).collect();
+    let plan = plan_jobs(batch[0].target, batch[0].sew, &jobs, socs.tiles)
+        .map_err(|e: sched::SchedError| e.to_string())?;
+    let soc = socs.soc_for(plan.kind());
+    std::panic::catch_unwind(AssertUnwindSafe(|| run_planned_on(soc, &plan)))
+        .map_err(|_| "internal: co-simulation panicked (modeling bug)".to_string())
+}
+
+struct ConnOutInner<'env> {
+    out: Box<dyn Write + Send + 'env>,
+    /// Next per-connection arrival sequence to write.
+    next: u64,
+    /// Responses that completed ahead of an earlier in-flight sequence.
+    held: BTreeMap<u64, String>,
+}
+
+/// Routes responses back to their originating connection, restoring that
+/// connection's **request order**: batches complete out of order across
+/// the worker pool, so every response is tagged with its per-connection
+/// arrival sequence and held back until all earlier sequences have been
+/// written. Rejections and parse errors claim a sequence too, so the
+/// stream never stalls waiting on a request that was answered inline.
+struct ConnOut<'env> {
+    inner: Mutex<ConnOutInner<'env>>,
+}
+
+impl<'env> ConnOut<'env> {
+    fn new(out: Box<dyn Write + Send + 'env>) -> Self {
+        ConnOut { inner: Mutex::new(ConnOutInner { out, next: 0, held: BTreeMap::new() }) }
+    }
+
+    /// Hand in the response line for arrival sequence `seq`; writes it
+    /// plus any directly following held lines, in sequence order.
+    fn deliver(&self, seq: u64, line: String) {
+        let mut g = self.inner.lock().unwrap();
+        let inner = &mut *g;
+        inner.held.insert(seq, line);
+        let mut wrote = false;
+        while let Some(line) = inner.held.remove(&inner.next) {
+            let _ = writeln!(inner.out, "{line}");
+            inner.next += 1;
+            wrote = true;
+        }
+        // Flush only at a quiescent point: everything deliverable is out.
+        if wrote && inner.held.is_empty() {
+            let _ = inner.out.flush();
+        }
+    }
+
+    fn flush(&self) {
+        let _ = self.inner.lock().unwrap().out.flush();
+    }
+}
+
+/// One admitted request together with its return route.
+struct Admitted<'env> {
+    req: Request,
+    dest: Arc<ConnOut<'env>>,
+    /// Per-connection arrival sequence (drives in-order delivery).
+    seq: u64,
+}
+
+struct LiveState<'env> {
+    queue: VecDeque<Admitted<'env>>,
+    /// Open feeders (connections, plus the acceptor while it may still
+    /// admit more). Workers exit once this hits zero with a drained queue.
+    producers: usize,
+}
+
+/// The shared heart of the live path: one bounded admission queue fed by
+/// any number of connection reader threads, drained by the worker pool.
+/// Workers claim batches themselves, so a closed group goes to the first
+/// idle worker instead of serializing behind the previous batch. Lock
+/// order is `state`, then `stats`, then a `ConnOut` — each a leaf by the
+/// time the next is taken, so no cycles.
+struct LiveCore<'env> {
+    cfg: ServeConfig,
+    state: Mutex<LiveState<'env>>,
+    work: Condvar,
+    stats: Mutex<ServeStats>,
+}
+
+impl<'env> LiveCore<'env> {
+    fn new(cfg: ServeConfig) -> Self {
+        LiveCore {
+            cfg,
+            state: Mutex::new(LiveState { queue: VecDeque::new(), producers: 0 }),
+            work: Condvar::new(),
+            stats: Mutex::new(ServeStats { tile_busy: vec![0; cfg.tiles], ..Default::default() }),
+        }
+    }
+
+    fn add_producer(&self) {
+        self.state.lock().unwrap().producers += 1;
+    }
+
+    fn remove_producer(&self) {
+        self.state.lock().unwrap().producers -= 1;
+        self.work.notify_all();
+    }
+
+    fn take_stats(&self) -> ServeStats {
+        std::mem::take(&mut *self.stats.lock().unwrap())
+    }
+
+    /// Read JSONL request lines from `input` until EOF, admitting them
+    /// against the bounded queue. Parse errors and overload rejections
+    /// are answered immediately (still through `dest`, so ordering
+    /// holds); admitted requests are answered by whichever worker runs
+    /// their batch. Callers bracket this with `add_producer` /
+    /// `remove_producer`.
+    fn feed<R: BufRead>(&self, input: R, dest: &Arc<ConnOut<'env>>) {
+        let mut seq = 0u64;
+        for line in input.lines() {
+            let Ok(line) = line else { break };
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let my_seq = seq;
+            seq += 1;
+            self.stats.lock().unwrap().requests += 1;
+            match parse_request(line) {
+                Err(e) => {
+                    self.stats.lock().unwrap().errored += 1;
+                    let id = json_u64(line, "id").unwrap_or(0);
+                    dest.deliver(my_seq, Response::Error { id, error: e }.render());
+                }
+                Ok(req) => {
+                    let mut st = self.state.lock().unwrap();
+                    if st.queue.len() >= self.cfg.queue_cap {
+                        let depth = st.queue.len();
+                        drop(st);
+                        self.stats.lock().unwrap().rejected += 1;
+                        dest.deliver(
+                            my_seq,
+                            Response::Rejected { id: req.id, queue_depth: depth }.render(),
+                        );
+                    } else {
+                        st.queue.push_back(Admitted { req, dest: Arc::clone(dest), seq: my_seq });
+                        drop(st);
+                        self.work.notify_all();
+                    }
+                }
+            }
+        }
+        dest.flush();
+    }
+
+    /// One worker: claim the longest head-compatible prefix, execute it
+    /// on this worker's own recycled replicas, route the responses back.
+    /// Returns once the queue is drained and no producer remains.
+    fn worker(&self) {
+        let mut socs = WorkerSocs::new(self.cfg.tiles);
         loop {
-            let mut st = state.lock().unwrap();
-            while st.0.is_empty() && !st.1 {
-                st = cv.wait(st).unwrap();
+            let mut st = self.state.lock().unwrap();
+            while st.queue.is_empty() && st.producers > 0 {
+                st = self.work.wait(st).unwrap();
             }
-            if st.0.is_empty() && st.1 {
-                break;
+            if st.queue.is_empty() {
+                return;
             }
-            if st.0.len() < cfg.max_batch && !st.1 {
+            if st.queue.len() < self.cfg.max_batch && st.producers > 0 {
                 // Linger briefly for a fuller batch while input is live.
-                let (g, _) = cv.wait_timeout(st, std::time::Duration::from_millis(20)).unwrap();
+                let (g, _) =
+                    self.work.wait_timeout(st, std::time::Duration::from_millis(20)).unwrap();
                 st = g;
-                if st.0.is_empty() {
+                if st.queue.is_empty() {
                     continue;
                 }
             }
-            let head = st.0[0];
+            let head = st.queue[0].req;
             let mut take = 1;
-            while take < st.0.len().min(cfg.max_batch) && coalescible(&head, &st.0[take]) {
+            while take < st.queue.len().min(self.cfg.max_batch)
+                && coalescible(&head, &st.queue[take].req)
+            {
                 take += 1;
             }
-            stats.depth_samples.push(st.0.len() as u32);
-            let batch: Vec<Request> = st.0.drain(..take).collect();
+            let depth = st.queue.len() as u32;
+            let batch: Vec<Admitted<'env>> = st.queue.drain(..take).collect();
             drop(st);
-            cv.notify_all();
-            match execute(&batch, cfg.tiles) {
+            // Freed queue slots: wake feeders racing the admission bound
+            // and any idle worker that can claim the new head.
+            self.work.notify_all();
+
+            let reqs: Vec<Request> = batch.iter().map(|a| a.req).collect();
+            let result = execute_on(&mut socs, &reqs);
+            let mut stats = self.stats.lock().unwrap();
+            stats.depth_samples.push(depth);
+            match &result {
                 Ok(res) => {
                     stats.batches += 1;
-                    stats.batch_sizes.push(batch.len() as u32);
+                    stats.batch_sizes.push(reqs.len() as u32);
                     stats.busy_window += res.cycles;
                     stats.sim_cycles += res.cycles;
                     for (i, busy) in stats.tile_busy.iter_mut().enumerate() {
                         *busy += res.per_tile.get(i).map_or(0, |t| t.busy_cycles);
                     }
-                    let mut w = out.lock().unwrap();
-                    for r in &batch {
-                        stats.completed += 1;
-                        stats.latencies.push(res.cycles);
-                        let resp = Response::Ok {
-                            id: r.id,
-                            latency_cycles: res.cycles,
-                            batch: batch.len() as u32,
-                            batch_cycles: res.cycles,
-                        };
-                        let _ = writeln!(w, "{}", resp.render());
-                    }
+                    stats.completed += reqs.len() as u64;
+                    stats.latencies.extend(std::iter::repeat_n(res.cycles, reqs.len()));
                 }
-                Err(e) => {
-                    let mut w = out.lock().unwrap();
-                    for r in &batch {
-                        stats.errored += 1;
-                        let resp = Response::Error { id: r.id, error: e.clone() };
-                        let _ = writeln!(w, "{}", resp.render());
-                    }
-                }
+                Err(_) => stats.errored += reqs.len() as u64,
+            }
+            drop(stats);
+            for a in &batch {
+                let resp = match &result {
+                    Ok(res) => Response::Ok {
+                        id: a.req.id,
+                        latency_cycles: res.cycles,
+                        batch: reqs.len() as u32,
+                        batch_cycles: res.cycles,
+                    },
+                    Err(e) => Response::Error { id: a.req.id, error: e.clone() },
+                };
+                a.dest.deliver(a.seq, resp.render());
             }
         }
-    });
+    }
+}
 
-    stats.requests = requests.load(Ordering::Relaxed);
-    stats.rejected = rejected.load(Ordering::Relaxed);
-    stats.errored += parse_errors.load(Ordering::Relaxed);
-    let _ = out.lock().unwrap().flush();
+/// The live path over one input/output pair (stdin mode, pipe tests): a
+/// reader thread feeds the admission queue while `cfg.workers` workers
+/// execute coalesced batches in parallel. Returns when the input reaches
+/// EOF and the queue drains. Response *content* is deterministic and
+/// responses come back in request order; which batch a request lands in
+/// is wall-clock, so live responses report the batch makespan as their
+/// latency.
+pub fn serve_stream<R: BufRead + Send, W: Write + Send>(
+    cfg: &ServeConfig,
+    input: R,
+    output: W,
+) -> ServeStats {
+    let core = LiveCore::new(*cfg);
+    let started = std::time::Instant::now();
+    std::thread::scope(|s| {
+        let core = &core;
+        let dest = Arc::new(ConnOut::new(Box::new(output)));
+        core.add_producer();
+        s.spawn(move || {
+            core.feed(input, &dest);
+            core.remove_producer();
+        });
+        for _ in 0..cfg.workers.max(1) {
+            s.spawn(move || core.worker());
+        }
+    });
+    let mut stats = core.take_stats();
+    stats.wall_ms = started.elapsed().as_secs_f64() * 1e3;
     stats
 }
 
 /// Accept **one** TCP connection and serve it to completion (EOF on the
-/// read half ends the session). The CLI loops this for sequential
-/// connections; tests bind an ephemeral port and connect once.
+/// read half ends the session) — the single-connection building block;
+/// the CLI and the throughput smoke use [`serve_tcp`] for concurrent
+/// connections.
 pub fn serve_one_tcp(cfg: &ServeConfig, listener: &TcpListener) -> std::io::Result<ServeStats> {
     let (stream, _) = listener.accept()?;
     let input = std::io::BufReader::new(stream.try_clone()?);
     Ok(serve_stream(cfg, input, stream))
+}
+
+/// The concurrent TCP front-end: up to `cfg.conns` simultaneous
+/// connections, each with its own reader thread feeding the one shared
+/// admission queue, while the worker pool executes batches in parallel.
+/// A connection past the cap gets a single typed busy line and is
+/// closed. Responses return on the originating connection in that
+/// connection's request order.
+///
+/// `accept_limit` = `Some(n)` stops accepting after `n` connections
+/// (busy-rejected ones included) and returns once they drain — tests and
+/// the throughput smoke; `None` serves until the listener errors.
+pub fn serve_tcp(
+    cfg: &ServeConfig,
+    listener: &TcpListener,
+    accept_limit: Option<usize>,
+) -> std::io::Result<ServeStats> {
+    let core = LiveCore::new(*cfg);
+    let active = AtomicUsize::new(0);
+    let started = std::time::Instant::now();
+    std::thread::scope(|s| {
+        let (core, active) = (&core, &active);
+        for _ in 0..cfg.workers.max(1) {
+            s.spawn(move || core.worker());
+        }
+        // The acceptor holds a producer token so workers never observe
+        // "no producers" while another connection could still arrive.
+        core.add_producer();
+        let mut accepted = 0usize;
+        while accept_limit.is_none_or(|n| accepted < n) {
+            let Ok((mut stream, _)) = listener.accept() else { break };
+            accepted += 1;
+            if active.load(Ordering::Acquire) >= cfg.conns.max(1) {
+                // Connection-level admission: one typed line, then close.
+                let _ = writeln!(stream, "{}", Response::Busy { conns: cfg.conns }.render());
+                continue;
+            }
+            let reader = match stream.try_clone() {
+                Ok(r) => std::io::BufReader::new(r),
+                Err(_) => continue,
+            };
+            active.fetch_add(1, Ordering::AcqRel);
+            core.add_producer();
+            let dest = Arc::new(ConnOut::new(Box::new(stream)));
+            s.spawn(move || {
+                core.feed(reader, &dest);
+                core.remove_producer();
+                active.fetch_sub(1, Ordering::AcqRel);
+            });
+        }
+        core.remove_producer();
+    });
+    let mut stats = core.take_stats();
+    stats.wall_ms = started.elapsed().as_secs_f64() * 1e3;
+    Ok(stats)
+}
+
+// ---------------------------------------------------------------------
+// Live throughput smoke (`--throughput`)
+// ---------------------------------------------------------------------
+
+/// Schema tag of the `--throughput` report ([`throughput_json`]).
+pub const LIVE_SCHEMA: &str = "heeperator-serve-live-v1";
+
+/// Result of one self-contained live throughput run ([`throughput`]).
+#[derive(Debug, Clone)]
+pub struct ThroughputRun {
+    pub stats: ServeStats,
+    pub clients: usize,
+    pub per_client: u32,
+}
+
+/// Self-contained live throughput smoke: bind an ephemeral loopback
+/// listener, serve it with the configured worker pool, and drive it from
+/// `cfg.conns` real TCP client threads, each pipelining `per_client`
+/// seeded requests and reading to EOF. Wall-clock req/s lands in
+/// `stats.req_per_s()`. Absolute req/s is machine-dependent — CI gates
+/// only the within-run worker-scaling ratio (`--min-worker-speedup`).
+pub fn throughput(cfg: &ServeConfig, per_client: u32, seed: u64) -> std::io::Result<ThroughputRun> {
+    let clients = cfg.conns.max(1);
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let server_cfg = *cfg;
+    let server = std::thread::spawn(move || serve_tcp(&server_cfg, &listener, Some(clients)));
+    let mut drivers = Vec::new();
+    for c in 0..clients {
+        drivers.push(std::thread::spawn(move || -> std::io::Result<usize> {
+            let trace =
+                load::gen_trace(load::TraceKind::Mixed, seed ^ (c as u64 + 1), per_client);
+            let mut stream = std::net::TcpStream::connect(addr)?;
+            let mut reader = std::io::BufReader::new(stream.try_clone()?);
+            for (_, req) in &trace {
+                writeln!(stream, "{}", render_request(req))?;
+            }
+            stream.flush()?;
+            stream.shutdown(std::net::Shutdown::Write)?;
+            let mut line = String::new();
+            let mut answered = 0usize;
+            loop {
+                line.clear();
+                if reader.read_line(&mut line)? == 0 {
+                    break;
+                }
+                answered += 1;
+            }
+            Ok(answered)
+        }));
+    }
+    for d in drivers {
+        d.join().expect("throughput client panicked")?;
+    }
+    let stats = server.join().expect("throughput server panicked")?;
+    Ok(ThroughputRun { stats, clients, per_client })
+}
+
+/// The machine-readable `--throughput` report. Deterministic key order;
+/// the wall-clock fields vary run to run by construction, so CI gates
+/// only the counts and the within-run worker-scaling ratio.
+pub fn throughput_json(run: &ThroughputRun, cfg: &ServeConfig, seed: u64) -> String {
+    let s = &run.stats;
+    format!(
+        "{{\"schema\":\"{LIVE_SCHEMA}\",\"seed\":{seed},\"workers\":{},\"conns\":{},\
+         \"tiles\":{},\"clients\":{},\"per_client\":{},\"requests\":{},\"completed\":{},\
+         \"rejected\":{},\"errored\":{},\"batches\":{},\"wall_ms\":{:.3},\"req_per_s\":{:.3}}}",
+        cfg.workers,
+        cfg.conns,
+        cfg.tiles,
+        run.clients,
+        run.per_client,
+        s.requests,
+        s.completed,
+        s.rejected,
+        s.errored,
+        s.batches,
+        s.wall_ms,
+        s.req_per_s(),
+    )
 }
 
 #[cfg(test)]

@@ -251,6 +251,9 @@ pub struct Soc {
     /// Slaves used by the DMA ports this cycle (CPU must wait).
     dma_rd_slave: Option<Slave>,
     dma_wr_slave: Option<Slave>,
+    /// NM-Carus lane count this instance was built with (kept so
+    /// [`Soc::recycle`] can rebuild the tiles identically).
+    lanes: u32,
 }
 
 impl Soc {
@@ -298,7 +301,20 @@ impl Soc {
             dma_was_busy: false,
             dma_rd_slave: None,
             dma_wr_slave: None,
+            lanes,
         }
+    }
+
+    /// Restore this instance to the state [`Soc::with_tiles`] builds — a
+    /// worker that owns a long-lived replica calls this between batches
+    /// instead of constructing a new system. Implemented as an in-place
+    /// rebuild from the recorded construction parameters (host config,
+    /// lane count, tile mix), so a recycled SoC is *definitionally*
+    /// indistinguishable from a fresh one: the simulated timing and
+    /// energy of whatever runs next are bit-identical either way.
+    pub fn recycle(&mut self) {
+        let kinds: Vec<TileKind> = self.tiles.iter().map(|t| t.kind()).collect();
+        *self = Soc::with_tiles(self.cpu.cfg, self.lanes, &kinds);
     }
 
     /// Default paper configuration: CV32E40P host, 4-lane NM-Carus.

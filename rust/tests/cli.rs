@@ -112,12 +112,86 @@ fn serve_rejects_bad_invocations_with_exit_two() {
         &["serve", "--selftest", "--trace", "tsunami"][..],
         &["serve", "--tiles", "99"][..],
         &["serve", "--selftest", "--queue", "0"][..],
+        &["serve", "--selftest", "--workers", "0"][..],
+        &["serve", "--selftest", "--conns=0"][..],
+        &["serve", "--selftest", "--load", "sideways"][..],
+        &["serve", "--load", "closed"][..], // closed loop without --selftest
+        &["serve", "--throughput", "--workers", "none"][..],
     ] {
         let out = heeperator(args);
         assert_eq!(out.status.code(), Some(2), "{args:?}");
         let stderr = String::from_utf8_lossy(&out.stderr);
         assert!(!stderr.is_empty(), "{args:?} must explain itself");
     }
+}
+
+#[test]
+fn serve_closed_loop_selftest_is_byte_identical_in_both_flag_spellings() {
+    let dir = std::env::temp_dir().join("heeperator-serve-closed-cli-test");
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let a = dir.join("closed-a.json");
+    let b = dir.join("closed-b.json");
+    // One run per flag spelling: equal bytes proves both the determinism
+    // of the closed-loop virtual clock and the `=` normalization.
+    let out = heeperator(&[
+        "serve",
+        "--selftest",
+        "--load",
+        "closed",
+        "--conns",
+        "4",
+        "--seed",
+        "9",
+        "--requests",
+        "24",
+        "--json",
+        a.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let out = heeperator(&[
+        "serve",
+        "--selftest",
+        "--load=closed",
+        "--conns=4",
+        "--seed=9",
+        "--requests=24",
+        "--json",
+        b.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let ja = std::fs::read(&a).expect("first summary");
+    let jb = std::fs::read(&b).expect("second summary");
+    assert!(!ja.is_empty());
+    assert_eq!(ja, jb, "closed-loop selftest must be byte-deterministic across spellings");
+    let text = String::from_utf8(ja).unwrap();
+    assert!(text.contains("\"trace\": \"closed\""), "{text}");
+}
+
+#[test]
+fn serve_throughput_smoke_reports_live_schema_and_answers_everything() {
+    let dir = std::env::temp_dir().join("heeperator-serve-tp-cli-test");
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let path = dir.join("live.json");
+    let out = heeperator(&[
+        "serve",
+        "--throughput",
+        "--workers=2",
+        "--conns=2",
+        "--requests=6",
+        "--seed=7",
+        "--json",
+        path.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = std::fs::read_to_string(&path).expect("live summary");
+    assert!(text.contains("\"schema\":\"heeperator-serve-live-v1\""), "{text}");
+    assert!(text.contains("\"workers\":2"), "{text}");
+    assert!(text.contains("\"requests\":12"), "{text}");
+    assert!(text.contains("\"completed\":12"), "{text}");
+    assert!(text.contains("\"rejected\":0"), "{text}");
+    assert!(text.contains("\"errored\":0"), "{text}");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("req/s"), "live report carries throughput: {stderr}");
 }
 
 #[test]

@@ -11,8 +11,8 @@ use nmc::isa::Sew;
 use nmc::kernels::{Kernel, Target};
 use nmc::sched::{arm_tile_fault, TileFault};
 use nmc::serve::{
-    self, load, parse_request, render_request, run_trace, selftest, summary_json, Request,
-    Response, ServeConfig,
+    self, load, parse_request, render_request, run_closed, run_trace, selftest, summary_json,
+    Request, Response, ServeConfig,
 };
 
 fn req(id: u64, target: Target, kernel: Kernel, sew: Sew) -> Request {
@@ -194,6 +194,142 @@ fn serve_one_tcp_round_trips_a_real_socket() {
             "id {id} answered: {lines:?}"
         );
     }
+}
+
+#[test]
+fn serve_tcp_answers_concurrent_clients_exactly_once_and_in_order() {
+    use std::io::{BufRead, BufReader, Write};
+    const CLIENTS: usize = 4;
+    const PER_CLIENT: u64 = 8;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind ephemeral port");
+    let addr = listener.local_addr().unwrap();
+    let cfg = ServeConfig {
+        tiles: 2,
+        queue_cap: 256,
+        workers: 2,
+        conns: CLIENTS,
+        ..Default::default()
+    };
+    let server =
+        std::thread::spawn(move || serve::serve_tcp(&cfg, &listener, Some(CLIENTS)));
+
+    let mut clients = Vec::new();
+    for c in 0..CLIENTS {
+        clients.push(std::thread::spawn(move || -> Vec<String> {
+            let mut stream = std::net::TcpStream::connect(addr).expect("connect");
+            let reader = BufReader::new(stream.try_clone().expect("clone socket"));
+            for id in 1..=PER_CLIENT {
+                // Vary shape and family per client so batches mix targets
+                // arriving from different connections.
+                let kernel = if c % 2 == 0 {
+                    Kernel::Add { n: 32 * (1 + (id as u32 % 3)) }
+                } else {
+                    Kernel::Mul { n: 64 }
+                };
+                let r = req(id, Target::Carus, kernel, Sew::E32);
+                writeln!(stream, "{}", render_request(&r)).expect("send request");
+            }
+            stream.shutdown(std::net::Shutdown::Write).expect("half-close");
+            reader.lines().map(|l| l.expect("read response")).collect()
+        }));
+    }
+    let per_client_lines: Vec<Vec<String>> =
+        clients.into_iter().map(|c| c.join().expect("client thread")).collect();
+    let stats = server.join().expect("server thread").expect("tcp serve");
+
+    // Answered exactly once, globally...
+    assert_eq!(stats.requests, (CLIENTS as u64) * PER_CLIENT);
+    assert_eq!(stats.completed + stats.rejected + stats.errored, stats.requests);
+    assert_eq!(stats.errored, 0, "well-formed requests never error");
+    assert_eq!(stats.rejected, 0, "queue cap 256 holds the whole load");
+    // ...and per connection, in that connection's request order.
+    for (c, lines) in per_client_lines.iter().enumerate() {
+        assert_eq!(lines.len(), PER_CLIENT as usize, "client {c}: {lines:?}");
+        for (i, line) in lines.iter().enumerate() {
+            assert!(
+                line.contains(&format!("\"id\":{},\"status\":\"ok\"", i as u64 + 1)),
+                "client {c} line {i} out of order: {line}"
+            );
+        }
+    }
+}
+
+#[test]
+fn serve_tcp_turns_away_the_connection_past_the_cap_with_a_typed_busy_line() {
+    use std::io::{BufRead, BufReader, Write};
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind ephemeral port");
+    let addr = listener.local_addr().unwrap();
+    let cfg = ServeConfig { tiles: 2, conns: 1, ..Default::default() };
+    let server = std::thread::spawn(move || serve::serve_tcp(&cfg, &listener, Some(2)));
+
+    // Client A takes the only slot and proves it by completing a request.
+    let mut a = std::net::TcpStream::connect(addr).expect("connect A");
+    let mut a_reader = BufReader::new(a.try_clone().expect("clone A"));
+    writeln!(a, "{}", render_request(&req(1, Target::Caesar, Kernel::Add { n: 64 }, Sew::E32)))
+        .expect("A sends");
+    let mut first = String::new();
+    a_reader.read_line(&mut first).expect("A's first response");
+    assert!(first.contains("\"id\":1,\"status\":\"ok\""), "{first}");
+
+    // Client B arrives past the cap: exactly one typed busy line, then EOF.
+    let b = std::net::TcpStream::connect(addr).expect("connect B");
+    let b_lines: Vec<String> =
+        BufReader::new(b).lines().map(|l| l.expect("read B")).collect();
+    assert_eq!(b_lines.len(), 1, "{b_lines:?}");
+    assert!(b_lines[0].contains("\"status\":\"rejected\""), "{b_lines:?}");
+    assert!(b_lines[0].contains("\"reason\":\"busy\""), "{b_lines:?}");
+    assert!(b_lines[0].contains("\"conns\":1"), "{b_lines:?}");
+
+    // A is unaffected and finishes its session normally.
+    writeln!(a, "{}", render_request(&req(2, Target::Caesar, Kernel::Add { n: 64 }, Sew::E32)))
+        .expect("A sends again");
+    a.shutdown(std::net::Shutdown::Write).expect("half-close A");
+    let rest: Vec<String> = a_reader.lines().map(|l| l.expect("read A")).collect();
+    assert_eq!(rest.len(), 1, "{rest:?}");
+    assert!(rest[0].contains("\"id\":2,\"status\":\"ok\""), "{rest:?}");
+
+    let stats = server.join().expect("server thread").expect("tcp serve");
+    assert_eq!(stats.requests, 2);
+    assert_eq!(stats.completed, 2);
+}
+
+#[test]
+fn closed_loop_selftest_is_deterministic_and_answers_every_attempt() {
+    let cfg = ServeConfig::default();
+    let (stats_a, resp_a) = run_closed(&cfg, 11, 96);
+    let (stats_b, resp_b) = run_closed(&cfg, 11, 96);
+    assert_eq!(render_all(&resp_a), render_all(&resp_b), "response bytes");
+    assert_eq!(
+        summary_json(&stats_a, &cfg, "closed", 11),
+        summary_json(&stats_b, &cfg, "closed", 11),
+        "summary bytes"
+    );
+    // Every issued attempt (first try or backoff retry) gets exactly one
+    // terminal response.
+    assert_eq!(stats_a.requests, 96);
+    assert_eq!(stats_a.completed + stats_a.rejected + stats_a.errored, 96);
+    assert_eq!(stats_a.errored, 0, "generated requests are well-formed");
+    assert_eq!(resp_a.len(), 96);
+    // Closed loop: never more outstanding than clients, so queue depth is
+    // bounded by the fleet size.
+    assert!(stats_a.queue_depth_max() as usize <= cfg.conns);
+}
+
+#[test]
+fn closed_loop_clients_back_off_and_retry_after_rejections() {
+    // A one-slot queue under an 8-client fleet guarantees overload: the
+    // rejected clients must come back via the backoff path and the budget
+    // must still be answered exactly once per attempt.
+    let cfg = ServeConfig { tiles: 2, queue_cap: 1, max_batch: 4, conns: 8, ..Default::default() };
+    let (stats, responses) = run_closed(&cfg, 3, 64);
+    assert_eq!(stats.requests, 64);
+    assert_eq!(stats.completed + stats.rejected + stats.errored, 64);
+    assert!(stats.rejected > 0, "one queue slot under 8 clients must overload");
+    assert!(stats.completed > 0, "backoff retries must eventually land");
+    // Retries are new ids: every id 1..=64 answered exactly once.
+    let mut ids: Vec<u64> = responses.iter().map(|r| r.id()).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (1..=64).collect::<Vec<u64>>());
 }
 
 #[test]
