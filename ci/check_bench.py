@@ -20,6 +20,12 @@ Inputs:
                              never compared against the baseline — only
                              the within-run worker-scaling ratio is gated
                              (--min-worker-speedup).
+  --model model.json         `heeperator model --json` output
+                             (heeperator-model-v1): deterministic cycle/DMA
+                             totals of the resident-tensor run and its
+                             forced-staged twin. Folded under the "model"
+                             key of --out; with no --scale/--serve the
+                             resident makespan is the gated aggregate.
   --diff scale-cycle.json    a second scale summary from the *other* timing
                              mode (`--timing cycle`). Every shared point must
                              report identical simulated cycles — the
@@ -52,7 +58,11 @@ Gates (exit 1 on violation):
     requests) or errors, and — when --min-worker-speedup is given — the
     req/s ratio of the highest-worker entry over the workers == 1 entry
     falls below the floor (the worker-pool acceptance bar; within-run,
-    so machine-consistent like --min-sim-speedup).
+    so machine-consistent like --min-sim-speedup);
+  * the --model summary keeps no boundary resident, or the resident run
+    fails to beat its forced-staged twin on aggregate DMA-active cycles
+    (the graph IR's acceptance bar; within-run and deterministic). The
+    resident makespan rides the aggregate-cycles gate vs the baseline.
 
 Baseline arming: simulated cycles are deterministic and machine-
 independent, so the first CI run's BENCH_6.json is a valid baseline for
@@ -191,11 +201,40 @@ def check_live(entries, min_worker_speedup, failures):
         )
 
 
+def check_model(model, failures):
+    """Structural sanity of a model summary + the resident-vs-staged DMA
+    gate. Both runs are deterministic simulated executions of the same
+    schedule, so the comparison is within-run and machine-independent."""
+    if model.get("schema") != "heeperator-model-v1":
+        failures.append(f"model summary has schema {model.get('schema')!r}, "
+                        "expected heeperator-model-v1")
+        return
+    res, sta = model.get("resident", {}), model.get("staged", {})
+    print(f"model: {model.get('graph')} tiles={model.get('tiles')} "
+          f"pipeline={model.get('pipeline')} — resident {res.get('cycles')} cycles / "
+          f"{res.get('dma_active_cycles')} DMA-active, "
+          f"staged {sta.get('cycles')} cycles / {sta.get('dma_active_cycles')} DMA-active")
+    if not res.get("resident_boundaries"):
+        failures.append("model run kept no inter-layer boundary resident in tile SRAM")
+    r_dma, s_dma = res.get("dma_active_cycles"), sta.get("dma_active_cycles")
+    if r_dma is None or s_dma is None:
+        failures.append("model summary lacks resident/staged dma_active_cycles")
+    elif r_dma >= s_dma:
+        failures.append(
+            f"resident policy does not beat staged on DMA-active cycles: "
+            f"{r_dma} >= {s_dma}"
+        )
+    else:
+        print(f"model DMA savings: {s_dma - r_dma} cycles "
+              f"({(s_dma - r_dma) / s_dma:.1%} of the staged baseline)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", default=None)
     ap.add_argument("--serve", default=None)
     ap.add_argument("--live", action="append", default=[])
+    ap.add_argument("--model", default=None)
     ap.add_argument("--diff", default=None)
     ap.add_argument("--bench-lines", default=None)
     ap.add_argument("--baseline", required=True)
@@ -206,11 +245,12 @@ def main():
     ap.add_argument("--min-sim-speedup", type=float, default=None)
     ap.add_argument("--min-worker-speedup", type=float, default=None)
     args = ap.parse_args()
-    if not args.scale and not args.serve:
-        ap.error("at least one of --scale / --serve is required")
+    if not args.scale and not args.serve and not args.model:
+        ap.error("at least one of --scale / --serve / --model is required")
 
     scale = read_json(args.scale) if args.scale else {}
     serve = read_json(args.serve) if args.serve else None
+    model = read_json(args.model) if args.model else None
     reports = list(scale.get("reports", []))
     aggregate = scale.get("aggregate_cycles")
     if aggregate is None:
@@ -219,6 +259,10 @@ def main():
         # Serve-only invocation: the deterministic simulated service
         # window is the aggregate the baseline gate compares.
         aggregate = serve.get("sim_cycles", 0)
+    if not args.scale and serve is None and model is not None:
+        # Model-only invocation: the resident run's deterministic
+        # makespan is the aggregate the baseline gate compares.
+        aggregate = model.get("resident", {}).get("cycles", 0)
 
     for m in read_jsonl(args.bench_lines) if args.bench_lines else []:
         if "median_ns" in m:
@@ -266,6 +310,8 @@ def main():
     live = [read_json(p) for p in args.live]
     if live:
         merged["serve_live"] = live
+    if model is not None:
+        merged["model"] = model
     with open(args.out, "w") as f:
         json.dump(merged, f, indent=2)
         f.write("\n")
@@ -290,6 +336,8 @@ def main():
         check_serve(serve, armed, args.max_latency_regress, failures)
     if live or args.min_worker_speedup is not None:
         check_live(live, args.min_worker_speedup, failures)
+    if model is not None:
+        check_model(model, failures)
     base_cycles = None if baseline is None else baseline.get("aggregate_cycles")
     if baseline is None or baseline.get("bootstrap") or not base_cycles:
         print("no armed baseline: recording only (the workflow caches this run's "

@@ -1,0 +1,263 @@
+"""Pure-Python mirror of the Rust graph IR (`rust/src/graph/mod.rs`).
+
+A model defined here — a linear chain of the benchmark kernels at one
+element width, e.g. ``matmul:p=32,add,relu,maxpool`` — compiles to the
+*same schedule* as the Rust side: parse rules, shape inference, the
+NM-Carus staging envelope, and the resident-vs-staged boundary decision
+are all replicated, and :meth:`Schedule.render` is byte-identical to
+``Schedule::render``. The shared fixture ``ci/golden/model_schedule.txt``
+locks the parity in both test suites.
+
+No third-party imports on purpose: the mirror is the portable spec of
+the schedule, not a numerical library.
+"""
+
+from collections import namedtuple
+
+#: NM-Carus logical register width (bytes) — `carus::REG_BYTES`.
+REG_BYTES = 1024
+
+#: Families whose only free dimension is ``n``.
+_N_FAMILIES = ("xor", "add", "mul", "relu", "leakyrelu", "maxpool")
+
+_ALIASES = {"conv": "conv2d", "leaky-relu": "leakyrelu", "leaky_relu": "leakyrelu"}
+
+#: Kernel shape: family slug plus the (n, p, f) tuple, zeros for
+#: dimensions the family does not use — mirrors `spec::shape_of`.
+Kernel = namedtuple("Kernel", ["family", "n", "p", "f"])
+
+Layer = namedtuple("Layer", ["kernel", "boundary", "tile", "elems_in", "elems_out"])
+
+
+class GraphError(ValueError):
+    """Graph spec or lowering error, attributed to a layer index."""
+
+
+def paper_default(family, sew):
+    """The paper's Table V shape for ``(NM-Carus, sew)`` —
+    `Kernel::paper_default` with ``small = false``."""
+    sb = sew // 8
+    if family in ("xor", "add", "mul"):
+        return Kernel(family, 10 * 1024 // 2 // sb, 0, 0)
+    if family in ("matmul", "gemm"):
+        return Kernel(family, 0, {32: 256, 16: 512, 8: 1024}[sew], 0)
+    if family == "conv2d":
+        return Kernel(family, {32: 256, 16: 512, 8: 1024}[sew], 0, 3)
+    if family in ("relu", "leakyrelu"):
+        return Kernel(family, 16 * 1024 // sb, 0, 0)
+    assert family == "maxpool"
+    return Kernel(family, 16 * 1024 // 16 // sb, 0, 0)
+
+
+def with_shape(family, sew, n=None, p=None, f=None):
+    """Fill unspecified free dimensions from the paper default."""
+    d = paper_default(family, sew)
+    if family in _N_FAMILIES:
+        return d._replace(n=d.n if n is None else n)
+    if family in ("matmul", "gemm"):
+        return d._replace(p=d.p if p is None else p)
+    return d._replace(n=d.n if n is None else n, f=d.f if f is None else f)
+
+
+def in_elems(k):
+    """Elements of the activation operand a kernel consumes."""
+    if k.family in ("matmul", "gemm"):
+        return 64
+    if k.family == "conv2d":
+        return 8 * k.n
+    if k.family == "maxpool":
+        return 16 * k.n
+    return k.n
+
+
+def out_elems(k):
+    """Elements of the output tensor a kernel produces."""
+    if k.family in ("matmul", "gemm"):
+        return 8 * k.p
+    if k.family == "conv2d":
+        return (8 - k.f + 1) * (k.n - k.f + 1)
+    if k.family == "maxpool":
+        return 8 * (k.n // 2)
+    return k.n
+
+
+def output_chunks(k, sew):
+    """(offset, length) byte spans of the valid output in the tile
+    window — `carus::output_chunks`. One chunk ⇒ the consumer can take
+    it resident; several ⇒ host-staged repack."""
+    sb = sew // 8
+    if k.family in ("xor", "add", "mul"):
+        return [(20 * REG_BYTES, k.n * sb)]
+    if k.family in ("relu", "leakyrelu"):
+        return [(0, k.n * sb)]
+    if k.family in ("matmul", "gemm"):
+        return [(8 * k.p * sb, 8 * k.p * sb)]
+    if k.family == "conv2d":
+        rb = k.n * sb
+        return [(8 * rb + r * rb, (k.n - k.f + 1) * sb) for r in range(8 - k.f + 1)]
+    rb = k.n * sb
+    return [(r * rb, (k.n // 2) * sb) for r in range(8)]
+
+
+def validate(k, sew):
+    """NM-Carus staging envelope — `Kernel::validate(Target::Carus)`.
+    Raises ``GraphError`` on an impossible shape."""
+    sb = sew // 8
+    if k.family in ("xor", "add", "mul"):
+        if k.n == 0 or (k.n * sb) % 4 != 0 or k.n * sb > 10 * 1024:
+            raise GraphError(f"n = {k.n} out of NM-Carus range at {sew} bit")
+    elif k.family in ("relu", "leakyrelu"):
+        if k.n == 0 or (k.n * sb) % 4 != 0 or k.n * sb > 16 * 1024:
+            raise GraphError(f"n = {k.n} out of NM-Carus range at {sew} bit")
+    elif k.family in ("matmul", "gemm"):
+        if k.p < 8 or (k.p * sb) % 4 != 0 or k.p * sb > REG_BYTES:
+            raise GraphError(f"p = {k.p} out of NM-Carus range (8 <= p, p*sew <= 1024 B)")
+    elif k.family == "conv2d":
+        if k.n == 0 or k.f == 0 or k.f > 8 or k.f > k.n or k.n * sb > REG_BYTES:
+            raise GraphError(f"conv2d shape n = {k.n}, f = {k.f} out of NM-Carus range")
+    else:
+        if k.n == 0 or k.n % 2 != 0 or (k.n * sb) % 4 != 0 or k.n * sb > REG_BYTES:
+            raise GraphError(f"n = {k.n} must be positive, even, and word-aligned")
+
+
+class Graph:
+    """A validated linear kernel chain at one element width."""
+
+    def __init__(self, layers, sew, seed):
+        self.layers = layers
+        self.sew = sew
+        self.seed = seed
+
+    @classmethod
+    def parse(cls, spec, sew=8, seed=1):
+        """Parse a graph spec — `Graph::parse`. Comma-separated layer
+        clauses, each a family name plus optional ``:dim=value`` pairs;
+        the entry layer falls back to Table V, later layers infer their
+        shape from the producer."""
+        if sew not in (8, 16, 32):
+            raise GraphError(f"unknown sew {sew}")
+        clauses = [c.strip() for c in spec.split(",")]
+        if all(not c for c in clauses):
+            raise GraphError("empty graph")
+        layers = []
+        for layer, clause in enumerate(clauses):
+            fields = clause.split(":")
+            name = fields[0].strip().lower()
+            family = _ALIASES.get(name, name)
+            if family not in _N_FAMILIES + ("matmul", "gemm", "conv2d"):
+                raise GraphError(f"layer {layer}: unknown kernel `{name}`")
+            dims = {}
+            for kv in fields[1:]:
+                key, sep, val = kv.partition("=")
+                if not sep:
+                    raise GraphError(f"layer {layer}: expected dim=value, got `{kv}`")
+                key = key.strip()
+                if key not in ("n", "p", "f"):
+                    raise GraphError(f"layer {layer}: unknown dimension `{key}` (n, p, f)")
+                try:
+                    dims[key] = int(val.strip())
+                except ValueError:
+                    raise GraphError(f"layer {layer}: bad value in `{kv}`") from None
+            if layer == 0:
+                kernel = with_shape(family, sew, **dims)
+            else:
+                if family in ("matmul", "gemm", "conv2d"):
+                    raise GraphError(
+                        f"layer {layer}: {family} transforms its operands host-side "
+                        "and is only legal as the entry layer"
+                    )
+                if "p" in dims or "f" in dims:
+                    raise GraphError(f"layer {layer}: only the entry layer takes p/f")
+                elems = out_elems(layers[layer - 1])
+                if family == "maxpool":
+                    if elems % 16 != 0:
+                        raise GraphError(
+                            f"layer {layer}: maxpool needs a 16-row input, got {elems}"
+                        )
+                    inferred = elems // 16
+                else:
+                    inferred = elems
+                if dims.get("n", inferred) != inferred:
+                    raise GraphError(
+                        f"layer {layer}: explicit n={dims['n']} contradicts "
+                        f"the inferred shape n={inferred}"
+                    )
+                kernel = Kernel(family, inferred, 0, 0)
+            try:
+                validate(kernel, sew)
+            except GraphError as e:
+                raise GraphError(f"layer {layer}: invalid shape: {e}") from None
+            layers.append(kernel)
+        return cls(layers, sew, seed)
+
+    def spec_string(self):
+        """Canonical spec string (round-trips through :meth:`parse`)."""
+        clauses = []
+        for i, k in enumerate(self.layers):
+            s = k.family
+            if i == 0:
+                for key, v in (("n", k.n), ("p", k.p), ("f", k.f)):
+                    if v != 0:
+                        s += f":{key}={v}"
+            clauses.append(s)
+        return ",".join(clauses)
+
+    def input_elems(self):
+        return in_elems(self.layers[0])
+
+    def output_elems(self):
+        return out_elems(self.layers[-1])
+
+
+class Schedule(namedtuple("Schedule", ["graph", "tiles", "pipeline", "layers"])):
+    """A graph lowered onto a tile configuration."""
+
+    def render(self):
+        """Canonical textual rendering — byte-identical to the Rust
+        ``Schedule::render`` and locked by ``ci/golden/model_schedule.txt``."""
+        s = "# heeperator model schedule v1\n"
+        s += (
+            f"graph {self.graph.spec_string()} sew={self.graph.sew} "
+            f"tiles={self.tiles} pipeline={self.pipeline}\n"
+        )
+        for i, l in enumerate(self.layers):
+            k = l.kernel
+            tile = "item" if l.tile is None else str(l.tile)
+            s += (
+                f"layer {i} {k.family} n={k.n} p={k.p} f={k.f} tile={tile} "
+                f"in={l.boundary} elems_in={l.elems_in} elems_out={l.elems_out}\n"
+            )
+        return s
+
+    def boundary_counts(self):
+        """(resident, staged) inter-layer boundary counts."""
+        resident = sum(1 for l in self.layers if l.boundary == "resident")
+        staged = sum(1 for l in self.layers if l.boundary == "staged")
+        return resident, staged
+
+
+def compile(graph, tiles, pipeline):
+    """Lower a graph onto ``tiles`` NM-Carus tiles — `graph::compile`.
+    ``pipeline`` is ``"layer"`` or ``"batch"``."""
+    assert tiles >= 1, "need at least one tile"
+    assert pipeline in ("layer", "batch"), pipeline
+    layers = []
+    for layer, kernel in enumerate(graph.layers):
+        for off, length in output_chunks(kernel, graph.sew):
+            if off % 4 != 0 or length % 4 != 0 or length == 0:
+                raise GraphError(
+                    f"layer {layer}: output chunk ({off}, {length}) is not word-aligned"
+                )
+        if layer == 0:
+            boundary = "entry"
+        elif len(output_chunks(graph.layers[layer - 1], graph.sew)) == 1:
+            boundary = "resident"
+        else:
+            boundary = "staged"
+        tile = layer % tiles if pipeline == "layer" else None
+        layers.append(Layer(kernel, boundary, tile, in_elems(kernel), out_elems(kernel)))
+    return Schedule(graph, tiles, pipeline, layers)
+
+
+#: The canonical demo chain — `graph::CANONICAL`.
+CANONICAL = "matmul:p=32,add,relu,maxpool"

@@ -1,0 +1,79 @@
+"""Cross-language parity for the graph IR: the pure-Python mirror in
+`compile/graph.py` must compile a Python-defined model to the byte-exact
+schedule the Rust side produces (`rust/src/graph/mod.rs`), locked by the
+shared fixture `ci/golden/model_schedule.txt`."""
+
+from pathlib import Path
+
+import pytest
+
+from compile import graph
+
+FIXTURE = Path(__file__).resolve().parents[2] / "ci" / "golden" / "model_schedule.txt"
+
+
+def test_schedule_render_matches_rust_fixture_byte_for_byte():
+    g = graph.Graph.parse(graph.CANONICAL, sew=8, seed=7)
+    sch = graph.compile(g, tiles=2, pipeline="layer")
+    assert sch.render() == FIXTURE.read_text()
+
+
+def test_parse_infers_shapes_like_rust():
+    g = graph.Graph.parse(graph.CANONICAL, sew=8, seed=7)
+    assert g.layers == [
+        graph.Kernel("matmul", 0, 32, 0),
+        graph.Kernel("add", 256, 0, 0),
+        graph.Kernel("relu", 256, 0, 0),
+        graph.Kernel("maxpool", 16, 0, 0),
+    ]
+    assert g.input_elems() == 64
+    assert g.output_elems() == 64
+    # The canonical spec string round-trips.
+    assert graph.Graph.parse(g.spec_string(), sew=8).layers == g.layers
+
+
+def test_entry_layer_falls_back_to_paper_defaults():
+    g = graph.Graph.parse("matmul", sew=8)
+    assert g.layers[0].p == 1024
+    g = graph.Graph.parse("relu", sew=16)
+    assert g.layers[0].n == 8192
+
+
+def test_parse_rejects_like_rust():
+    with pytest.raises(graph.GraphError, match="empty graph"):
+        graph.Graph.parse("", sew=8)
+    with pytest.raises(graph.GraphError, match="unknown kernel"):
+        graph.Graph.parse("blur", sew=8)
+    with pytest.raises(graph.GraphError, match="entry layer"):
+        graph.Graph.parse("relu:n=256,matmul:p=8", sew=8)
+    with pytest.raises(graph.GraphError, match="n=100 contradicts the inferred shape n=256"):
+        graph.Graph.parse("matmul:p=32,add:n=100", sew=8)
+    with pytest.raises(graph.GraphError, match="16-row input, got 24"):
+        graph.Graph.parse("relu:n=24,maxpool", sew=8)
+    with pytest.raises(graph.GraphError, match="invalid shape"):
+        graph.Graph.parse("add:n=6", sew=8)
+
+
+def test_compile_assigns_boundaries_and_tiles_like_rust():
+    g = graph.Graph.parse(graph.CANONICAL, sew=8, seed=7)
+    sch = graph.compile(g, tiles=2, pipeline="layer")
+    assert [l.boundary for l in sch.layers] == ["entry", "resident", "resident", "resident"]
+    assert [l.tile for l in sch.layers] == [0, 1, 0, 1]
+    assert sch.boundary_counts() == (3, 0)
+
+    sch = graph.compile(g, tiles=2, pipeline="batch")
+    assert all(l.tile is None for l in sch.layers)
+    assert "tile=item" in sch.render()
+
+    # A maxpool producer forces the staged fallback for its consumer.
+    g = graph.Graph.parse("matmul:p=32,maxpool,relu", sew=8, seed=7)
+    sch = graph.compile(g, tiles=2, pipeline="layer")
+    assert sch.layers[2].boundary == "staged"
+    assert sch.boundary_counts() == (1, 1)
+
+
+def test_compile_rejects_unaligned_chunks_like_rust():
+    # maxpool n=12 at 8 bit: the valid half-row prefix (6 B) cannot DMA.
+    g = graph.Graph.parse("maxpool:n=12", sew=8)
+    with pytest.raises(graph.GraphError, match=r"chunk \(0, 6\) is not word-aligned"):
+        graph.compile(g, tiles=1, pipeline="layer")

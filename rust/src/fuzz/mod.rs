@@ -29,8 +29,11 @@ use crate::caesar::isa as cisa;
 use crate::clock::{self, TimingMode};
 use crate::energy::{Activity, Breakdown};
 use crate::isa::{xcv, xvnmc};
-use crate::kernels::{self, engine, golden, Family, Kernel, RunResult, Target};
+use crate::kernels::{self, engine, golden, Kernel, RunResult, Target};
 use crate::sched::{self, BatchRunResult, BatchSpec};
+use crate::spec::{
+    json_bool, json_escape, json_list, json_u32_list, json_u64, schemas, JobSpec, JsonSpecOptions,
+};
 use gen::Rng;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -646,93 +649,32 @@ fn shrunk_kernels(k: Kernel) -> Vec<Kernel> {
 // Repro files
 // ---------------------------------------------------------------------------
 
-/// Schema tag of the repro JSON format.
-pub const REPRO_SCHEMA: &str = "heeperator-fuzz-repro-v1";
-
-pub(crate) fn family_slug(f: Family) -> &'static str {
-    match f {
-        Family::Xor => "xor",
-        Family::Add => "add",
-        Family::Mul => "mul",
-        Family::Matmul => "matmul",
-        Family::Gemm => "gemm",
-        Family::Conv2d => "conv2d",
-        Family::Relu => "relu",
-        Family::LeakyRelu => "leakyrelu",
-        Family::Maxpool => "maxpool",
-    }
-}
-
-pub(crate) fn target_slug(t: Target) -> &'static str {
-    match t {
-        Target::Cpu => "cpu",
-        Target::Caesar => "caesar",
-        Target::Carus => "carus",
-    }
-}
-
-/// Exact kernel reconstruction from (family, dims) — the inverse of
-/// [`shape_of`]. Unlike `Kernel::with_shape` this never falls back to
-/// paper defaults: a repro file reproduces *exactly* the failing shape.
-pub fn kernel_from(family: Family, n: u32, p: u32, f: u32) -> Kernel {
-    match family {
-        Family::Xor => Kernel::Xor { n },
-        Family::Add => Kernel::Add { n },
-        Family::Mul => Kernel::Mul { n },
-        Family::Matmul => Kernel::Matmul { p },
-        Family::Gemm => Kernel::Gemm { p },
-        Family::Conv2d => Kernel::Conv2d { n, f },
-        Family::Relu => Kernel::Relu { n },
-        Family::LeakyRelu => Kernel::LeakyRelu { n },
-        Family::Maxpool => Kernel::Maxpool { n },
-    }
-}
-
-/// `(n, p, f)` of a kernel, zeros for unused dims.
-pub fn shape_of(k: Kernel) -> (u32, u32, u32) {
-    match k {
-        Kernel::Xor { n } | Kernel::Add { n } | Kernel::Mul { n } | Kernel::Relu { n } | Kernel::LeakyRelu { n } | Kernel::Maxpool { n } => (n, 0, 0),
-        Kernel::Matmul { p } | Kernel::Gemm { p } => (0, p, 0),
-        Kernel::Conv2d { n, f } => (n, 0, f),
-    }
-}
-
-pub(crate) fn json_escape(s: &str) -> String {
-    let mut out = String::with_capacity(s.len());
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\t' => out.push_str("\\t"),
-            '\r' => out.push_str("\\r"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out
-}
-
-fn json_list(xs: &[u32]) -> String {
-    let items: Vec<String> = xs.iter().map(u32::to_string).collect();
-    format!("[{}]", items.join(","))
-}
+// The job-spec vocabulary (wire slugs, exact-shape kernel reconstruction,
+// flat-JSON field helpers) lives in [`crate::spec`] since the repro format
+// became one of its surfaces; re-exported because the helpers debuted here
+// and callers still reach for `fuzz::kernel_from` & co.
+pub use crate::spec::schemas::FUZZ_REPRO as REPRO_SCHEMA;
+pub use crate::spec::{kernel_from, shape_of};
 
 /// Serialize a failing case to the replayable repro format. `divergence`
-/// is informational — replay recomputes it from the case.
+/// is informational — replay recomputes it from the case. The
+/// `(target, family, sew, n, p, f, spec_seed)` block is rendered by
+/// [`JobSpec::render_json`] — the one spec serializer.
 pub fn to_json(case: &FuzzCase, divergence: &str) -> String {
-    let (n, p, f) = shape_of(case.spec.kernel);
+    let spec = JobSpec {
+        target: case.spec.target,
+        kernel: case.spec.kernel,
+        sew: case.spec.sew,
+        seed: case.spec.seed,
+    };
     format!(
-        "{{\n  \"schema\": \"{REPRO_SCHEMA}\",\n  \"seed\": {},\n  \"max_insns\": {},\n  \"xvnmc_keep\": {},\n  \"xcv_keep\": {},\n  \"caesar_keep\": {},\n  \"target\": \"{}\",\n  \"family\": \"{}\",\n  \"sew\": {},\n  \"n\": {n},\n  \"p\": {p},\n  \"f\": {f},\n  \"spec_seed\": {},\n  \"batch\": {},\n  \"shard\": {},\n  \"tiles\": {},\n  \"divergence\": \"{}\"\n}}\n",
+        "{{\n  \"schema\": \"{REPRO_SCHEMA}\",\n  \"seed\": {},\n  \"max_insns\": {},\n  \"xvnmc_keep\": {},\n  \"xcv_keep\": {},\n  \"caesar_keep\": {},\n  {},\n  \"batch\": {},\n  \"shard\": {},\n  \"tiles\": {},\n  \"divergence\": \"{}\"\n}}\n",
         case.seed,
         case.max_insns,
         json_list(&case.xvnmc_keep),
         json_list(&case.xcv_keep),
         json_list(&case.caesar_keep),
-        target_slug(case.spec.target),
-        family_slug(case.spec.kernel.family()),
-        case.spec.sew.bits(),
-        case.spec.seed,
+        spec.render_json("\n  ", "spec_seed"),
         case.spec.batch,
         case.spec.shard,
         case.tiles,
@@ -740,76 +682,14 @@ pub fn to_json(case: &FuzzCase, divergence: &str) -> String {
     )
 }
 
-// -- Hand-rolled extraction (the repo is std-only: no serde) ---------------
-
-pub(crate) fn json_raw<'a>(s: &'a str, key: &str) -> Result<&'a str, String> {
-    let pat = format!("\"{key}\"");
-    let at = s.find(&pat).ok_or_else(|| format!("missing key {key:?}"))?;
-    let rest = &s[at + pat.len()..];
-    let rest = rest.trim_start();
-    let rest = rest.strip_prefix(':').ok_or_else(|| format!("malformed value for {key:?}"))?;
-    Ok(rest.trim_start())
-}
-
-pub(crate) fn json_u64(s: &str, key: &str) -> Result<u64, String> {
-    let raw = json_raw(s, key)?;
-    let end = raw.find(|c: char| !c.is_ascii_digit()).unwrap_or(raw.len());
-    raw[..end].parse::<u64>().map_err(|_| format!("{key:?} is not a number"))
-}
-
-pub(crate) fn json_str<'a>(s: &'a str, key: &str) -> Result<&'a str, String> {
-    let raw = json_raw(s, key)?;
-    let raw = raw.strip_prefix('"').ok_or_else(|| format!("{key:?} is not a string"))?;
-    let end = raw.find('"').ok_or_else(|| format!("unterminated string for {key:?}"))?;
-    Ok(&raw[..end])
-}
-
-fn json_bool(s: &str, key: &str) -> Result<bool, String> {
-    let raw = json_raw(s, key)?;
-    if raw.starts_with("true") {
-        Ok(true)
-    } else if raw.starts_with("false") {
-        Ok(false)
-    } else {
-        Err(format!("{key:?} is not a bool"))
-    }
-}
-
-fn json_u32_list(s: &str, key: &str) -> Result<Vec<u32>, String> {
-    let raw = json_raw(s, key)?;
-    let raw = raw.strip_prefix('[').ok_or_else(|| format!("{key:?} is not a list"))?;
-    let end = raw.find(']').ok_or_else(|| format!("unterminated list for {key:?}"))?;
-    let body = raw[..end].trim();
-    if body.is_empty() {
-        return Ok(Vec::new());
-    }
-    body.split(',')
-        .map(|x| x.trim().parse::<u32>().map_err(|_| format!("bad element in {key:?}")))
-        .collect()
-}
-
-/// Parse a repro file back into the exact case it serialized.
+/// Parse a repro file back into the exact case it serialized. A wrong or
+/// missing `schema` tag is a typed rejection up front
+/// ([`crate::spec::SpecError::Schema`]) — never best-effort parsing of a
+/// different format version.
 pub fn from_json(s: &str) -> Result<FuzzCase, String> {
-    let schema = json_str(s, "schema")?;
-    if schema != REPRO_SCHEMA {
-        return Err(format!("unknown repro schema {schema:?} (expected {REPRO_SCHEMA:?})"));
-    }
-    let target = Target::parse(json_str(s, "target")?)
-        .ok_or_else(|| "unknown target".to_string())?;
-    let family = Family::parse(json_str(s, "family")?)
-        .ok_or_else(|| "unknown family".to_string())?;
-    let sew = match json_u64(s, "sew")? {
-        8 => crate::isa::Sew::E8,
-        16 => crate::isa::Sew::E16,
-        32 => crate::isa::Sew::E32,
-        b => return Err(format!("unknown sew {b}")),
-    };
-    let kernel = kernel_from(
-        family,
-        json_u64(s, "n")? as u32,
-        json_u64(s, "p")? as u32,
-        json_u64(s, "f")? as u32,
-    );
+    schemas::check(s, schemas::FUZZ_REPRO, true).map_err(|e| e.to_string())?;
+    let opt = JsonSpecOptions { seed_key: "spec_seed", default_seed: None, require_dims: true };
+    let spec = JobSpec::parse_json(s, &opt).map_err(|e| e.to_string())?;
     Ok(FuzzCase {
         seed: json_u64(s, "seed")?,
         max_insns: json_u64(s, "max_insns")? as u32,
@@ -817,10 +697,10 @@ pub fn from_json(s: &str) -> Result<FuzzCase, String> {
         xcv_keep: json_u32_list(s, "xcv_keep")?,
         caesar_keep: json_u32_list(s, "caesar_keep")?,
         spec: BatchSpec {
-            target,
-            kernel,
-            sew,
-            seed: json_u64(s, "spec_seed")?,
+            target: spec.target,
+            kernel: spec.kernel,
+            sew: spec.sew,
+            seed: spec.seed,
             batch: json_u64(s, "batch")? as u32,
             shard: json_bool(s, "shard")?,
         },

@@ -1,0 +1,580 @@
+//! Linear graph IR for multi-layer INT8 inference on NM-Carus tiles.
+//!
+//! A [`Graph`] is a chain of the existing benchmark kernels — e.g.
+//! `matmul:p=32,add,relu,maxpool` — executed at one element width with a
+//! quantize/dequantize boundary: wide sensor values are scaled and
+//! saturated to the graph SEW on entry ([`quantize`]), flow through the
+//! chain in fixed point, and leave sign-extended ([`dequantize`]). This is
+//! the integer-NPU convention (cf. the EdgeNPU lowering mirrored in
+//! `python/compile/`): all inter-layer tensors are narrow integers, which
+//! is what makes keeping them *resident in tile SRAM* between layers
+//! worthwhile.
+//!
+//! [`compile`] lowers a graph to a [`Schedule`]: per-layer tile
+//! assignment under a [`Pipeline`] mode plus the inter-layer
+//! [`Boundary`] decision —
+//!
+//! - [`Boundary::Resident`]: the producer's output is one contiguous,
+//!   word-aligned span in its tile window, so the consumer's activation
+//!   arrives via a single tile-to-tile DMA (or no DMA at all when source
+//!   and destination coincide), never touching host RAM.
+//! - [`Boundary::Staged`]: the producer's output interleaves valid
+//!   per-row prefixes with stale bytes (maxpool, conv2d), so the chunks
+//!   are repacked through the host staging pool — the fallback path the
+//!   cycle report quantifies against.
+//!
+//! The schedule is deterministic arithmetic over the layer shapes — no
+//! RNG — and [`Schedule::render`] is byte-mirrored by
+//! `python/compile/graph.py` against `ci/golden/model_schedule.txt`, so a
+//! model defined in Python provably compiles to the same schedule. The
+//! executor lives in [`crate::sched::pipeline`]; the CPU-golden
+//! reference semantics ([`Graph::golden_item`]) reuse
+//! [`golden::compute`] layer by layer.
+
+use crate::isa::Sew;
+use crate::kernels::carus::output_chunks;
+use crate::kernels::{golden, Family, Kernel, Target};
+use crate::spec::{family_slug, shape_of};
+
+/// Typed graph-layer error: everything that can be wrong with a graph
+/// spec or its lowering, attributed to a layer index.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GraphError {
+    /// The spec names no layers.
+    Empty,
+    /// A layer clause does not parse.
+    Parse { layer: usize, reason: String },
+    /// Operand-transforming kernels (matmul/gemm/conv2d) need host-side
+    /// input packing, so they are only legal as the entry layer.
+    MidChainTransform { layer: usize, family: Family },
+    /// An explicit `n=` contradicts the shape inferred from the producer.
+    ShapeMismatch { layer: usize, given: u32, inferred: u32 },
+    /// A maxpool consumer needs its input to factor into 16 rows.
+    NotPoolable { layer: usize, elems: u32 },
+    /// The shape fails the NM-Carus staging envelope.
+    InvalidShape { layer: usize, reason: String },
+    /// An output chunk is not word-aligned, so no DMA can move it.
+    Unaligned { layer: usize, off: u32, len: u32 },
+}
+
+impl std::fmt::Display for GraphError {
+    fn fmt(&self, fm: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GraphError::Empty => write!(fm, "empty graph"),
+            GraphError::Parse { layer, reason } => write!(fm, "layer {layer}: {reason}"),
+            GraphError::MidChainTransform { layer, family } => write!(
+                fm,
+                "layer {layer}: {} transforms its operands host-side and is only legal as \
+                 the entry layer",
+                family_slug(*family)
+            ),
+            GraphError::ShapeMismatch { layer, given, inferred } => write!(
+                fm,
+                "layer {layer}: explicit n={given} contradicts the inferred shape n={inferred}"
+            ),
+            GraphError::NotPoolable { layer, elems } => write!(
+                fm,
+                "layer {layer}: maxpool needs a 16-row input, got {elems} elements"
+            ),
+            GraphError::InvalidShape { layer, reason } => {
+                write!(fm, "layer {layer}: invalid shape: {reason}")
+            }
+            GraphError::Unaligned { layer, off, len } => write!(
+                fm,
+                "layer {layer}: output chunk ({off}, {len}) is not word-aligned"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
+
+/// A validated linear kernel chain at one element width.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Graph {
+    /// The layers, entry first; shapes fully resolved.
+    pub layers: Vec<Kernel>,
+    /// Element width of every inter-layer tensor.
+    pub sew: Sew,
+    /// Base seed for inputs and per-layer weights.
+    pub seed: u64,
+}
+
+/// Elements of the activation operand a kernel consumes.
+pub fn in_elems(kernel: Kernel) -> u32 {
+    match kernel {
+        Kernel::Xor { n } | Kernel::Add { n } | Kernel::Mul { n } => n,
+        Kernel::Relu { n } | Kernel::LeakyRelu { n } => n,
+        Kernel::Matmul { .. } | Kernel::Gemm { .. } => 64,
+        Kernel::Conv2d { n, .. } => 8 * n,
+        Kernel::Maxpool { n } => 16 * n,
+    }
+}
+
+/// Elements of the output tensor a kernel produces.
+pub fn out_elems(kernel: Kernel) -> u32 {
+    match kernel {
+        Kernel::Xor { n } | Kernel::Add { n } | Kernel::Mul { n } => n,
+        Kernel::Relu { n } | Kernel::LeakyRelu { n } => n,
+        Kernel::Matmul { p } | Kernel::Gemm { p } => 8 * p,
+        Kernel::Conv2d { n, f } => (8 - f + 1) * (n - f + 1),
+        Kernel::Maxpool { n } => 8 * (n / 2),
+    }
+}
+
+/// Quantize one wide (int32-range) value to the graph SEW: scale by the
+/// width difference, then saturate — the EdgeNPU-style entry boundary.
+pub fn quantize(v: i64, sew: Sew) -> i64 {
+    let scaled = v >> (32 - sew.bits());
+    let hi = (1i64 << (sew.bits() - 1)) - 1;
+    scaled.clamp(-hi - 1, hi)
+}
+
+/// Dequantize one output element: the chain's fixed-point value,
+/// sign-extended back to the host's integer width.
+pub fn dequantize(v: i64) -> i32 {
+    v as i32
+}
+
+const ITEM_SALT: u64 = 0x9e37_79b9_7f4a_7c15;
+const LAYER_SALT: u64 = 0xc2b2_ae3d_27d4_eb4f;
+
+impl Graph {
+    /// Parse a graph spec: comma-separated layer clauses, each a family
+    /// name optionally followed by `:`-separated `dim=value` pairs
+    /// (`matmul:p=32,add,relu,maxpool`). The entry layer falls back to
+    /// the paper's Table V shape for dimensions not given; every later
+    /// layer's shape is inferred from its producer.
+    pub fn parse(spec: &str, sew: Sew, seed: u64) -> Result<Graph, GraphError> {
+        let mut layers: Vec<Kernel> = Vec::new();
+        let clauses: Vec<&str> = spec.split(',').map(str::trim).collect();
+        if clauses.iter().all(|c| c.is_empty()) {
+            return Err(GraphError::Empty);
+        }
+        for (layer, clause) in clauses.iter().enumerate() {
+            let mut fields = clause.split(':');
+            let name = fields.next().unwrap_or("").trim();
+            let family = Family::parse(name).ok_or_else(|| GraphError::Parse {
+                layer,
+                reason: format!("unknown kernel `{name}`"),
+            })?;
+            let (mut n, mut p, mut f) = (None, None, None);
+            for kv in fields {
+                let (k, v) = kv.split_once('=').ok_or_else(|| GraphError::Parse {
+                    layer,
+                    reason: format!("expected dim=value, got `{kv}`"),
+                })?;
+                let v: u32 = v.trim().parse().map_err(|_| GraphError::Parse {
+                    layer,
+                    reason: format!("bad value in `{kv}`"),
+                })?;
+                match k.trim() {
+                    "n" => n = Some(v),
+                    "p" => p = Some(v),
+                    "f" => f = Some(v),
+                    other => {
+                        return Err(GraphError::Parse {
+                            layer,
+                            reason: format!("unknown dimension `{other}` (n, p, f)"),
+                        })
+                    }
+                }
+            }
+            let kernel = if layer == 0 {
+                Kernel::with_shape(family, Target::Carus, sew, n, p, f)
+            } else {
+                // Mid-chain layers consume the producer's activation in
+                // place (tile offset 0); kernels that need transformed
+                // operand images cannot.
+                if matches!(family, Family::Matmul | Family::Gemm | Family::Conv2d) {
+                    return Err(GraphError::MidChainTransform { layer, family });
+                }
+                if p.is_some() || f.is_some() {
+                    return Err(GraphError::Parse {
+                        layer,
+                        reason: "only the entry layer takes p/f dimensions".into(),
+                    });
+                }
+                let elems = out_elems(layers[layer - 1]);
+                let inferred = if family == Family::Maxpool {
+                    if elems % 16 != 0 {
+                        return Err(GraphError::NotPoolable { layer, elems });
+                    }
+                    elems / 16
+                } else {
+                    elems
+                };
+                if let Some(given) = n {
+                    if given != inferred {
+                        return Err(GraphError::ShapeMismatch { layer, given, inferred });
+                    }
+                }
+                crate::spec::kernel_from(family, inferred, 0, 0)
+            };
+            kernel
+                .validate(Target::Carus, sew)
+                .map_err(|reason| GraphError::InvalidShape { layer, reason })?;
+            layers.push(kernel);
+        }
+        Ok(Graph { layers, sew, seed })
+    }
+
+    /// Canonical spec string (round-trips through [`Graph::parse`]).
+    pub fn spec_string(&self) -> String {
+        let clauses: Vec<String> = self
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, &k)| {
+                let slug = family_slug(k.family());
+                if i > 0 {
+                    return slug.to_string(); // inferred shapes stay implicit
+                }
+                let (n, p, f) = shape_of(k);
+                let mut s = slug.to_string();
+                for (key, v) in [("n", n), ("p", p), ("f", f)] {
+                    if v != 0 {
+                        s.push_str(&format!(":{key}={v}"));
+                    }
+                }
+                s
+            })
+            .collect();
+        clauses.join(",")
+    }
+
+    /// Elements the graph consumes / produces per item.
+    pub fn input_elems(&self) -> u32 {
+        in_elems(self.layers[0])
+    }
+    pub fn output_elems(&self) -> u32 {
+        out_elems(*self.layers.last().unwrap())
+    }
+
+    fn item_seed(&self, item: u32) -> u64 {
+        self.seed ^ ITEM_SALT.wrapping_mul(item as u64 + 1)
+    }
+
+    fn layer_seed(&self, layer: usize) -> u64 {
+        self.seed ^ LAYER_SALT.wrapping_mul(layer as u64 + 1)
+    }
+
+    /// One item's quantized entry activation: wide sensor draws pushed
+    /// through [`quantize`].
+    pub fn item_input(&self, item: u32) -> Vec<i64> {
+        let mut rng = golden::Rng(self.item_seed(item));
+        (0..self.input_elems()).map(|_| quantize(rng.elem(Sew::E32), self.sew)).collect()
+    }
+
+    /// A layer's weight operands `(b, c)` — shared by every batch item,
+    /// derived from the layer seed through the same generator the
+    /// single-kernel golden path uses.
+    pub fn layer_operands(&self, layer: usize) -> (Vec<i64>, Vec<i64>) {
+        let d = golden::generate(self.layers[layer], self.sew, self.layer_seed(layer));
+        (golden::unpack(&d.b, self.sew), golden::unpack(&d.c, self.sew))
+    }
+
+    /// The CPU-golden reference execution of one item: per-layer
+    /// [`golden::WorkloadData`] where `a` is the incoming activation,
+    /// `b`/`c` the layer weights, and `expect` the layer output — each
+    /// layer's `expect` feeding the next layer's `a`. The tiled executor
+    /// stages exactly these bytes and must reproduce every `expect`
+    /// byte-identically.
+    pub fn golden_item(&self, item: u32) -> Vec<golden::WorkloadData> {
+        let sew = self.sew;
+        let mut act = self.item_input(item);
+        let mut out = Vec::with_capacity(self.layers.len());
+        for (layer, &kernel) in self.layers.iter().enumerate() {
+            let (b, c) = self.layer_operands(layer);
+            let expect = golden::compute(kernel, sew, &act, &b, &c);
+            out.push(golden::WorkloadData {
+                a: golden::pack(&act, sew),
+                b: golden::pack(&b, sew),
+                c: golden::pack(&c, sew),
+                expect: golden::pack(&expect, sew),
+            });
+            act = expect;
+        }
+        out
+    }
+
+    /// One item's dequantized final output.
+    pub fn golden_output(&self, item: u32) -> Vec<i32> {
+        let layers = self.golden_item(item);
+        golden::unpack(&layers.last().unwrap().expect, self.sew)
+            .into_iter()
+            .map(dequantize)
+            .collect()
+    }
+}
+
+/// How a batch of items maps onto the tiles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pipeline {
+    /// Layers spread across tiles (layer *L* on tile *L* mod *T*);
+    /// activations hand tile-to-tile.
+    Layer,
+    /// The whole graph replicated per tile; item *i* runs on tile *i*.
+    Batch,
+}
+
+impl Pipeline {
+    pub const ALL: [Pipeline; 2] = [Pipeline::Layer, Pipeline::Batch];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Pipeline::Layer => "layer",
+            Pipeline::Batch => "batch",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Pipeline> {
+        match s {
+            "layer" => Some(Pipeline::Layer),
+            "batch" => Some(Pipeline::Batch),
+            _ => None,
+        }
+    }
+}
+
+/// How a layer's activation arrives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Boundary {
+    /// Entry activation, staged from the host pool.
+    Entry,
+    /// Single contiguous producer span: direct tile-to-tile DMA (elided
+    /// entirely when source and destination spans coincide).
+    Resident,
+    /// Multi-chunk producer output: repacked through the host pool.
+    Staged,
+}
+
+impl Boundary {
+    pub fn name(self) -> &'static str {
+        match self {
+            Boundary::Entry => "entry",
+            Boundary::Resident => "resident",
+            Boundary::Staged => "staged",
+        }
+    }
+}
+
+/// One layer of a lowered schedule.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerPlan {
+    pub kernel: Kernel,
+    /// How this layer's activation arrives.
+    pub boundary: Boundary,
+    /// Fixed tile (layer pipeline) or `None` for "the item's own tile"
+    /// (batch pipeline).
+    pub tile: Option<u32>,
+    pub elems_in: u32,
+    pub elems_out: u32,
+}
+
+/// A graph lowered onto a tile configuration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Schedule {
+    pub graph: Graph,
+    pub tiles: u32,
+    pub pipeline: Pipeline,
+    pub layers: Vec<LayerPlan>,
+}
+
+/// Lower a graph onto `tiles` NM-Carus tiles under a pipeline mode:
+/// assign tiles, decide every inter-layer [`Boundary`], and verify that
+/// each layer's output chunks are DMA-movable.
+pub fn compile(graph: &Graph, tiles: u32, pipeline: Pipeline) -> Result<Schedule, GraphError> {
+    assert!(tiles >= 1, "need at least one tile");
+    let mut layers = Vec::with_capacity(graph.layers.len());
+    for (layer, &kernel) in graph.layers.iter().enumerate() {
+        // Every layer's output moves by DMA at least once (inter-layer
+        // boundary or the final drain), so every chunk must be
+        // word-aligned.
+        for (off, len) in output_chunks(kernel, graph.sew) {
+            if off % 4 != 0 || len % 4 != 0 || len == 0 {
+                return Err(GraphError::Unaligned { layer, off, len });
+            }
+        }
+        let boundary = if layer == 0 {
+            Boundary::Entry
+        } else if output_chunks(graph.layers[layer - 1], graph.sew).len() == 1 {
+            Boundary::Resident
+        } else {
+            Boundary::Staged
+        };
+        layers.push(LayerPlan {
+            kernel,
+            boundary,
+            tile: match pipeline {
+                Pipeline::Layer => Some(layer as u32 % tiles),
+                Pipeline::Batch => None,
+            },
+            elems_in: in_elems(kernel),
+            elems_out: out_elems(kernel),
+        });
+    }
+    Ok(Schedule { graph: graph.clone(), tiles, pipeline, layers })
+}
+
+impl Schedule {
+    /// Canonical textual rendering — the cross-language parity surface.
+    /// `python/compile/graph.py` produces this byte-for-byte for the same
+    /// inputs, locked by `ci/golden/model_schedule.txt`.
+    pub fn render(&self) -> String {
+        let mut s = String::from("# heeperator model schedule v1\n");
+        s.push_str(&format!(
+            "graph {} sew={} tiles={} pipeline={}\n",
+            self.graph.spec_string(),
+            self.graph.sew.bits(),
+            self.tiles,
+            self.pipeline.name()
+        ));
+        for (i, l) in self.layers.iter().enumerate() {
+            let (n, p, f) = shape_of(l.kernel);
+            let tile = match l.tile {
+                Some(t) => t.to_string(),
+                None => "item".to_string(),
+            };
+            s.push_str(&format!(
+                "layer {i} {} n={n} p={p} f={f} tile={tile} in={} elems_in={} elems_out={}\n",
+                family_slug(l.kernel.family()),
+                l.boundary.name(),
+                l.elems_in,
+                l.elems_out
+            ));
+        }
+        s
+    }
+
+    /// Count of (resident, staged) inter-layer boundaries.
+    pub fn boundary_counts(&self) -> (u32, u32) {
+        let mut resident = 0;
+        let mut staged = 0;
+        for l in &self.layers {
+            match l.boundary {
+                Boundary::Resident => resident += 1,
+                Boundary::Staged => staged += 1,
+                Boundary::Entry => {}
+            }
+        }
+        (resident, staged)
+    }
+}
+
+/// The canonical demo chain: the paper's Table V matmul feeding a
+/// bias-add, ReLU, and 2×2 maxpool — every inter-layer tensor resident.
+pub const CANONICAL: &str = "matmul:p=32,add,relu,maxpool";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn canonical() -> Graph {
+        Graph::parse(CANONICAL, Sew::E8, 7).expect("canonical parses")
+    }
+
+    #[test]
+    fn parse_infers_shapes() {
+        let g = canonical();
+        assert_eq!(
+            g.layers,
+            vec![
+                Kernel::Matmul { p: 32 },
+                Kernel::Add { n: 256 },
+                Kernel::Relu { n: 256 },
+                Kernel::Maxpool { n: 16 },
+            ]
+        );
+        assert_eq!(g.input_elems(), 64);
+        assert_eq!(g.output_elems(), 64);
+        assert_eq!(Graph::parse(&g.spec_string(), Sew::E8, 7).unwrap(), g);
+    }
+
+    #[test]
+    fn parse_rejects_typed() {
+        let e = Graph::parse("", Sew::E8, 0).unwrap_err();
+        assert_eq!(e, GraphError::Empty);
+        let e = Graph::parse("blur", Sew::E8, 0).unwrap_err();
+        assert!(matches!(e, GraphError::Parse { layer: 0, .. }), "{e}");
+        let e = Graph::parse("relu:n=256,matmul:p=8", Sew::E8, 0).unwrap_err();
+        assert!(matches!(e, GraphError::MidChainTransform { layer: 1, .. }), "{e}");
+        let e = Graph::parse("matmul:p=32,add:n=100", Sew::E8, 0).unwrap_err();
+        assert_eq!(e, GraphError::ShapeMismatch { layer: 1, given: 100, inferred: 256 });
+        // 24 elements does not factor into 16 rows.
+        let e = Graph::parse("relu:n=24,maxpool", Sew::E8, 0).unwrap_err();
+        assert_eq!(e, GraphError::NotPoolable { layer: 1, elems: 24 });
+        let e = Graph::parse("add:n=6", Sew::E8, 0).unwrap_err();
+        assert!(matches!(e, GraphError::InvalidShape { layer: 0, .. }), "{e}");
+    }
+
+    #[test]
+    fn compile_assigns_boundaries_and_tiles() {
+        let g = canonical();
+        let s = compile(&g, 2, Pipeline::Layer).unwrap();
+        let kinds: Vec<Boundary> = s.layers.iter().map(|l| l.boundary).collect();
+        assert_eq!(
+            kinds,
+            vec![Boundary::Entry, Boundary::Resident, Boundary::Resident, Boundary::Resident]
+        );
+        let tiles: Vec<Option<u32>> = s.layers.iter().map(|l| l.tile).collect();
+        assert_eq!(tiles, vec![Some(0), Some(1), Some(0), Some(1)]);
+        assert_eq!(s.boundary_counts(), (3, 0));
+
+        let s = compile(&g, 2, Pipeline::Batch).unwrap();
+        assert!(s.layers.iter().all(|l| l.tile.is_none()));
+
+        // A maxpool producer forces the staged fallback for its consumer.
+        let g = Graph::parse("matmul:p=32,maxpool,relu", Sew::E8, 7).unwrap();
+        let s = compile(&g, 2, Pipeline::Layer).unwrap();
+        assert_eq!(s.layers[2].boundary, Boundary::Staged);
+        assert_eq!(s.boundary_counts(), (1, 1));
+    }
+
+    #[test]
+    fn compile_rejects_unaligned_chunks() {
+        // maxpool n=12 at E8: rows are word-aligned but the valid half-row
+        // prefix (6 bytes) is not DMA-movable.
+        let g = Graph::parse("maxpool:n=12", Sew::E8, 0).unwrap();
+        let e = compile(&g, 1, Pipeline::Layer).unwrap_err();
+        assert_eq!(e, GraphError::Unaligned { layer: 0, off: 0, len: 6 });
+    }
+
+    #[test]
+    fn golden_chain_feeds_forward() {
+        let g = canonical();
+        let items = g.golden_item(0);
+        assert_eq!(items.len(), 4);
+        for w in items.windows(2) {
+            assert_eq!(w[0].expect, w[1].a, "layer output feeds next layer's activation");
+        }
+        // Weights are shared across items; activations are not.
+        let other = g.golden_item(1);
+        assert_eq!(items[0].b, other[0].b);
+        assert_ne!(items[0].a, other[0].a);
+        // Entry activations are genuinely quantized into the E8 range.
+        let input = g.item_input(0);
+        assert!(input.iter().all(|&v| (-128..=127).contains(&v)));
+        assert_eq!(g.golden_output(0).len(), 64);
+    }
+
+    #[test]
+    fn quantize_saturates() {
+        assert_eq!(quantize(i32::MAX as i64, Sew::E8), 127);
+        assert_eq!(quantize(i32::MIN as i64, Sew::E8), -128);
+        assert_eq!(quantize(0, Sew::E8), 0);
+        assert_eq!(quantize(3 << 24, Sew::E8), 3);
+        assert_eq!(dequantize(-5), -5);
+    }
+
+    #[test]
+    fn schedule_render_matches_fixture() {
+        let g = canonical();
+        let rendered = compile(&g, 2, Pipeline::Layer).unwrap().render();
+        let fixture = include_str!(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/../ci/golden/model_schedule.txt"
+        ));
+        assert_eq!(rendered, fixture, "re-generate ci/golden/model_schedule.txt");
+    }
+}

@@ -807,6 +807,115 @@ pub fn scale_report(
 }
 
 // ---------------------------------------------------------------------------
+// heeperator model — multi-layer graph pipeline report
+// ---------------------------------------------------------------------------
+
+/// Render a model run pair — the resident-tensor execution next to the
+/// same schedule forced through host staging — with the per-layer cycle
+/// breakdown and the DMA cycles residency saved. Both runs were already
+/// asserted byte-identical to the CPU-golden chain by the executor.
+pub fn model_report(
+    sch: &crate::graph::Schedule,
+    resident: &crate::sched::pipeline::ModelRunResult,
+    staged: &crate::sched::pipeline::ModelRunResult,
+) -> Report {
+    let mut r = Report::new("model", "Multi-layer graph pipeline on NM-Carus tiles");
+    let t = &mut r.text;
+    writeln!(
+        t,
+        "graph {} — {} {} tile(s), {} pipeline, {} item(s), seed {}",
+        sch.graph.spec_string(),
+        sch.graph.sew,
+        sch.tiles,
+        sch.pipeline.name(),
+        resident.items,
+        sch.graph.seed
+    )
+    .unwrap();
+    writeln!(
+        t,
+        "{:<6} {:<10} {:<9} {:>12} {:>10} {:>7}",
+        "layer", "kernel", "boundary", "cycles", "dma-act", "dma-tx"
+    )
+    .unwrap();
+    for (i, l) in resident.layers.iter().enumerate() {
+        writeln!(
+            t,
+            "{:<6} {:<10} {:<9} {:>12} {:>10} {:>7}",
+            i,
+            crate::spec::family_slug(l.kernel.family()),
+            l.boundary.name(),
+            l.cycles,
+            l.dma_active_cycles,
+            l.dma_transfers
+        )
+        .unwrap();
+    }
+    writeln!(t, "{:<15} {:>12} {:>12} {:>12}", "", "resident", "staged", "saved").unwrap();
+    writeln!(
+        t,
+        "{:<15} {:>12} {:>12} {:>12}",
+        "cycles",
+        resident.cycles,
+        staged.cycles,
+        staged.cycles.saturating_sub(resident.cycles)
+    )
+    .unwrap();
+    writeln!(
+        t,
+        "{:<15} {:>12} {:>12} {:>12}",
+        "dma active",
+        resident.dma_active_cycles,
+        staged.dma_active_cycles,
+        staged.dma_active_cycles.saturating_sub(resident.dma_active_cycles)
+    )
+    .unwrap();
+    writeln!(
+        t,
+        "{:<15} {:>12} {:>12} {:>12}",
+        "dma transfers",
+        resident.dma_transfers,
+        staged.dma_transfers,
+        staged.dma_transfers.saturating_sub(resident.dma_transfers)
+    )
+    .unwrap();
+    writeln!(
+        t,
+        "{:<15} {:>12.2} {:>12.2}",
+        "energy uJ",
+        resident.energy.total() / 1e6,
+        staged.energy.total() / 1e6
+    )
+    .unwrap();
+    writeln!(
+        t,
+        "boundaries: {} resident + {} staged (forced-staged run: {} staged); outputs \
+         byte-identical to the CPU-golden chain in both runs",
+        resident.resident_boundaries,
+        resident.staged_boundaries,
+        staged.staged_boundaries
+    )
+    .unwrap();
+
+    let mut csv =
+        String::from("layer,kernel,boundary,cycles,dma_active_cycles,dma_transfers\n");
+    for (i, l) in resident.layers.iter().enumerate() {
+        writeln!(
+            csv,
+            "{i},{},{},{},{},{}",
+            crate::spec::family_slug(l.kernel.family()),
+            l.boundary.name(),
+            l.cycles,
+            l.dma_active_cycles,
+            l.dma_transfers
+        )
+        .unwrap();
+    }
+    r.csv.push(("model.csv".into(), csv));
+    r
+}
+
+// ---------------------------------------------------------------------------
 // heeperator serve — service latency / utilization report
 // ---------------------------------------------------------------------------
 

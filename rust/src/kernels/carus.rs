@@ -215,6 +215,33 @@ pub fn run(kernel: Kernel, sew: Sew, data: &WorkloadData) -> RunResult {
     CarusEngine.execute(&CarusEngine.prepare(kernel, sew), data)
 }
 
+/// Valid-data spans of a kernel's output inside the tile window, as
+/// `(offset, len)` chunks in extraction order — the DMA-addressable twin
+/// of [`Engine::tile_extract`]. Contiguous-output kernels return the one
+/// chunk `tile_io().output` describes; kernels whose output interleaves a
+/// valid prefix with stale bytes per row (conv2d, maxpool) return one
+/// chunk per output row. The graph pipeline uses this to decide whether
+/// an inter-layer tensor can stay resident (single chunk → one tile-to-
+/// tile DMA) or must be repacked through host staging.
+pub fn output_chunks(kernel: Kernel, sew: Sew) -> Vec<(u32, u32)> {
+    let sb = sew.bytes();
+    match kernel {
+        Kernel::Xor { n } | Kernel::Add { n } | Kernel::Mul { n } => {
+            vec![(20 * REG_BYTES, n * sb)]
+        }
+        Kernel::Relu { n } | Kernel::LeakyRelu { n } => vec![(0, n * sb)],
+        Kernel::Matmul { p } | Kernel::Gemm { p } => vec![(8 * p * sb, 8 * p * sb)],
+        Kernel::Conv2d { n, f } => {
+            let rb = n * sb;
+            (0..8 - f + 1).map(|r| (8 * rb + r * rb, (n - f + 1) * sb)).collect()
+        }
+        Kernel::Maxpool { n } => {
+            let rb = n * sb;
+            (0..8).map(|r| (r * rb, (n / 2) * sb)).collect()
+        }
+    }
+}
+
 /// Assemble an eCPU kernel (base 0 = eMEM).
 fn kasm(build: impl FnOnce(&mut Asm)) -> Program {
     let mut a = Asm::new(0);

@@ -76,30 +76,24 @@ pub const GEMM_BETA: i64 = 3;
 /// Leaky-ReLU negative-slope shift (slope 1/8).
 pub const LEAKY_SHIFT: u32 = 3;
 
-/// Generate inputs and the expected output for a kernel instance.
-pub fn generate(kernel: Kernel, sew: Sew, seed: u64) -> WorkloadData {
-    let mut rng = Rng(seed ^ 0xabcd_ef01_2345_6789);
+/// The golden semantics of one kernel over sign-extended element arrays:
+/// `a`/`b`/`c` are the operands in [`generate`]'s layout (unused ones
+/// empty), the return value is the canonical output. Factored out of
+/// [`generate`] so multi-layer chains ([`crate::graph`]) can feed one
+/// kernel's output into the next without re-deriving operands from a seed.
+pub fn compute(kernel: Kernel, sew: Sew, a: &[i64], b: &[i64], c: &[i64]) -> Vec<i64> {
     match kernel {
-        Kernel::Xor { n } | Kernel::Add { n } | Kernel::Mul { n } => {
-            let a: Vec<i64> = (0..n).map(|_| rng.elem(sew)).collect();
-            let b: Vec<i64> = (0..n).map(|_| rng.elem(sew)).collect();
-            let out: Vec<i64> = a
-                .iter()
-                .zip(&b)
-                .map(|(&x, &y)| match kernel {
-                    Kernel::Xor { .. } => wrap(x ^ y, sew),
-                    Kernel::Add { .. } => wrap(x + y, sew),
-                    _ => wrap(x * y, sew),
-                })
-                .collect();
-            WorkloadData { a: pack(&a, sew), b: pack(&b, sew), c: vec![], expect: pack(&out, sew) }
-        }
+        Kernel::Xor { .. } | Kernel::Add { .. } | Kernel::Mul { .. } => a
+            .iter()
+            .zip(b)
+            .map(|(&x, &y)| match kernel {
+                Kernel::Xor { .. } => wrap(x ^ y, sew),
+                Kernel::Add { .. } => wrap(x + y, sew),
+                _ => wrap(x * y, sew),
+            })
+            .collect(),
         Kernel::Matmul { p } | Kernel::Gemm { p } => {
-            let a: Vec<i64> = (0..64).map(|_| rng.elem(sew)).collect(); // A[8,8]
-            let b: Vec<i64> = (0..8 * p).map(|_| rng.elem(sew)).collect(); // B[8,p] row-major
             let is_gemm = matches!(kernel, Kernel::Gemm { .. });
-            let c: Vec<i64> =
-                if is_gemm { (0..8 * p).map(|_| rng.elem(sew)).collect() } else { vec![] };
             let mut out = vec![0i64; 8 * p as usize];
             for i in 0..8usize {
                 for j in 0..p as usize {
@@ -117,18 +111,11 @@ pub fn generate(kernel: Kernel, sew: Sew, seed: u64) -> WorkloadData {
                     };
                 }
             }
-            WorkloadData {
-                a: pack(&a, sew),
-                b: pack(&b, sew),
-                c: pack(&c, sew),
-                expect: pack(&out, sew),
-            }
+            out
         }
         Kernel::Conv2d { n, f } => {
             let rows = 8usize;
             let (n, f) = (n as usize, f as usize);
-            let img: Vec<i64> = (0..rows * n).map(|_| rng.elem(sew)).collect();
-            let filt: Vec<i64> = (0..f * f).map(|_| rng.elem(sew)).collect();
             let (orows, ocols) = (rows - f + 1, n - f + 1);
             let mut out = vec![0i64; orows * ocols];
             for r in 0..orows {
@@ -136,53 +123,76 @@ pub fn generate(kernel: Kernel, sew: Sew, seed: u64) -> WorkloadData {
                     let mut acc = 0i64;
                     for dy in 0..f {
                         for dx in 0..f {
-                            acc = wrap(acc + wrap(img[(r + dy) * n + c + dx] * filt[dy * f + dx], sew), sew);
+                            acc = wrap(acc + wrap(a[(r + dy) * n + c + dx] * b[dy * f + dx], sew), sew);
                         }
                     }
                     out[r * ocols + c] = acc;
                 }
             }
-            WorkloadData {
-                a: pack(&img, sew),
-                b: pack(&filt, sew),
-                c: vec![],
-                expect: pack(&out, sew),
-            }
+            out
         }
-        Kernel::Relu { n } | Kernel::LeakyRelu { n } => {
-            let a: Vec<i64> = (0..n).map(|_| rng.elem(sew)).collect();
-            let out: Vec<i64> = a
-                .iter()
-                .map(|&x| {
-                    if x >= 0 {
-                        x
-                    } else if matches!(kernel, Kernel::Relu { .. }) {
-                        0
-                    } else {
-                        x >> LEAKY_SHIFT
-                    }
-                })
-                .collect();
-            WorkloadData { a: pack(&a, sew), b: vec![], c: vec![], expect: pack(&out, sew) }
-        }
+        Kernel::Relu { .. } | Kernel::LeakyRelu { .. } => a
+            .iter()
+            .map(|&x| {
+                if x >= 0 {
+                    x
+                } else if matches!(kernel, Kernel::Relu { .. }) {
+                    0
+                } else {
+                    x >> LEAKY_SHIFT
+                }
+            })
+            .collect(),
         Kernel::Maxpool { n } => {
             let rows = 16usize;
             let n = n as usize;
-            let img: Vec<i64> = (0..rows * n).map(|_| rng.elem(sew)).collect();
             let (orows, ocols) = (rows / 2, n / 2);
             let mut out = vec![0i64; orows * ocols];
             for r in 0..orows {
                 for c in 0..ocols {
-                    let m = img[2 * r * n + 2 * c]
-                        .max(img[2 * r * n + 2 * c + 1])
-                        .max(img[(2 * r + 1) * n + 2 * c])
-                        .max(img[(2 * r + 1) * n + 2 * c + 1]);
+                    let m = a[2 * r * n + 2 * c]
+                        .max(a[2 * r * n + 2 * c + 1])
+                        .max(a[(2 * r + 1) * n + 2 * c])
+                        .max(a[(2 * r + 1) * n + 2 * c + 1]);
                     out[r * ocols + c] = m;
                 }
             }
-            WorkloadData { a: pack(&img, sew), b: vec![], c: vec![], expect: pack(&out, sew) }
+            out
         }
     }
+}
+
+/// Generate inputs and the expected output for a kernel instance.
+pub fn generate(kernel: Kernel, sew: Sew, seed: u64) -> WorkloadData {
+    let mut rng = Rng(seed ^ 0xabcd_ef01_2345_6789);
+    let (a, b, c): (Vec<i64>, Vec<i64>, Vec<i64>) = match kernel {
+        Kernel::Xor { n } | Kernel::Add { n } | Kernel::Mul { n } => (
+            (0..n).map(|_| rng.elem(sew)).collect(),
+            (0..n).map(|_| rng.elem(sew)).collect(),
+            vec![],
+        ),
+        Kernel::Matmul { p } | Kernel::Gemm { p } => {
+            let a = (0..64).map(|_| rng.elem(sew)).collect(); // A[8,8]
+            let b = (0..8 * p).map(|_| rng.elem(sew)).collect(); // B[8,p] row-major
+            let c = if matches!(kernel, Kernel::Gemm { .. }) {
+                (0..8 * p).map(|_| rng.elem(sew)).collect()
+            } else {
+                vec![]
+            };
+            (a, b, c)
+        }
+        Kernel::Conv2d { n, f } => (
+            (0..8 * n).map(|_| rng.elem(sew)).collect(),
+            (0..f * f).map(|_| rng.elem(sew)).collect(),
+            vec![],
+        ),
+        Kernel::Relu { n } | Kernel::LeakyRelu { n } => {
+            ((0..n).map(|_| rng.elem(sew)).collect(), vec![], vec![])
+        }
+        Kernel::Maxpool { n } => ((0..16 * n).map(|_| rng.elem(sew)).collect(), vec![], vec![]),
+    };
+    let out = compute(kernel, sew, &a, &b, &c);
+    WorkloadData { a: pack(&a, sew), b: pack(&b, sew), c: pack(&c, sew), expect: pack(&out, sew) }
 }
 
 #[cfg(test)]

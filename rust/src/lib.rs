@@ -48,6 +48,14 @@
 //!   stdin/TCP through admission control and a coalescing batcher onto
 //!   [`sched::plan_jobs`], with a deterministic seeded load generator
 //!   and latency/utilization reporting (`heeperator serve`).
+//! - [`spec`]: the unified job-spec vocabulary — one parse / validate /
+//!   serialize path for the `(target, family, sew, n, p, f, seed)` tuple
+//!   plus the versioned wire-schema tags ([`spec::schemas`]) shared by
+//!   serve, the CLI selectors, and the fuzz repro format.
+//! - [`graph`]: the linear graph IR for multi-layer INT8 inference —
+//!   kernel chains with a quantize/dequantize boundary, compiled to a
+//!   per-layer tile schedule and executed by [`sched::pipeline`] with
+//!   inter-layer tensors resident in tile SRAM (`heeperator model`).
 
 pub mod apps;
 pub mod area;
@@ -60,6 +68,7 @@ pub mod cpu;
 pub mod dma;
 pub mod energy;
 pub mod fuzz;
+pub mod graph;
 pub mod harness;
 pub mod isa;
 pub mod kernels;
@@ -71,4 +80,5 @@ pub mod sched;
 pub mod serve;
 pub mod simd;
 pub mod soc;
+pub mod spec;
 pub mod sweep;

@@ -13,6 +13,8 @@
 //! heeperator fuzz [--seed S] [--budget N] [--max-insns K] [--replay FILE] [--out DIR]
 //! heeperator serve [--listen stdin|PORT] [--tiles N] [--queue N] [--max-batch N] [--linger CYC]
 //!                  [--selftest [--trace poisson|bursty|mixed] [--requests N] [--seed S] [--json FILE]]
+//! heeperator model [--graph SPEC] [--tiles N] [--pipeline layer|batch] [--sew W] [--seed S]
+//!                  [--json FILE] [--out DIR]
 //! ```
 //!
 //! `all` fans the independent reports out over a `std::thread` worker
@@ -46,6 +48,14 @@
 //! reports latency percentiles / queue depth / per-tile utilization;
 //! `--json FILE` writes the machine-readable summary CI gates on.
 //!
+//! `model` compiles a multi-layer graph spec (DESIGN.md §14) onto NM-Carus
+//! tiles and runs it twice — inter-layer tensors resident in tile SRAM,
+//! then forced through the host staging pool — reporting the per-layer
+//! cycle breakdown and the resident-tensor DMA savings; `--json FILE`
+//! writes the `heeperator-model-v1` summary the CI model-smoke job gates
+//! on. Every selector surface (sweep/scale/model flags, serve requests,
+//! fuzz repro files) resolves through the one `nmc::spec` module.
+//!
 //! Every subcommand accepts `--timing cycle|event` to pick the simulation
 //! timing discipline: `event` (the default) runs the skip-ahead
 //! event-driven core, `cycle` forces the per-cycle reference loop. Both
@@ -60,6 +70,7 @@ use nmc::harness::{self, executor, Report, ScalePoint};
 use nmc::isa::Sew;
 use nmc::kernels::{Family, Kernel, Target};
 use nmc::sched::BatchSpec;
+use nmc::spec::JobSpec;
 use nmc::sweep::SweepSession;
 use std::sync::Arc;
 
@@ -111,6 +122,9 @@ struct Cli {
     conns: Option<usize>,
     load: Option<String>,
     throughput: bool,
+    /// `model` selectors: the graph spec string and the pipeline mode.
+    graph: Option<String>,
+    pipeline: Option<String>,
 }
 
 impl Cli {
@@ -146,6 +160,8 @@ impl Cli {
             conns: None,
             load: None,
             throughput: false,
+            graph: None,
+            pipeline: None,
         }
     }
 }
@@ -276,6 +292,16 @@ fn parse_args(args: &[String]) -> Result<Cli, String> {
                 }
             }
             "--throughput" => cli.throughput = true,
+            "--graph" => {
+                if let Some(v) = parse_str(args, &mut i) {
+                    cli.graph = Some(v);
+                }
+            }
+            "--pipeline" => {
+                if let Some(v) = parse_str(args, &mut i) {
+                    cli.pipeline = Some(v);
+                }
+            }
             a if !a.starts_with("--") => {
                 // First free-standing word is the subcommand.
                 if cmd.is_none() {
@@ -326,11 +352,20 @@ fn sweep_points(cli: &Cli) -> Result<Vec<(Target, Kernel, Sew)>, String> {
     for &target in &targets {
         for &family in &families {
             for &sew in &sews {
-                let kernel = Kernel::with_shape(family, target, sew, cli.n, cli.p, cli.f);
-                kernel
-                    .validate(target, sew)
-                    .map_err(|e| format!("{target:?} {family:?} {sew}: {e}"))?;
-                points.push((target, kernel, sew));
+                // Resolve each grid point through the one spec path
+                // (paper-default shape fallback included).
+                let spec = JobSpec::from_selectors(
+                    nmc::spec::target_slug(target),
+                    nmc::spec::family_slug(family),
+                    sew.bits(),
+                    cli.n,
+                    cli.p,
+                    cli.f,
+                    cli.seed.unwrap_or(1),
+                )
+                .map_err(|e| e.to_string())?;
+                spec.validate().map_err(|e| format!("{target:?} {family:?} {sew}: {e}"))?;
+                points.push((spec.target, spec.kernel, spec.sew));
             }
         }
     }
@@ -376,11 +411,9 @@ fn parse_tiles(spec: &str) -> Result<Vec<u32>, String> {
 
 /// Resolve the `scale` selectors into a batch spec + tile-count list.
 fn scale_spec(cli: &Cli) -> Result<(BatchSpec, Vec<u32>), String> {
-    let target = match cli.target.as_deref() {
-        None => Target::Carus,
-        Some(s) => Target::parse(s)
-            .ok_or_else(|| format!("unknown --target `{s}` (tile targets: caesar|carus)"))?,
-    };
+    // Family and width resolve first so the scale-specific default
+    // dimensions can be computed; the full tuple then goes through the
+    // one spec path like every other selector surface.
     let family = match cli.family.as_deref() {
         None => Family::Matmul,
         Some(s) => Family::parse(s).ok_or_else(|| format!("unknown --family `{s}`"))?,
@@ -390,7 +423,16 @@ fn scale_spec(cli: &Cli) -> Result<(BatchSpec, Vec<u32>), String> {
         Some(s) => Sew::parse(s).ok_or_else(|| format!("unknown --sew `{s}` (8|16|32)"))?,
     };
     let (dn, dp, df) = default_scale_dims(family, sew);
-    let kernel = Kernel::with_shape(family, target, sew, cli.n.or(dn), cli.p.or(dp), cli.f.or(df));
+    let job = JobSpec::from_selectors(
+        cli.target.as_deref().unwrap_or("carus"),
+        nmc::spec::family_slug(family),
+        sew.bits(),
+        cli.n.or(dn),
+        cli.p.or(dp),
+        cli.f.or(df),
+        cli.seed.unwrap_or(1),
+    )
+    .map_err(|e| format!("{e} (tile targets: caesar|carus)"))?;
     let tiles = parse_tiles(cli.tiles.as_deref().unwrap_or("1,2,4"))?;
     let max_t = *tiles.iter().max().expect("non-empty tile list");
     // Default batch: a few rounds per tile at the largest count (quick
@@ -398,10 +440,10 @@ fn scale_spec(cli: &Cli) -> Result<(BatchSpec, Vec<u32>), String> {
     let mult = if cli.quick { 2 } else { 4 };
     let batch = cli.batch.unwrap_or_else(|| (mult * max_t).clamp(max_t, 16));
     let spec = BatchSpec {
-        target,
-        kernel,
-        sew,
-        seed: cli.seed.unwrap_or(1),
+        target: job.target,
+        kernel: job.kernel,
+        sew: job.sew,
+        seed: job.seed,
         batch,
         shard: cli.shard,
     };
@@ -414,7 +456,8 @@ fn scale_spec(cli: &Cli) -> Result<(BatchSpec, Vec<u32>), String> {
 fn scale_json(points: &[ScalePoint]) -> String {
     let timing = nmc::clock::mode();
     let mut s = format!(
-        "{{\n  \"schema\": \"heeperator-bench-v1\",\n  \"timing\": \"{timing}\",\n  \"reports\": [\n"
+        "{{\n  \"schema\": \"{}\",\n  \"timing\": \"{timing}\",\n  \"reports\": [\n",
+        nmc::spec::schemas::BENCH
     );
     for (i, p) in points.iter().enumerate() {
         s.push_str(&format!(
@@ -539,6 +582,9 @@ fn main() {
         "serve" => {
             std::process::exit(run_serve(&cli));
         }
+        "model" => {
+            std::process::exit(run_model_cmd(&cli));
+        }
         "ad" => {
             let golden = nmc::apps::anomaly::golden_forward(&nmc::apps::anomaly::model(2));
             for target in Target::ALL {
@@ -638,6 +684,146 @@ fn run_fuzz(cli: &Cli) -> i32 {
             1
         }
     }
+}
+
+/// The `model` subcommand: compile a multi-layer graph spec onto NM-Carus
+/// tiles and run it in both residency policies — inter-layer tensors
+/// resident in tile SRAM, then every boundary forced through the host
+/// staging pool — so the report can quantify the DMA savings on otherwise
+/// identical runs. Both runs assert byte-identity against the CPU-golden
+/// chain before reporting. Exit code 0 = ran, 1 = execution failed,
+/// 2 = unusable invocation.
+fn run_model_cmd(cli: &Cli) -> i32 {
+    use nmc::graph::{self, Graph, Pipeline};
+    use nmc::sched::pipeline::{run_model, Residency};
+    let sew = match cli.sew.as_deref() {
+        None => Sew::E8,
+        Some(s) => match Sew::parse(s) {
+            Some(sew) => sew,
+            None => {
+                eprint!("{}", usage());
+                eprintln!("error: unknown --sew `{s}` (8|16|32)");
+                return 2;
+            }
+        },
+    };
+    let pipeline = {
+        let s = cli.pipeline.as_deref().unwrap_or("layer");
+        match Pipeline::parse(s) {
+            Some(p) => p,
+            None => {
+                eprint!("{}", usage());
+                eprintln!("error: unknown --pipeline `{s}` (layer|batch)");
+                return 2;
+            }
+        }
+    };
+    let tiles = match cli.tiles.as_deref() {
+        None => 2u32,
+        Some(s) => match s.parse::<u32>() {
+            Ok(t) if t >= 1 && t as usize <= nmc::bus::MAX_TILES => t,
+            _ => {
+                eprint!("{}", usage());
+                eprintln!(
+                    "error: model expects --tiles N in 1..={}, got `{s}`",
+                    nmc::bus::MAX_TILES
+                );
+                return 2;
+            }
+        },
+    };
+    let spec = cli.graph.as_deref().unwrap_or(graph::CANONICAL);
+    let g = match Graph::parse(spec, sew, cli.seed.unwrap_or(1)) {
+        Ok(g) => g,
+        Err(e) => {
+            eprintln!("error: bad --graph `{spec}`: {e}");
+            return 2;
+        }
+    };
+    let sch = match graph::compile(&g, tiles, pipeline) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: `{spec}` does not lower onto {tiles} tile(s): {e}");
+            return 2;
+        }
+    };
+    let run = |residency| match run_model(&sch, residency) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("error: model run failed: {e}");
+            None
+        }
+    };
+    let Some(resident) = run(Residency::Auto) else { return 1 };
+    let Some(staged) = run(Residency::ForceStaged) else { return 1 };
+    let rep = harness::model_report(&sch, &resident, &staged);
+    write_reports(&[rep], cli.out.as_deref());
+    if let Some(path) = &cli.json {
+        std::fs::write(path, model_json(&sch, &resident, &staged)).expect("write model json");
+        println!("(model summary written to {path})");
+    }
+    0
+}
+
+/// Render the machine-readable model summary (`heeperator-model-v1`):
+/// both residency runs' deterministic cycle/DMA/energy totals, the DMA
+/// savings the resident policy banked, and the per-layer breakdown of the
+/// resident run — what the CI model-smoke job folds into `BENCH_10.json`.
+fn model_json(
+    sch: &nmc::graph::Schedule,
+    resident: &nmc::sched::pipeline::ModelRunResult,
+    staged: &nmc::sched::pipeline::ModelRunResult,
+) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::from("{\n");
+    writeln!(s, "  \"schema\": \"{}\",", nmc::spec::schemas::MODEL).unwrap();
+    writeln!(s, "  \"timing\": \"{}\",", nmc::clock::mode()).unwrap();
+    writeln!(s, "  \"graph\": \"{}\",", nmc::spec::json_escape(&sch.graph.spec_string())).unwrap();
+    writeln!(s, "  \"sew\": {},", sch.graph.sew.bits()).unwrap();
+    writeln!(s, "  \"seed\": {},", sch.graph.seed).unwrap();
+    writeln!(s, "  \"tiles\": {},", sch.tiles).unwrap();
+    writeln!(s, "  \"pipeline\": \"{}\",", sch.pipeline.name()).unwrap();
+    writeln!(s, "  \"items\": {},", resident.items).unwrap();
+    for (key, r) in [("resident", resident), ("staged", staged)] {
+        writeln!(
+            s,
+            "  \"{key}\": {{\"cycles\": {}, \"dma_active_cycles\": {}, \"dma_transfers\": {}, \
+             \"bus_txns\": {}, \"contention_cycles\": {}, \"energy_uj\": {:.3}, \
+             \"resident_boundaries\": {}, \"staged_boundaries\": {}}},",
+            r.cycles,
+            r.dma_active_cycles,
+            r.dma_transfers,
+            r.bus_txns,
+            r.contention_cycles,
+            r.energy.total() / 1e6,
+            r.resident_boundaries,
+            r.staged_boundaries
+        )
+        .unwrap();
+    }
+    writeln!(
+        s,
+        "  \"dma_savings_cycles\": {},",
+        staged.dma_active_cycles.saturating_sub(resident.dma_active_cycles)
+    )
+    .unwrap();
+    writeln!(s, "  \"layers\": [").unwrap();
+    for (i, l) in resident.layers.iter().enumerate() {
+        writeln!(
+            s,
+            "    {{\"layer\": {i}, \"kernel\": \"{}\", \"boundary\": \"{}\", \"cycles\": {}, \
+             \"dma_active_cycles\": {}, \"dma_transfers\": {}}}{}",
+            nmc::spec::family_slug(l.kernel.family()),
+            l.boundary.name(),
+            l.cycles,
+            l.dma_active_cycles,
+            l.dma_transfers,
+            if i + 1 < resident.layers.len() { "," } else { "" }
+        )
+        .unwrap();
+    }
+    s.push_str("  ]\n}\n");
+    s
 }
 
 /// The `serve` subcommand: the deterministic seeded selftest
@@ -784,7 +970,7 @@ fn usage() -> String {
     let mut o = String::new();
     let w = &mut o;
     use std::fmt::Write as _;
-    writeln!(w, "usage: heeperator <all|table4|fig7|table5|fig11|fig12|fig13|table6|table7|table8|ablations|ad|sweep|scale|fuzz|serve> [--quick] [--out DIR]").unwrap();
+    writeln!(w, "usage: heeperator <all|table4|fig7|table5|fig11|fig12|fig13|table6|table7|table8|ablations|ad|sweep|scale|fuzz|serve|model> [--quick] [--out DIR]").unwrap();
     writeln!(w, "       `all` additionally accepts --jobs N (worker pool bound; 1 = sequential)").unwrap();
     writeln!(w, "       `sweep` selects scenarios: --target cpu|caesar|carus|all --family xor|add|mul|matmul|gemm|conv2d|relu|leakyrelu|maxpool|all").unwrap();
     writeln!(w, "               --sew 8|16|32|all, free dims --n N --p P --f F (default: paper Table V shapes), --seed S").unwrap();
@@ -801,6 +987,10 @@ fn usage() -> String {
     writeln!(w, "               --selftest --load closed runs a closed-loop client fleet (backoff+retry on rejection) on the virtual clock;").unwrap();
     writeln!(w, "               --throughput runs a self-contained live TCP smoke (--conns clients x --requests each) and").unwrap();
     writeln!(w, "               reports wall-clock req/s (--json FILE writes the heeperator-serve-live-v1 summary)").unwrap();
+    writeln!(w, "       `model` compiles a multi-layer graph onto NM-Carus tiles: --graph SPEC (kernel chain, e.g.").unwrap();
+    writeln!(w, "               `matmul:p=32,add,relu,maxpool`, the default), --tiles N (default 2), --pipeline layer|batch,").unwrap();
+    writeln!(w, "               --sew 8|16|32 --seed S; runs resident and staged and reports the DMA savings,").unwrap();
+    writeln!(w, "               --json FILE writes the heeperator-model-v1 summary the CI model-smoke job gates on").unwrap();
     writeln!(w, "       every subcommand accepts --timing cycle|event (skip-ahead event timing is the default;").unwrap();
     writeln!(w, "               `cycle` forces the per-cycle reference loop; SOC_TIMING env var works too)").unwrap();
     writeln!(w, "       every --flag accepts both `--flag value` and `--flag=value`").unwrap();
@@ -1052,13 +1242,40 @@ mod tests {
     }
 
     #[test]
+    fn model_flags_parse_in_both_spellings() {
+        let cli = p(&[
+            "model", "--graph", "matmul:p=32,relu", "--tiles", "2", "--pipeline", "batch",
+            "--sew", "8", "--seed", "3",
+        ]);
+        assert_eq!(cli.cmd, "model");
+        assert_eq!(cli.graph.as_deref(), Some("matmul:p=32,relu"));
+        assert_eq!(cli.tiles.as_deref(), Some("2"));
+        assert_eq!(cli.pipeline.as_deref(), Some("batch"));
+        assert_eq!(cli.sew.as_deref(), Some("8"));
+        assert_eq!(cli.seed, Some(3));
+        // The `=` spelling normalizes to the same parse.
+        let eq = p(&["model", "--graph=matmul:p=32,relu", "--pipeline=layer", "--json=M.json"]);
+        assert_eq!(eq.graph.as_deref(), Some("matmul:p=32,relu"));
+        assert_eq!(eq.pipeline.as_deref(), Some("layer"));
+        assert_eq!(eq.json.as_deref(), Some("M.json"));
+        // Defaults stay unset (run_model_cmd fills them in).
+        let cli = p(&["model"]);
+        assert_eq!(cli.graph, None);
+        assert_eq!(cli.pipeline, None);
+        assert_eq!(cli.tiles, None);
+    }
+
+    #[test]
     fn usage_covers_every_subcommand() {
         let u = usage();
-        for cmd in
-            ["all", "table4", "fig11", "ablations", "ad", "sweep", "scale", "fuzz", "serve"]
-        {
+        for cmd in [
+            "all", "table4", "fig11", "ablations", "ad", "sweep", "scale", "fuzz", "serve",
+            "model",
+        ] {
             assert!(u.contains(cmd), "usage must mention `{cmd}`");
         }
+        assert!(u.contains("--graph"));
+        assert!(u.contains("--pipeline"));
         assert!(u.contains("--json"));
         assert!(u.contains("--tiles"));
         assert!(u.contains("--timing"));

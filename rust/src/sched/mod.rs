@@ -40,6 +40,8 @@
 //! the scaling curve; [`crate::sweep::SweepSession::scale`] memoizes one
 //! co-simulation per `(spec, tiles)` point.
 
+pub mod pipeline;
+
 use crate::asm::{Asm, Program};
 use crate::bus::{self, periph, BANK_SIZE, NMC_TILE_BASE, PERIPH_BASE};
 use crate::carus::{ARG_OFFSET, CTL_OFFSET, CTL_START};

@@ -1,0 +1,566 @@
+//! Multi-layer pipeline executor: runs a compiled [`Schedule`] on NM-Carus
+//! tiles, keeping inter-layer tensors resident in tile SRAM.
+//!
+//! Where the batch scheduler ([`super::plan_jobs`]) round-trips every
+//! workload's output through the host staging pool, this executor moves an
+//! inter-layer activation with a single tile-to-tile DMA when the producer
+//! left it contiguous ([`Boundary::Resident`]) — or no DMA at all when the
+//! producer wrote it exactly where the consumer reads (same tile, offset
+//! 0, e.g. ReLU feeding maxpool in the batch pipeline). Only multi-chunk
+//! outputs (maxpool, conv2d rows) fall back to repacking through host RAM
+//! ([`Boundary::Staged`]); [`Residency::ForceStaged`] forces *every*
+//! boundary down that path, which is how the CLI quantifies the
+//! resident-tensor DMA savings on otherwise identical runs.
+//!
+//! Execution is phased: each layer step is its own host firmware program
+//! (upload the layer kernel if the tile holds a different one, move the
+//! activation, stage weights, start, wait), run to its `ebreak` so the
+//! host can attribute cycle/DMA deltas to that layer. Loading the next
+//! step's firmware un-halts the core in place — no recycle, so the VRF
+//! state the residency optimization relies on survives between steps.
+//! Outputs are asserted byte-identical to the CPU-golden chain
+//! ([`crate::graph::Graph::golden_item`]) before any result is returned.
+
+use super::{fw_dma, fw_irq_mask, fw_tile_mode, fw_wait_tile, POOL_BASE, POOL_END};
+use crate::asm::{Asm, Program};
+use crate::bus::{self, BANK_SIZE};
+use crate::carus::{ARG_OFFSET, CTL_OFFSET, CTL_START};
+use crate::energy::Breakdown;
+use crate::graph::{Boundary, Pipeline, Schedule};
+use crate::isa::reg::*;
+use crate::kernels::carus::output_chunks;
+use crate::kernels::{engine, run_timeout, Kernel, Target, TileProgram};
+use crate::soc::{Halt, Soc, TileKind};
+
+/// Inter-layer tensor placement policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Residency {
+    /// Resident where the schedule allows it, staged where it does not.
+    Auto,
+    /// Every boundary through the host pool — the per-layer staging
+    /// baseline the DMA-savings report compares against.
+    ForceStaged,
+}
+
+impl Residency {
+    pub fn name(self) -> &'static str {
+        match self {
+            Residency::Auto => "resident",
+            Residency::ForceStaged => "staged",
+        }
+    }
+}
+
+/// Typed executor error (modeling bugs still panic, as in
+/// [`super::run_planned_on`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ModelError {
+    /// The pool cannot hold the model's images, weights, and activations.
+    StagingOverflow,
+    /// A staged input region is not word-aligned.
+    Misaligned { layer: usize, off: u32, len: u32 },
+    /// A step's firmware exceeds the 32 KiB code bank.
+    FirmwareTooLarge { layer: usize, bytes: u32 },
+    /// A step's firmware failed to assemble.
+    Assemble(String),
+    /// A layer step blew its cycle budget.
+    Timeout { layer: usize },
+    /// A layer step trapped.
+    Trap { layer: usize },
+}
+
+impl std::fmt::Display for ModelError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ModelError::StagingOverflow => write!(
+                f,
+                "model staging exceeds the {} KiB SRAM pool",
+                (POOL_END - POOL_BASE) / 1024
+            ),
+            ModelError::Misaligned { layer, off, len } => {
+                write!(f, "layer {layer}: input region ({off}, {len}) is not word-aligned")
+            }
+            ModelError::FirmwareTooLarge { layer, bytes } => write!(
+                f,
+                "layer {layer}: step firmware ({bytes} B) exceeds the 32 KiB code bank"
+            ),
+            ModelError::Assemble(e) => write!(f, "step firmware failed to assemble: {e}"),
+            ModelError::Timeout { layer } => write!(
+                f,
+                "layer {layer} did not complete within the cycle budget (raise SOC_RUN_TIMEOUT)"
+            ),
+            ModelError::Trap { layer } => write!(f, "layer {layer} trapped"),
+        }
+    }
+}
+
+impl std::error::Error for ModelError {}
+
+/// Per-layer accounting, aggregated across items.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerRun {
+    pub kernel: Kernel,
+    /// The boundary that actually ran (under
+    /// [`Residency::ForceStaged`], resident boundaries report as staged).
+    pub boundary: Boundary,
+    pub cycles: u64,
+    pub dma_active_cycles: u64,
+    pub dma_transfers: u64,
+}
+
+/// Result of one model execution.
+#[derive(Debug, Clone)]
+pub struct ModelRunResult {
+    pub pipeline: Pipeline,
+    pub residency: Residency,
+    pub tiles: u32,
+    /// Items executed (one per tile in both pipeline modes).
+    pub items: u32,
+    /// Makespan across all layer steps.
+    pub cycles: u64,
+    pub energy: Breakdown,
+    pub dma_active_cycles: u64,
+    pub dma_transfers: u64,
+    pub bus_txns: u64,
+    pub contention_cycles: u64,
+    /// Busy cycles per tile — the serve path folds these into its
+    /// utilization accounting alongside kernel-batch results.
+    pub tile_busy: Vec<u64>,
+    pub layers: Vec<LayerRun>,
+    /// Boundaries that ran resident / staged (graph-level, not per item).
+    pub resident_boundaries: u32,
+    pub staged_boundaries: u32,
+    /// Per-item final activations (packed SEW bytes), already asserted
+    /// byte-identical to the CPU-golden chain.
+    pub outputs: Vec<Vec<u8>>,
+}
+
+/// One (item, layer) execution on a concrete tile.
+#[derive(Debug, Clone, Copy)]
+struct Unit {
+    item: u32,
+    layer: usize,
+    tile: usize,
+}
+
+/// A staged pool region headed for a tile window: (pool addr, tile
+/// offset, length).
+type StagedInput = (u32, u32, u32);
+
+/// Everything the step firmware needs at fixed pool addresses.
+struct PoolLayout {
+    /// Per distinct kernel: (kernel, image addr, image len, arg words).
+    images: Vec<(Kernel, u32, u32, Vec<u32>)>,
+    /// Per layer: weight operands shared by every item (empty for entry).
+    shared: Vec<Vec<StagedInput>>,
+    /// Per item: the entry layer's full input set.
+    entry: Vec<Vec<StagedInput>>,
+    /// Repack scratch for staged boundaries (0 bytes if none run).
+    scratch: u32,
+    /// Per item: (output addr, output len).
+    out: Vec<(u32, u32)>,
+    /// Host-side pre-staging writes (addr, bytes).
+    prestage: Vec<(u32, Vec<u8>)>,
+}
+
+fn effective(b: Boundary, residency: Residency) -> Boundary {
+    match (b, residency) {
+        (Boundary::Entry, _) => Boundary::Entry,
+        (_, Residency::ForceStaged) => Boundary::Staged,
+        (b, Residency::Auto) => b,
+    }
+}
+
+/// Tile holding `layer`'s output for `item` under the schedule's
+/// pipeline mode.
+fn tile_of(sch: &Schedule, item: u32, layer: usize) -> usize {
+    match sch.layers[layer].tile {
+        Some(t) => t as usize,
+        None => item as usize,
+    }
+}
+
+/// Word-rounding bump allocator over the staging pool, collecting the
+/// host-side pre-staging writes as regions are claimed.
+struct PoolAlloc {
+    cursor: u32,
+    prestage: Vec<(u32, Vec<u8>)>,
+}
+
+impl PoolAlloc {
+    fn new() -> Self {
+        PoolAlloc { cursor: POOL_BASE, prestage: Vec::new() }
+    }
+
+    fn take(&mut self, len: u32) -> Result<u32, ModelError> {
+        let at = self.cursor;
+        self.cursor += len.div_ceil(4) * 4;
+        if self.cursor > POOL_END {
+            return Err(ModelError::StagingOverflow);
+        }
+        Ok(at)
+    }
+
+    /// Claim a region, record its bytes for pre-staging, and describe the
+    /// tile-window destination — rejecting regions no DMA can move.
+    fn stage_input(
+        &mut self,
+        layer: usize,
+        (off, bytes): (u32, Vec<u8>),
+    ) -> Result<StagedInput, ModelError> {
+        let len = bytes.len() as u32;
+        if off % 4 != 0 || len % 4 != 0 || len == 0 {
+            return Err(ModelError::Misaligned { layer, off, len });
+        }
+        let addr = self.take(len)?;
+        self.prestage.push((addr, bytes));
+        Ok((addr, off, len))
+    }
+}
+
+fn build_pool(
+    sch: &Schedule,
+    residency: Residency,
+    items: u32,
+    data: &[Vec<crate::kernels::golden::WorkloadData>],
+) -> Result<PoolLayout, ModelError> {
+    let eng = engine(Target::Carus);
+    let sew = sch.graph.sew;
+    let mut alloc = PoolAlloc::new();
+
+    // Kernel images + argument words, one per distinct kernel.
+    let mut images: Vec<(Kernel, u32, u32, Vec<u32>)> = Vec::new();
+    for l in &sch.layers {
+        if images.iter().any(|(k, ..)| *k == l.kernel) {
+            continue;
+        }
+        let TileProgram { setup_image, args, .. } =
+            eng.tile_program(l.kernel, sew).expect("carus tiles every kernel");
+        let len = setup_image.len() as u32;
+        let addr = alloc.take(len)?;
+        alloc.prestage.push((addr, setup_image));
+        images.push((l.kernel, addr, len, args));
+    }
+
+    // Layer weights (b/c operands) are item-independent: stage one copy.
+    // The entry layer's inputs include the per-item activation (and, for
+    // matmul, its transformed column image), so those stage per item.
+    let mut shared: Vec<Vec<StagedInput>> = Vec::new();
+    for (l, plan) in sch.layers.iter().enumerate() {
+        let mut regions = Vec::new();
+        if l > 0 {
+            let io = eng.tile_io(plan.kernel, sew, &data[0][l]).expect("carus tiles every kernel");
+            for input in io.inputs.into_iter().skip(1) {
+                regions.push(alloc.stage_input(l, input)?);
+            }
+        }
+        shared.push(regions);
+    }
+    let mut entry: Vec<Vec<StagedInput>> = Vec::new();
+    for item in 0..items {
+        let io = eng
+            .tile_io(sch.layers[0].kernel, sew, &data[item as usize][0])
+            .expect("carus tiles every kernel");
+        let mut regions = Vec::new();
+        for input in io.inputs {
+            regions.push(alloc.stage_input(0, input)?);
+        }
+        entry.push(regions);
+    }
+
+    // Repack scratch: the largest staged activation. Steps run strictly
+    // sequentially, so one region serves every item and layer.
+    let sb = sew.bytes();
+    let scratch_len = sch
+        .layers
+        .iter()
+        .filter(|l| effective(l.boundary, residency) == Boundary::Staged)
+        .map(|l| l.elems_in * sb)
+        .max()
+        .unwrap_or(0);
+    let scratch = if scratch_len > 0 { alloc.take(scratch_len)? } else { 0 };
+
+    let out_len = sch.graph.output_elems() * sb;
+    let mut out = Vec::with_capacity(items as usize);
+    for _ in 0..items {
+        out.push((alloc.take(out_len)?, out_len));
+    }
+
+    Ok(PoolLayout { images, shared, entry, scratch, out, prestage: alloc.prestage })
+}
+
+/// Emit one unit: move the activation in, stage weights, parameterize,
+/// start. `loaded` tracks which kernel image each tile holds so repeat
+/// layers skip the upload.
+#[allow(clippy::too_many_arguments)]
+fn emit_unit(
+    a: &mut Asm,
+    nl: &mut u32,
+    sch: &Schedule,
+    pool: &PoolLayout,
+    residency: Residency,
+    unit: Unit,
+    loaded: &mut [Option<Kernel>],
+) {
+    let mut lbl = |p: &str| {
+        *nl += 1;
+        format!("{p}{nl}")
+    };
+    let sew = sch.graph.sew;
+    let plan = &sch.layers[unit.layer];
+    let t = unit.tile;
+    let tb = bus::tile_base(t);
+
+    // Kernel upload (config mode maps the eMEM, so resident VRF data
+    // survives it).
+    if loaded[t] != Some(plan.kernel) {
+        let (_, addr, len, _) =
+            pool.images.iter().find(|(k, ..)| *k == plan.kernel).expect("image staged");
+        fw_tile_mode(a, t, true);
+        fw_dma(a, &lbl("k"), *addr, tb, *len, false);
+        fw_tile_mode(a, t, false);
+        loaded[t] = Some(plan.kernel);
+    }
+
+    // Activation movement.
+    match effective(plan.boundary, residency) {
+        Boundary::Entry => {
+            for &(addr, off, len) in &pool.entry[unit.item as usize] {
+                fw_dma(a, &lbl("i"), addr, tb + off, len, false);
+            }
+        }
+        Boundary::Resident => {
+            let src_t = tile_of(sch, unit.item, unit.layer - 1);
+            let chunks = output_chunks(sch.layers[unit.layer - 1].kernel, sew);
+            let (off, len) = chunks[0];
+            let (src, dst) = (bus::tile_base(src_t) + off, tb);
+            // Producer output already sits where the consumer reads it:
+            // the zero-DMA case residency exists for.
+            if src != dst {
+                fw_dma(a, &lbl("r"), src, dst, len, false);
+            }
+        }
+        Boundary::Staged => {
+            let src_t = tile_of(sch, unit.item, unit.layer - 1);
+            let src_tb = bus::tile_base(src_t);
+            let mut pack = 0u32;
+            for (off, len) in output_chunks(sch.layers[unit.layer - 1].kernel, sew) {
+                fw_dma(a, &lbl("c"), src_tb + off, pool.scratch + pack, len, false);
+                pack += len;
+            }
+            fw_dma(a, &lbl("u"), pool.scratch, tb, pack, false);
+        }
+    }
+    // Layer weights.
+    for &(addr, off, len) in &pool.shared[unit.layer] {
+        fw_dma(a, &lbl("w"), addr, tb + off, len, false);
+    }
+
+    // Parameterize and start (autonomous execution).
+    let (.., args) = pool.images.iter().find(|(k, ..)| *k == plan.kernel).expect("image staged");
+    fw_tile_mode(a, t, true);
+    for (i, &arg) in args.iter().enumerate() {
+        a.li(T0, (tb + ARG_OFFSET + 4 * i as u32) as i32).li(T1, arg as i32).sw(T1, 0, T0);
+    }
+    a.li(T0, (tb + CTL_OFFSET) as i32).li(T1, CTL_START as i32).sw(T1, 0, T0);
+    fw_tile_mode(a, t, false);
+}
+
+/// Build one step's firmware: all its units started, waited on, and — for
+/// final-layer units — drained chunk-by-chunk into the item's packed
+/// output region (chunk order is extraction order, so the packed bytes
+/// are exactly the canonical output).
+fn build_step(
+    sch: &Schedule,
+    pool: &PoolLayout,
+    residency: Residency,
+    units: &[Unit],
+    loaded: &mut [Option<Kernel>],
+) -> Result<Program, ModelError> {
+    let mut a = Asm::new(0);
+    let mut nl = 0u32;
+    fw_irq_mask(&mut a, 0);
+    for &unit in units {
+        emit_unit(&mut a, &mut nl, sch, pool, residency, unit, loaded);
+    }
+    for &unit in units {
+        nl += 1;
+        fw_wait_tile(&mut a, &format!("p{nl}"), unit.tile);
+    }
+    let last = sch.layers.len() - 1;
+    let sew = sch.graph.sew;
+    for &unit in units.iter().filter(|u| u.layer == last) {
+        let tb = bus::tile_base(unit.tile);
+        let (out_addr, _) = pool.out[unit.item as usize];
+        let mut pack = 0u32;
+        for (off, len) in output_chunks(sch.layers[last].kernel, sew) {
+            nl += 1;
+            fw_dma(&mut a, &format!("d{nl}"), tb + off, out_addr + pack, len, false);
+            pack += len;
+        }
+    }
+    a.ebreak();
+    let layer = units.first().map_or(0, |u| u.layer);
+    let prog = a.assemble().map_err(|e| ModelError::Assemble(format!("{e:?}")))?;
+    if prog.size() > BANK_SIZE {
+        return Err(ModelError::FirmwareTooLarge { layer, bytes: prog.size() });
+    }
+    Ok(prog)
+}
+
+/// Execute a compiled model schedule on a fresh scale-out SoC.
+pub fn run_model(sch: &Schedule, residency: Residency) -> Result<ModelRunResult, ModelError> {
+    let mut soc = Soc::scale_out(TileKind::Carus, sch.tiles as usize, 4);
+    run_model_on(&mut soc, sch, residency)
+}
+
+/// Execute a compiled model schedule on a caller-owned SoC replica (the
+/// serve worker entry point). The SoC is recycled first; panics if its
+/// tile configuration does not match the schedule.
+pub fn run_model_on(
+    soc: &mut Soc,
+    sch: &Schedule,
+    residency: Residency,
+) -> Result<ModelRunResult, ModelError> {
+    soc.recycle();
+    assert!(
+        soc.tiles.len() == sch.tiles as usize
+            && soc.tiles.iter().all(|t| t.kind() == TileKind::Carus),
+        "worker SoC ({} tiles) does not match the schedule ({} carus tiles)",
+        soc.tiles.len(),
+        sch.tiles
+    );
+    let items = sch.tiles; // one item per tile in both pipeline modes
+    let data: Vec<_> = (0..items).map(|i| sch.graph.golden_item(i)).collect();
+    let pool = build_pool(sch, residency, items, &data)?;
+    for (addr, bytes) in &pool.prestage {
+        soc.load_region(*addr, bytes);
+    }
+
+    // Step sequence: batch mode barriers every item per layer; layer mode
+    // walks each item through the tile chain before admitting the next
+    // (one item in flight — handoffs are tile-to-tile, not overlapped).
+    let nlayers = sch.layers.len();
+    let steps: Vec<Vec<Unit>> = match sch.pipeline {
+        Pipeline::Batch => (0..nlayers)
+            .map(|l| {
+                (0..items).map(|i| Unit { item: i, layer: l, tile: tile_of(sch, i, l) }).collect()
+            })
+            .collect(),
+        Pipeline::Layer => (0..items)
+            .flat_map(|i| {
+                (0..nlayers)
+                    .map(move |l| vec![Unit { item: i, layer: l, tile: tile_of(sch, i, l) }])
+            })
+            .collect(),
+    };
+
+    let mut layers: Vec<LayerRun> = sch
+        .layers
+        .iter()
+        .map(|l| LayerRun {
+            kernel: l.kernel,
+            boundary: effective(l.boundary, residency),
+            cycles: 0,
+            dma_active_cycles: 0,
+            dma_transfers: 0,
+        })
+        .collect();
+    let mut loaded: Vec<Option<Kernel>> = vec![None; sch.tiles as usize];
+
+    soc.reset_stats();
+    for units in &steps {
+        let layer = units[0].layer;
+        let prog = build_step(sch, &pool, residency, units, &mut loaded)?;
+        let before =
+            (soc.cycle, soc.dma.stats.active_cycles, soc.dma.stats.transfers);
+        soc.load_firmware(&prog, 0);
+        let (halt, _) = soc.run(run_timeout());
+        match halt {
+            Halt::Done => {}
+            Halt::Timeout => return Err(ModelError::Timeout { layer }),
+            Halt::Trap => return Err(ModelError::Trap { layer }),
+        }
+        layers[layer].cycles += soc.cycle - before.0;
+        layers[layer].dma_active_cycles += soc.dma.stats.active_cycles - before.1;
+        layers[layer].dma_transfers += soc.dma.stats.transfers - before.2;
+    }
+
+    // Drained outputs are packed valid bytes; assert them against the
+    // CPU-golden chain before reporting anything.
+    let mut outputs = Vec::with_capacity(items as usize);
+    for item in 0..items {
+        let (addr, len) = pool.out[item as usize];
+        let got = soc.dump_region(addr, len);
+        let expect = &data[item as usize].last().unwrap().expect;
+        assert_eq!(
+            &got, expect,
+            "item {item} output mismatch vs the CPU-golden chain ({} pipeline, {} boundaries)",
+            sch.pipeline.name(),
+            residency.name()
+        );
+        outputs.push(got);
+    }
+
+    let (resident_boundaries, staged_boundaries) =
+        layers.iter().skip(1).fold((0, 0), |(r, s), l| match l.boundary {
+            Boundary::Resident => (r + 1, s),
+            Boundary::Staged => (r, s + 1),
+            Boundary::Entry => (r, s),
+        });
+    Ok(ModelRunResult {
+        pipeline: sch.pipeline,
+        residency,
+        tiles: sch.tiles,
+        items,
+        cycles: soc.cycle,
+        energy: soc.energy(),
+        dma_active_cycles: soc.dma.stats.active_cycles,
+        dma_transfers: soc.dma.stats.transfers,
+        bus_txns: soc.counters.bus_txns,
+        contention_cycles: soc.counters.cpu_wait_cycles + soc.counters.slave_stall_cycles,
+        tile_busy: soc.tile_busy.clone(),
+        layers,
+        resident_boundaries,
+        staged_boundaries,
+        outputs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{compile, Graph, CANONICAL};
+    use crate::isa::Sew;
+
+    #[test]
+    fn canonical_chain_runs_resident_and_saves_dma() {
+        let g = Graph::parse(CANONICAL, Sew::E8, 7).unwrap();
+        for pipeline in Pipeline::ALL {
+            let sch = compile(&g, 2, pipeline).unwrap();
+            let resident = run_model(&sch, Residency::Auto).unwrap();
+            let staged = run_model(&sch, Residency::ForceStaged).unwrap();
+            assert_eq!(resident.outputs, staged.outputs, "{pipeline:?}");
+            assert_eq!(resident.resident_boundaries, 3);
+            assert_eq!(staged.resident_boundaries, 0);
+            assert!(
+                resident.dma_active_cycles < staged.dma_active_cycles,
+                "{pipeline:?}: resident {} !< staged {}",
+                resident.dma_active_cycles,
+                staged.dma_active_cycles
+            );
+        }
+    }
+
+    #[test]
+    fn staged_fallback_still_matches_golden() {
+        // A mid-chain maxpool output is multi-chunk: its consumer must
+        // take the host-staging fallback even under Residency::Auto.
+        let g = Graph::parse("matmul:p=32,maxpool,relu", Sew::E8, 11).unwrap();
+        let sch = compile(&g, 2, Pipeline::Layer).unwrap();
+        let res = run_model(&sch, Residency::Auto).unwrap();
+        assert_eq!(res.staged_boundaries, 1);
+        assert_eq!(res.resident_boundaries, 1);
+        assert_eq!(res.outputs[0], g.golden_item(0).last().unwrap().expect);
+    }
+}

@@ -88,7 +88,7 @@ fn request(rng: &mut Rng, id: u64, fl: &Flavor) -> Request {
     } else {
         fl.kernel
     };
-    Request { id, target: fl.target, kernel, sew: fl.sew, seed: rng.next_u64() }
+    Request { id, target: fl.target, kernel, sew: fl.sew, seed: rng.next_u64(), model: None }
 }
 
 /// Exponential inter-arrival gap by inverse CDF. `ln` goes through the
@@ -231,9 +231,9 @@ mod tests {
             for w in a.windows(2) {
                 assert!(w[0].0 <= w[1].0, "{kind:?}: sorted by arrival");
             }
-            let ids: Vec<u64> = a.iter().map(|&(_, r)| r.id).collect();
+            let ids: Vec<u64> = a.iter().map(|(_, r)| r.id).collect();
             assert_eq!(ids, (1..=64).collect::<Vec<u64>>(), "{kind:?}");
-            for &(_, r) in &a {
+            for (_, r) in &a {
                 assert_ne!(r.target, Target::Cpu);
                 assert_eq!(r.kernel.validate(r.target, r.sew), Ok(()), "{r:?}");
             }
@@ -251,7 +251,7 @@ mod tests {
                 coalescible_adjacent += 1;
             }
         }
-        for &(_, r) in &trace {
+        for (_, r) in &trace {
             families.insert(r.kernel.family());
             targets.insert(r.target);
         }

@@ -41,6 +41,14 @@
 //!   order is not deterministic, so live responses report the simulated
 //!   batch makespan as their latency.
 //!
+//! Request lines speak the unified [`crate::spec`] vocabulary (one
+//! parser for the `(target, family, sew, n, p, f, seed)` tuple across
+//! every surface), and a line may instead carry `{"model": ...}` — a
+//! multi-layer graph spec ([`Graph::parse`]) compiled onto the service's
+//! tiles and executed by the resident-tensor pipeline executor
+//! ([`pipeline::run_model_on`]), answered with a per-layer cycle
+//! breakdown ([`Response::ModelOk`]).
+//!
 //! A malformed or overload-rejected request must never take the service
 //! down: every planner failure is a typed [`sched::SchedError`] since the
 //! staging paths were hardened (see [`sched`]), and the executor
@@ -56,16 +64,19 @@ use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
-use crate::fuzz::{
-    family_slug, json_escape, json_str, json_u64, kernel_from, shape_of, target_slug,
-};
+use crate::graph::{self, Graph, Pipeline};
 use crate::isa::Sew;
-use crate::kernels::{Family, Kernel, Target};
-use crate::sched::{self, plan_jobs, run_planned, run_planned_on, BatchRunResult};
+use crate::kernels::{Kernel, Target};
+use crate::sched::{self, pipeline, plan_jobs, run_planned, run_planned_on, BatchRunResult};
 use crate::soc::{Soc, TileKind};
+use crate::spec::{
+    family_slug, json_escape, json_str, json_u64, schemas, sew_from_bits, shape_of, target_slug,
+    JobSpec, JsonSpecOptions,
+};
 
-/// Schema tag of the `--json` summary ([`summary_json`]).
-pub const SUMMARY_SCHEMA: &str = "heeperator-serve-v1";
+/// Schema tag of the `--json` summary ([`summary_json`]) — the canonical
+/// constant lives in [`crate::spec::schemas`].
+pub use crate::spec::schemas::SERVE_SUMMARY as SUMMARY_SCHEMA;
 
 /// Service configuration: tile count, admission bound, batching policy,
 /// and the live path's parallelism (worker pool + connection cap).
@@ -103,8 +114,9 @@ impl Default for ServeConfig {
     }
 }
 
-/// One admitted workload request.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// One admitted workload request: a single kernel job, or — when
+/// `model` is set — a multi-layer graph pipeline.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Request {
     pub id: u64,
     pub target: Target,
@@ -112,6 +124,19 @@ pub struct Request {
     pub sew: Sew,
     /// Golden-input seed (defaults to `id` when the line omits it).
     pub seed: u64,
+    /// `{"model": ...}` requests: the parsed graph payload, `Arc`-shared
+    /// so requests stay cheap to clone through the queue and batcher.
+    /// The kernel selectors above describe the graph's entry layer.
+    pub model: Option<Arc<ModelReq>>,
+}
+
+/// The graph payload of a `{"model": ...}` request. Compiled onto the
+/// service's tile count at execution time ([`graph::compile`]), so one
+/// request line works for any `--tiles` the service runs with.
+#[derive(Debug, PartialEq, Eq)]
+pub struct ModelReq {
+    pub graph: Graph,
+    pub pipeline: Pipeline,
 }
 
 /// One per-request JSONL response.
@@ -121,6 +146,19 @@ pub enum Response {
     /// reference. `latency_cycles` is arrival→completion on the
     /// virtual-time path and the batch makespan on the live path.
     Ok { id: u64, latency_cycles: u64, batch: u32, batch_cycles: u64 },
+    /// A `{"model": ...}` request ran byte-identical to its CPU-golden
+    /// chain: the per-layer cycle breakdown plus the boundary mix that
+    /// actually executed.
+    ModelOk {
+        id: u64,
+        latency_cycles: u64,
+        cycles: u64,
+        dma_active_cycles: u64,
+        resident_boundaries: u32,
+        staged_boundaries: u32,
+        /// Per layer: (kernel slug, boundary name, cycles).
+        layers: Vec<(&'static str, &'static str, u64)>,
+    },
     /// Admission control: the bounded queue was full on arrival.
     Rejected { id: u64, queue_depth: usize },
     /// Connection-level admission (TCP): the `--conns` cap was reached,
@@ -136,6 +174,7 @@ impl Response {
     pub fn id(&self) -> u64 {
         match self {
             Response::Ok { id, .. }
+            | Response::ModelOk { id, .. }
             | Response::Rejected { id, .. }
             | Response::Error { id, .. } => *id,
             Response::Busy { .. } => 0,
@@ -149,6 +188,30 @@ impl Response {
                 "{{\"id\":{id},\"status\":\"ok\",\"latency_cycles\":{latency_cycles},\
                  \"batch\":{batch},\"batch_cycles\":{batch_cycles}}}"
             ),
+            Response::ModelOk {
+                id,
+                latency_cycles,
+                cycles,
+                dma_active_cycles,
+                resident_boundaries,
+                staged_boundaries,
+                layers,
+            } => {
+                let per: Vec<String> = layers
+                    .iter()
+                    .map(|(k, b, c)| {
+                        format!("{{\"kernel\":\"{k}\",\"boundary\":\"{b}\",\"cycles\":{c}}}")
+                    })
+                    .collect();
+                format!(
+                    "{{\"id\":{id},\"status\":\"ok\",\"kind\":\"model\",\
+                     \"latency_cycles\":{latency_cycles},\"cycles\":{cycles},\
+                     \"dma_active_cycles\":{dma_active_cycles},\
+                     \"resident_boundaries\":{resident_boundaries},\
+                     \"staged_boundaries\":{staged_boundaries},\"layers\":[{}]}}",
+                    per.join(",")
+                )
+            }
             Response::Rejected { id, queue_depth } => format!(
                 "{{\"id\":{id},\"status\":\"rejected\",\"reason\":\"overload\",\
                  \"queue_depth\":{queue_depth}}}"
@@ -163,36 +226,67 @@ impl Response {
     }
 }
 
-/// Parse one JSONL request line. Required keys: `id`, `target`,
-/// `family`, `sew`; optional: `n`/`p`/`f` (shape dims, default 0) and
-/// `seed` (default `id`). Shape validation runs here so an invalid
-/// request is answered immediately and can never poison a batch.
+/// Parse one JSONL request line through the unified [`crate::spec`]
+/// vocabulary. Required keys: `id`, then either kernel selectors
+/// (`target`, `family`, `sew`; optional `n`/`p`/`f` shape dims, default
+/// 0) or `model` (a graph spec string, see [`Graph::parse`], with
+/// optional `sew` defaulting to 8 and `pipeline` defaulting to `layer`);
+/// `seed` defaults to `id` on both forms. A line stamped with a
+/// mismatched `schema` tag is rejected outright ([`schemas::check`]).
+/// Shape validation runs here so an invalid request is answered
+/// immediately and can never poison a batch.
 pub fn parse_request(line: &str) -> Result<Request, String> {
+    schemas::check(line, schemas::SERVE_REQUEST, false).map_err(|e| e.to_string())?;
     let id = json_u64(line, "id")?;
-    let t = json_str(line, "target")?;
-    let target = Target::parse(t).ok_or_else(|| format!("unknown target {t:?}"))?;
-    if target == Target::Cpu {
+    // Model requests: a graph spec string instead of kernel selectors.
+    if let Ok(spec) = json_str(line, "model") {
+        let sew = sew_from_bits(json_u64(line, "sew").unwrap_or(8)).map_err(|e| e.to_string())?;
+        let pl = match json_str(line, "pipeline") {
+            Ok(p) => Pipeline::parse(p).ok_or_else(|| format!("unknown pipeline {p:?}"))?,
+            Err(_) => Pipeline::Layer,
+        };
+        let seed = json_u64(line, "seed").unwrap_or(id);
+        let g = Graph::parse(spec, sew, seed).map_err(|e| format!("bad model: {e}"))?;
+        let kernel = g.layers[0];
+        return Ok(Request {
+            id,
+            target: Target::Carus,
+            kernel,
+            sew,
+            seed,
+            model: Some(Arc::new(ModelReq { graph: g, pipeline: pl })),
+        });
+    }
+    let opt = JsonSpecOptions { seed_key: "seed", default_seed: Some(id), require_dims: false };
+    let spec = JobSpec::parse_json(line, &opt).map_err(|e| e.to_string())?;
+    if spec.target == Target::Cpu {
         return Err("the CPU is the host, never a serve target".to_string());
     }
-    let fam = json_str(line, "family")?;
-    let family = Family::parse(fam).ok_or_else(|| format!("unknown family {fam:?}"))?;
-    let sew = match json_u64(line, "sew")? {
-        8 => Sew::E8,
-        16 => Sew::E16,
-        32 => Sew::E32,
-        b => return Err(format!("unknown sew {b} (expected 8, 16, or 32)")),
-    };
-    let dim = |key| json_u64(line, key).unwrap_or(0) as u32;
-    let kernel = kernel_from(family, dim("n"), dim("p"), dim("f"));
-    kernel.validate(target, sew).map_err(|e| format!("invalid shape: {e}"))?;
-    let seed = json_u64(line, "seed").unwrap_or(id);
-    Ok(Request { id, target, kernel, sew, seed })
+    spec.validate().map_err(|e| e.to_string())?;
+    Ok(Request {
+        id,
+        target: spec.target,
+        kernel: spec.kernel,
+        sew: spec.sew,
+        seed: spec.seed,
+        model: None,
+    })
 }
 
 /// Render a request back to its JSONL line (the exact inverse of
 /// [`parse_request`]) — the load generator and tests feed the live path
 /// through this.
 pub fn render_request(r: &Request) -> String {
+    if let Some(m) = &r.model {
+        return format!(
+            "{{\"id\":{},\"model\":\"{}\",\"sew\":{},\"pipeline\":\"{}\",\"seed\":{}}}",
+            r.id,
+            json_escape(&m.graph.spec_string()),
+            r.sew.bits(),
+            m.pipeline.name(),
+            r.seed
+        );
+    }
     let (n, p, f) = shape_of(r.kernel);
     format!(
         "{{\"id\":{},\"target\":\"{}\",\"family\":\"{}\",\"sew\":{},\"n\":{n},\"p\":{p},\
@@ -211,6 +305,11 @@ pub fn render_request(r: &Request) -> String {
 /// NM-Caesar tiles replay one rendered micro-op stream per tile, so they
 /// require the exact kernel.
 pub fn coalescible(a: &Request, b: &Request) -> bool {
+    // A model request owns the whole tile array for its pipeline's
+    // duration — it always runs as a batch of one.
+    if a.model.is_some() || b.model.is_some() {
+        return false;
+    }
     if a.target != b.target || a.sew != b.sew {
         return false;
     }
@@ -220,16 +319,73 @@ pub fn coalescible(a: &Request, b: &Request) -> bool {
     }
 }
 
-/// Compile and co-simulate one coalesced batch. Planner failures come
-/// back as the typed [`sched::SchedError`] message; a panic inside the
-/// co-simulation (a modeling bug — `run_planned` asserts golden
+/// What one closed batch produced: a coalesced kernel-batch result, or a
+/// single model-pipeline run (model requests never coalesce). The
+/// accessors express the small shared surface the service loops need, so
+/// the batching/stats/response code stays payload-agnostic.
+enum Ran {
+    Batch(Box<BatchRunResult>),
+    Model(Box<pipeline::ModelRunResult>),
+}
+
+impl Ran {
+    /// Simulated makespan of whatever ran.
+    fn cycles(&self) -> u64 {
+        match self {
+            Ran::Batch(r) => r.cycles,
+            Ran::Model(r) => r.cycles,
+        }
+    }
+
+    /// Busy cycles tile `i` contributed (0 out of range).
+    fn tile_busy(&self, i: usize) -> u64 {
+        match self {
+            Ran::Batch(r) => r.per_tile.get(i).map_or(0, |t| t.busy_cycles),
+            Ran::Model(r) => r.tile_busy.get(i).copied().unwrap_or(0),
+        }
+    }
+
+    /// The per-request response for one member of the closed batch.
+    fn response(&self, id: u64, latency_cycles: u64, batch: u32) -> Response {
+        match self {
+            Ran::Batch(r) => Response::Ok { id, latency_cycles, batch, batch_cycles: r.cycles },
+            Ran::Model(r) => Response::ModelOk {
+                id,
+                latency_cycles,
+                cycles: r.cycles,
+                dma_active_cycles: r.dma_active_cycles,
+                resident_boundaries: r.resident_boundaries,
+                staged_boundaries: r.staged_boundaries,
+                layers: r
+                    .layers
+                    .iter()
+                    .map(|l| (family_slug(l.kernel.family()), l.boundary.name(), l.cycles))
+                    .collect(),
+            },
+        }
+    }
+}
+
+/// Compile and co-simulate one coalesced batch. Planner and graph-compile
+/// failures come back as the typed error message; a panic inside the
+/// co-simulation (a modeling bug — both executors assert golden
 /// byte-identity) is caught so the service answers instead of dying.
-fn execute(batch: &[Request], tiles: usize) -> Result<BatchRunResult, String> {
+fn execute(batch: &[Request], tiles: usize) -> Result<Ran, String> {
+    if let Some(m) = &batch[0].model {
+        let sch = graph::compile(&m.graph, tiles as u32, m.pipeline).map_err(|e| e.to_string())?;
+        return std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pipeline::run_model(&sch, pipeline::Residency::Auto)
+        }))
+        .map_err(|_| "internal: co-simulation panicked (modeling bug)".to_string())?
+        .map(|r| Ran::Model(Box::new(r)))
+        .map_err(|e| e.to_string());
+    }
     let jobs: Vec<(Kernel, u64)> = batch.iter().map(|r| (r.kernel, r.seed)).collect();
     let plan = plan_jobs(batch[0].target, batch[0].sew, &jobs, tiles)
         .map_err(|e: sched::SchedError| e.to_string())?;
     std::panic::catch_unwind(AssertUnwindSafe(|| run_planned(&plan)))
         .map_err(|_| "internal: co-simulation panicked (modeling bug)".to_string())
+        .map(|r| Ran::Batch(Box::new(r)))
 }
 
 /// Accumulated service statistics — everything the summary reports.
@@ -387,7 +543,7 @@ pub fn run_trace(
     loop {
         // Admission: every arrival the clock has passed, in trace order.
         while next < trace.len() && trace[next].0 <= now {
-            let (at, req) = trace[next];
+            let (at, req) = trace[next].clone();
             next += 1;
             if queue.len() >= cfg.queue_cap {
                 stats.rejected += 1;
@@ -422,40 +578,35 @@ pub fn run_trace(
         }
 
         // Close the longest head-compatible prefix (FIFO: no reordering).
-        let head = queue[0].1;
+        let head = queue[0].1.clone();
         let mut take = 1;
         while take < queue.len().min(cfg.max_batch) && coalescible(&head, &queue[take].1) {
             take += 1;
         }
         stats.depth_samples.push(queue.len() as u32);
         let batch: Vec<(u64, Request)> = queue.drain(..take).collect();
-        let reqs: Vec<Request> = batch.iter().map(|&(_, r)| r).collect();
+        let reqs: Vec<Request> = batch.iter().map(|(_, r)| r.clone()).collect();
         match execute(&reqs, cfg.tiles) {
             Ok(res) => {
-                let end = now + res.cycles;
+                let end = now + res.cycles();
                 stats.batches += 1;
                 stats.batch_sizes.push(reqs.len() as u32);
-                stats.busy_window += res.cycles;
+                stats.busy_window += res.cycles();
                 for (i, busy) in stats.tile_busy.iter_mut().enumerate() {
-                    *busy += res.per_tile.get(i).map_or(0, |t| t.busy_cycles);
+                    *busy += res.tile_busy(i);
                 }
-                for &(at, r) in &batch {
+                for (at, r) in &batch {
                     let lat = end - at;
                     stats.completed += 1;
                     stats.latencies.push(lat);
-                    on_response(&Response::Ok {
-                        id: r.id,
-                        latency_cycles: lat,
-                        batch: reqs.len() as u32,
-                        batch_cycles: res.cycles,
-                    });
+                    on_response(&res.response(r.id, lat, reqs.len() as u32));
                 }
                 now = end;
             }
             Err(e) => {
                 // Planning is host-side and cheap; an errored batch
                 // consumes no simulated time, only its queue slots.
-                for &(_, r) in &batch {
+                for (_, r) in &batch {
                     stats.errored += 1;
                     on_response(&Response::Error { id: r.id, error: e.clone() });
                 }
@@ -561,33 +712,28 @@ pub fn run_closed(cfg: &ServeConfig, seed: u64, budget: u32) -> (ServeStats, Vec
         }
 
         // Close the longest head-compatible prefix (FIFO: no reordering).
-        let head = queue[0].2;
+        let head = queue[0].2.clone();
         let mut take = 1;
         while take < queue.len().min(cfg.max_batch) && coalescible(&head, &queue[take].2) {
             take += 1;
         }
         stats.depth_samples.push(queue.len() as u32);
         let batch: Vec<(u64, usize, Request)> = queue.drain(..take).collect();
-        let reqs: Vec<Request> = batch.iter().map(|&(_, _, r)| r).collect();
+        let reqs: Vec<Request> = batch.iter().map(|(_, _, r)| r.clone()).collect();
         match execute(&reqs, cfg.tiles) {
             Ok(res) => {
-                let end = now + res.cycles;
+                let end = now + res.cycles();
                 stats.batches += 1;
                 stats.batch_sizes.push(reqs.len() as u32);
-                stats.busy_window += res.cycles;
+                stats.busy_window += res.cycles();
                 for (i, busy) in stats.tile_busy.iter_mut().enumerate() {
-                    *busy += res.per_tile.get(i).map_or(0, |t| t.busy_cycles);
+                    *busy += res.tile_busy(i);
                 }
-                for &(at, i, r) in &batch {
+                for &(at, i, ref r) in &batch {
                     let lat = end - at;
                     stats.completed += 1;
                     stats.latencies.push(lat);
-                    responses.push(Response::Ok {
-                        id: r.id,
-                        latency_cycles: lat,
-                        batch: reqs.len() as u32,
-                        batch_cycles: res.cycles,
-                    });
+                    responses.push(res.response(r.id, lat, reqs.len() as u32));
                     // The response releases the client: reset its
                     // backoff, think, submit again (budget permitting).
                     clients[i].reset();
@@ -600,7 +746,7 @@ pub fn run_closed(cfg: &ServeConfig, seed: u64, budget: u32) -> (ServeStats, Vec
             Err(e) => {
                 // Planning is host-side and cheap; an errored batch
                 // consumes no simulated time, only its queue slots.
-                for &(_, i, r) in &batch {
+                for &(_, i, ref r) in &batch {
                     stats.errored += 1;
                     responses.push(Response::Error { id: r.id, error: e.clone() });
                     clients[i].reset();
@@ -649,13 +795,25 @@ impl WorkerSocs {
 /// timing/energy is bit-identical to fresh construction (locked in by a
 /// [`sched`] unit test) — only the wall-clock cost of rebuilding the
 /// memory arrays per batch is saved, and workers run in parallel.
-fn execute_on(socs: &mut WorkerSocs, batch: &[Request]) -> Result<BatchRunResult, String> {
+fn execute_on(socs: &mut WorkerSocs, batch: &[Request]) -> Result<Ran, String> {
+    if let Some(m) = &batch[0].model {
+        let sch =
+            graph::compile(&m.graph, socs.tiles as u32, m.pipeline).map_err(|e| e.to_string())?;
+        let soc = socs.soc_for(TileKind::Carus);
+        return std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pipeline::run_model_on(soc, &sch, pipeline::Residency::Auto)
+        }))
+        .map_err(|_| "internal: co-simulation panicked (modeling bug)".to_string())?
+        .map(|r| Ran::Model(Box::new(r)))
+        .map_err(|e| e.to_string());
+    }
     let jobs: Vec<(Kernel, u64)> = batch.iter().map(|r| (r.kernel, r.seed)).collect();
     let plan = plan_jobs(batch[0].target, batch[0].sew, &jobs, socs.tiles)
         .map_err(|e: sched::SchedError| e.to_string())?;
     let soc = socs.soc_for(plan.kind());
     std::panic::catch_unwind(AssertUnwindSafe(|| run_planned_on(soc, &plan)))
         .map_err(|_| "internal: co-simulation panicked (modeling bug)".to_string())
+        .map(|r| Ran::Batch(Box::new(r)))
 }
 
 struct ConnOutInner<'env> {
@@ -821,7 +979,7 @@ impl<'env> LiveCore<'env> {
                     continue;
                 }
             }
-            let head = st.queue[0].req;
+            let head = st.queue[0].req.clone();
             let mut take = 1;
             while take < st.queue.len().min(self.cfg.max_batch)
                 && coalescible(&head, &st.queue[take].req)
@@ -835,7 +993,7 @@ impl<'env> LiveCore<'env> {
             // and any idle worker that can claim the new head.
             self.work.notify_all();
 
-            let reqs: Vec<Request> = batch.iter().map(|a| a.req).collect();
+            let reqs: Vec<Request> = batch.iter().map(|a| a.req.clone()).collect();
             let result = execute_on(&mut socs, &reqs);
             let mut stats = self.stats.lock().unwrap();
             stats.depth_samples.push(depth);
@@ -843,25 +1001,20 @@ impl<'env> LiveCore<'env> {
                 Ok(res) => {
                     stats.batches += 1;
                     stats.batch_sizes.push(reqs.len() as u32);
-                    stats.busy_window += res.cycles;
-                    stats.sim_cycles += res.cycles;
+                    stats.busy_window += res.cycles();
+                    stats.sim_cycles += res.cycles();
                     for (i, busy) in stats.tile_busy.iter_mut().enumerate() {
-                        *busy += res.per_tile.get(i).map_or(0, |t| t.busy_cycles);
+                        *busy += res.tile_busy(i);
                     }
                     stats.completed += reqs.len() as u64;
-                    stats.latencies.extend(std::iter::repeat_n(res.cycles, reqs.len()));
+                    stats.latencies.extend(std::iter::repeat_n(res.cycles(), reqs.len()));
                 }
                 Err(_) => stats.errored += reqs.len() as u64,
             }
             drop(stats);
             for a in &batch {
                 let resp = match &result {
-                    Ok(res) => Response::Ok {
-                        id: a.req.id,
-                        latency_cycles: res.cycles,
-                        batch: reqs.len() as u32,
-                        batch_cycles: res.cycles,
-                    },
+                    Ok(res) => res.response(a.req.id, res.cycles(), reqs.len() as u32),
                     Err(e) => Response::Error { id: a.req.id, error: e.clone() },
                 };
                 a.dest.deliver(a.seq, resp.render());
@@ -970,8 +1123,9 @@ pub fn serve_tcp(
 // Live throughput smoke (`--throughput`)
 // ---------------------------------------------------------------------
 
-/// Schema tag of the `--throughput` report ([`throughput_json`]).
-pub const LIVE_SCHEMA: &str = "heeperator-serve-live-v1";
+/// Schema tag of the `--throughput` report ([`throughput_json`]) — the
+/// canonical constant lives in [`crate::spec::schemas`].
+pub use crate::spec::schemas::SERVE_LIVE as LIVE_SCHEMA;
 
 /// Result of one self-contained live throughput run ([`throughput`]).
 #[derive(Debug, Clone)]
@@ -1053,7 +1207,7 @@ mod tests {
     use super::*;
 
     fn req(id: u64, target: Target, kernel: Kernel, sew: Sew) -> Request {
-        Request { id, target, kernel, sew, seed: id }
+        Request { id, target, kernel, sew, seed: id, model: None }
     }
 
     #[test]
@@ -1083,10 +1237,49 @@ mod tests {
             (r#"{"id":1,"target":"carus","family":"add","sew":7,"n":64}"#, "sew"),
             (r#"{"id":1,"target":"carus","family":"add","sew":8,"n":0}"#, "invalid shape"),
             ("not json at all", "id"),
+            (r#"{"id":1,"model":"matmul:p=32,gemm:p=8"}"#, "bad model"),
+            (r#"{"id":1,"model":"matmul:p=32,relu","sew":7}"#, "sew"),
+            (r#"{"id":1,"model":"matmul:p=32,relu","pipeline":"spiral"}"#, "pipeline"),
+            (r#"{"schema":"heeperator-bench-v1","id":1,"model":"matmul:p=32,relu"}"#, "schema"),
         ];
         for (line, needle) in bad {
             let e = parse_request(line).unwrap_err();
             assert!(e.contains(needle), "{line} -> {e}");
+        }
+        // The request schema tag itself is accepted (it is optional).
+        let tagged = format!(
+            "{{\"schema\":\"{}\",\"id\":1,\"target\":\"carus\",\"family\":\"add\",\
+             \"sew\":8,\"n\":64}}",
+            schemas::SERVE_REQUEST
+        );
+        assert!(parse_request(&tagged).is_ok());
+    }
+
+    #[test]
+    fn model_requests_roundtrip_and_answer_per_layer_breakdowns() {
+        let line =
+            r#"{"id":3,"model":"matmul:p=32,add,relu,maxpool","sew":8,"pipeline":"batch","seed":9}"#;
+        let r = parse_request(line).unwrap();
+        let m = r.model.as_ref().expect("parsed as a model request");
+        assert_eq!(m.graph.layers.len(), 4);
+        assert_eq!(m.pipeline, Pipeline::Batch);
+        assert_eq!(r.seed, 9);
+        // Round-trips through the renderer, and never shares a batch.
+        assert_eq!(parse_request(&render_request(&r)).unwrap(), r);
+        let k = req(4, Target::Carus, Kernel::Matmul { p: 32 }, Sew::E8);
+        assert!(!coalescible(&r, &k) && !coalescible(&k, &r) && !coalescible(&r, &r));
+        // End to end on the virtual clock: one per-layer breakdown answer.
+        let cfg = ServeConfig { tiles: 2, ..Default::default() };
+        let mut responses = Vec::new();
+        let stats = run_trace(&cfg, &[(0, r)], |x| responses.push(x.clone()));
+        assert_eq!((stats.completed, stats.errored), (1, 0));
+        assert!(matches!(
+            &responses[0],
+            Response::ModelOk { id: 3, resident_boundaries: 3, layers, .. } if layers.len() == 4
+        ));
+        let rendered = responses[0].render();
+        for key in ["\"kind\":\"model\"", "\"layers\":[", "\"boundary\":\"resident\""] {
+            assert!(rendered.contains(key), "{rendered}");
         }
     }
 

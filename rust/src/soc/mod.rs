@@ -387,6 +387,10 @@ impl Soc {
         self.code_base = prog.base;
         self.code = prog.words.iter().map(|w| decode(*w).expect("firmware decodes")).collect();
         self.cpu.pc = prog.base;
+        // A previous program's ebreak leaves the core Halted; loading new
+        // firmware un-halts it so multi-phase drivers (the per-layer model
+        // pipeline) can run successive programs without a full recycle.
+        self.state = CpuState::Ready;
     }
 
     /// Load raw data at an absolute bus address (initialization; uncounted).

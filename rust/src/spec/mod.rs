@@ -1,0 +1,476 @@
+//! The unified job-spec vocabulary: one parse / validate / serialize path
+//! for the `(target, family, sew, n, p, f, seed)` tuple that every
+//! user-facing surface speaks.
+//!
+//! Before this module the repo carried three hand-rolled copies of that
+//! tuple's wire format — the serve JSONL request parser, the
+//! `sweep`/`scale`/`fuzz` CLI selector resolution, and the fuzz repro
+//! JSON — each with its own defaulting and error behavior. They now all
+//! route through [`JobSpec`]:
+//!
+//! - **serve** ([`crate::serve`]): [`JobSpec::parse_json`] with
+//!   per-request seed defaulting ([`JsonSpecOptions::default_seed`]).
+//! - **CLI selectors** ([`JobSpec::from_selectors`]): paper-default shape
+//!   fallback via [`Kernel::with_shape`], exactly like `heeperator sweep`.
+//! - **fuzz repro files** ([`JobSpec::parse_json`] with
+//!   [`JsonSpecOptions::require_dims`]): exact shapes, no defaults.
+//!
+//! The [`schemas`] submodule is the single home of every versioned wire
+//! schema tag; [`schemas::check`] turns a mismatched `schema` field into
+//! the typed [`SpecError::Schema`] instead of best-effort parsing.
+
+use crate::isa::Sew;
+use crate::kernels::{Family, Kernel, Target};
+
+/// Versioned wire-schema tags. Every JSON artifact the binary reads or
+/// writes carries exactly one of these in its `schema` field.
+pub mod schemas {
+    use super::SpecError;
+
+    /// `heeperator serve --selftest --json` summary.
+    pub const SERVE_SUMMARY: &str = "heeperator-serve-v1";
+    /// `heeperator serve` JSONL request line. Optional on the wire —
+    /// requests predate the tag — but a *wrong* tag is rejected.
+    pub const SERVE_REQUEST: &str = "heeperator-serve-req-v1";
+    /// `heeperator serve --throughput --json` live-throughput summary.
+    pub const SERVE_LIVE: &str = "heeperator-serve-live-v1";
+    /// `heeperator fuzz` replayable repro file.
+    pub const FUZZ_REPRO: &str = "heeperator-fuzz-repro-v1";
+    /// `heeperator scale --json` / CI bench summary.
+    pub const BENCH: &str = "heeperator-bench-v1";
+    /// `heeperator model --json` graph-pipeline summary.
+    pub const MODEL: &str = "heeperator-model-v1";
+
+    /// Check a document's `schema` field against the expected tag.
+    ///
+    /// `required` surfaces (repro files, summaries) fail on a missing
+    /// field; optional surfaces (serve request lines, which predate the
+    /// tag) accept its absence but still reject a *wrong* value — a
+    /// request stamped for a different protocol version must never be
+    /// half-parsed.
+    pub fn check(doc: &str, expected: &'static str, required: bool) -> Result<(), SpecError> {
+        match super::json_str(doc, "schema") {
+            Ok(got) if got == expected => Ok(()),
+            Ok(got) => Err(SpecError::Schema { got: got.to_string(), expected }),
+            Err(e) if required => Err(SpecError::Bad { field: "schema", reason: e }),
+            Err(_) => Ok(()),
+        }
+    }
+}
+
+/// Typed spec-layer error. Shared by every parsing surface so a given
+/// malformation produces the same diagnosis everywhere.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SpecError {
+    /// A required field is absent.
+    Missing(&'static str),
+    /// A field is present but unusable (wrong type, unknown spelling…).
+    Bad { field: &'static str, reason: String },
+    /// The document's `schema` tag names a different format/version.
+    Schema { got: String, expected: &'static str },
+    /// The shape parsed but fails the target's staging envelope.
+    InvalidShape { kernel: Kernel, reason: String },
+}
+
+impl std::fmt::Display for SpecError {
+    fn fmt(&self, fm: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpecError::Missing(field) => write!(fm, "missing field {field:?}"),
+            SpecError::Bad { field, reason } => write!(fm, "bad {field:?}: {reason}"),
+            SpecError::Schema { got, expected } => {
+                write!(fm, "unknown schema {got:?} (expected {expected:?})")
+            }
+            SpecError::InvalidShape { kernel, reason } => {
+                write!(fm, "invalid shape {kernel:?}: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+/// One fully-resolved job description: which engine runs which kernel
+/// shape at which element width, on which deterministic input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct JobSpec {
+    pub target: Target,
+    pub kernel: Kernel,
+    pub sew: Sew,
+    pub seed: u64,
+}
+
+/// Knobs for [`JobSpec::parse_json`] — the per-surface defaulting policy,
+/// named so each call site documents which wire format it speaks.
+#[derive(Debug, Clone, Copy)]
+pub struct JsonSpecOptions {
+    /// Key carrying the workload seed (`"seed"` for requests,
+    /// `"spec_seed"` in repro files where `"seed"` is the fuzzer's own).
+    pub seed_key: &'static str,
+    /// Seed to use when the key is absent (`None` = field required).
+    pub default_seed: Option<u64>,
+    /// Require explicit `n`/`p`/`f` keys (repro files reproduce *exact*
+    /// shapes); otherwise absent dims default to 0 and surface through
+    /// [`JobSpec::validate`].
+    pub require_dims: bool,
+}
+
+impl JobSpec {
+    /// Resolve CLI selector strings (`--target`/`--family`/`--sew` plus
+    /// optional dimensions) into a spec, falling back to the paper's
+    /// Table V shape for any dimension not given — the `heeperator
+    /// sweep`/`scale`/`fuzz` entry point.
+    pub fn from_selectors(
+        target: &str,
+        family: &str,
+        sew_bits: u32,
+        n: Option<u32>,
+        p: Option<u32>,
+        f: Option<u32>,
+        seed: u64,
+    ) -> Result<JobSpec, SpecError> {
+        let target = Target::parse(target).ok_or_else(|| SpecError::Bad {
+            field: "target",
+            reason: format!("unknown target `{target}` (cpu, caesar, carus)"),
+        })?;
+        let family = Family::parse(family).ok_or_else(|| SpecError::Bad {
+            field: "family",
+            reason: format!("unknown family `{family}` (xor, add, …, maxpool)"),
+        })?;
+        let sew = sew_from_bits(sew_bits as u64)?;
+        let kernel = Kernel::with_shape(family, target, sew, n, p, f);
+        Ok(JobSpec { target, kernel, sew, seed })
+    }
+
+    /// Extract a spec from a flat JSON document (a serve request line or
+    /// a repro file). Pure extraction: shape legality is a separate
+    /// [`JobSpec::validate`] call so surfaces that must round-trip
+    /// illegal shapes (shrunken fuzz cases) can opt out.
+    pub fn parse_json(doc: &str, opt: &JsonSpecOptions) -> Result<JobSpec, SpecError> {
+        let target = json_str(doc, "target")
+            .map_err(|reason| SpecError::Bad { field: "target", reason })
+            .and_then(|s| {
+                Target::parse(s).ok_or_else(|| SpecError::Bad {
+                    field: "target",
+                    reason: format!("unknown target `{s}`"),
+                })
+            })?;
+        let family = json_str(doc, "family")
+            .map_err(|reason| SpecError::Bad { field: "family", reason })
+            .and_then(|s| {
+                Family::parse(s).ok_or_else(|| SpecError::Bad {
+                    field: "family",
+                    reason: format!("unknown family `{s}`"),
+                })
+            })?;
+        let sew = json_u64(doc, "sew")
+            .map_err(|reason| SpecError::Bad { field: "sew", reason })
+            .and_then(sew_from_bits)?;
+        let dim = |key: &'static str| -> Result<u32, SpecError> {
+            match json_u64(doc, key) {
+                Ok(v) => Ok(v as u32),
+                Err(_) if !opt.require_dims => Ok(0),
+                Err(reason) => Err(SpecError::Bad { field: key, reason }),
+            }
+        };
+        let kernel = kernel_from(family, dim("n")?, dim("p")?, dim("f")?);
+        let seed = match (json_u64(doc, opt.seed_key), opt.default_seed) {
+            (Ok(s), _) => s,
+            (Err(_), Some(d)) => d,
+            (Err(reason), None) => return Err(SpecError::Bad { field: "seed", reason }),
+        };
+        Ok(JobSpec { target, kernel, sew, seed })
+    }
+
+    /// Render the spec's JSON fields (without braces) in canonical order,
+    /// `sep` between fields — the one serializer every surface embeds.
+    pub fn render_json(&self, sep: &str, seed_key: &str) -> String {
+        let (n, p, f) = shape_of(self.kernel);
+        format!(
+            "\"target\": \"{}\",{sep}\"family\": \"{}\",{sep}\"sew\": {},{sep}\"n\": {n},{sep}\
+             \"p\": {p},{sep}\"f\": {f},{sep}\"{seed_key}\": {}",
+            target_slug(self.target),
+            family_slug(self.kernel.family()),
+            self.sew.bits(),
+            self.seed
+        )
+    }
+
+    /// Check the shape against the target's staging envelope.
+    pub fn validate(&self) -> Result<(), SpecError> {
+        self.kernel
+            .validate(self.target, self.sew)
+            .map_err(|reason| SpecError::InvalidShape { kernel: self.kernel, reason })
+    }
+}
+
+/// Map a `sew` bit count (8/16/32) to the element width.
+pub fn sew_from_bits(bits: u64) -> Result<Sew, SpecError> {
+    match bits {
+        8 => Ok(Sew::E8),
+        16 => Ok(Sew::E16),
+        32 => Ok(Sew::E32),
+        b => Err(SpecError::Bad { field: "sew", reason: format!("unknown sew {b}") }),
+    }
+}
+
+/// Wire spelling of a family (round-trips through [`Family::parse`]).
+pub fn family_slug(f: Family) -> &'static str {
+    match f {
+        Family::Xor => "xor",
+        Family::Add => "add",
+        Family::Mul => "mul",
+        Family::Matmul => "matmul",
+        Family::Gemm => "gemm",
+        Family::Conv2d => "conv2d",
+        Family::Relu => "relu",
+        Family::LeakyRelu => "leakyrelu",
+        Family::Maxpool => "maxpool",
+    }
+}
+
+/// Wire spelling of a target (round-trips through [`Target::parse`]).
+pub fn target_slug(t: Target) -> &'static str {
+    match t {
+        Target::Cpu => "cpu",
+        Target::Caesar => "caesar",
+        Target::Carus => "carus",
+    }
+}
+
+/// Exact kernel reconstruction from (family, dims) — the inverse of
+/// [`shape_of`]. Unlike [`Kernel::with_shape`] this never falls back to
+/// paper defaults: a wire document reproduces *exactly* its shape.
+pub fn kernel_from(family: Family, n: u32, p: u32, f: u32) -> Kernel {
+    match family {
+        Family::Xor => Kernel::Xor { n },
+        Family::Add => Kernel::Add { n },
+        Family::Mul => Kernel::Mul { n },
+        Family::Matmul => Kernel::Matmul { p },
+        Family::Gemm => Kernel::Gemm { p },
+        Family::Conv2d => Kernel::Conv2d { n, f },
+        Family::Relu => Kernel::Relu { n },
+        Family::LeakyRelu => Kernel::LeakyRelu { n },
+        Family::Maxpool => Kernel::Maxpool { n },
+    }
+}
+
+/// `(n, p, f)` of a kernel, zeros for unused dims.
+pub fn shape_of(k: Kernel) -> (u32, u32, u32) {
+    match k {
+        Kernel::Xor { n }
+        | Kernel::Add { n }
+        | Kernel::Mul { n }
+        | Kernel::Relu { n }
+        | Kernel::LeakyRelu { n }
+        | Kernel::Maxpool { n } => (n, 0, 0),
+        Kernel::Matmul { p } | Kernel::Gemm { p } => (0, p, 0),
+        Kernel::Conv2d { n, f } => (n, 0, f),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hand-rolled flat-JSON helpers (the repo is std-only: no serde). Shared
+// by every wire surface; values are extracted positionally from the
+// first occurrence of the key.
+// ---------------------------------------------------------------------------
+
+/// Escape a string for embedding in a JSON string literal.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a `u32` slice as a JSON array.
+pub fn json_list(xs: &[u32]) -> String {
+    let items: Vec<String> = xs.iter().map(u32::to_string).collect();
+    format!("[{}]", items.join(","))
+}
+
+/// Slice positioned at the raw value of `key` (after the colon).
+pub fn json_raw<'a>(s: &'a str, key: &str) -> Result<&'a str, String> {
+    let pat = format!("\"{key}\"");
+    let at = s.find(&pat).ok_or_else(|| format!("missing key {key:?}"))?;
+    let rest = &s[at + pat.len()..];
+    let rest = rest.trim_start();
+    let rest = rest.strip_prefix(':').ok_or_else(|| format!("malformed value for {key:?}"))?;
+    Ok(rest.trim_start())
+}
+
+/// Extract an unsigned integer value.
+pub fn json_u64(s: &str, key: &str) -> Result<u64, String> {
+    let raw = json_raw(s, key)?;
+    let end = raw.find(|c: char| !c.is_ascii_digit()).unwrap_or(raw.len());
+    raw[..end].parse::<u64>().map_err(|_| format!("{key:?} is not a number"))
+}
+
+/// Extract a string value (no unescaping — wire slugs are plain).
+pub fn json_str<'a>(s: &'a str, key: &str) -> Result<&'a str, String> {
+    let raw = json_raw(s, key)?;
+    let raw = raw.strip_prefix('"').ok_or_else(|| format!("{key:?} is not a string"))?;
+    let end = raw.find('"').ok_or_else(|| format!("unterminated string for {key:?}"))?;
+    Ok(&raw[..end])
+}
+
+/// Extract a boolean value.
+pub fn json_bool(s: &str, key: &str) -> Result<bool, String> {
+    let raw = json_raw(s, key)?;
+    if raw.starts_with("true") {
+        Ok(true)
+    } else if raw.starts_with("false") {
+        Ok(false)
+    } else {
+        Err(format!("{key:?} is not a bool"))
+    }
+}
+
+/// Extract a `u32` array value.
+pub fn json_u32_list(s: &str, key: &str) -> Result<Vec<u32>, String> {
+    let raw = json_raw(s, key)?;
+    let raw = raw.strip_prefix('[').ok_or_else(|| format!("{key:?} is not a list"))?;
+    let end = raw.find(']').ok_or_else(|| format!("unterminated list for {key:?}"))?;
+    let body = raw[..end].trim();
+    if body.is_empty() {
+        return Ok(Vec::new());
+    }
+    body.split(',')
+        .map(|x| x.trim().parse::<u32>().map_err(|_| format!("bad element in {key:?}")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_specs() -> Vec<JobSpec> {
+        let mut out = Vec::new();
+        for target in Target::ALL {
+            for family in Family::ALL {
+                for sew in Sew::ALL {
+                    let kernel = Kernel::paper_default(family, target, sew);
+                    out.push(JobSpec { target, kernel, sew, seed: 7 });
+                }
+            }
+        }
+        out
+    }
+
+    /// The serve-request surface: compact JSON, seed defaulted.
+    #[test]
+    fn json_roundtrip_request_surface() {
+        let opt = JsonSpecOptions { seed_key: "seed", default_seed: Some(0), require_dims: false };
+        for spec in all_specs() {
+            let doc = format!("{{{}}}", spec.render_json(" ", "seed"));
+            let back = JobSpec::parse_json(&doc, &opt).expect("round-trip parses");
+            assert_eq!(back, spec, "{doc}");
+        }
+    }
+
+    /// The repro-file surface: pretty JSON, exact dims required.
+    #[test]
+    fn json_roundtrip_repro_surface() {
+        let opt =
+            JsonSpecOptions { seed_key: "spec_seed", default_seed: None, require_dims: true };
+        for spec in all_specs() {
+            let doc = format!("{{\n  {}\n}}\n", spec.render_json("\n  ", "spec_seed"));
+            let back = JobSpec::parse_json(&doc, &opt).expect("round-trip parses");
+            assert_eq!(back, spec, "{doc}");
+        }
+    }
+
+    /// The CLI-selector surface: slugs resolve back to the same spec.
+    #[test]
+    fn selector_roundtrip_cli_surface() {
+        for spec in all_specs() {
+            let (n, p, f) = shape_of(spec.kernel);
+            let nz = |v: u32| (v != 0).then_some(v);
+            let back = JobSpec::from_selectors(
+                target_slug(spec.target),
+                family_slug(spec.kernel.family()),
+                spec.sew.bits(),
+                nz(n),
+                nz(p),
+                nz(f),
+                spec.seed,
+            )
+            .expect("selectors resolve");
+            assert_eq!(back, spec);
+        }
+    }
+
+    #[test]
+    fn missing_seed_defaults_or_errors() {
+        let doc = r#"{"target": "carus", "family": "relu", "sew": 8, "n": 256}"#;
+        let with_default =
+            JsonSpecOptions { seed_key: "seed", default_seed: Some(42), require_dims: false };
+        assert_eq!(JobSpec::parse_json(doc, &with_default).unwrap().seed, 42);
+        let strict = JsonSpecOptions { seed_key: "seed", default_seed: None, require_dims: false };
+        assert!(matches!(
+            JobSpec::parse_json(doc, &strict),
+            Err(SpecError::Bad { field: "seed", .. })
+        ));
+    }
+
+    #[test]
+    fn require_dims_rejects_missing_shape() {
+        let doc = r#"{"target": "carus", "family": "matmul", "sew": 8, "spec_seed": 1}"#;
+        let strict =
+            JsonSpecOptions { seed_key: "spec_seed", default_seed: None, require_dims: true };
+        assert!(matches!(
+            JobSpec::parse_json(doc, &strict),
+            Err(SpecError::Bad { field: "n", .. })
+        ));
+        let lax =
+            JsonSpecOptions { seed_key: "spec_seed", default_seed: None, require_dims: false };
+        // Dims default to 0 and the shape surfaces through validate().
+        let spec = JobSpec::parse_json(doc, &lax).unwrap();
+        assert_eq!(spec.kernel, Kernel::Matmul { p: 0 });
+        assert!(matches!(spec.validate(), Err(SpecError::InvalidShape { .. })));
+    }
+
+    #[test]
+    fn schema_check_is_typed() {
+        let ok = format!("{{\"schema\": \"{}\"}}", schemas::FUZZ_REPRO);
+        assert!(schemas::check(&ok, schemas::FUZZ_REPRO, true).is_ok());
+        let wrong = r#"{"schema": "something-else"}"#;
+        match schemas::check(wrong, schemas::FUZZ_REPRO, true) {
+            Err(SpecError::Schema { got, expected }) => {
+                assert_eq!(got, "something-else");
+                assert_eq!(expected, schemas::FUZZ_REPRO);
+            }
+            other => panic!("expected a typed schema error, got {other:?}"),
+        }
+        // Missing field: fatal only where the tag is mandatory.
+        assert!(schemas::check("{}", schemas::FUZZ_REPRO, true).is_err());
+        assert!(schemas::check("{}", schemas::SERVE_SUMMARY, false).is_ok());
+    }
+
+    #[test]
+    fn selector_errors_name_the_field() {
+        let e = JobSpec::from_selectors("tpu", "relu", 8, None, None, None, 0).unwrap_err();
+        assert!(matches!(e, SpecError::Bad { field: "target", .. }), "{e}");
+        let e = JobSpec::from_selectors("cpu", "blur", 8, None, None, None, 0).unwrap_err();
+        assert!(matches!(e, SpecError::Bad { field: "family", .. }), "{e}");
+        let e = JobSpec::from_selectors("cpu", "relu", 12, None, None, None, 0).unwrap_err();
+        assert!(matches!(e, SpecError::Bad { field: "sew", .. }), "{e}");
+    }
+
+    #[test]
+    fn kernel_from_inverts_shape_of_everywhere() {
+        for family in Family::ALL {
+            let k = Kernel::paper_default(family, Target::Carus, Sew::E16);
+            let (n, p, f) = shape_of(k);
+            assert_eq!(kernel_from(family, n, p, f), k);
+        }
+    }
+}

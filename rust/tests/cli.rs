@@ -195,6 +195,78 @@ fn serve_throughput_smoke_reports_live_schema_and_answers_everything() {
 }
 
 #[test]
+fn model_summary_is_byte_identical_in_both_flag_spellings() {
+    let dir = std::env::temp_dir().join("heeperator-model-cli-test");
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let a = dir.join("model-a.json");
+    let b = dir.join("model-b.json");
+    // One run per flag spelling: equal bytes proves both the model
+    // pipeline's determinism and the `=` normalization.
+    let out = heeperator(&[
+        "model",
+        "--graph",
+        "matmul:p=32,add,relu,maxpool",
+        "--tiles",
+        "2",
+        "--pipeline",
+        "batch",
+        "--seed",
+        "7",
+        "--json",
+        a.to_str().unwrap(),
+    ]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(stdout.contains("Multi-layer graph pipeline"), "{stdout}");
+    assert!(stdout.contains("resident"), "report compares residency policies: {stdout}");
+    let out = heeperator(&[
+        "model",
+        "--graph=matmul:p=32,add,relu,maxpool",
+        "--tiles=2",
+        "--pipeline=batch",
+        "--seed=7",
+        "--json",
+        b.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let ja = std::fs::read(&a).expect("first summary");
+    let jb = std::fs::read(&b).expect("second summary");
+    assert!(!ja.is_empty());
+    assert_eq!(ja, jb, "model --json must be byte-deterministic across spellings");
+    let text = String::from_utf8(ja).unwrap();
+    assert!(text.contains("\"schema\": \"heeperator-model-v1\""), "{text}");
+    assert!(text.contains("\"resident\": {"), "{text}");
+    assert!(text.contains("\"staged\": {"), "{text}");
+    assert!(text.contains("\"dma_savings_cycles\""), "{text}");
+    assert!(text.contains("\"boundary\": \"resident\""), "{text}");
+}
+
+#[test]
+fn model_defaults_run_the_canonical_chain() {
+    let out = heeperator(&["model"]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(stdout.contains("matmul:p=32,add,relu,maxpool"), "{stdout}");
+}
+
+#[test]
+fn model_rejects_bad_invocations_with_exit_two() {
+    for (args, needle) in [
+        (&["model", "--graph", "relu,matmul:p=32"][..], "--graph"),
+        (&["model", "--graph=matmul:p=32,frobnicate"][..], "--graph"),
+        (&["model", "--pipeline", "spiral"][..], "--pipeline"),
+        (&["model", "--tiles", "0"][..], "--tiles"),
+        (&["model", "--tiles=99"][..], "--tiles"),
+        (&["model", "--sew", "7"][..], "--sew"),
+    ] {
+        let out = heeperator(args);
+        assert_eq!(out.status.code(), Some(2), "{args:?}");
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(stderr.contains(needle), "{args:?} must name the bad flag: {stderr}");
+    }
+}
+
+#[test]
 fn fuzz_replay_of_garbage_file_exits_two() {
     let dir = std::env::temp_dir().join("heeperator-fuzz-cli-test");
     std::fs::create_dir_all(&dir).expect("temp dir");

@@ -1,0 +1,118 @@
+//! End-to-end contract of `heeperator model` (DESIGN.md §14): a
+//! multi-layer INT8 graph compiled onto two or more NM-Carus tiles must
+//! reproduce the byte-identical outputs of its CPU-golden chain in both
+//! pipeline modes and under both timing disciplines, and keeping the
+//! inter-layer activations resident in tile SRAM must beat the forced
+//! per-layer host-staging baseline on DMA activity — the quantified
+//! claim the CI `model-smoke` job gates on.
+
+use nmc::clock::{self, TimingMode};
+use nmc::graph::{compile, Graph, Pipeline, CANONICAL};
+use nmc::isa::Sew;
+use nmc::sched::pipeline::{run_model, ModelRunResult, Residency};
+
+/// The CPU-golden chain's final activation bytes, one per item.
+fn golden_outputs(g: &Graph, items: u32) -> Vec<Vec<u8>> {
+    (0..items).map(|i| g.golden_item(i).last().unwrap().expect.clone()).collect()
+}
+
+fn run(g: &Graph, tiles: u32, pipeline: Pipeline, residency: Residency) -> ModelRunResult {
+    let sch = compile(g, tiles, pipeline).expect("chain lowers onto the tile array");
+    run_model(&sch, residency)
+        .unwrap_or_else(|e| panic!("{pipeline:?}/{}: {e}", residency.name()))
+}
+
+#[test]
+fn canonical_chain_is_golden_identical_and_resident_saves_dma() {
+    // 4-layer INT8 chain (matmul -> add -> relu -> maxpool) on 2 tiles:
+    // every pipeline mode and timing discipline must agree byte-for-byte
+    // with the CPU-golden chain, and the resident run must move fewer
+    // DMA cycles than its forced-staged twin.
+    let g = Graph::parse(CANONICAL, Sew::E8, 7).unwrap();
+    let golden = golden_outputs(&g, 2);
+    for pipeline in Pipeline::ALL {
+        for mode in [TimingMode::Cycle, TimingMode::Event] {
+            let resident =
+                clock::with_mode(mode, || run(&g, 2, pipeline, Residency::Auto));
+            let staged =
+                clock::with_mode(mode, || run(&g, 2, pipeline, Residency::ForceStaged));
+            let ctx = format!("{pipeline:?} under {mode:?}");
+            assert_eq!(resident.outputs, golden, "{ctx}: resident vs CPU-golden");
+            assert_eq!(staged.outputs, golden, "{ctx}: staged vs CPU-golden");
+            assert_eq!(resident.resident_boundaries, 3, "{ctx}");
+            assert_eq!(staged.resident_boundaries, 0, "{ctx}");
+            assert!(
+                resident.dma_active_cycles < staged.dma_active_cycles,
+                "{ctx}: resident {} !< staged {}",
+                resident.dma_active_cycles,
+                staged.dma_active_cycles
+            );
+            assert!(
+                resident.dma_transfers < staged.dma_transfers,
+                "{ctx}: resident {} transfers !< staged {}",
+                resident.dma_transfers,
+                staged.dma_transfers
+            );
+        }
+    }
+}
+
+#[test]
+fn timing_disciplines_agree_on_every_model_counter() {
+    // The event-driven core must be indistinguishable from the per-cycle
+    // reference on the pipeline executor too, not just single kernels.
+    let g = Graph::parse(CANONICAL, Sew::E8, 11).unwrap();
+    for residency in [Residency::Auto, Residency::ForceStaged] {
+        let cyc = clock::with_mode(TimingMode::Cycle, || {
+            run(&g, 2, Pipeline::Layer, residency)
+        });
+        let evt = clock::with_mode(TimingMode::Event, || {
+            run(&g, 2, Pipeline::Layer, residency)
+        });
+        let ctx = residency.name();
+        assert_eq!(evt.outputs, cyc.outputs, "{ctx}: output bytes diverged");
+        assert_eq!(evt.cycles, cyc.cycles, "{ctx}: makespan diverged");
+        assert_eq!(evt.dma_active_cycles, cyc.dma_active_cycles, "{ctx}: dma diverged");
+        assert_eq!(evt.dma_transfers, cyc.dma_transfers, "{ctx}: transfers diverged");
+        assert_eq!(evt.bus_txns, cyc.bus_txns, "{ctx}: bus transactions diverged");
+        assert_eq!(evt.energy, cyc.energy, "{ctx}: energy breakdown diverged");
+        for (e, c) in evt.layers.iter().zip(cyc.layers.iter()) {
+            assert_eq!(e.cycles, c.cycles, "{ctx}: per-layer cycles diverged");
+            assert_eq!(
+                e.dma_active_cycles, c.dma_active_cycles,
+                "{ctx}: per-layer dma diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn wider_tile_arrays_and_staged_fallbacks_stay_golden() {
+    // 4 tiles: layer pipeline wraps the chain around the array, batch
+    // pipeline runs 4 items at once. A mid-chain maxpool forces its
+    // consumer through the host-staging fallback even under Auto.
+    let g = Graph::parse(CANONICAL, Sew::E8, 3).unwrap();
+    for pipeline in Pipeline::ALL {
+        let res = run(&g, 4, pipeline, Residency::Auto);
+        assert_eq!(res.items, 4, "{pipeline:?}");
+        assert_eq!(res.outputs, golden_outputs(&g, 4), "{pipeline:?}");
+    }
+    let fallback = Graph::parse("matmul:p=32,maxpool,relu", Sew::E8, 5).unwrap();
+    let res = run(&fallback, 2, Pipeline::Layer, Residency::Auto);
+    assert_eq!(res.staged_boundaries, 1, "maxpool output is multi-chunk");
+    assert_eq!(res.outputs, golden_outputs(&fallback, 2));
+}
+
+#[test]
+fn per_layer_accounting_adds_up() {
+    let g = Graph::parse(CANONICAL, Sew::E8, 7).unwrap();
+    let res = run(&g, 2, Pipeline::Batch, Residency::Auto);
+    assert_eq!(res.layers.len(), 4);
+    // Layer steps partition the run: per-layer counters sum to the whole.
+    let layer_cycles: u64 = res.layers.iter().map(|l| l.cycles).sum();
+    assert_eq!(layer_cycles, res.cycles, "layer cycles partition the makespan");
+    let layer_dma: u64 = res.layers.iter().map(|l| l.dma_active_cycles).sum();
+    assert_eq!(layer_dma, res.dma_active_cycles);
+    let layer_tx: u64 = res.layers.iter().map(|l| l.dma_transfers).sum();
+    assert_eq!(layer_tx, res.dma_transfers);
+}

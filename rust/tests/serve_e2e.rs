@@ -16,7 +16,7 @@ use nmc::serve::{
 };
 
 fn req(id: u64, target: Target, kernel: Kernel, sew: Sew) -> Request {
-    Request { id, target, kernel, sew, seed: id }
+    Request { id, target, kernel, sew, seed: id, model: None }
 }
 
 fn render_all(responses: &[Response]) -> String {
@@ -164,6 +164,38 @@ fn serve_stream_answers_every_line_over_an_in_process_pipe() {
         );
     }
     assert!(text.contains("\"id\":99,\"status\":\"error\""), "{text}");
+}
+
+#[test]
+fn serve_stream_answers_model_requests_with_per_layer_breakdowns() {
+    // `{"model": ...}` lines ride the same admission queue and worker
+    // pool as kernel requests, never coalesce with them, and answer with
+    // the per-layer cycle breakdown. A malformed graph is a typed error.
+    let cfg = ServeConfig { tiles: 2, queue_cap: 256, ..Default::default() };
+    let input = concat!(
+        "{\"id\":1,\"model\":\"matmul:p=32,add,relu,maxpool\",\"sew\":8}\n",
+        "{\"id\":2,\"target\":\"carus\",\"family\":\"add\",\"sew\":8,\"n\":64}\n",
+        "{\"id\":3,\"model\":\"matmul:p=32,relu\",\"pipeline\":\"batch\",\"seed\":5}\n",
+        "{\"id\":4,\"model\":\"relu,matmul:p=32\"}\n",
+    );
+    let mut output: Vec<u8> = Vec::new();
+    let stats =
+        serve::serve_stream(&cfg, std::io::Cursor::new(input.as_bytes().to_vec()), &mut output);
+    assert_eq!(stats.requests, 4);
+    assert_eq!(stats.completed, 3);
+    assert_eq!(stats.errored, 1);
+    let text = String::from_utf8(output).expect("responses are UTF-8 JSONL");
+    assert_eq!(text.lines().count(), 4, "{text}");
+    for id in [1u64, 3] {
+        let line = text.lines().find(|l| l.contains(&format!("\"id\":{id},"))).unwrap();
+        assert!(line.contains("\"kind\":\"model\""), "{line}");
+        assert!(line.contains("\"layers\":[{\"kernel\":\"matmul\""), "{line}");
+        assert!(line.contains("\"resident_boundaries\""), "{line}");
+    }
+    let kernel_line = text.lines().find(|l| l.contains("\"id\":2,")).unwrap();
+    assert!(kernel_line.contains("\"status\":\"ok\"") && !kernel_line.contains("\"kind\""));
+    let bad = text.lines().find(|l| l.contains("\"id\":4,")).unwrap();
+    assert!(bad.contains("\"status\":\"error\"") && bad.contains("bad model"), "{bad}");
 }
 
 #[test]
